@@ -1,0 +1,65 @@
+//! Quickstart: the TNG public API in ~40 lines.
+//!
+//! Generates the paper's skewed logistic-regression data, then runs the
+//! distributed protocol with raw ternary coding (TG) and with trajectory
+//! normalization (TN-TG, per-worker fp16 anchor reference every 32 rounds)
+//! under deterministic shard gradients — the regime where normalization
+//! decisively wins (EXPERIMENTS.md §Regimes).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tng::codec::ternary::TernaryCodec;
+use tng::coordinator::{driver, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::objectives::logreg::LogReg;
+use tng::optim::{EstimatorKind, StepSchedule};
+use tng::tng::ReferenceKind;
+
+fn main() {
+    // 1. The paper's synthetic workload: D=512, N=2048, skewed columns.
+    let data = generate(&SkewConfig { c_sk: 0.25, ..Default::default() });
+    let obj = LogReg::new(data, 1e-3);
+    let (_, f_star) = obj.solve_optimum(400);
+    println!("workload: logreg D=512 N=2048  F(w*) = {f_star:.6}");
+
+    // 2. Shared protocol configuration: M=4 servers, 1500 rounds.
+    let base = DriverConfig {
+        workers: 4,
+        rounds: 1500,
+        estimator: EstimatorKind::FullBatch,
+        schedule: StepSchedule::Const(1.5),
+        record_every: 100,
+        f_star,
+        ..Default::default()
+    };
+
+    // 3. Raw ternary (TG, TernGrad-style).
+    let raw = driver::run(&obj, &TernaryCodec, "TG", &base);
+
+    // 4. Trajectory-normalized ternary (TN-TG): compress g - g̃ against the
+    //    per-worker delayed-gradient anchor (§3.1), searched per Prop. 4.
+    let tn_cfg = DriverConfig {
+        references: vec![
+            ReferenceKind::Zeros,
+            ReferenceKind::WorkerAnchor { update_every: 32, anchor_bits: 16 },
+        ],
+        ..base
+    };
+    let tn = driver::run(&obj, &TernaryCodec, "TN-TG", &tn_cfg);
+
+    // 5. Compare at the communication level — the paper's axis.
+    println!("\n{:<8} {:>14} {:>16} {:>8}", "method", "bits/element", "F(w_T) - F(w*)", "C_nz");
+    for tr in [&raw, &tn] {
+        println!(
+            "{:<8} {:>14.1} {:>16.3e} {:>8.3}",
+            tr.label,
+            tr.final_bits_per_elt(),
+            tr.final_subopt(),
+            tr.records.last().unwrap().cnz
+        );
+    }
+    let speedup = raw.final_subopt() / tn.final_subopt();
+    println!("\nTN-TG reaches {speedup:.0}x lower suboptimality for {:.2}x the bits.",
+        tn.final_bits_per_elt() / raw.final_bits_per_elt());
+    assert!(speedup > 5.0, "expected a decisive TNG win in the GD regime");
+}

@@ -1,0 +1,128 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the Rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Artifacts (all shapes static; recorded in manifest.json):
+
+    logreg_grad.hlo.txt        (X(8,512),  y(8),  w(512), lam(1)) -> (g(512),)
+    logreg_full_grad.hlo.txt   (X(2048,512), y(2048), w, lam)    -> (g,)
+    logreg_loss.hlo.txt        (X(2048,512), y(2048), w, lam)    -> (loss,)
+    tng_encode.hlo.txt         (g(512), gref(512), u(512))        -> (t, R)
+    tng_decode.hlo.txt         (t(512), R(1), gref(512))          -> (v,)
+    tng_roundtrip.hlo.txt      (g, gref, u)                        -> (v,)
+    transformer_step.hlo.txt   (flat(P), tokens(8,65) i32)         -> (loss, grads(P))
+    transformer_loss.hlo.txt   (flat(P), tokens(8,65) i32)         -> (loss,)
+    transformer_init.bin       little-endian f32 initial flat params
+    manifest.json              artifact -> {inputs, outputs, dims}
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model, transformer
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the Rust
+    side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def shape_sig(args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in args
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--skip-transformer",
+        action="store_true",
+        help="logreg/codec artifacts only (fast iteration)",
+    )
+    opts = ap.parse_args()
+    os.makedirs(opts.outdir, exist_ok=True)
+
+    manifest = {}
+
+    jobs = [
+        ("logreg_grad", model.logreg_grad, model.logreg_grad_args()),
+        ("logreg_full_grad", model.logreg_full_grad, model.logreg_full_grad_args()),
+        ("logreg_loss", model.logreg_loss, model.logreg_loss_args()),
+        ("tng_encode", model.tng_encode, model.tng_encode_args()),
+        ("tng_decode", model.tng_decode, model.tng_decode_args()),
+        ("tng_roundtrip", model.tng_roundtrip, model.tng_roundtrip_args()),
+    ]
+    for name, fn, args in jobs:
+        path = os.path.join(opts.outdir, f"{name}.hlo.txt")
+        nchars = lower_to_file(fn, args, path)
+        manifest[name] = {"file": f"{name}.hlo.txt", "inputs": shape_sig(args)}
+        print(f"wrote {path} ({nchars} chars)")
+
+    if not opts.skip_transformer:
+        cfg = transformer.TINY
+        step, flat0, _ = transformer.make_step(cfg)
+        loss = transformer.make_loss(cfg)
+        p = int(flat0.shape[0])
+        tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+        flat = jax.ShapeDtypeStruct((p,), jnp.float32)
+
+        for name, fn in [("transformer_step", step), ("transformer_loss", loss)]:
+            path = os.path.join(opts.outdir, f"{name}.hlo.txt")
+            nchars = lower_to_file(fn, (flat, tok), path)
+            manifest[name] = {
+                "file": f"{name}.hlo.txt",
+                "inputs": shape_sig((flat, tok)),
+                "param_count": p,
+                "config": dataclass_dict(cfg),
+            }
+            print(f"wrote {path} ({nchars} chars)")
+
+        init_path = os.path.join(opts.outdir, "transformer_init.bin")
+        np.asarray(flat0, dtype="<f4").tofile(init_path)
+        manifest["transformer_init"] = {"file": "transformer_init.bin", "param_count": p}
+        print(f"wrote {init_path} ({p} f32 params)")
+
+    with open(os.path.join(opts.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(opts.outdir, 'manifest.json')}")
+
+
+def dataclass_dict(cfg) -> dict:
+    import dataclasses
+
+    return dataclasses.asdict(cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Layer-2 JAX model functions (build-time only; never on the request path).
+
+Every public function here is jitted + AOT-lowered by ``aot.py`` into an HLO
+text artifact the Rust runtime loads through PJRT. The gradient paths call
+the Layer-1 Pallas kernels from ``kernels.tng`` so the kernels lower into the
+same HLO module.
+
+Shapes are static per artifact (PJRT executables are shape-specialized);
+``aot.py`` records them in ``artifacts/manifest.json``. The paper's convex
+workload fixes B=8, D=512, N=2048 (§4.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref as kref
+from compile.kernels import tng as ktng
+
+# The paper's §4.2 dimensions.
+DIM = 512
+BATCH = 8
+NDATA = 2048
+
+
+# ---------------------------------------------------------------------------
+# Convex workload: L2-regularized logistic regression
+# ---------------------------------------------------------------------------
+
+
+def logreg_loss(x, y, w, lam):
+    """Full-precision loss; used for suboptimality F(w) - F(w*)."""
+    return kref.logreg_loss(x, y, w, lam)
+
+
+def logreg_grad(x, y, w, lam):
+    """Minibatch gradient via the fused Pallas kernel (Layer 1)."""
+    return ktng.logreg_grad(x, y, w, lam)
+
+
+def logreg_full_grad(x, y, w, lam):
+    """Full-data gradient — the SVRG anchor nabla F(w~) of §3.1.
+
+    Uses the same Pallas kernel; the (N, D) block still fits interpret-mode
+    VMEM budget and lowers to two MXU matmuls on real hardware.
+    """
+    return ktng.logreg_grad(x, y, w, lam)
+
+
+# ---------------------------------------------------------------------------
+# TNG codec graphs (Algorithm 1) — offloadable to PJRT from the coordinator
+# ---------------------------------------------------------------------------
+
+
+def tng_encode(g, gref, u):
+    """(g, gref, u) -> (t, R): stochastic ternary code of g - gref."""
+    return ktng.ternary_encode(g, gref, u)
+
+
+def tng_decode(t, r, gref):
+    """(t, R, gref) -> v = gref + R*t."""
+    return ktng.ternary_decode(t, r, gref)
+
+
+def tng_roundtrip(g, gref, u):
+    """Fused encode+decode — what a worker+leader pair computes per round.
+
+    Used by the XLA-vs-Rust cross-validation tests and the runtime bench.
+    """
+    t, r = ktng.ternary_encode(g, gref, u)
+    return ktng.ternary_decode(t, r, gref)
+
+
+# ---------------------------------------------------------------------------
+# Example-arg builders (shared by aot.py and the pytest suite)
+# ---------------------------------------------------------------------------
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def logreg_grad_args(batch=BATCH, dim=DIM):
+    return (f32(batch, dim), f32(batch), f32(dim), f32(1))
+
+
+def logreg_full_grad_args(n=NDATA, dim=DIM):
+    return (f32(n, dim), f32(n), f32(dim), f32(1))
+
+
+def logreg_loss_args(n=NDATA, dim=DIM):
+    return (f32(n, dim), f32(n), f32(dim), f32(1))
+
+
+def tng_encode_args(dim=DIM):
+    return (f32(dim), f32(dim), f32(dim))
+
+
+def tng_decode_args(dim=DIM):
+    return (f32(dim), f32(1), f32(dim))
+
+
+def tng_roundtrip_args(dim=DIM):
+    return (f32(dim), f32(dim), f32(dim))

@@ -1,0 +1,160 @@
+"""Layer-2: GPT-style causal transformer LM for the end-to-end example.
+
+The e2e driver (``examples/transformer_e2e.rs``) trains this model with the
+TNG protocol: each Rust worker executes ``transformer_step`` (this module,
+AOT-lowered) on its corpus shard to get (loss, flat grads), compresses the
+normalized gradient, and the leader aggregates + applies SGD.
+
+Parameters travel as ONE flat f32 vector (``ravel_pytree``) so the Rust side
+never needs the pytree structure; the unflattener is baked into the jitted
+graph. Initial parameters are materialized at build time into
+``artifacts/transformer_init.bin`` (little-endian f32) by ``aot.py``.
+
+The default config (~3.4M params) keeps a CPU-PJRT training run of a few
+hundred steps inside a few minutes; ``GPT100M`` shows the scaled config the
+paper-scale run would use on real hardware (documented in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab: int = 256
+    d_model: int = 256
+    n_layer: int = 4
+    n_head: int = 4
+    seq: int = 64
+    batch: int = 8
+    mlp_ratio: int = 4
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_head
+
+
+# Default e2e config (~3.4M params) and the paper-scale reference config.
+TINY = Config()
+GPT100M = Config(vocab=32768, d_model=768, n_layer=12, n_head=12, seq=512)
+
+
+def init_params(key: jax.Array, cfg: Config):
+    """Standard GPT-2-style init: N(0, 0.02), residual projections scaled."""
+    k = iter(jax.random.split(key, 4 + 8 * cfg.n_layer))
+    std = 0.02
+    resid_std = std / math.sqrt(2 * cfg.n_layer)
+    d, m = cfg.d_model, cfg.mlp_ratio * cfg.d_model
+
+    def n(key, *shape, s=std):
+        return s * jax.random.normal(key, shape, jnp.float32)
+
+    params = {
+        "wte": n(next(k), cfg.vocab, d),
+        "wpe": n(next(k), cfg.seq, d),
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "blocks": [],
+    }
+    for _ in range(cfg.n_layer):
+        params["blocks"].append(
+            {
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "qkv": n(next(k), d, 3 * d),
+                "qkv_b": jnp.zeros((3 * d,)),
+                "proj": n(next(k), d, d, s=resid_std),
+                "proj_b": jnp.zeros((d,)),
+                "fc": n(next(k), d, m),
+                "fc_b": jnp.zeros((m,)),
+                "fc2": n(next(k), m, d, s=resid_std),
+                "fc2_b": jnp.zeros((d,)),
+            }
+        )
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, blk, cfg: Config):
+    bsz, t, d = x.shape
+    qkv = x @ blk["qkv"] + blk["qkv_b"]  # (B, T, 3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(bsz, t, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(cfg.d_head)  # (B,H,T,T)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(bsz, t, d)
+    return out @ blk["proj"] + blk["proj_b"]
+
+
+def _mlp(x, blk):
+    h = jax.nn.gelu(x @ blk["fc"] + blk["fc_b"])
+    return h @ blk["fc2"] + blk["fc2_b"]
+
+
+def forward(params, tokens, cfg: Config):
+    """tokens (B, T) int32 -> logits (B, T, vocab)."""
+    _, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:t]
+    for blk in params["blocks"]:
+        x = x + _attention(_layernorm(x, blk["ln1"]["g"], blk["ln1"]["b"]), blk, cfg)
+        x = x + _mlp(_layernorm(x, blk["ln2"]["g"], blk["ln2"]["b"]), blk)
+    x = _layernorm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["wte"].T  # weight-tied unembedding
+
+
+def loss_fn(params, tokens, cfg: Config):
+    """Next-token cross-entropy over tokens (B, T+1)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_step(cfg: Config):
+    """Build (step_fn, flat_init, unravel) where step_fn(flat, tokens) ->
+    (loss, flat_grads) is what aot.py lowers for the Rust runtime."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    flat0, unravel = ravel_pytree(params)
+
+    def step(flat, tokens):
+        def f(fl):
+            return loss_fn(unravel(fl), tokens, cfg)
+
+        loss, grads = jax.value_and_grad(f)(flat)
+        return loss, grads
+
+    return step, flat0, unravel
+
+
+def make_loss(cfg: Config):
+    """Flat-params eval loss (no grads) for held-out monitoring."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    _, unravel = ravel_pytree(params)
+
+    def loss(flat, tokens):
+        return loss_fn(unravel(flat), tokens, cfg)
+
+    return loss
+
+
+def param_count(cfg: Config) -> int:
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    flat, _ = ravel_pytree(params)
+    return int(flat.shape[0])

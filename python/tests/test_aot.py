@@ -1,0 +1,75 @@
+"""AOT pipeline contract tests: the artifacts the Rust runtime consumes.
+
+These validate the *interchange*, not the math (test_kernel/test_model do
+that): HLO text parses, carries no Mosaic custom-calls, manifest shapes
+match the lowered graphs, and the init blob has the advertised length.
+Skipped when artifacts/ has not been built (run `make artifacts`).
+"""
+
+import json
+import os
+
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (make artifacts)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_core_artifacts(manifest):
+    for name in [
+        "logreg_grad",
+        "logreg_full_grad",
+        "logreg_loss",
+        "tng_encode",
+        "tng_decode",
+        "tng_roundtrip",
+        "transformer_step",
+        "transformer_loss",
+        "transformer_init",
+    ]:
+        assert name in manifest, name
+        assert os.path.exists(os.path.join(ARTIFACTS, manifest[name]["file"]))
+
+
+def test_hlo_files_parse_and_are_clean(manifest):
+    for name, meta in manifest.items():
+        if not meta["file"].endswith(".hlo.txt"):
+            continue
+        with open(os.path.join(ARTIFACTS, meta["file"])) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # The CPU PJRT client cannot run Mosaic custom-calls.
+        assert "custom-call" not in text, f"{name} leaked a custom-call"
+
+
+def test_manifest_shapes_match_paper_dims(manifest):
+    sig = manifest["logreg_grad"]["inputs"]
+    assert sig[0]["shape"] == [8, 512]  # X
+    assert sig[2]["shape"] == [512]  # w
+    sig = manifest["logreg_full_grad"]["inputs"]
+    assert sig[0]["shape"] == [2048, 512]
+    sig = manifest["tng_encode"]["inputs"]
+    assert all(s["shape"] == [512] for s in sig)
+
+
+def test_transformer_init_blob_length(manifest):
+    p = manifest["transformer_step"]["param_count"]
+    blob = os.path.join(ARTIFACTS, manifest["transformer_init"]["file"])
+    assert os.path.getsize(blob) == 4 * p
+    assert manifest["transformer_init"]["param_count"] == p
+
+
+def test_transformer_config_recorded(manifest):
+    cfg = manifest["transformer_step"]["config"]
+    assert cfg["vocab"] == 256 and cfg["seq"] == 64 and cfg["batch"] == 8

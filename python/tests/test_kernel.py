@@ -1,0 +1,216 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/seeds; every kernel must match ``ref.py``
+bit-for-bit (same sampling rule, same comparisons) up to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, tng
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+DIMS = st.sampled_from([1, 2, 3, 8, 17, 64, 100, 128, 200, 512, 1000])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestAbsmax:
+    @settings(max_examples=30, deadline=None)
+    @given(d=DIMS, seed=SEEDS)
+    def test_matches_ref(self, d, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        g, gref = rand(k1, d), rand(k2, d)
+        np.testing.assert_allclose(
+            tng.absmax(g, gref), ref.absmax(g, gref), rtol=1e-6
+        )
+
+    def test_zero_vector(self):
+        z = jnp.zeros((64,))
+        assert float(tng.absmax(z, z)) == 0.0
+
+    def test_identical_inputs(self):
+        g = rand(jax.random.PRNGKey(3), 512)
+        assert float(tng.absmax(g, g)) == 0.0
+
+    @pytest.mark.parametrize("block", [1, 2, 32, 64, 128, 512, 1024])
+    def test_block_sizes(self, block):
+        g = rand(jax.random.PRNGKey(0), 512)
+        gref = rand(jax.random.PRNGKey(1), 512)
+        np.testing.assert_allclose(
+            tng.absmax(g, gref, block=block), ref.absmax(g, gref), rtol=1e-6
+        )
+
+
+class TestTernaryEncode:
+    @settings(max_examples=30, deadline=None)
+    @given(d=DIMS, seed=SEEDS)
+    def test_matches_ref(self, d, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        g, gref = rand(k1, d), rand(k2, d)
+        u = jax.random.uniform(k3, (d,))
+        t, r = tng.ternary_encode(g, gref, u)
+        t2, r2 = ref.ternary_encode(g, gref, u)
+        np.testing.assert_allclose(t, t2)
+        np.testing.assert_allclose(r, r2, rtol=1e-6)
+
+    def test_output_is_ternary(self):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        g, gref = rand(k1, 512), rand(k2, 512)
+        u = jax.random.uniform(k3, (512,))
+        t, _ = tng.ternary_encode(g, gref, u)
+        assert set(np.unique(np.asarray(t))).issubset({-1.0, 0.0, 1.0})
+
+    def test_zero_normalized_gradient(self):
+        """g == gref => R = 0, all codes zero (no NaN from 0/0)."""
+        g = rand(jax.random.PRNGKey(1), 128)
+        u = jax.random.uniform(jax.random.PRNGKey(2), (128,))
+        t, r = tng.ternary_encode(g, g, u)
+        assert float(r[0]) == 0.0
+        np.testing.assert_array_equal(np.asarray(t), np.zeros(128))
+
+    def test_unbiasedness(self):
+        """E[gref + R*t] = g over many random draws (CLT bound)."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+        d, trials = 64, 3000
+        g, gref = rand(k1, d), rand(k2, d)
+        keys = jax.random.split(jax.random.PRNGKey(9), trials)
+        us = jax.vmap(lambda k: jax.random.uniform(k, (d,)))(keys)
+        enc = jax.vmap(lambda u: ref.ternary_encode(g, gref, u))
+        ts, rs = enc(us)
+        vs = gref + rs * ts
+        err = np.asarray(jnp.mean(vs, 0) - g)
+        # std of mean ~ R/sqrt(trials); allow 5 sigma
+        bound = 5 * float(ref.absmax(g, gref)) / np.sqrt(trials)
+        assert np.max(np.abs(err)) < bound
+
+    def test_sign_correctness(self):
+        """Nonzero codes must carry sign(v)."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+        g, gref = rand(k1, 512), rand(k2, 512)
+        u = jax.random.uniform(k3, (512,))
+        t, _ = tng.ternary_encode(g, gref, u)
+        v = np.asarray(g - gref)
+        t = np.asarray(t)
+        nz = t != 0
+        np.testing.assert_array_equal(t[nz], np.sign(v[nz]))
+
+    def test_max_element_always_sent(self):
+        """|v_d| == R => p = 1 => always coded (u < 1)."""
+        g = jnp.zeros((16,)).at[3].set(5.0)
+        gref = jnp.zeros((16,))
+        u = jnp.full((16,), 0.999)
+        t, r = tng.ternary_encode(g, gref, u)
+        assert float(t[3]) == 1.0 and float(r[0]) == 5.0
+
+
+class TestTernaryDecode:
+    @settings(max_examples=25, deadline=None)
+    @given(d=DIMS, seed=SEEDS)
+    def test_matches_ref(self, d, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        t = jnp.sign(rand(k1, d))
+        r = jnp.abs(rand(k2, 1))
+        gref = rand(k3, d)
+        np.testing.assert_allclose(
+            tng.ternary_decode(t, r, gref), ref.ternary_decode(t, r, gref), rtol=1e-6
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(d=DIMS, seed=SEEDS)
+    def test_roundtrip_reconstruction_error(self, d, seed):
+        """||decode(encode(g)) - g||_inf <= R (each coordinate moves < R)."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        g, gref = rand(k1, d), rand(k2, d)
+        u = jax.random.uniform(k3, (d,))
+        t, r = tng.ternary_encode(g, gref, u)
+        v = tng.ternary_decode(t, r, gref)
+        assert float(jnp.max(jnp.abs(v - g))) <= float(r[0]) + 1e-6
+
+
+class TestLogregGrad:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 8, 16]),
+        d=st.sampled_from([1, 4, 32, 512]),
+        seed=SEEDS,
+        lam=st.sampled_from([0.0, 1e-4, 0.01, 0.5]),
+    )
+    def test_matches_analytic_ref(self, b, d, seed, lam):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = rand(k1, b, d)
+        y = jnp.sign(rand(k2, b) + 1e-9)
+        w = rand(k3, d)
+        lam = jnp.array([lam], jnp.float32)
+        np.testing.assert_allclose(
+            tng.logreg_grad(x, y, w, lam),
+            ref.logreg_grad(x, y, w, lam),
+            rtol=2e-5,
+            atol=1e-6,
+        )
+
+    def test_ref_matches_autodiff(self):
+        """The analytic oracle itself must equal jax.grad of the loss."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(11), 3)
+        x = rand(k1, 8, 512)
+        y = jnp.sign(rand(k2, 8) + 1e-9)
+        w = rand(k3, 512)
+        lam = jnp.array([0.01], jnp.float32)
+        np.testing.assert_allclose(
+            ref.logreg_grad(x, y, w, lam),
+            ref.logreg_grad_autodiff(x, y, w, lam),
+            rtol=2e-5,
+            atol=1e-6,
+        )
+
+    def test_kernel_matches_autodiff(self):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(12), 3)
+        x = rand(k1, 8, 512)
+        y = jnp.sign(rand(k2, 8) + 1e-9)
+        w = rand(k3, 512)
+        lam = jnp.array([0.0], jnp.float32)
+        np.testing.assert_allclose(
+            tng.logreg_grad(x, y, w, lam),
+            ref.logreg_grad_autodiff(x, y, w, lam),
+            rtol=2e-5,
+            atol=1e-6,
+        )
+
+    def test_regularization_term(self):
+        """With y-independent data at w, grad(lam) - grad(0) == lam*w."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(13), 3)
+        x = rand(k1, 8, 64)
+        y = jnp.sign(rand(k2, 8) + 1e-9)
+        w = rand(k3, 64)
+        g0 = tng.logreg_grad(x, y, w, jnp.array([0.0]))
+        g1 = tng.logreg_grad(x, y, w, jnp.array([0.3]))
+        np.testing.assert_allclose(g1 - g0, 0.3 * w, rtol=1e-4, atol=1e-6)
+
+
+class TestVarianceReduction:
+    """Proposition 4's premise: a good reference shrinks compression error."""
+
+    def test_tng_variance_smaller_with_close_reference(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(21))
+        d, trials = 128, 500
+        g = rand(k1, d)
+        gref = g + 0.05 * rand(k2, d)  # trajectory-close reference
+        zeros = jnp.zeros((d,))
+        keys = jax.random.split(jax.random.PRNGKey(22), trials)
+        us = jax.vmap(lambda k: jax.random.uniform(k, (d,)))(keys)
+
+        def mse(ref_vec):
+            enc = jax.vmap(lambda u: ref.ternary_encode(g, ref_vec, u))
+            ts, rs = enc(us)
+            vs = ref_vec + rs * ts
+            return float(jnp.mean(jnp.sum((vs - g) ** 2, -1)))
+
+        assert mse(gref) < 0.05 * mse(zeros)

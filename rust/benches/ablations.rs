@@ -1,0 +1,128 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   A1  normalization form: subtractive (Eq. 2) vs quotient (Eq. 3) vs
+//!       combined, same codec/reference;
+//!   A2  anchor period sweep (WorkerAnchor every 8/32/128, fp16 vs fp32) —
+//!       the comm/quality trade the paper's "balance between the fitness of
+//!       g̃ and its cost" sentence gestures at;
+//!   A3  pool composition: fixed single reference vs Prop-4 searched pool
+//!       (with/without the Zeros fallback);
+//!   A4  TNG vs error-feedback vs both, on the same budget — separates the
+//!       "normalization" gain from the "compensation" gain (§1's related
+//!       line of work).
+//!
+//! All on the deterministic-gradient logreg regime (EXPERIMENTS.md
+//! §Regimes), where the effects are measurable above seed noise.
+
+use tng::codec::ternary::TernaryCodec;
+use tng::coordinator::{driver, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::objectives::logreg::LogReg;
+use tng::optim::{EstimatorKind, StepSchedule};
+use tng::tng::{Normalization, ReferenceKind};
+
+fn main() {
+    let ds = generate(&SkewConfig { c_sk: 0.25, ..Default::default() });
+    let obj = LogReg::new(ds, 1e-3);
+    let (_, f_star) = obj.solve_optimum(400);
+    let base = || DriverConfig {
+        rounds: 600,
+        workers: 4,
+        estimator: EstimatorKind::FullBatch,
+        schedule: StepSchedule::Const(1.5),
+        record_every: 600,
+        f_star,
+        ..Default::default()
+    };
+    let anchor = |k: usize, bits: usize| ReferenceKind::WorkerAnchor {
+        update_every: k,
+        anchor_bits: bits,
+    };
+    let row = |name: &str, tr: &tng::coordinator::Trace| {
+        println!(
+            "ablation {name:<44} bits/elt={:<9.1} subopt={:<12.4e} cnz={:.3}",
+            tr.final_bits_per_elt(),
+            tr.final_subopt(),
+            tr.records.last().unwrap().cnz
+        );
+    };
+
+    println!("# A1: normalization form (anchor/32 reference)");
+    for (name, mode) in [
+        ("sub", Normalization::Subtractive),
+        ("quot", Normalization::quotient()),
+        ("comb", Normalization::combined()),
+    ] {
+        let cfg = DriverConfig { mode, references: vec![anchor(32, 16)], ..base() };
+        row(&format!("A1/{name}"), &driver::run(&obj, &TernaryCodec, name, &cfg));
+    }
+
+    println!("# A2: anchor period x precision");
+    for k in [8usize, 32, 128] {
+        for bits in [16usize, 32] {
+            let cfg = DriverConfig { references: vec![anchor(k, bits)], ..base() };
+            row(
+                &format!("A2/every{k}@{bits}b"),
+                &driver::run(&obj, &TernaryCodec, "a2", &cfg),
+            );
+        }
+    }
+
+    println!("# A3: pool composition (Prop-4 search)");
+    for (name, refs) in [
+        ("fixed-avgdec1", vec![ReferenceKind::AvgDecoded { window: 1 }]),
+        ("fixed-anchor32", vec![anchor(32, 16)]),
+        (
+            "pool-no-zeros",
+            vec![ReferenceKind::AvgDecoded { window: 1 }, anchor(32, 16)],
+        ),
+        (
+            "pool-with-zeros",
+            vec![
+                ReferenceKind::Zeros,
+                ReferenceKind::AvgDecoded { window: 1 },
+                anchor(32, 16),
+            ],
+        ),
+    ] {
+        let cfg = DriverConfig { references: refs, warm_start_reference: true, ..base() };
+        row(&format!("A3/{name}"), &driver::run(&obj, &TernaryCodec, name, &cfg));
+    }
+
+    println!("# A4: normalization vs error feedback (same budget)");
+    {
+        // raw
+        let cfg = base();
+        row("A4/raw-tg", &driver::run(&obj, &TernaryCodec, "raw", &cfg));
+        // TNG
+        let cfg = DriverConfig { references: vec![anchor(32, 16)], ..base() };
+        row("A4/tn-tg", &driver::run(&obj, &TernaryCodec, "tn", &cfg));
+        // EF (worker-side error feedback, no normalization): simulate via a
+        // single-worker closed loop at matched rounds — the wrapper is
+        // per-worker stateful, so run it through the codec layer directly.
+        use tng::codec::error_feedback::ErrorFeedback;
+        use tng::objectives::Objective;
+        use tng::util::{math, Rng};
+        let mut w = vec![0.0f32; obj.dim()];
+        let mut efs: Vec<ErrorFeedback<TernaryCodec>> =
+            (0..4).map(|_| ErrorFeedback::new(TernaryCodec, obj.dim())).collect();
+        let shards = tng::data::shard_indices(obj.n(), 4);
+        let mut rng = Rng::new(0);
+        let mut g = vec![0.0f32; obj.dim()];
+        for _ in 0..600 {
+            let mut v = vec![0.0f32; obj.dim()];
+            for m in 0..4 {
+                obj.stoch_grad(&w, &shards[m], &mut rng, &mut g);
+                let dec = efs[m].encode(&g, &mut rng).decode();
+                math::axpy(0.25, &dec, &mut v);
+            }
+            math::axpy(-1.5, &v, &mut w);
+        }
+        println!(
+            "ablation {:<44} bits/elt={:<9.1} subopt={:<12.4e} cnz=n/a",
+            "A4/ef-tg",
+            600.0 * 2.0,
+            obj.loss(&w) - f_star
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Codec hot-path microbenchmarks: encode / decode / wire throughput per
+//! codec and dimension. The L3 perf target (EXPERIMENTS.md §Perf) is that
+//! codec work is negligible next to gradient computation: GB/s-class
+//! elementwise throughput.
+
+use std::time::Duration;
+
+use tng::codec::{
+    chunked::ChunkedTernaryCodec, qsgd::QsgdCodec, signsgd::SignCodec,
+    sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec, wire, Codec,
+};
+use tng::tng::Tng;
+use tng::util::bench::{bench, black_box};
+use tng::util::Rng;
+
+const BUDGET: Duration = Duration::from_millis(300);
+
+fn randv(rng: &mut Rng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| rng.gauss_f32()).collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    println!("# codec microbenchmarks (encode / decode / wire), f32 input");
+
+    for d in [512usize, 65_536, 1 << 20] {
+        let v = randv(&mut rng, d);
+        let bytes = d * 4;
+        let codecs: Vec<Box<dyn Codec>> = vec![
+            Box::new(TernaryCodec),
+            Box::new(ChunkedTernaryCodec::new(4096)),
+            Box::new(QsgdCodec::new(4)),
+            Box::new(SparseCodec::new(0.25)),
+            Box::new(SignCodec),
+            Box::new(TopKCodec::new(d / 16)),
+        ];
+        for c in &codecs {
+            let mut r = Rng::new(1);
+            bench(&format!("encode/{}/d{}", c.name(), d), BUDGET, || {
+                black_box(c.encode(black_box(&v), &mut r))
+            })
+            .report_throughput(bytes);
+        }
+        // decode + wire for the protocol's default codec
+        let mut r = Rng::new(2);
+        let e = TernaryCodec.encode(&v, &mut r);
+        bench(&format!("decode/ternary/d{}", d), BUDGET, || black_box(e.decode()))
+            .report_throughput(bytes);
+        bench(&format!("wire_ser/ternary/d{}", d), BUDGET, || {
+            black_box(wire::to_bytes(black_box(&e)))
+        })
+        .report_throughput(bytes);
+        let frame = wire::to_bytes(&e);
+        bench(&format!("wire_de/ternary/d{}", d), BUDGET, || {
+            black_box(wire::from_bytes(black_box(&frame)).unwrap())
+        })
+        .report_throughput(bytes);
+        // the full TNG normalize+encode+decode round
+        let gref = randv(&mut rng, d);
+        let tng = Tng::new(TernaryCodec);
+        let mut r = Rng::new(3);
+        bench(&format!("tng_roundtrip/ternary/d{}", d), BUDGET, || {
+            let e = tng.encode(black_box(&v), black_box(&gref), &mut r);
+            black_box(tng.decode(&e, &gref))
+        })
+        .report_throughput(bytes);
+    }
+}

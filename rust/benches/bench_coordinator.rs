@@ -1,0 +1,89 @@
+//! End-to-end coordinator benchmarks: full protocol rounds/second for the
+//! deterministic driver and the threaded runtime, across worker counts and
+//! codecs. L3 target: the coordinator adds negligible overhead on top of
+//! the objective's gradient computation.
+
+use std::time::Duration;
+
+use tng::codec::ternary::TernaryCodec;
+use tng::coordinator::{driver, parallel, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::objectives::logreg::LogReg;
+use tng::optim::{EstimatorKind, StepSchedule};
+use tng::tng::ReferenceKind;
+use tng::util::bench::{bench, black_box};
+
+const BUDGET: Duration = Duration::from_millis(700);
+
+fn main() {
+    println!("# coordinator round-throughput (logreg D=512 N=2048, batch 8)");
+    let ds = generate(&SkewConfig::default());
+    let obj = LogReg::new(ds, 1e-3);
+
+    for workers in [1usize, 4, 12] {
+        for (label, refs) in [
+            ("raw", vec![ReferenceKind::Zeros]),
+            (
+                "tn-pool",
+                vec![
+                    ReferenceKind::Zeros,
+                    ReferenceKind::AvgDecoded { window: 1 },
+                    ReferenceKind::WorkerAnchor { update_every: 32, anchor_bits: 16 },
+                ],
+            ),
+        ] {
+            let cfg = DriverConfig {
+                workers,
+                rounds: 50,
+                schedule: StepSchedule::Const(0.25),
+                references: refs,
+                eval_loss: false,
+                record_every: 50,
+                ..Default::default()
+            };
+            let r = bench(
+                &format!("driver50/{label}/M{workers}"),
+                BUDGET,
+                || black_box(driver::run(&obj, &TernaryCodec, label, &cfg)),
+            );
+            let rounds_per_sec = 50.0 / r.mean.as_secs_f64();
+            r.report();
+            println!("        -> {rounds_per_sec:.0} rounds/s");
+        }
+    }
+
+    // Threaded runtime (includes channel + serialization overhead).
+    for workers in [2usize, 4, 8] {
+        let cfg = DriverConfig {
+            workers,
+            rounds: 50,
+            schedule: StepSchedule::Const(0.25),
+            estimator: EstimatorKind::Sgd,
+            eval_loss: false,
+            record_every: 50,
+            ..Default::default()
+        };
+        let r = bench(&format!("threaded50/raw/M{workers}"), BUDGET, || {
+            black_box(parallel::run(&obj, &TernaryCodec, "bench", &cfg).unwrap())
+        });
+        r.report();
+        println!("        -> {:.0} rounds/s", 50.0 / r.mean.as_secs_f64());
+    }
+
+    // L-BFGS preconditioning cost at the leader.
+    for k in [2usize, 8] {
+        let cfg = DriverConfig {
+            workers: 4,
+            rounds: 50,
+            lbfgs_memory: Some(k),
+            schedule: StepSchedule::Const(0.25),
+            eval_loss: false,
+            record_every: 50,
+            ..Default::default()
+        };
+        bench(&format!("driver50/lbfgs{k}/M4"), BUDGET, || {
+            black_box(driver::run(&obj, &TernaryCodec, "bench", &cfg))
+        })
+        .report();
+    }
+}

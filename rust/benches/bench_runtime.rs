@@ -1,0 +1,114 @@
+//! PJRT runtime benchmarks: artifact execution latency for every AOT graph
+//! (the L2/L1 hot path as seen from Rust). Requires `make artifacts`.
+
+use std::time::Duration;
+
+use tng::runtime::engine::{lit_f32_1d, lit_f32_2d, lit_i32_2d, read_f32_bin, Engine};
+use tng::util::bench::{bench, black_box};
+use tng::util::Rng;
+
+const BUDGET: Duration = Duration::from_millis(800);
+
+fn main() {
+    let dir = tng::runtime::default_artifact_dir();
+    if !dir.join("logreg_grad.hlo.txt").exists() {
+        eprintln!("SKIP bench_runtime: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut engine = Engine::cpu().expect("PJRT CPU client");
+    let n = engine.load_dir(&dir).expect("loading artifacts");
+    println!("# PJRT runtime: {n} artifacts on {}", engine.platform());
+
+    let mut rng = Rng::new(1);
+    let gauss = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.gauss_f32()).collect()
+    };
+
+    // logreg minibatch gradient (B=8, D=512) — the per-round worker step.
+    let x = gauss(&mut rng, 8 * 512);
+    let y: Vec<f32> = (0..8).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+    let w = gauss(&mut rng, 512);
+    let lam = [0.01f32];
+    bench("pjrt/logreg_grad(8x512)", BUDGET, || {
+        black_box(
+            engine
+                .execute_f32(
+                    "logreg_grad",
+                    &[
+                        lit_f32_2d(&x, 8, 512).unwrap(),
+                        lit_f32_1d(&y),
+                        lit_f32_1d(&w),
+                        lit_f32_1d(&lam),
+                    ],
+                )
+                .unwrap(),
+        )
+    })
+    .report();
+
+    // TNG codec graphs (Pallas kernels through interpret-mode HLO).
+    let g = gauss(&mut rng, 512);
+    let gref = gauss(&mut rng, 512);
+    let mut u = vec![0.0f32; 512];
+    rng.fill_uniform(&mut u);
+    bench("pjrt/tng_encode(512)", BUDGET, || {
+        black_box(
+            engine
+                .execute_f32(
+                    "tng_encode",
+                    &[lit_f32_1d(&g), lit_f32_1d(&gref), lit_f32_1d(&u)],
+                )
+                .unwrap(),
+        )
+    })
+    .report();
+    bench("pjrt/tng_roundtrip(512)", BUDGET, || {
+        black_box(
+            engine
+                .execute_f32(
+                    "tng_roundtrip",
+                    &[lit_f32_1d(&g), lit_f32_1d(&gref), lit_f32_1d(&u)],
+                )
+                .unwrap(),
+        )
+    })
+    .report();
+
+    // Full-data loss + gradient (N=2048) — the SVRG anchor / eval path.
+    let xf = gauss(&mut rng, 2048 * 512);
+    let yf: Vec<f32> =
+        (0..2048).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+    bench("pjrt/logreg_full_grad(2048x512)", BUDGET, || {
+        black_box(
+            engine
+                .execute_f32(
+                    "logreg_full_grad",
+                    &[
+                        lit_f32_2d(&xf, 2048, 512).unwrap(),
+                        lit_f32_1d(&yf),
+                        lit_f32_1d(&w),
+                        lit_f32_1d(&lam),
+                    ],
+                )
+                .unwrap(),
+        )
+    })
+    .report();
+
+    // Transformer fwd/bwd — the e2e example's per-worker step.
+    if engine.has("transformer_step") {
+        let params = read_f32_bin(&dir.join("transformer_init.bin")).unwrap();
+        let tokens: Vec<i32> = (0..8 * 65).map(|_| rng.below(256) as i32).collect();
+        bench("pjrt/transformer_step(3.2M params)", Duration::from_secs(5), || {
+            black_box(
+                engine
+                    .execute_f32(
+                        "transformer_step",
+                        &[lit_f32_1d(&params), lit_i32_2d(&tokens, 8, 65).unwrap()],
+                    )
+                    .unwrap(),
+            )
+        })
+        .report();
+    }
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig1_nonconvex` — reduced Figure-1 sweep
+//! (full harness: `tng fig1`). Emits results/bench/fig1.csv and the
+//! per-run summary lines; see EXPERIMENTS.md §Fig1 for paper-vs-measured.
+
+use tng::config::Settings;
+
+fn main() {
+    let s = Settings::from_args(&["quick=true", "outdir=results/bench"]).unwrap();
+    let t0 = std::time::Instant::now();
+    let rows = tng::experiments::fig1::run(&s).expect("fig1 quick sweep");
+    println!("# fig1 quick: {} runs in {:?} -> results/bench/fig1.csv", rows.len(), t0.elapsed());
+}

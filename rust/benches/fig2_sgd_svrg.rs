@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig2_sgd_svrg` — reduced Figure-2 grid
+//! (full harness: `tng fig2`). SGD + SVRG + GD estimators × {QG,TG,SG} ×
+//! {raw, TN-}; emits results/bench/fig2.csv.
+
+use tng::config::Settings;
+
+fn main() {
+    let s = Settings::from_args(&["quick=true", "outdir=results/bench"]).unwrap();
+    let t0 = std::time::Instant::now();
+    let rows = tng::experiments::fig2::run(&s).expect("fig2 quick sweep");
+    println!("# fig2 quick: {} runs in {:?} -> results/bench/fig2.csv", rows.len(), t0.elapsed());
+}

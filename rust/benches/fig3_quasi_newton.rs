@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig3_quasi_newton` — reduced Figure-3 grid
+//! (full harness: `tng fig3`): the Figure-2 matrix under the stochastic
+//! L-BFGS leader. Emits results/bench/fig3.csv.
+
+use tng::config::Settings;
+
+fn main() {
+    let s = Settings::from_args(&["quick=true", "outdir=results/bench", "eta=0.2"]).unwrap();
+    let t0 = std::time::Instant::now();
+    let rows = tng::experiments::fig3::run(&s).expect("fig3 quick sweep");
+    println!("# fig3 quick: {} runs in {:?} -> results/bench/fig3.csv", rows.len(), t0.elapsed());
+}

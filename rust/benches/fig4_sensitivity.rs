@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig4_sensitivity` — reduced Figure-4 grid
+//! (full harness: `tng fig4`): servers M × L-BFGS memory K sensitivity,
+//! TG vs TN-TG. Emits results/bench/fig4.csv.
+
+use tng::config::Settings;
+
+fn main() {
+    let s = Settings::from_args(&["quick=true", "outdir=results/bench"]).unwrap();
+    let t0 = std::time::Instant::now();
+    let rows = tng::experiments::fig4::run(&s).expect("fig4 quick sweep");
+    println!("# fig4 quick: {} runs in {:?} -> results/bench/fig4.csv", rows.len(), t0.elapsed());
+}

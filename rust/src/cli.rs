@@ -1,0 +1,94 @@
+//! Hand-rolled CLI (no `clap` offline): `tng <command> [key=value ...]`.
+//!
+//! Commands map 1:1 onto the experiment harnesses plus a generic `run`:
+//!
+//! ```text
+//! tng fig1 [rounds=2000 outdir=results ...]   Figure 1 (nonconvex suite)
+//! tng fig2 [...]                              Figure 2 (SGD / SVRG grid)
+//! tng fig3 [...]                              Figure 3 (quasi-Newton grid)
+//! tng fig4 [...]                              Figure 4 (servers × memory)
+//! tng run  codec=ternary tng=true [...]       one custom configuration
+//! tng info                                    artifact + platform info
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::config::Settings;
+
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: String,
+    pub opts: Settings,
+}
+
+pub const USAGE: &str = "\
+tng — Trajectory Normalized Gradients (Wangni et al. 2019) reproduction
+
+USAGE:
+    tng <COMMAND> [key=value ...]
+
+COMMANDS:
+    fig1    Figure 1: TNG vs SGD on Ackley/Booth/Rosenbrock (ternary coding)
+    fig2    Figure 2: SGD & SVRG x {QG,TG,SG} x {raw,TN-} on skewed logreg
+    fig3    Figure 3: stochastic quasi-Newton (L-BFGS) variant of fig2
+    fig4    Figure 4: sensitivity to #servers (M) and L-BFGS memory (K)
+    run     One custom run (codec=, tng=, rounds=, workers=, eta=, ...)
+    info    Show PJRT platform + loaded artifacts
+    help    Show this help
+
+COMMON OPTIONS (key=value):
+    outdir=results      CSV output directory
+    seed=0              root RNG seed
+    rounds=N            override round count
+    quick=true          reduced sweep (what `cargo bench` uses)
+
+`tng <cmd> help` prints command-specific options.";
+
+/// Parse argv (excluding argv[0]).
+pub fn parse<S: AsRef<str>>(args: &[S]) -> Result<Cli> {
+    let Some(command) = args.first() else {
+        bail!("missing command\n\n{USAGE}");
+    };
+    let command = command.as_ref().to_string();
+    match command.as_str() {
+        "fig1" | "fig2" | "fig3" | "fig4" | "run" | "info" | "help" => {}
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+    let rest: Vec<&str> = args[1..].iter().map(|s| s.as_ref()).collect();
+    if rest.first() == Some(&"help") {
+        return Ok(Cli { command: "help-cmd".into(), opts: Settings::from_args(&[format!("cmd={command}")])? });
+    }
+    let opts = Settings::from_args(&rest)?;
+    Ok(Cli { command, opts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_command_and_opts() {
+        let c = parse(&["fig2", "rounds=100", "outdir=/tmp/x"]).unwrap();
+        assert_eq!(c.command, "fig2");
+        assert_eq!(c.opts.usize_or("rounds", 0).unwrap(), 100);
+        assert_eq!(c.opts.str_or("outdir", ""), "/tmp/x");
+    }
+
+    #[test]
+    fn rejects_unknown_command_and_empty() {
+        assert!(parse(&["frobnicate"]).is_err());
+        assert!(parse::<&str>(&[]).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_opts() {
+        assert!(parse(&["run", "oops"]).is_err());
+    }
+
+    #[test]
+    fn command_help() {
+        let c = parse(&["fig1", "help"]).unwrap();
+        assert_eq!(c.command, "help-cmd");
+        assert_eq!(c.opts.str_or("cmd", ""), "fig1");
+    }
+}

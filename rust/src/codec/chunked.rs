@@ -1,0 +1,122 @@
+//! Chunked ternary coding: one stochastic-ternary scale per contiguous
+//! block of `chunk` coordinates (TernGrad's per-layer scaling, shape-
+//! agnostic). For high-dimensional models a single global `R = max|v|` is
+//! dominated by a few outlier coordinates (embeddings), starving the rest
+//! of resolution; per-chunk scales restore it at 32 bits per chunk.
+//!
+//! Unbiased per chunk by the same argument as [`super::ternary`].
+
+use super::{Codec, Encoded, Payload};
+use crate::util::math::abs_max;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ChunkedTernaryCodec {
+    pub chunk: usize,
+}
+
+impl ChunkedTernaryCodec {
+    pub fn new(chunk: usize) -> Self {
+        assert!(chunk > 0);
+        ChunkedTernaryCodec { chunk }
+    }
+}
+
+impl Codec for ChunkedTernaryCodec {
+    fn name(&self) -> String {
+        format!("cternary{}", self.chunk)
+    }
+
+    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded {
+        let mut codes = vec![0i8; v.len()];
+        let mut scales = Vec::with_capacity(v.len().div_ceil(self.chunk));
+        for (ci, block) in v.chunks(self.chunk).enumerate() {
+            let r = abs_max(block);
+            scales.push(r);
+            if r > 0.0 {
+                let inv_r = 1.0 / r;
+                let base = ci * self.chunk;
+                // Sign-select form (see ternary.rs — 3.3x over keep*sign).
+                for (j, &x) in block.iter().enumerate() {
+                    let keep = (rng.f32() < x.abs() * inv_r) as i8;
+                    codes[base + j] = if x < 0.0 { -keep } else { keep };
+                }
+            }
+        }
+        Encoded { dim: v.len(), payload: Payload::TernaryChunked { chunk: self.chunk as u32, scales, codes } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::assert_unbiased;
+    use crate::util::math::norm2_sq;
+
+    fn randv(seed: u64, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn unbiasedness() {
+        let v = randv(1, 100);
+        assert_unbiased(&ChunkedTernaryCodec::new(16), &v, 4000, 2);
+    }
+
+    #[test]
+    fn unbiased_with_ragged_tail() {
+        let v = randv(3, 37); // 37 = 2*16 + 5
+        assert_unbiased(&ChunkedTernaryCodec::new(16), &v, 4000, 4);
+    }
+
+    #[test]
+    fn chunk_of_dim_equals_plain_ternary_scale() {
+        let v = randv(5, 64);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = ChunkedTernaryCodec::new(64).encode(&v, &mut r1);
+        let b = crate::codec::ternary::TernaryCodec.encode(&v, &mut r2);
+        assert_eq!(a.decode(), b.decode());
+    }
+
+    #[test]
+    fn outlier_in_one_chunk_does_not_starve_others() {
+        // One huge coordinate: global ternary codes the rest with prob
+        // ~|v|/R_huge ~ 0; chunked coding keeps their local resolution.
+        let mut v = randv(8, 256);
+        v[0] = 1000.0;
+        let mse = |codec: &dyn Codec, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut acc = 0.0;
+            for _ in 0..200 {
+                let d = codec.encode(&v, &mut rng).decode();
+                let diff: Vec<f32> = d.iter().zip(&v).map(|(a, b)| a - b).collect();
+                // error outside the outlier's chunk (coords 64..)
+                acc += norm2_sq(&diff[64..]);
+            }
+            acc / 200.0
+        };
+        let global = mse(&crate::codec::ternary::TernaryCodec, 9);
+        let chunked = mse(&ChunkedTernaryCodec::new(64), 10);
+        assert!(chunked < 0.05 * global, "chunked={chunked} global={global}");
+    }
+
+    #[test]
+    fn bits_account_for_per_chunk_scales() {
+        let v = randv(11, 256);
+        let mut rng = Rng::new(12);
+        let e = ChunkedTernaryCodec::new(64).encode(&v, &mut rng);
+        // dense: 2 bits/elt + 32 per chunk scale
+        assert_eq!(e.bits_dense(), 2 * 256 + 32 * 4);
+    }
+
+    #[test]
+    fn zero_vector() {
+        let v = vec![0.0f32; 48];
+        let mut rng = Rng::new(13);
+        let e = ChunkedTernaryCodec::new(16).encode(&v, &mut rng);
+        assert_eq!(e.decode(), v);
+        assert_eq!(e.nnz(), 0);
+    }
+}

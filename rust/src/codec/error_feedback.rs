@@ -1,0 +1,111 @@
+//! Error-feedback (memory) wrapper — Stich et al. 2018 / Wu et al. 2018.
+//!
+//! Maintains the accumulated compression residual `m` per worker and encodes
+//! `v + m` instead of `v`; the un-transmitted part `v + m - decode(...)`
+//! becomes the next residual. Turns biased codecs (sign, top-K) into
+//! convergent ones and further de-noises unbiased ones. Mentioned in the
+//! paper's introduction as the compensation line of work; included so the
+//! ablation benches can separate "normalization" from "compensation" gains.
+
+use super::{Codec, Encoded};
+use crate::util::Rng;
+
+pub struct ErrorFeedback<C: Codec> {
+    inner: C,
+    residual: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl<C: Codec> ErrorFeedback<C> {
+    pub fn new(inner: C, dim: usize) -> Self {
+        ErrorFeedback { inner, residual: vec![0.0; dim], scratch: vec![0.0; dim] }
+    }
+
+    pub fn name(&self) -> String {
+        format!("ef-{}", self.inner.name())
+    }
+
+    /// Encode `v + residual`, update the residual with what was lost.
+    pub fn encode(&mut self, v: &[f32], rng: &mut Rng) -> Encoded {
+        assert_eq!(v.len(), self.residual.len());
+        for (s, (&x, &m)) in self.scratch.iter_mut().zip(v.iter().zip(&self.residual)) {
+            *s = x + m;
+        }
+        let e = self.inner.encode(&self.scratch, rng);
+        let decoded = e.decode();
+        for (m, (&s, &d)) in self.residual.iter_mut().zip(self.scratch.iter().zip(&decoded)) {
+            *m = s - d;
+        }
+        e
+    }
+
+    pub fn residual_norm(&self) -> f64 {
+        crate::util::math::norm2(&self.residual)
+    }
+
+    pub fn reset(&mut self) {
+        self.residual.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::topk::TopKCodec;
+    use crate::codec::ternary::TernaryCodec;
+    use crate::util::math;
+
+    #[test]
+    fn residual_tracks_untransmitted_mass() {
+        let v = [4.0f32, 3.0, 2.0, 1.0];
+        let mut ef = ErrorFeedback::new(TopKCodec::new(2), 4);
+        let mut rng = Rng::new(1);
+        let _ = ef.encode(&v, &mut rng);
+        // top-2 kept {4,3}; residual must be the dropped tail {0,0,2,1}
+        assert_eq!(ef.residual, vec![0.0, 0.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn dropped_coordinates_eventually_transmitted() {
+        // With top-1, a constant gradient's small coordinate accumulates in
+        // the residual until it wins the selection — the EF guarantee.
+        let v = [1.0f32, 0.4];
+        let mut ef = ErrorFeedback::new(TopKCodec::new(1), 2);
+        let mut rng = Rng::new(2);
+        let mut sent1 = 0.0;
+        for _ in 0..10 {
+            let d = ef.encode(&v, &mut rng).decode();
+            sent1 += d[1];
+        }
+        // 10 rounds * 0.4 = 4.0 of mass; EF must have transmitted most of it.
+        assert!(sent1 > 2.0, "sent1={sent1}");
+    }
+
+    #[test]
+    fn cumulative_transmission_tracks_cumulative_gradient() {
+        let mut rng = Rng::new(3);
+        let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
+        let mut ef = ErrorFeedback::new(TernaryCodec::new(), 64);
+        let mut sum_sent = vec![0.0f32; 64];
+        let rounds = 200;
+        for _ in 0..rounds {
+            let d = ef.encode(&v, &mut rng).decode();
+            math::axpy(1.0, &d, &mut sum_sent);
+        }
+        // sum_sent ~ rounds * v + residual; relative error must be small.
+        let mut expect: Vec<f32> = v.iter().map(|&x| x * rounds as f32).collect();
+        math::axpy(-1.0, &sum_sent, &mut expect);
+        let rel = math::norm2(&expect) / (rounds as f64 * math::norm2(&v));
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut ef = ErrorFeedback::new(TopKCodec::new(1), 3);
+        let mut rng = Rng::new(4);
+        let _ = ef.encode(&[1.0, 2.0, 3.0], &mut rng);
+        assert!(ef.residual_norm() > 0.0);
+        ef.reset();
+        assert_eq!(ef.residual_norm(), 0.0);
+    }
+}

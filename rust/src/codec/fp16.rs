@@ -1,0 +1,146 @@
+//! IEEE-754 half-precision cast codec (16 bits/element, deterministic).
+//!
+//! The baseline the paper's Figure-1 parity rule prices reference
+//! broadcasts at, and a useful mid-point between fp32 and the 1–2 bit
+//! codecs. Round-to-nearest-even via the standard bit algorithm (no `half`
+//! crate offline). Biased only by rounding (relative error ≤ 2^-11).
+
+use super::{Codec, Encoded, Payload};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Default)]
+pub struct Fp16Codec;
+
+/// f32 -> f16 bits (round-to-nearest-even, IEEE 754 binary16).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xFF) as i32;
+    let mut man = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if man != 0 { 0x200 } else { 0 };
+    }
+    exp -= 127 - 15;
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal half (or zero)
+        if exp < -10 {
+            return sign;
+        }
+        man |= 0x80_0000; // implicit bit
+        let shift = (14 - exp) as u32;
+        let half = man >> shift;
+        // round to nearest even
+        let rem = man & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            half + u32::from(rem > halfway || (rem == halfway && (half & 1) == 1));
+        return sign | rounded as u16;
+    }
+    // normal
+    let half = ((exp as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    let rounded = half + u32::from(rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1));
+    sign | rounded as u16
+}
+
+/// f16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: value is exactly man * 2^-24 (representable in f32)
+            let v = man as f32 * f32::from_bits(0x3380_0000); // 2^-24
+            return if sign != 0 { -v } else { v };
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+impl Codec for Fp16Codec {
+    fn name(&self) -> String {
+        "fp16".into()
+    }
+
+    fn encode(&self, v: &[f32], _rng: &mut Rng) -> Encoded {
+        // Stored decoded (Dense) so the in-memory path is allocation-light;
+        // the wire/bit cost is still 16/elt via bits() below.
+        let values: Vec<f32> =
+            v.iter().map(|&x| f16_bits_to_f32(f32_to_f16_bits(x))).collect();
+        Encoded { dim: v.len(), payload: Payload::Dense { values } }
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false // rounding bias (bounded by 2^-11 relative)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_representable_values() {
+        for x in [0.0f32, 1.0, -2.0, 0.5, 65504.0, -0.25] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(x, y, "{x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = rng.gauss_f32() * 100.0;
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!(
+                (x - y).abs() <= x.abs() * (1.0 / 1024.0) + 1e-7,
+                "{x} -> {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf_and_subnormals() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e6)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(-1e6)).is_infinite());
+        // smallest half subnormal ~ 5.96e-8
+        let tiny = 6e-8f32;
+        let y = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!(y > 0.0 && (y - tiny).abs() < 3e-8);
+        // below half of the smallest subnormal -> 0
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-9)), 0.0);
+    }
+
+    #[test]
+    fn sign_and_zero_preserved() {
+        assert_eq!(f32_to_f16_bits(-0.0) & 0x8000, 0x8000);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(0.0)), 0.0);
+    }
+
+    #[test]
+    fn codec_roundtrip_close() {
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = (0..256).map(|_| rng.gauss_f32()).collect();
+        let d = Fp16Codec.encode(&v, &mut rng).decode();
+        for (a, b) in v.iter().zip(&d) {
+            assert!((a - b).abs() <= a.abs() / 1024.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn nan_roundtrips_as_nan() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+}

@@ -1,0 +1,32 @@
+//! Full-precision passthrough codec (32 bits/element) — the uncompressed
+//! baseline and the coding used for reference-vector broadcasts.
+
+use super::{Codec, Encoded, Payload};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Default)]
+pub struct IdentityCodec;
+
+impl Codec for IdentityCodec {
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+
+    fn encode(&self, v: &[f32], _rng: &mut Rng) -> Encoded {
+        Encoded { dim: v.len(), payload: Payload::Dense { values: v.to_vec() } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_roundtrip() {
+        let v = [1.5f32, -2.25, 0.0, 1e-20];
+        let mut rng = Rng::new(1);
+        let e = IdentityCodec.encode(&v, &mut rng);
+        assert_eq!(e.decode(), v.to_vec());
+        assert_eq!(e.bits_dense(), 4 * 32);
+    }
+}

@@ -1,0 +1,354 @@
+//! Gradient compression codecs (the `Q` of the paper) and the wire format.
+//!
+//! Implemented codecs, mirroring the paper's baselines (§4.2):
+//!
+//! * [`ternary::TernaryCodec`] — randomized ternary (TG, TernGrad; Algorithm 1's Q)
+//! * [`qsgd::QsgdCodec`] — s-level quantization (QG, QSGD)
+//! * [`sparse::SparseCodec`] — magnitude-proportional sparsification (SG)
+//! * [`signsgd::SignCodec`] — sign-only coding (biased; baseline)
+//! * [`topk::TopKCodec`] — top-K magnitude selection (biased; baseline)
+//! * [`identity::IdentityCodec`] — full-precision passthrough
+//! * [`error_feedback::ErrorFeedback`] — error-compensation wrapper (memory)
+//!
+//! Each encode produces an [`Encoded`] carrying a typed payload plus exact
+//! bit accounting in several coding models (dense / sparse / entropy bound /
+//! actual deflate) — the paper picks the cheaper of dense vs sparse per
+//! message, which is [`Encoded::bits`].
+
+pub mod chunked;
+pub mod error_feedback;
+pub mod fp16;
+pub mod identity;
+pub mod qsgd;
+pub mod signsgd;
+pub mod sparse;
+pub mod ternary;
+pub mod topk;
+pub mod wire;
+
+use crate::util::Rng;
+
+/// Number of payload bits for a f32 scalar on the wire.
+pub const F32_BITS: usize = 32;
+
+/// A compressed gradient message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Encoded {
+    /// Original vector dimension.
+    pub dim: usize,
+    pub payload: Payload,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Codes in {-1, 0, +1} scaled by `scale` (TG / signSGD / TNG-TG).
+    Ternary { scale: f32, codes: Vec<i8> },
+    /// Ternary with one scale per contiguous `chunk` coordinates
+    /// (TernGrad's per-layer scaling; see [`chunked`]).
+    TernaryChunked { chunk: u32, scales: Vec<f32>, codes: Vec<i8> },
+    /// QSGD: signed integer levels in [-s, s] scaled by `norm / s`.
+    Quantized { norm: f32, levels: u32, q: Vec<i16> },
+    /// Sparse (index, value) pairs; absent coordinates decode to 0.
+    Sparse { pairs: Vec<(u32, f32)> },
+    /// Raw dense f32 (identity codec / reference broadcasts).
+    Dense { values: Vec<f32> },
+}
+
+impl Encoded {
+    /// Decode into a dense vector (unbiased reconstruction for the unbiased
+    /// codecs). Allocation-free variant: [`Encoded::decode_into`].
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        self.decode_into(&mut out);
+        out
+    }
+
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        match &self.payload {
+            Payload::Ternary { scale, codes } => {
+                for (o, &c) in out.iter_mut().zip(codes) {
+                    *o = *scale * c as f32;
+                }
+            }
+            Payload::TernaryChunked { chunk, scales, codes } => {
+                let chunk = *chunk as usize;
+                for (i, (o, &c)) in out.iter_mut().zip(codes).enumerate() {
+                    *o = scales[i / chunk] * c as f32;
+                }
+            }
+            Payload::Quantized { norm, levels, q } => {
+                let unit = if *levels > 0 { norm / *levels as f32 } else { 0.0 };
+                for (o, &qi) in out.iter_mut().zip(q) {
+                    *o = unit * qi as f32;
+                }
+            }
+            Payload::Sparse { pairs } => {
+                out.fill(0.0);
+                for &(i, v) in pairs {
+                    out[i as usize] = v;
+                }
+            }
+            Payload::Dense { values } => out.copy_from_slice(values),
+        }
+    }
+
+    /// Count of non-zero coded coordinates.
+    pub fn nnz(&self) -> usize {
+        match &self.payload {
+            Payload::Ternary { codes, .. } | Payload::TernaryChunked { codes, .. } => {
+                codes.iter().filter(|&&c| c != 0).count()
+            }
+            Payload::Quantized { q, .. } => q.iter().filter(|&&x| x != 0).count(),
+            Payload::Sparse { pairs } => pairs.len(),
+            Payload::Dense { values } => values.iter().filter(|&&v| v != 0.0).count(),
+        }
+    }
+
+    fn index_bits(&self) -> usize {
+        // ceil(log2(dim)) bits per index, min 1.
+        (usize::BITS - (self.dim.max(2) - 1).leading_zeros()) as usize
+    }
+
+    /// Dense coding cost in bits (every coordinate transmitted).
+    pub fn bits_dense(&self) -> usize {
+        match &self.payload {
+            Payload::Ternary { codes, .. } => 2 * codes.len() + F32_BITS,
+            Payload::TernaryChunked { scales, codes, .. } => {
+                2 * codes.len() + F32_BITS * scales.len()
+            }
+            Payload::Quantized { levels, q, .. } => {
+                // sign + ceil(log2(levels+1)) magnitude bits per element
+                let mag_bits =
+                    (u32::BITS - levels.leading_zeros()).max(1) as usize;
+                (1 + mag_bits) * q.len() + F32_BITS
+            }
+            // A dense coding of a sparse payload materializes all coords.
+            Payload::Sparse { .. } => F32_BITS * self.dim,
+            Payload::Dense { values } => F32_BITS * values.len(),
+        }
+    }
+
+    /// Sparse coding cost in bits (index + payload per non-zero).
+    pub fn bits_sparse(&self) -> usize {
+        let idx = self.index_bits();
+        match &self.payload {
+            Payload::Ternary { .. } => (idx + 1) * self.nnz() + F32_BITS,
+            Payload::TernaryChunked { scales, .. } => {
+                (idx + 1) * self.nnz() + F32_BITS * scales.len()
+            }
+            Payload::Quantized { levels, .. } => {
+                let mag_bits =
+                    (u32::BITS - levels.leading_zeros()).max(1) as usize;
+                (idx + 1 + mag_bits) * self.nnz() + F32_BITS
+            }
+            Payload::Sparse { pairs } => (idx + F32_BITS) * pairs.len(),
+            Payload::Dense { .. } => (idx + F32_BITS) * self.nnz(),
+        }
+    }
+
+    /// The paper's accounting: the cheaper of dense vs sparse coding
+    /// ("we also choose the optimal methods for coding the vectors, whether
+    /// in dense vector form or in sparse vector form", §4.2).
+    pub fn bits(&self) -> usize {
+        self.bits_dense().min(self.bits_sparse())
+    }
+
+    /// Zeroth-order empirical entropy bound in bits (what an ideal
+    /// arithmetic coder would reach), + 32 for each scale scalar.
+    pub fn bits_entropy(&self) -> usize {
+        fn entropy_bits(counts: &[usize], total: usize) -> f64 {
+            if total == 0 {
+                return 0.0;
+            }
+            let mut h = 0.0;
+            for &c in counts {
+                if c > 0 {
+                    let p = c as f64 / total as f64;
+                    h -= p * p.log2();
+                }
+            }
+            h * total as f64
+        }
+        match &self.payload {
+            Payload::Ternary { codes, .. } => {
+                let mut counts = [0usize; 3];
+                for &c in codes {
+                    counts[(c + 1) as usize] += 1;
+                }
+                entropy_bits(&counts, codes.len()).ceil() as usize + F32_BITS
+            }
+            Payload::TernaryChunked { scales, codes, .. } => {
+                let mut counts = [0usize; 3];
+                for &c in codes {
+                    counts[(c + 1) as usize] += 1;
+                }
+                entropy_bits(&counts, codes.len()).ceil() as usize
+                    + F32_BITS * scales.len()
+            }
+            Payload::Quantized { q, .. } => {
+                use std::collections::HashMap;
+                let mut counts: HashMap<i16, usize> = HashMap::new();
+                for &x in q {
+                    *counts.entry(x).or_insert(0) += 1;
+                }
+                let cs: Vec<usize> = counts.values().copied().collect();
+                entropy_bits(&cs, q.len()).ceil() as usize + F32_BITS
+            }
+            _ => self.bits(),
+        }
+    }
+
+    /// Actual deflate-compressed wire size in bits (level 6). Empirical
+    /// check that the entropy estimate is attainable with a real coder.
+    pub fn bits_deflate(&self) -> usize {
+        use flate2::write::DeflateEncoder;
+        use flate2::Compression;
+        use std::io::Write;
+        let bytes = wire::to_bytes(self);
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::new(6));
+        enc.write_all(&bytes).expect("deflate write");
+        enc.finish().expect("deflate finish").len() * 8
+    }
+}
+
+/// A gradient compressor. Unbiased codecs satisfy
+/// `E_rng[decode(encode(v))] = v`; `is_unbiased` flags the exceptions
+/// (sign, top-K), which the convergence tests treat differently.
+pub trait Codec: Send + Sync {
+    fn name(&self) -> String;
+    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded;
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+/// Statistical helper shared by the codec test-suites: verify
+/// `E[decode(encode(v))] = v` within a CLT bound.
+#[cfg(test)]
+pub(crate) fn assert_unbiased(codec: &dyn Codec, v: &[f32], trials: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let mut acc = vec![0.0f64; v.len()];
+    let mut worst_scale = 0.0f64;
+    for _ in 0..trials {
+        let e = codec.encode(v, &mut rng);
+        let d = e.decode();
+        for (a, x) in acc.iter_mut().zip(&d) {
+            *a += *x as f64;
+        }
+        worst_scale = worst_scale.max(crate::util::math::abs_max(&d) as f64);
+    }
+    let bound = 6.0 * worst_scale.max(crate::util::math::abs_max(v) as f64)
+        / (trials as f64).sqrt()
+        + 1e-6;
+    for (i, (a, &x)) in acc.iter().zip(v).enumerate() {
+        let mean = a / trials as f64;
+        assert!(
+            (mean - x as f64).abs() < bound,
+            "{}: coord {i} biased: mean={mean} true={x} bound={bound}",
+            codec.name()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc_ternary() -> Encoded {
+        Encoded {
+            dim: 8,
+            payload: Payload::Ternary {
+                scale: 2.0,
+                codes: vec![1, 0, -1, 0, 0, 0, 1, 0],
+            },
+        }
+    }
+
+    #[test]
+    fn decode_ternary() {
+        let d = enc_ternary().decode();
+        assert_eq!(d, vec![2.0, 0.0, -2.0, 0.0, 0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn decode_quantized() {
+        let e = Encoded {
+            dim: 4,
+            payload: Payload::Quantized { norm: 8.0, levels: 4, q: vec![4, -2, 0, 1] },
+        };
+        assert_eq!(e.decode(), vec![8.0, -4.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn decode_sparse_and_dense() {
+        let e = Encoded { dim: 5, payload: Payload::Sparse { pairs: vec![(1, 3.0), (4, -1.0)] } };
+        assert_eq!(e.decode(), vec![0.0, 3.0, 0.0, 0.0, -1.0]);
+        let e = Encoded { dim: 2, payload: Payload::Dense { values: vec![1.0, 2.0] } };
+        assert_eq!(e.decode(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn nnz_counts() {
+        assert_eq!(enc_ternary().nnz(), 3);
+    }
+
+    #[test]
+    fn bits_dense_ternary_is_2_per_elt() {
+        assert_eq!(enc_ternary().bits_dense(), 2 * 8 + 32);
+    }
+
+    #[test]
+    fn bits_sparse_beats_dense_when_very_sparse() {
+        let mut codes = vec![0i8; 1024];
+        codes[3] = 1;
+        let e = Encoded { dim: 1024, payload: Payload::Ternary { scale: 1.0, codes } };
+        assert!(e.bits_sparse() < e.bits_dense());
+        assert_eq!(e.bits(), e.bits_sparse());
+        // 10 index bits + 1 sign bit per nnz + 32-bit scale
+        assert_eq!(e.bits_sparse(), 11 + 32);
+    }
+
+    #[test]
+    fn bits_dense_wins_when_dense() {
+        let codes = vec![1i8; 256];
+        let e = Encoded { dim: 256, payload: Payload::Ternary { scale: 1.0, codes } };
+        assert_eq!(e.bits(), e.bits_dense());
+    }
+
+    #[test]
+    fn entropy_bound_below_dense_for_skewed() {
+        let mut codes = vec![0i8; 1000];
+        for i in 0..10 {
+            codes[i * 100] = if i % 2 == 0 { 1 } else { -1 };
+        }
+        let e = Encoded { dim: 1000, payload: Payload::Ternary { scale: 1.0, codes } };
+        assert!(e.bits_entropy() < e.bits_dense());
+    }
+
+    #[test]
+    fn entropy_of_uniform_ternary_near_log3() {
+        let codes: Vec<i8> = (0..999).map(|i| (i % 3) as i8 - 1).collect();
+        let e = Encoded { dim: 999, payload: Payload::Ternary { scale: 1.0, codes } };
+        let bits = e.bits_entropy() - F32_BITS;
+        let expect = 999.0 * 3f64.log2();
+        assert!((bits as f64 - expect).abs() < 2.0, "{bits} vs {expect}");
+    }
+
+    #[test]
+    fn deflate_positive_and_finite() {
+        let e = enc_ternary();
+        let b = e.bits_deflate();
+        assert!(b > 0);
+    }
+
+    #[test]
+    fn quantized_bits_per_element() {
+        // levels=4 -> 3 magnitude bits + 1 sign = 4 bits/elt dense
+        let e = Encoded {
+            dim: 100,
+            payload: Payload::Quantized { norm: 1.0, levels: 4, q: vec![1; 100] },
+        };
+        assert_eq!(e.bits_dense(), 4 * 100 + 32);
+    }
+}

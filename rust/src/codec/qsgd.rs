@@ -1,0 +1,133 @@
+//! QSGD s-level stochastic quantization (QG; Alistarh et al. 2017).
+//!
+//! Each coordinate is quantized to `sign(v_d) * (norm2 / s) * level` where
+//! `level` is the stochastic rounding of `s * |v_d| / ||v||_2` — unbiased by
+//! construction. `s = 2^(b-1)` levels corresponds to roughly `b` bits per
+//! coordinate (plus sign) before entropy coding.
+
+use super::{Codec, Encoded, Payload};
+use crate::util::math::norm2;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct QsgdCodec {
+    /// Quantization levels per sign (paper's `s`).
+    pub levels: u32,
+}
+
+impl QsgdCodec {
+    pub fn new(levels: u32) -> Self {
+        assert!(levels >= 1 && levels <= i16::MAX as u32);
+        QsgdCodec { levels }
+    }
+
+    /// Convenience: levels for a target bit-width (sign + b-1 magnitude).
+    pub fn with_bits(bits: u32) -> Self {
+        assert!(bits >= 2);
+        QsgdCodec::new(1 << (bits - 1))
+    }
+}
+
+impl Codec for QsgdCodec {
+    fn name(&self) -> String {
+        format!("qsgd{}", self.levels)
+    }
+
+    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded {
+        let norm = norm2(v) as f32;
+        let s = self.levels;
+        let mut q = vec![0i16; v.len()];
+        if norm > 0.0 {
+            let sf = s as f32 / norm;
+            for (qi, &x) in q.iter_mut().zip(v) {
+                let a = x.abs() * sf; // in [0, s]
+                let lo = a.floor();
+                let level = lo as i16 + (rng.f32() < (a - lo)) as i16;
+                *qi = if x >= 0.0 { level } else { -level };
+            }
+        }
+        Encoded { dim: v.len(), payload: Payload::Quantized { norm, levels: s, q } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::assert_unbiased;
+
+    fn randv(seed: u64, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn levels_bounded_by_s() {
+        let v = randv(1, 512);
+        let codec = QsgdCodec::new(4);
+        let mut rng = Rng::new(2);
+        let e = codec.encode(&v, &mut rng);
+        if let Payload::Quantized { levels, q, .. } = &e.payload {
+            assert_eq!(*levels, 4);
+            assert!(q.iter().all(|&x| x.unsigned_abs() <= 4));
+        } else {
+            panic!("wrong payload")
+        }
+    }
+
+    #[test]
+    fn with_bits_mapping() {
+        assert_eq!(QsgdCodec::with_bits(2).levels, 2);
+        assert_eq!(QsgdCodec::with_bits(4).levels, 8);
+        assert_eq!(QsgdCodec::with_bits(8).levels, 128);
+    }
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        let v = vec![0.0f32; 32];
+        let mut rng = Rng::new(3);
+        let e = QsgdCodec::new(4).encode(&v, &mut rng);
+        assert_eq!(e.decode(), v);
+    }
+
+    #[test]
+    fn unbiasedness_small_s() {
+        let v = randv(4, 64);
+        assert_unbiased(&QsgdCodec::new(2), &v, 4000, 5);
+    }
+
+    #[test]
+    fn unbiasedness_large_s() {
+        let v = randv(6, 64);
+        assert_unbiased(&QsgdCodec::new(64), &v, 2000, 7);
+    }
+
+    #[test]
+    fn high_levels_reduce_error() {
+        let v = randv(8, 256);
+        let mse = |s: u32, seed: u64| {
+            let codec = QsgdCodec::new(s);
+            let mut rng = Rng::new(seed);
+            let mut acc = 0.0;
+            for _ in 0..300 {
+                let d = codec.encode(&v, &mut rng).decode();
+                acc += d.iter().zip(&v).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
+            }
+            acc / 300.0
+        };
+        let coarse = mse(2, 9);
+        let fine = mse(64, 10);
+        assert!(fine < 0.01 * coarse, "fine={fine} coarse={coarse}");
+    }
+
+    #[test]
+    fn decode_max_level_equals_norm() {
+        // A one-hot vector quantizes exactly: |v| = norm -> level = s.
+        let mut v = vec![0.0f32; 16];
+        v[5] = -3.5;
+        let mut rng = Rng::new(11);
+        let e = QsgdCodec::new(4).encode(&v, &mut rng);
+        let d = e.decode();
+        assert!((d[5] + 3.5).abs() < 1e-6);
+        assert!(d.iter().enumerate().all(|(i, &x)| i == 5 || x == 0.0));
+    }
+}

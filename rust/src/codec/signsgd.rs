@@ -1,0 +1,80 @@
+//! Sign-only coding (signSGD; Bernstein et al. 2018).
+//!
+//! Transmits `sign(v_d)` for every coordinate plus one scale. With
+//! `scale = mean(|v|)` the decode matches the magnitude in L1 on average,
+//! but the codec is **biased** — it is included as the paper's strongest
+//! 1-bit baseline, and convergence harnesses treat it accordingly.
+
+use super::{Codec, Encoded, Payload};
+use crate::util::math::abs_sum;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Default)]
+pub struct SignCodec;
+
+impl Codec for SignCodec {
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn encode(&self, v: &[f32], _rng: &mut Rng) -> Encoded {
+        let scale = if v.is_empty() { 0.0 } else { (abs_sum(v) / v.len() as f64) as f32 };
+        let codes: Vec<i8> = v
+            .iter()
+            .map(|&x| {
+                if x > 0.0 {
+                    1
+                } else if x < 0.0 {
+                    -1
+                } else {
+                    0
+                }
+            })
+            .collect();
+        Encoded { dim: v.len(), payload: Payload::Ternary { scale, codes } }
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signs_and_scale() {
+        let v = [2.0f32, -4.0, 0.0, 6.0];
+        let mut rng = Rng::new(1);
+        let e = SignCodec.encode(&v, &mut rng);
+        if let Payload::Ternary { scale, codes } = &e.payload {
+            assert_eq!(codes, &vec![1, -1, 0, 1]);
+            assert!((scale - 3.0).abs() < 1e-7); // mean |v| = 12/4
+        } else {
+            panic!("wrong payload")
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let v = [1.0f32, -2.0, 3.0];
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999);
+        assert_eq!(SignCodec.encode(&v, &mut r1), SignCodec.encode(&v, &mut r2));
+    }
+
+    #[test]
+    fn marked_biased() {
+        assert!(!SignCodec.is_unbiased());
+    }
+
+    #[test]
+    fn decode_preserves_descent_direction() {
+        // <decode, v> > 0 guarantees sign-descent still makes progress.
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = (0..128).map(|_| rng.gauss_f32()).collect();
+        let d = SignCodec.encode(&v, &mut rng).decode();
+        assert!(crate::util::math::dot(&d, &v) > 0.0);
+    }
+}

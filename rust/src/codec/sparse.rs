@@ -1,0 +1,164 @@
+//! Magnitude-proportional gradient sparsification (SG; Wangni et al. 2018).
+//!
+//! Coordinate `d` is kept with probability `p_d` and re-scaled to `v_d/p_d`
+//! (unbiased). Probabilities are magnitude-proportional with an expected
+//! budget of `k = ratio * D` non-zeros: `p_d = min(1, k |v_d| / sum|v|)`,
+//! with the overflow from saturated coordinates re-distributed (one round of
+//! the paper's water-filling recursion — enough for the distributions here).
+
+use super::{Codec, Encoded, Payload};
+use crate::util::math::abs_sum;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SparseCodec {
+    /// Expected fraction of coordinates kept (the paper sweeps this).
+    pub ratio: f64,
+}
+
+impl SparseCodec {
+    pub fn new(ratio: f64) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        SparseCodec { ratio }
+    }
+
+    /// Keep-probabilities for `v` (exposed for tests).
+    pub fn probabilities(&self, v: &[f32]) -> Vec<f64> {
+        let d = v.len();
+        let budget = self.ratio * d as f64;
+        let total = abs_sum(v);
+        if total == 0.0 {
+            return vec![0.0; d];
+        }
+        let mut p: Vec<f64> = v.iter().map(|&x| budget * x.abs() as f64 / total).collect();
+        // Water-filling (the paper's recursion): clamp saturated coords to 1
+        // and redistribute the budget shortfall proportionally among the
+        // unsaturated rest until the expected nnz meets the budget (or
+        // everything saturates). Converges in <= D passes; bounded anyway.
+        let target = budget.min(d as f64);
+        for _ in 0..d.max(8) {
+            for x in p.iter_mut() {
+                *x = x.min(1.0);
+            }
+            let sum: f64 = p.iter().sum();
+            let deficit = target - sum;
+            if deficit <= 1e-9 {
+                break;
+            }
+            let under_sum: f64 = p.iter().filter(|&&x| x < 1.0).sum();
+            if under_sum <= 0.0 {
+                break;
+            }
+            let boost = 1.0 + deficit / under_sum;
+            for x in p.iter_mut() {
+                if *x < 1.0 {
+                    *x *= boost;
+                }
+            }
+        }
+        p
+    }
+}
+
+impl Codec for SparseCodec {
+    fn name(&self) -> String {
+        format!("sparse{:.2}", self.ratio)
+    }
+
+    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded {
+        let p = self.probabilities(v);
+        let mut pairs = Vec::with_capacity((self.ratio * v.len() as f64 * 1.5) as usize + 4);
+        for (i, (&x, &pi)) in v.iter().zip(&p).enumerate() {
+            if pi > 0.0 && rng.f64() < pi {
+                pairs.push((i as u32, (x as f64 / pi) as f32));
+            }
+        }
+        Encoded { dim: v.len(), payload: Payload::Sparse { pairs } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::assert_unbiased;
+
+    fn randv(seed: u64, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn probabilities_in_unit_interval_and_budget() {
+        let v = randv(1, 512);
+        let codec = SparseCodec::new(0.25);
+        let p = codec.probabilities(&v);
+        assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        let sum: f64 = p.iter().sum();
+        let budget = 0.25 * 512.0;
+        assert!((sum - budget).abs() < 0.05 * budget, "sum={sum}");
+    }
+
+    #[test]
+    fn skewed_vector_saturates_large_coords() {
+        let mut v = vec![0.01f32; 100];
+        v[0] = 100.0;
+        let p = SparseCodec::new(0.1).probabilities(&v);
+        assert!((p[0] - 1.0).abs() < 1e-12, "dominant coord must saturate");
+    }
+
+    #[test]
+    fn zero_vector_encodes_empty() {
+        let v = vec![0.0f32; 64];
+        let mut rng = Rng::new(2);
+        let e = SparseCodec::new(0.5).encode(&v, &mut rng);
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.decode(), v);
+    }
+
+    #[test]
+    fn unbiasedness() {
+        let v = randv(3, 64);
+        assert_unbiased(&SparseCodec::new(0.3), &v, 4000, 4);
+    }
+
+    #[test]
+    fn unbiasedness_on_skewed() {
+        let mut v = vec![0.01f32; 48];
+        v[0] = 5.0;
+        v[1] = -2.0;
+        assert_unbiased(&SparseCodec::new(0.2), &v, 4000, 5);
+    }
+
+    #[test]
+    fn expected_nnz_near_budget() {
+        let v = randv(6, 512);
+        let codec = SparseCodec::new(0.25);
+        let mut rng = Rng::new(7);
+        let trials = 400;
+        let total: usize = (0..trials).map(|_| codec.encode(&v, &mut rng).nnz()).sum();
+        let mean = total as f64 / trials as f64;
+        let budget = 0.25 * 512.0;
+        assert!((mean - budget).abs() < 0.1 * budget, "mean={mean} budget={budget}");
+    }
+
+    #[test]
+    fn ratio_one_keeps_everything() {
+        let v = randv(8, 64);
+        let mut rng = Rng::new(9);
+        let e = SparseCodec::new(1.0).encode(&v, &mut rng);
+        assert_eq!(e.nnz(), 64);
+        let d = e.decode();
+        for (a, b) in d.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sparser_budget_means_fewer_bits() {
+        let v = randv(10, 1024);
+        let mut rng = Rng::new(11);
+        let e1 = SparseCodec::new(0.05).encode(&v, &mut rng);
+        let e2 = SparseCodec::new(0.5).encode(&v, &mut rng);
+        assert!(e1.bits() < e2.bits());
+    }
+}

@@ -1,0 +1,93 @@
+//! Top-K magnitude selection (Aji & Heafield 2017).
+//!
+//! Keeps the K largest-|v| coordinates at full precision. Biased (the tail
+//! is dropped), so it is normally paired with [`super::error_feedback`].
+
+use super::{Codec, Encoded, Payload};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TopKCodec {
+    pub k: usize,
+}
+
+impl TopKCodec {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        TopKCodec { k }
+    }
+}
+
+impl Codec for TopKCodec {
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+
+    fn encode(&self, v: &[f32], _rng: &mut Rng) -> Encoded {
+        let k = self.k.min(v.len());
+        let mut idx: Vec<u32> = (0..v.len() as u32).collect();
+        // Partial selection: O(D) average via select_nth_unstable.
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            v[b as usize]
+                .abs()
+                .partial_cmp(&v[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut pairs: Vec<(u32, f32)> =
+            idx[..k].iter().map(|&i| (i, v[i as usize])).collect();
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        Encoded { dim: v.len(), payload: Payload::Sparse { pairs } }
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest_k() {
+        let v = [0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let mut rng = Rng::new(1);
+        let e = TopKCodec::new(3).encode(&v, &mut rng);
+        if let Payload::Sparse { pairs } = &e.payload {
+            let kept: Vec<u32> = pairs.iter().map(|&(i, _)| i).collect();
+            assert_eq!(kept, vec![1, 3, 5]);
+            for &(i, val) in pairs {
+                assert_eq!(val, v[i as usize], "values kept at full precision");
+            }
+        } else {
+            panic!("wrong payload")
+        }
+    }
+
+    #[test]
+    fn k_larger_than_dim_keeps_all() {
+        let v = [1.0f32, 2.0];
+        let mut rng = Rng::new(2);
+        let e = TopKCodec::new(10).encode(&v, &mut rng);
+        assert_eq!(e.nnz(), 2);
+        assert_eq!(e.decode(), v.to_vec());
+    }
+
+    #[test]
+    fn decode_error_is_the_tail() {
+        let v = [4.0f32, 3.0, 2.0, 1.0];
+        let mut rng = Rng::new(3);
+        let d = TopKCodec::new(2).encode(&v, &mut rng).decode();
+        assert_eq!(d, vec![4.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn deterministic_and_biased() {
+        let v = [1.0f32, -2.0, 0.5];
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(42);
+        let c = TopKCodec::new(1);
+        assert_eq!(c.encode(&v, &mut r1), c.encode(&v, &mut r2));
+        assert!(!c.is_unbiased());
+    }
+}

@@ -1,0 +1,244 @@
+//! Wire serialization for [`Encoded`] messages.
+//!
+//! This is what actually crosses the coordinator's (simulated) network, so
+//! it is deliberately compact: ternary codes are bit-packed 4-per-byte
+//! (2 bits each), quantized levels are i16 LE, sparse pairs are (u32, f32).
+//! `bits()` accounting in `codec::Encoded` is the *information* cost model;
+//! this module is the byte-exact transport encoding (whose size the network
+//! simulator also records — the two are cross-checked in tests).
+//!
+//! Layout: `u8 tag | u32 dim | payload…` (little-endian throughout).
+
+use anyhow::{bail, Result};
+use byteorder::{LittleEndian as LE, ReadBytesExt, WriteBytesExt};
+
+use super::{Encoded, Payload};
+
+const TAG_TERNARY: u8 = 0;
+const TAG_QUANTIZED: u8 = 1;
+const TAG_SPARSE: u8 = 2;
+const TAG_DENSE: u8 = 3;
+const TAG_TERNARY_CHUNKED: u8 = 4;
+
+/// Pack ternary codes 2 bits each: 00 -> 0, 01 -> +1, 10 -> -1.
+fn pack_ternary(codes: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(4)];
+    for (i, &c) in codes.iter().enumerate() {
+        let bits: u8 = match c {
+            0 => 0b00,
+            1 => 0b01,
+            -1 => 0b10,
+            other => panic!("non-ternary code {other}"),
+        };
+        out[i / 4] |= bits << ((i % 4) * 2);
+    }
+    out
+}
+
+fn unpack_ternary(bytes: &[u8], n: usize) -> Result<Vec<i8>> {
+    let mut codes = vec![0i8; n];
+    for (i, c) in codes.iter_mut().enumerate() {
+        let b = (bytes[i / 4] >> ((i % 4) * 2)) & 0b11;
+        *c = match b {
+            0b00 => 0,
+            0b01 => 1,
+            0b10 => -1,
+            _ => bail!("invalid ternary bit pattern at {i}"),
+        };
+    }
+    Ok(codes)
+}
+
+pub fn to_bytes(e: &Encoded) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + e.dim / 2);
+    match &e.payload {
+        Payload::Ternary { scale, codes } => {
+            out.write_u8(TAG_TERNARY).unwrap();
+            out.write_u32::<LE>(e.dim as u32).unwrap();
+            out.write_f32::<LE>(*scale).unwrap();
+            out.extend_from_slice(&pack_ternary(codes));
+        }
+        Payload::TernaryChunked { chunk, scales, codes } => {
+            out.write_u8(TAG_TERNARY_CHUNKED).unwrap();
+            out.write_u32::<LE>(e.dim as u32).unwrap();
+            out.write_u32::<LE>(*chunk).unwrap();
+            for &s in scales {
+                out.write_f32::<LE>(s).unwrap();
+            }
+            out.extend_from_slice(&pack_ternary(codes));
+        }
+        Payload::Quantized { norm, levels, q } => {
+            out.write_u8(TAG_QUANTIZED).unwrap();
+            out.write_u32::<LE>(e.dim as u32).unwrap();
+            out.write_f32::<LE>(*norm).unwrap();
+            out.write_u32::<LE>(*levels).unwrap();
+            for &x in q {
+                out.write_i16::<LE>(x).unwrap();
+            }
+        }
+        Payload::Sparse { pairs } => {
+            out.write_u8(TAG_SPARSE).unwrap();
+            out.write_u32::<LE>(e.dim as u32).unwrap();
+            out.write_u32::<LE>(pairs.len() as u32).unwrap();
+            for &(i, v) in pairs {
+                out.write_u32::<LE>(i).unwrap();
+                out.write_f32::<LE>(v).unwrap();
+            }
+        }
+        Payload::Dense { values } => {
+            out.write_u8(TAG_DENSE).unwrap();
+            out.write_u32::<LE>(e.dim as u32).unwrap();
+            for &v in values {
+                out.write_f32::<LE>(v).unwrap();
+            }
+        }
+    }
+    out
+}
+
+pub fn from_bytes(mut buf: &[u8]) -> Result<Encoded> {
+    let tag = buf.read_u8()?;
+    let dim = buf.read_u32::<LE>()? as usize;
+    let payload = match tag {
+        TAG_TERNARY => {
+            let scale = buf.read_f32::<LE>()?;
+            let need = dim.div_ceil(4);
+            if buf.len() < need {
+                bail!("ternary payload truncated: {} < {need}", buf.len());
+            }
+            let codes = unpack_ternary(&buf[..need], dim)?;
+            Payload::Ternary { scale, codes }
+        }
+        TAG_TERNARY_CHUNKED => {
+            let chunk = buf.read_u32::<LE>()?;
+            if chunk == 0 {
+                bail!("zero chunk size");
+            }
+            let nchunks = dim.div_ceil(chunk as usize);
+            let mut scales = Vec::with_capacity(nchunks);
+            for _ in 0..nchunks {
+                scales.push(buf.read_f32::<LE>()?);
+            }
+            let need = dim.div_ceil(4);
+            if buf.len() < need {
+                bail!("chunked ternary payload truncated");
+            }
+            let codes = unpack_ternary(&buf[..need], dim)?;
+            Payload::TernaryChunked { chunk, scales, codes }
+        }
+        TAG_QUANTIZED => {
+            let norm = buf.read_f32::<LE>()?;
+            let levels = buf.read_u32::<LE>()?;
+            let mut q = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                q.push(buf.read_i16::<LE>()?);
+            }
+            Payload::Quantized { norm, levels, q }
+        }
+        TAG_SPARSE => {
+            let n = buf.read_u32::<LE>()? as usize;
+            if n > dim {
+                bail!("sparse nnz {n} exceeds dim {dim}");
+            }
+            let mut pairs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let i = buf.read_u32::<LE>()?;
+                let v = buf.read_f32::<LE>()?;
+                if i as usize >= dim {
+                    bail!("sparse index {i} out of range {dim}");
+                }
+                pairs.push((i, v));
+            }
+            Payload::Sparse { pairs }
+        }
+        TAG_DENSE => {
+            let mut values = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                values.push(buf.read_f32::<LE>()?);
+            }
+            Payload::Dense { values }
+        }
+        other => bail!("unknown payload tag {other}"),
+    };
+    Ok(Encoded { dim, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{
+        identity::IdentityCodec, qsgd::QsgdCodec, sparse::SparseCodec,
+        ternary::TernaryCodec, Codec,
+    };
+    use crate::util::Rng;
+
+    fn roundtrip(e: &Encoded) {
+        let bytes = to_bytes(e);
+        let back = from_bytes(&bytes).expect("decode");
+        assert_eq!(&back, e);
+    }
+
+    #[test]
+    fn roundtrip_all_codecs() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..100).map(|_| rng.gauss_f32()).collect();
+        roundtrip(&TernaryCodec.encode(&v, &mut rng));
+        roundtrip(&crate::codec::chunked::ChunkedTernaryCodec::new(16).encode(&v, &mut rng));
+        roundtrip(&QsgdCodec::new(4).encode(&v, &mut rng));
+        roundtrip(&SparseCodec::new(0.2).encode(&v, &mut rng));
+        roundtrip(&IdentityCodec.encode(&v, &mut rng));
+    }
+
+    #[test]
+    fn roundtrip_edge_dims() {
+        let mut rng = Rng::new(2);
+        for d in [1usize, 2, 3, 4, 5, 7, 8, 9] {
+            let v: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+            roundtrip(&TernaryCodec.encode(&v, &mut rng));
+        }
+    }
+
+    #[test]
+    fn ternary_wire_is_quarter_byte_per_elt() {
+        let mut rng = Rng::new(3);
+        let v: Vec<f32> = (0..1024).map(|_| rng.gauss_f32()).collect();
+        let e = TernaryCodec.encode(&v, &mut rng);
+        let bytes = to_bytes(&e);
+        // 1 tag + 4 dim + 4 scale + 256 packed
+        assert_eq!(bytes.len(), 9 + 256);
+    }
+
+    #[test]
+    fn pack_unpack_exact() {
+        let codes: Vec<i8> = (0..37).map(|i| ((i % 3) as i8) - 1).collect();
+        let packed = pack_ternary(&codes);
+        assert_eq!(unpack_ternary(&packed, 37).unwrap(), codes);
+    }
+
+    #[test]
+    fn corrupt_tag_rejected() {
+        let mut rng = Rng::new(4);
+        let e = TernaryCodec.encode(&[1.0, -1.0], &mut rng);
+        let mut bytes = to_bytes(&e);
+        bytes[0] = 77;
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let mut rng = Rng::new(5);
+        let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
+        let bytes = to_bytes(&TernaryCodec.encode(&v, &mut rng));
+        assert!(from_bytes(&bytes[..8]).is_err());
+    }
+
+    #[test]
+    fn sparse_out_of_range_index_rejected() {
+        let e = Encoded {
+            dim: 4,
+            payload: Payload::Sparse { pairs: vec![(9, 1.0)] },
+        };
+        let bytes = to_bytes(&e);
+        assert!(from_bytes(&bytes).is_err());
+    }
+}

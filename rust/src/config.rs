@@ -1,0 +1,164 @@
+//! Lightweight typed settings: `key=value` pairs from CLI args and/or a
+//! config file (one `key = value` per line, `#` comments). `clap`/`serde`
+//! are unavailable offline, so this is the config substrate everything
+//! (CLI, experiment harnesses, examples) shares.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Settings {
+    map: BTreeMap<String, String>,
+}
+
+impl Settings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `key=value` tokens (later keys override earlier ones).
+    pub fn from_args<S: AsRef<str>>(args: &[S]) -> Result<Self> {
+        let mut s = Settings::new();
+        for a in args {
+            s.set_pair(a.as_ref())?;
+        }
+        Ok(s)
+    }
+
+    /// Load a `key = value` file, then apply `args` overrides.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let mut s = Settings::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            s.set_pair(line)
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        }
+        Ok(s)
+    }
+
+    pub fn set_pair(&mut self, pair: &str) -> Result<()> {
+        let Some((k, v)) = pair.split_once('=') else {
+            bail!("expected key=value, got '{pair}'");
+        };
+        self.map.insert(k.trim().to_string(), v.trim().to_string());
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn merge(&mut self, other: &Settings) {
+        for (k, v) in &other.map {
+            self.map.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn raw(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} is not a usize")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} is not a u64")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} is not an f32")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} is not an f64")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => bail!("{key}={v} is not a bool"),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_args_and_types() {
+        let s = Settings::from_args(&["rounds=100", "eta=0.5", "codec=ternary", "eval=true"])
+            .unwrap();
+        assert_eq!(s.usize_or("rounds", 1).unwrap(), 100);
+        assert_eq!(s.f32_or("eta", 0.0).unwrap(), 0.5);
+        assert_eq!(s.str_or("codec", "x"), "ternary");
+        assert!(s.bool_or("eval", false).unwrap());
+        assert_eq!(s.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn later_overrides_earlier() {
+        let s = Settings::from_args(&["a=1", "a=2"]).unwrap();
+        assert_eq!(s.usize_or("a", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn bad_pairs_and_types_rejected() {
+        assert!(Settings::from_args(&["noequals"]).is_err());
+        let s = Settings::from_args(&["x=abc"]).unwrap();
+        assert!(s.usize_or("x", 0).is_err());
+        assert!(s.bool_or("x", false).is_err());
+    }
+
+    #[test]
+    fn file_with_comments() {
+        let dir = std::env::temp_dir().join("tng_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.cfg");
+        std::fs::write(&p, "# comment\nrounds = 42\n\neta=0.1 # inline\n").unwrap();
+        let s = Settings::from_file(&p).unwrap();
+        assert_eq!(s.usize_or("rounds", 0).unwrap(), 42);
+        assert_eq!(s.f32_or("eta", 0.0).unwrap(), 0.1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Settings::from_args(&["x=1", "y=2"]).unwrap();
+        let b = Settings::from_args(&["y=3", "z=4"]).unwrap();
+        a.merge(&b);
+        assert_eq!(a.usize_or("y", 0).unwrap(), 3);
+        assert_eq!(a.usize_or("z", 0).unwrap(), 4);
+        assert_eq!(a.usize_or("x", 0).unwrap(), 1);
+    }
+}

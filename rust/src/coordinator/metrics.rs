@@ -1,0 +1,146 @@
+//! Round-level metrics: the paper's x-axis is "communications, bits per
+//! element" — cumulative bits a server exchanges per model coordinate
+//! (uplink per worker + broadcasts received), which makes one fp16
+//! reference broadcast cost exactly 8 rounds of dense 2-bit ternary, the
+//! parity rule Figure 1 states.
+
+use std::time::Duration;
+
+use crate::util::csv::CsvWriter;
+
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Cumulative communications in bits/element (see module docs).
+    pub bits_per_elt: f64,
+    /// Full objective F(w_t) (NaN when eval disabled).
+    pub loss: f64,
+    /// F(w_t) − F(w*) when f_star is known (NaN otherwise).
+    pub subopt: f64,
+    /// ‖decoded aggregate‖₂ this round.
+    pub grad_norm: f64,
+    /// Running C_nz estimate (Prop. 4) up to this round.
+    pub cnz: f64,
+    pub eta: f32,
+    /// Parameter snapshot (first 2 coords) — Figure 1 plots trajectories.
+    pub w0: f32,
+    pub w1: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub label: String,
+    pub records: Vec<RoundRecord>,
+    pub final_w: Vec<f32>,
+    pub total_up_bits: u64,
+    pub total_down_bits: u64,
+    pub rounds: usize,
+    pub workers: usize,
+    pub dim: usize,
+    pub wall: Duration,
+}
+
+impl Trace {
+    /// Final cumulative bits/element (the x-extent of the paper's plots).
+    pub fn final_bits_per_elt(&self) -> f64 {
+        (self.total_up_bits as f64 / self.workers as f64 + self.total_down_bits as f64)
+            / self.dim as f64
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.records.last().map(|r| r.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_subopt(&self) -> f64 {
+        self.records.last().map(|r| r.subopt).unwrap_or(f64::NAN)
+    }
+
+    /// Bits/element needed to first reach suboptimality ≤ `eps`
+    /// (None if never reached) — the summary statistic EXPERIMENTS.md
+    /// tabulates per figure cell.
+    pub fn bits_to_reach(&self, eps: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.subopt.is_finite() && r.subopt <= eps)
+            .map(|r| r.bits_per_elt)
+    }
+
+    /// Append all records to a CSV (schema shared by every figure harness).
+    pub fn write_csv(&self, w: &mut CsvWriter) -> anyhow::Result<()> {
+        for r in &self.records {
+            w.write_row(&[
+                &self.label,
+                &r.round,
+                &r.bits_per_elt,
+                &r.loss,
+                &r.subopt,
+                &r.grad_norm,
+                &r.cnz,
+                &r.eta,
+                &r.w0,
+                &r.w1,
+            ])?;
+        }
+        Ok(())
+    }
+
+    pub const CSV_HEADER: [&'static str; 10] = [
+        "label", "round", "bits_per_elt", "loss", "subopt", "grad_norm", "cnz", "eta",
+        "w0", "w1",
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, bits: f64, sub: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            bits_per_elt: bits,
+            loss: sub + 1.0,
+            subopt: sub,
+            grad_norm: 1.0,
+            cnz: 0.5,
+            eta: 0.1,
+            w0: 0.0,
+            w1: 0.0,
+        }
+    }
+
+    fn trace() -> Trace {
+        Trace {
+            label: "t".into(),
+            records: vec![rec(0, 2.0, 0.5), rec(1, 4.0, 0.2), rec(2, 6.0, 0.05)],
+            final_w: vec![0.0],
+            total_up_bits: 4096,
+            total_down_bits: 512,
+            rounds: 3,
+            workers: 4,
+            dim: 128,
+            wall: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn bits_per_elt_accounting() {
+        let t = trace();
+        // 4096/4 per worker + 512 broadcast = 1536 bits over 128 dims = 12
+        assert!((t.final_bits_per_elt() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bits_to_reach_threshold() {
+        let t = trace();
+        assert_eq!(t.bits_to_reach(0.3), Some(4.0));
+        assert_eq!(t.bits_to_reach(0.01), None);
+        assert_eq!(t.bits_to_reach(0.5), Some(2.0));
+    }
+
+    #[test]
+    fn finals() {
+        let t = trace();
+        assert!((t.final_subopt() - 0.05).abs() < 1e-12);
+        assert!((t.final_loss() - 1.05).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! The L3 coordinator: the paper's distributed-optimization protocol.
+//!
+//! * [`driver`] — deterministic in-process BSP simulation (figure harnesses)
+//! * [`parallel`] — threaded leader/worker runtime over the counted fabric
+//! * [`protocol`] — framed wire messages
+//! * [`network`] — simulated star fabric with exact byte accounting
+//! * [`metrics`] — round records / traces with the paper's bits-per-element axis
+
+pub mod driver;
+pub mod metrics;
+pub mod network;
+pub mod parallel;
+pub mod protocol;
+
+pub use driver::{run, DriverConfig};
+pub use metrics::{RoundRecord, Trace};

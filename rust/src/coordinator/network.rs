@@ -1,0 +1,150 @@
+//! Simulated cluster network.
+//!
+//! The paper's metric is bits communicated, not wall-clock, so the network
+//! is an in-process fabric: channels carrying byte frames, with per-link
+//! counters and a simple `latency + size/bandwidth` cost model that the
+//! benches use to *estimate* synchronization time on a real cluster
+//! (DESIGN.md §substitutions). The byte counts are exact; the time model is
+//! configurable per experiment.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// One-way latency per message (seconds).
+    pub latency_s: f64,
+    /// Bandwidth (bytes/second).
+    pub bandwidth_bps: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        // 100 µs, 10 Gbit/s — a datacenter-ish default.
+        LinkModel { latency_s: 100e-6, bandwidth_bps: 10e9 / 8.0 }
+    }
+}
+
+impl LinkModel {
+    /// Modeled transfer time for one message of `bytes`.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Modeled time for a synchronous fan-in of M messages (serialized at
+    /// the leader NIC — the congestion effect centralized PS suffers).
+    pub fn fan_in_time(&self, sizes: &[usize]) -> f64 {
+        let total: usize = sizes.iter().sum();
+        self.latency_s + total as f64 / self.bandwidth_bps
+    }
+}
+
+/// Byte counters shared by all endpoints of one simulated fabric.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub up_bytes: AtomicU64,
+    pub down_bytes: AtomicU64,
+    pub up_msgs: AtomicU64,
+    pub down_msgs: AtomicU64,
+}
+
+impl NetStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.up_bytes.load(Ordering::Relaxed),
+            self.down_bytes.load(Ordering::Relaxed),
+            self.up_msgs.load(Ordering::Relaxed),
+            self.down_msgs.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// One endpoint's handle: send counts bytes on the shared stats.
+pub struct Endpoint {
+    tx: Sender<Vec<u8>>,
+    stats: Arc<NetStats>,
+    uplink: bool,
+}
+
+impl Endpoint {
+    pub fn send(&self, frame: Vec<u8>) -> anyhow::Result<()> {
+        let n = frame.len() as u64;
+        if self.uplink {
+            self.stats.up_bytes.fetch_add(n, Ordering::Relaxed);
+            self.stats.up_msgs.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.down_bytes.fetch_add(n, Ordering::Relaxed);
+            self.stats.down_msgs.fetch_add(1, Ordering::Relaxed);
+        }
+        self.tx.send(frame).map_err(|_| anyhow::anyhow!("peer hung up"))
+    }
+}
+
+/// The leader's side of a star topology over M workers.
+pub struct StarFabric {
+    pub stats: Arc<NetStats>,
+    /// Leader receives from all workers on one fan-in queue.
+    pub leader_rx: Receiver<Vec<u8>>,
+    /// Leader sends to worker i via `down[i]`.
+    pub down: Vec<Endpoint>,
+}
+
+/// One worker's side.
+pub struct WorkerPort {
+    pub up: Endpoint,
+    pub rx: Receiver<Vec<u8>>,
+}
+
+/// Build a star topology: M workers ⇄ 1 leader.
+pub fn star(workers: usize) -> (StarFabric, Vec<WorkerPort>) {
+    let stats = Arc::new(NetStats::default());
+    let (up_tx, leader_rx) = channel::<Vec<u8>>();
+    let mut down = Vec::with_capacity(workers);
+    let mut ports = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (down_tx, down_rx) = channel::<Vec<u8>>();
+        down.push(Endpoint { tx: down_tx, stats: stats.clone(), uplink: false });
+        ports.push(WorkerPort {
+            up: Endpoint { tx: up_tx.clone(), stats: stats.clone(), uplink: true },
+            rx: down_rx,
+        });
+    }
+    (StarFabric { stats, leader_rx, down }, ports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star_routes_and_counts() {
+        let (fabric, ports) = star(3);
+        ports[0].up.send(vec![0u8; 10]).unwrap();
+        ports[2].up.send(vec![0u8; 5]).unwrap();
+        fabric.down[1].send(vec![0u8; 7]).unwrap();
+
+        assert_eq!(fabric.leader_rx.recv().unwrap().len(), 10);
+        assert_eq!(fabric.leader_rx.recv().unwrap().len(), 5);
+        assert_eq!(ports[1].rx.recv().unwrap().len(), 7);
+
+        let (up_b, down_b, up_m, down_m) = fabric.stats.snapshot();
+        assert_eq!((up_b, down_b, up_m, down_m), (15, 7, 2, 1));
+    }
+
+    #[test]
+    fn link_model_times() {
+        let m = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        assert!((m.transfer_time(1000) - 2e-3).abs() < 1e-12);
+        assert!((m.fan_in_time(&[500, 500]) - 2e-3).abs() < 1e-12);
+        // fan-in of M equals one message of the summed size (leader NIC).
+        assert!(m.fan_in_time(&[100; 4]) > m.transfer_time(100));
+    }
+
+    #[test]
+    fn send_to_dropped_peer_errors() {
+        let (fabric, ports) = star(1);
+        drop(ports);
+        assert!(fabric.down[0].send(vec![1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,384 @@
+//! Threaded leader/worker runtime — the "real" coordinator.
+//!
+//! M worker threads and a leader exchange the `protocol::Msg` frames over
+//! the simulated star fabric (`network::star`), with every byte counted.
+//! The state machines are the same as `driver::run`; determinism is kept by
+//! (a) per-worker RNG streams split identically, and (b) the leader folding
+//! gradients in worker-id order regardless of arrival order. The
+//! `driver_parallel_equivalence` integration test pins trace equality.
+//!
+//! Scope note: the `SvrgAnchor` *reference* strategy needs a full-gradient
+//! broadcast that only the deterministic driver implements; this runtime
+//! rejects it (every other strategy is replicated worker-side from the
+//! aggregate broadcasts at zero extra cost, as §4.2 describes).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::codec::Codec;
+use crate::coordinator::driver::DriverConfig;
+use crate::coordinator::metrics::{RoundRecord, Trace};
+use crate::coordinator::network::{star, StarFabric, WorkerPort};
+use crate::coordinator::protocol::Msg;
+use crate::objectives::Objective;
+use crate::optim::{GradEstimator, Lbfgs};
+use crate::tng::{CnzSelector, ReferenceKind, ReferenceManager, RoundCtx, Tng};
+use crate::util::math;
+use crate::util::Rng;
+
+fn make_selector(cfg: &DriverConfig, dim: usize) -> CnzSelector {
+    CnzSelector::new(
+        cfg.references
+            .iter()
+            .map(|k| {
+                let mut m = ReferenceManager::new(k.clone(), dim);
+                m.broadcast_bits_per_elt = cfg.broadcast_bits_per_elt;
+                m
+            })
+            .collect(),
+    )
+}
+
+struct BorrowedCodec<'a>(&'a dyn Codec);
+
+impl<'a> Codec for BorrowedCodec<'a> {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn encode(&self, v: &[f32], rng: &mut Rng) -> crate::codec::Encoded {
+        self.0.encode(v, rng)
+    }
+    fn is_unbiased(&self) -> bool {
+        self.0.is_unbiased()
+    }
+}
+
+/// Worker thread body: compute → normalize → encode → send; then apply the
+/// broadcast aggregate to the local replicas of w / L-BFGS / references.
+fn worker_loop(
+    id: usize,
+    obj: &(dyn Objective + Sync),
+    codec: &dyn Codec,
+    cfg: &DriverConfig,
+    shard: Vec<usize>,
+    port: WorkerPort,
+) -> Result<()> {
+    let dim = obj.dim();
+    let mut rng = Rng::new(cfg.seed).split(1 + id as u64);
+    let mut est = GradEstimator::new(cfg.estimator, cfg.batch, dim);
+    let tng = Tng::with_mode(BorrowedCodec(codec), cfg.mode);
+    let mut selector = make_selector(cfg, dim);
+    let mut lbfgs = cfg.lbfgs_memory.map(Lbfgs::new);
+    let mut w = cfg.w0.clone().unwrap_or_else(|| vec![0.0f32; dim]);
+    let mut g = vec![0.0f32; dim];
+    let mut mean_ref = vec![0.0f32; dim];
+
+    for t in 0..cfg.rounds {
+        // SVRG anchor synchronization.
+        if est.anchor_due(t) && obj.n() > 0 {
+            est.set_anchor(obj, &shard, &w);
+            port.up.send(
+                Msg::AnchorGrad { worker: id as u16, round: t as u32, grad: est.anchor_mu().to_vec() }
+                    .to_bytes(),
+            )?;
+            match Msg::from_bytes(&port.rx.recv()?)? {
+                Msg::AnchorMu { mu, .. } => est.set_global_mu(&mu),
+                other => bail!("worker {id}: expected AnchorMu, got {}", other.kind_name()),
+            }
+        }
+
+        est.grad(obj, &shard, &w, &mut rng, &mut g);
+        let (ref_idx, _ratio, _sig) = selector.select(&g);
+        let (scalar, gref): (f32, &[f32]) =
+            if matches!(cfg.references[ref_idx], ReferenceKind::MeanScalar) {
+                let (s, _) = selector.pool[ref_idx].worker_scalar(&g).unwrap();
+                mean_ref.fill(s);
+                (s, &mean_ref)
+            } else {
+                (0.0, selector.current(ref_idx))
+            };
+        let enc = tng.encode(&g, gref, &mut rng);
+        port.up.send(
+            Msg::Grad { worker: id as u16, round: t as u32, enc, scalar, ref_idx: ref_idx as u8 }
+                .to_bytes(),
+        )?;
+
+        // Apply the round's aggregate to local replicas.
+        match Msg::from_bytes(&port.rx.recv()?)? {
+            Msg::Aggregate { v, eta, .. } => {
+                let w_prev = w.clone();
+                let dir: Vec<f32> = if let Some(l) = lbfgs.as_mut() {
+                    l.observe(&w, &v);
+                    l.direction(&v)
+                } else {
+                    v.clone()
+                };
+                math::axpy(-eta, &dir, &mut w);
+                selector.end_round(&RoundCtx {
+                    round: t,
+                    decoded_avg: &v,
+                    w_prev: &w_prev,
+                    w_next: &w,
+                    eta,
+                    full_grad: None,
+                });
+                let _ = selector.take_broadcast_bits();
+            }
+            Msg::Stop { .. } => return Ok(()),
+            other => bail!("worker {id}: expected Aggregate, got {}", other.kind_name()),
+        }
+    }
+    // Drain the final Stop if present.
+    if let Ok(frame) = port.rx.recv() {
+        let _ = Msg::from_bytes(&frame);
+    }
+    Ok(())
+}
+
+/// Leader body, returning the run trace.
+fn leader_loop(
+    obj: &(dyn Objective + Sync),
+    codec: &dyn Codec,
+    label: &str,
+    cfg: &DriverConfig,
+    shard_sizes: &[usize],
+    fabric: StarFabric,
+) -> Result<Trace> {
+    let t_start = Instant::now();
+    let dim = obj.dim();
+    let m = cfg.workers;
+    let tng = Tng::with_mode(BorrowedCodec(codec), cfg.mode);
+    let mut selector = make_selector(cfg, dim);
+    let mut lbfgs = cfg.lbfgs_memory.map(Lbfgs::new);
+    let mut cnz = crate::tng::CnzEstimator::new();
+    let mut w = cfg.w0.clone().unwrap_or_else(|| vec![0.0f32; dim]);
+    let mut records = Vec::new();
+    let mut mean_ref = vec![0.0f32; dim];
+    let total_n: usize = shard_sizes.iter().sum();
+    let svrg = matches!(cfg.estimator, crate::optim::EstimatorKind::Svrg { .. });
+
+    for t in 0..cfg.rounds {
+        // SVRG anchor fan-in/out.
+        let est_probe = GradEstimator::new(cfg.estimator, cfg.batch, dim);
+        if svrg && est_probe.anchor_due(t) && total_n > 0 {
+            // Buffer and fold in worker-id order: float addition is not
+            // associative, and the deterministic driver folds 0..M.
+            let mut anchors: Vec<Option<Vec<f32>>> = (0..m).map(|_| None).collect();
+            let mut seen = 0usize;
+            while seen < m {
+                match Msg::from_bytes(&fabric.leader_rx.recv()?)? {
+                    Msg::AnchorGrad { worker, grad, .. } => {
+                        anchors[worker as usize] = Some(grad);
+                        seen += 1;
+                    }
+                    other => bail!("leader: expected AnchorGrad, got {}", other.kind_name()),
+                }
+            }
+            let mut mu = vec![0.0f32; dim];
+            for (wk, grad) in anchors.into_iter().enumerate() {
+                math::axpy(
+                    shard_sizes[wk] as f32 / total_n as f32,
+                    &grad.expect("anchor missing"),
+                    &mut mu,
+                );
+            }
+            let msg = Msg::AnchorMu { round: t as u32, mu };
+            for d in &fabric.down {
+                d.send(msg.to_bytes())?;
+            }
+        }
+
+        // Gather M gradient frames; fold in worker-id order (determinism).
+        let mut slots: Vec<Option<Msg>> = (0..m).map(|_| None).collect();
+        let mut seen = 0usize;
+        while seen < m {
+            let msg = Msg::from_bytes(&fabric.leader_rx.recv()?)?;
+            if let Msg::Grad { worker, .. } = &msg {
+                let idx = *worker as usize;
+                if slots[idx].is_some() {
+                    bail!("duplicate gradient from worker {idx}");
+                }
+                slots[idx] = Some(msg);
+                seen += 1;
+            } else {
+                bail!("leader: expected Grad, got {}", msg.kind_name());
+            }
+        }
+        let eta = cfg.schedule.step(t);
+        let mut v_avg = vec![0.0f32; dim];
+        for slot in slots.into_iter() {
+            let Some(Msg::Grad { enc, scalar, ref_idx, .. }) = slot else { unreachable!() };
+            let gref: &[f32] =
+                if matches!(cfg.references[ref_idx as usize], ReferenceKind::MeanScalar) {
+                    mean_ref.fill(scalar);
+                    &mean_ref
+                } else {
+                    selector.current(ref_idx as usize)
+                };
+            let v = tng.decode(&enc, gref);
+            cnz.observe(&v, gref); // decoded-side estimate (diagnostic)
+            math::axpy(1.0 / m as f32, &v, &mut v_avg);
+        }
+
+        // Step + broadcast.
+        let w_prev = w.clone();
+        let dir: Vec<f32> = if let Some(l) = lbfgs.as_mut() {
+            l.observe(&w, &v_avg);
+            l.direction(&v_avg)
+        } else {
+            v_avg.clone()
+        };
+        math::axpy(-eta, &dir, &mut w);
+        let msg = Msg::Aggregate { round: t as u32, v: v_avg.clone(), eta };
+        for d in &fabric.down {
+            d.send(msg.to_bytes())?;
+        }
+        selector.end_round(&RoundCtx {
+            round: t,
+            decoded_avg: &v_avg,
+            w_prev: &w_prev,
+            w_next: &w,
+            eta,
+            full_grad: None,
+        });
+        let _ = selector.take_broadcast_bits();
+
+        if t % cfg.record_every == 0 || t + 1 == cfg.rounds {
+            let loss = if cfg.eval_loss { obj.loss(&w) } else { f64::NAN };
+            let (up_b, down_b, _, _) = fabric.stats.snapshot();
+            records.push(RoundRecord {
+                round: t,
+                bits_per_elt: (up_b as f64 * 8.0 / m as f64 + down_b as f64 * 8.0)
+                    / dim as f64,
+                loss,
+                subopt: loss - cfg.f_star,
+                grad_norm: math::norm2(&v_avg),
+                cnz: cnz.value(),
+                eta,
+                w0: w[0],
+                w1: if dim > 1 { w[1] } else { 0.0 },
+            });
+        }
+    }
+    let stop = Msg::Stop { round: cfg.rounds as u32 };
+    for d in &fabric.down {
+        let _ = d.send(stop.to_bytes());
+    }
+    let (up_b, down_b, _, _) = fabric.stats.snapshot();
+    Ok(Trace {
+        label: label.to_string(),
+        records,
+        final_w: w,
+        total_up_bits: up_b * 8,
+        total_down_bits: down_b * 8,
+        rounds: cfg.rounds,
+        workers: m,
+        dim,
+        wall: t_start.elapsed(),
+    })
+}
+
+/// Run the threaded coordinator: M OS threads + leader on the calling
+/// thread, communicating only through the counted byte fabric.
+pub fn run(
+    obj: &(dyn Objective + Sync),
+    codec: &dyn Codec,
+    label: &str,
+    cfg: &DriverConfig,
+) -> Result<Trace> {
+    if cfg
+        .references
+        .iter()
+        .any(|k| matches!(k, ReferenceKind::SvrgAnchor { .. }))
+    {
+        bail!("SvrgAnchor reference requires the deterministic driver (full-grad broadcast)");
+    }
+    if cfg.warm_start_reference {
+        bail!("warm_start_reference requires the deterministic driver");
+    }
+    if cfg
+        .references
+        .iter()
+        .any(|k| matches!(k, ReferenceKind::WorkerAnchor { .. }))
+    {
+        bail!("WorkerAnchor reference requires the deterministic driver");
+    }
+    let m = cfg.workers;
+    let shards: Vec<Vec<usize>> = if obj.n() > 0 {
+        crate::data::shard_indices(obj.n(), m)
+    } else {
+        vec![Vec::new(); m]
+    };
+    let shard_sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+    let (fabric, ports) = star(m);
+
+    crossbeam_utils::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (id, (port, shard)) in ports.into_iter().zip(shards.into_iter()).enumerate() {
+            let cfg_ref = &*cfg;
+            handles.push(scope.spawn(move |_| worker_loop(id, obj, codec, cfg_ref, shard, port)));
+        }
+        let trace = leader_loop(obj, codec, label, cfg, &shard_sizes, fabric);
+        for h in handles {
+            h.join().expect("worker panicked")?;
+        }
+        trace
+    })
+    .expect("scope panicked")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::ternary::TernaryCodec;
+    use crate::data::synthetic::{generate, SkewConfig};
+    use crate::objectives::logreg::LogReg;
+    use crate::optim::StepSchedule;
+
+    fn logreg() -> LogReg {
+        let ds = generate(&SkewConfig { n: 64, dim: 16, seed: 2, ..Default::default() });
+        LogReg::new(ds, 0.05)
+    }
+
+    #[test]
+    fn threaded_matches_deterministic_driver() {
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 40,
+            workers: 4,
+            schedule: StepSchedule::Const(0.3),
+            references: vec![crate::tng::ReferenceKind::AvgDecoded { window: 2 }],
+            record_every: 5,
+            ..Default::default()
+        };
+        let seq = crate::coordinator::driver::run(&obj, &TernaryCodec, "seq", &cfg);
+        let par = run(&obj, &TernaryCodec, "par", &cfg).unwrap();
+        assert_eq!(seq.final_w, par.final_w, "trajectories must be identical");
+    }
+
+    #[test]
+    fn svrg_threaded_runs() {
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 20,
+            workers: 2,
+            estimator: crate::optim::EstimatorKind::Svrg { anchor_every: 10 },
+            schedule: StepSchedule::Const(0.3),
+            ..Default::default()
+        };
+        let tr = run(&obj, &TernaryCodec, "svrg-par", &cfg).unwrap();
+        assert!(tr.final_loss().is_finite());
+        assert!(tr.total_up_bits > 0 && tr.total_down_bits > 0);
+    }
+
+    #[test]
+    fn svrg_anchor_reference_rejected() {
+        let obj = logreg();
+        let cfg = DriverConfig {
+            references: vec![crate::tng::ReferenceKind::SvrgAnchor { update_every: 4 }],
+            ..Default::default()
+        };
+        assert!(run(&obj, &TernaryCodec, "x", &cfg).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! Leader ⇄ worker wire protocol for the threaded runtime.
+//!
+//! Framed messages: `u8 kind | u16 worker | u32 round | u32 body_len | body`.
+//! Gradient bodies reuse the codec wire format (`codec::wire`); parameter /
+//! anchor bodies are raw little-endian f32. Every frame's exact byte length
+//! feeds the network simulator's accounting.
+
+use anyhow::{bail, Result};
+use byteorder::{LittleEndian as LE, ReadBytesExt, WriteBytesExt};
+
+use crate::codec::{wire, Encoded};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker -> leader: compressed (normalized) gradient for a round,
+    /// with optional mean-scalar and reference-pool index.
+    Grad { worker: u16, round: u32, enc: Encoded, scalar: f32, ref_idx: u8 },
+    /// Worker -> leader: shard full gradient (SVRG anchor sync), dense.
+    AnchorGrad { worker: u16, round: u32, grad: Vec<f32> },
+    /// Leader -> workers: decoded aggregate v_t (workers update their own
+    /// replica of w and the reference state deterministically from it).
+    Aggregate { round: u32, v: Vec<f32>, eta: f32 },
+    /// Leader -> workers: global SVRG anchor gradient μ.
+    AnchorMu { round: u32, mu: Vec<f32> },
+    /// Leader -> workers: shut down after this round.
+    Stop { round: u32 },
+}
+
+const K_GRAD: u8 = 1;
+const K_ANCHOR_GRAD: u8 = 2;
+const K_AGGREGATE: u8 = 3;
+const K_ANCHOR_MU: u8 = 4;
+const K_STOP: u8 = 5;
+
+fn write_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.write_f32::<LE>(x).unwrap();
+    }
+}
+
+fn read_f32s(buf: &mut &[u8], n: usize) -> Result<Vec<f32>> {
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(buf.read_f32::<LE>()?);
+    }
+    Ok(v)
+}
+
+impl Msg {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Msg::Grad { .. } => "grad",
+            Msg::AnchorGrad { .. } => "anchor_grad",
+            Msg::Aggregate { .. } => "aggregate",
+            Msg::AnchorMu { .. } => "anchor_mu",
+            Msg::Stop { .. } => "stop",
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let (kind, worker, round) = match self {
+            Msg::Grad { worker, round, .. } => (K_GRAD, *worker, *round),
+            Msg::AnchorGrad { worker, round, .. } => (K_ANCHOR_GRAD, *worker, *round),
+            Msg::Aggregate { round, .. } => (K_AGGREGATE, 0, *round),
+            Msg::AnchorMu { round, .. } => (K_ANCHOR_MU, 0, *round),
+            Msg::Stop { round } => (K_STOP, 0, *round),
+        };
+        out.write_u8(kind).unwrap();
+        out.write_u16::<LE>(worker).unwrap();
+        out.write_u32::<LE>(round).unwrap();
+        let mut body = Vec::new();
+        match self {
+            Msg::Grad { enc, scalar, ref_idx, .. } => {
+                body.write_f32::<LE>(*scalar).unwrap();
+                body.write_u8(*ref_idx).unwrap();
+                body.extend_from_slice(&wire::to_bytes(enc));
+            }
+            Msg::AnchorGrad { grad, .. } => {
+                body.write_u32::<LE>(grad.len() as u32).unwrap();
+                write_f32s(&mut body, grad);
+            }
+            Msg::Aggregate { v, eta, .. } => {
+                body.write_f32::<LE>(*eta).unwrap();
+                body.write_u32::<LE>(v.len() as u32).unwrap();
+                write_f32s(&mut body, v);
+            }
+            Msg::AnchorMu { mu, .. } => {
+                body.write_u32::<LE>(mu.len() as u32).unwrap();
+                write_f32s(&mut body, mu);
+            }
+            Msg::Stop { .. } => {}
+        }
+        out.write_u32::<LE>(body.len() as u32).unwrap();
+        out.extend_from_slice(&body);
+        out
+    }
+
+    pub fn from_bytes(mut buf: &[u8]) -> Result<Msg> {
+        let kind = buf.read_u8()?;
+        let worker = buf.read_u16::<LE>()?;
+        let round = buf.read_u32::<LE>()?;
+        let body_len = buf.read_u32::<LE>()? as usize;
+        if buf.len() != body_len {
+            bail!("frame length mismatch: {} != {body_len}", buf.len());
+        }
+        Ok(match kind {
+            K_GRAD => {
+                let scalar = buf.read_f32::<LE>()?;
+                let ref_idx = buf.read_u8()?;
+                let enc = wire::from_bytes(buf)?;
+                Msg::Grad { worker, round, enc, scalar, ref_idx }
+            }
+            K_ANCHOR_GRAD => {
+                let n = buf.read_u32::<LE>()? as usize;
+                Msg::AnchorGrad { worker, round, grad: read_f32s(&mut buf, n)? }
+            }
+            K_AGGREGATE => {
+                let eta = buf.read_f32::<LE>()?;
+                let n = buf.read_u32::<LE>()? as usize;
+                Msg::Aggregate { round, v: read_f32s(&mut buf, n)?, eta }
+            }
+            K_ANCHOR_MU => {
+                let n = buf.read_u32::<LE>()? as usize;
+                Msg::AnchorMu { round, mu: read_f32s(&mut buf, n)? }
+            }
+            K_STOP => Msg::Stop { round },
+            other => bail!("unknown message kind {other}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{Codec, ternary::TernaryCodec};
+    use crate::util::Rng;
+
+    fn roundtrip(m: &Msg) {
+        let bytes = m.to_bytes();
+        assert_eq!(&Msg::from_bytes(&bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
+        let enc = TernaryCodec.encode(&v, &mut rng);
+        roundtrip(&Msg::Grad { worker: 3, round: 17, enc, scalar: 0.25, ref_idx: 2 });
+        roundtrip(&Msg::AnchorGrad { worker: 1, round: 0, grad: v.clone() });
+        roundtrip(&Msg::Aggregate { round: 5, v: v.clone(), eta: 0.1 });
+        roundtrip(&Msg::AnchorMu { round: 9, mu: v });
+        roundtrip(&Msg::Stop { round: 99 });
+    }
+
+    #[test]
+    fn grad_frame_overhead_is_small() {
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = (0..1024).map(|_| rng.gauss_f32()).collect();
+        let enc = TernaryCodec.encode(&v, &mut rng);
+        let wire_len = crate::codec::wire::to_bytes(&enc).len();
+        let m = Msg::Grad { worker: 0, round: 0, enc, scalar: 0.0, ref_idx: 0 };
+        // header 11 + scalar 4 + ref_idx 1
+        assert_eq!(m.to_bytes().len(), wire_len + 16);
+    }
+
+    #[test]
+    fn corrupted_frame_rejected() {
+        let m = Msg::Stop { round: 1 };
+        let mut b = m.to_bytes();
+        b[0] = 42;
+        assert!(Msg::from_bytes(&b).is_err());
+        let m2 = Msg::Aggregate { round: 0, v: vec![1.0], eta: 0.1 };
+        let b2 = m2.to_bytes();
+        assert!(Msg::from_bytes(&b2[..b2.len() - 2]).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Data substrates: the paper's skewed synthetic generator (§4.2) and the
+//! Markov token corpus for the transformer end-to-end example.
+
+pub mod corpus;
+pub mod synthetic;
+
+pub use synthetic::{generate, shard_indices, Dataset, SkewConfig};

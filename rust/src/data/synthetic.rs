@@ -1,0 +1,175 @@
+//! Synthetic skewed data generator — the exact §4.2 procedure (following
+//! Wangni et al. 2018):
+//!
+//! ```text
+//! normalized data:  ā_nd ~ N(0,1)
+//! magnitudes:       B̄ ~ Uniform[0,1]^D;  B̄_d ← C_sk·B̄_d  if B̄_d ≤ C_th
+//! features:         a_n = ā_n ⊙ B̄
+//! labels:           w̄ ~ N(0, I),  b_n = sign(ā_nᵀ w̄)
+//! ```
+//!
+//! A smaller `C_sk` shrinks the sub-threshold magnitudes more, i.e. implies
+//! a stronger skewness/sparsity of the gradient distribution. The paper uses
+//! D = 512, N = 2048, C_th = 0.6 and sweeps `C_sk ∝ 1/4^j`.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SkewConfig {
+    pub n: usize,
+    pub dim: usize,
+    /// Skewness factor C_sk ∈ (0, 1]; smaller = more skewed.
+    pub c_sk: f32,
+    /// Threshold C_th: magnitudes below it are shrunk by C_sk.
+    pub c_th: f32,
+    pub seed: u64,
+}
+
+impl Default for SkewConfig {
+    fn default() -> Self {
+        // The paper's §4.2 setting.
+        SkewConfig { n: 2048, dim: 512, c_sk: 1.0, c_th: 0.6, seed: 0 }
+    }
+}
+
+/// Row-major design matrix + ±1 labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub n: usize,
+    pub dim: usize,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+pub fn generate(cfg: &SkewConfig) -> Dataset {
+    let mut rng = Rng::new(cfg.seed).split(0xDA7A);
+    let (n, d) = (cfg.n, cfg.dim);
+
+    // magnitudes with skew
+    let mut b_mag = vec![0.0f32; d];
+    for bd in b_mag.iter_mut() {
+        let u = rng.f32();
+        *bd = if u <= cfg.c_th { cfg.c_sk * u } else { u };
+    }
+
+    // ground-truth weights for labels (drawn from the *normalized* data as
+    // the paper specifies: b_n = sign(ā_n^T w̄))
+    let w_bar: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0.0f32; n];
+    let mut a_bar = vec![0.0f32; d];
+    for i in 0..n {
+        rng.fill_gauss(&mut a_bar, 1.0);
+        let mut dot = 0.0f64;
+        for (j, &ab) in a_bar.iter().enumerate() {
+            x[i * d + j] = ab * b_mag[j];
+            dot += ab as f64 * w_bar[j] as f64;
+        }
+        y[i] = if dot >= 0.0 { 1.0 } else { -1.0 };
+    }
+    Dataset { x, y, n, dim: d }
+}
+
+/// Shard `n` samples over `m` workers (contiguous, near-equal).
+pub fn shard_indices(n: usize, m: usize) -> Vec<Vec<usize>> {
+    assert!(m > 0);
+    let mut shards = Vec::with_capacity(m);
+    let base = n / m;
+    let extra = n % m;
+    let mut start = 0;
+    for w in 0..m {
+        let len = base + usize::from(w < extra);
+        shards.push((start..start + len).collect());
+        start += len;
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let ds = generate(&SkewConfig { n: 100, dim: 32, ..Default::default() });
+        assert_eq!(ds.x.len(), 100 * 32);
+        assert_eq!(ds.y.len(), 100);
+        assert!(ds.y.iter().all(|&b| b == 1.0 || b == -1.0));
+        assert_eq!(ds.row(3).len(), 32);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = SkewConfig { n: 16, dim: 8, seed: 7, ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = generate(&SkewConfig { seed: 8, ..cfg });
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn labels_not_degenerate() {
+        let ds = generate(&SkewConfig { n: 512, dim: 64, ..Default::default() });
+        let pos = ds.y.iter().filter(|&&b| b > 0.0).count();
+        assert!(pos > 100 && pos < 412, "pos={pos}");
+    }
+
+    #[test]
+    fn skew_shrinks_feature_scales() {
+        // Smaller C_sk => smaller average |feature| (sub-threshold columns
+        // shrunk); compare column-energy distributions.
+        let mk = |c_sk: f32| {
+            let ds = generate(&SkewConfig { n: 256, dim: 128, c_sk, c_th: 0.6, seed: 3, ..Default::default() });
+            ds.x.iter().map(|&v| v.abs() as f64).sum::<f64>() / ds.x.len() as f64
+        };
+        // With C_th = 0.6 about 60% of the columns shrink to ~0, removing
+        // ~E[u | u<=0.6]-worth of mass: expect a ~0.65x drop.
+        let skewed = mk(0.01);
+        let flat = mk(1.0);
+        assert!(skewed < 0.7 * flat, "skewed={skewed} flat={flat}");
+    }
+
+    #[test]
+    fn skew_increases_column_imbalance() {
+        // Kurtosis proxy: max column energy / mean column energy grows.
+        let imbalance = |c_sk: f32| {
+            let d = 128usize;
+            let ds = generate(&SkewConfig { n: 256, dim: d, c_sk, c_th: 0.6, seed: 4, ..Default::default() });
+            let mut col = vec![0.0f64; d];
+            for i in 0..ds.n {
+                for (j, &v) in ds.row(i).iter().enumerate() {
+                    col[j] += (v * v) as f64;
+                }
+            }
+            let mean = col.iter().sum::<f64>() / d as f64;
+            col.iter().copied().fold(0.0, f64::max) / mean
+        };
+        // Shrinking sub-threshold columns lowers the mean energy while the
+        // max (a super-threshold column) is untouched: the ratio must grow.
+        assert!(imbalance(0.01) > 1.15 * imbalance(1.0));
+    }
+
+    #[test]
+    fn shards_partition_exactly() {
+        for (n, m) in [(10, 3), (2048, 4), (7, 7), (5, 8)] {
+            let shards = shard_indices(n, m);
+            assert_eq!(shards.len(), m);
+            let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>());
+            // near-equal
+            let lens: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Shared experiment plumbing: codec factory, the paper's method matrix
+//! (QG/TG/SG × raw/TN-), and CSV emission.
+
+use anyhow::{bail, Result};
+
+use crate::codec::{
+    identity::IdentityCodec, qsgd::QsgdCodec, signsgd::SignCodec, sparse::SparseCodec,
+    ternary::TernaryCodec, topk::TopKCodec, Codec,
+};
+use crate::config::Settings;
+use crate::coordinator::metrics::Trace;
+use crate::coordinator::{driver, DriverConfig};
+use crate::objectives::Objective;
+use crate::tng::ReferenceKind;
+use crate::util::csv::CsvWriter;
+
+/// Build a codec from a spec string:
+/// `tg` | `ternary`, `qg` | `qsgd:<levels>`, `sg` | `sparse:<ratio>`,
+/// `sign`, `topk:<k>`, `fp32`.
+pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
+    let (name, arg) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    };
+    Ok(match name {
+        "tg" | "ternary" => Box::new(TernaryCodec),
+        "cternary" => {
+            let chunk: usize = arg.unwrap_or("4096").parse()?;
+            Box::new(crate::codec::chunked::ChunkedTernaryCodec::new(chunk))
+        }
+        "qg" | "qsgd" => {
+            let levels: u32 = arg.unwrap_or("4").parse()?;
+            Box::new(QsgdCodec::new(levels))
+        }
+        "sg" | "sparse" => {
+            let ratio: f64 = arg.unwrap_or("0.25").parse()?;
+            Box::new(SparseCodec::new(ratio))
+        }
+        "sign" => Box::new(SignCodec),
+        "topk" => {
+            let k: usize = arg.unwrap_or("32").parse()?;
+            Box::new(TopKCodec::new(k))
+        }
+        "fp32" | "identity" => Box::new(IdentityCodec),
+        other => bail!("unknown codec spec '{other}'"),
+    })
+}
+
+/// One method of the paper's matrix.
+pub struct Method {
+    pub label: String,
+    pub codec_spec: String,
+    /// Reference pool. `[Zeros]` = the raw codec; more entries = TNG with
+    /// the Proposition-4 per-round C_nz search (the paper: "this constant
+    /// C_nz can be searched", costing log2(pool) signalling bits).
+    pub references: Vec<ReferenceKind>,
+}
+
+impl Method {
+    pub fn is_tng(&self) -> bool {
+        self.references.len() > 1 || self.references != vec![ReferenceKind::Zeros]
+    }
+}
+
+/// The paper's §4.2 method matrix: QG, TG, SG, each raw and TN-wrapped.
+/// The TN- pool realizes §3.1's menu under the Proposition-4 per-round
+/// search: {zeros, averaged decoded TNG of the last round, the per-worker
+/// delayed (anchor) gradient refreshed every 32 rounds at fp16}. Including
+/// `Zeros` guarantees C_nz ≤ 1 so normalization can never amplify the
+/// compression error (the paper's own fallback argument), at 2 signalling
+/// bits/message; the anchor transmissions are charged at 16 bits/element.
+/// References are warm-started from a full gradient (§4.2).
+pub fn paper_methods() -> Vec<Method> {
+    let tn_pool = vec![
+        ReferenceKind::Zeros,
+        ReferenceKind::AvgDecoded { window: 1 },
+        ReferenceKind::WorkerAnchor { update_every: 32, anchor_bits: 16 },
+    ];
+    let mut out = Vec::new();
+    for (label, spec) in [("QG", "qsgd:4"), ("TG", "ternary"), ("SG", "sparse:0.25")] {
+        out.push(Method {
+            label: label.to_string(),
+            codec_spec: spec.to_string(),
+            references: vec![ReferenceKind::Zeros],
+        });
+        out.push(Method {
+            label: format!("TN-{label}"),
+            codec_spec: spec.to_string(),
+            references: tn_pool.clone(),
+        });
+    }
+    out
+}
+
+/// Run one method against an objective under a base config.
+pub fn run_method(
+    obj: &dyn Objective,
+    method: &Method,
+    base: &DriverConfig,
+    label: &str,
+) -> Result<Trace> {
+    let codec = make_codec(&method.codec_spec)?;
+    let mut cfg = DriverConfig { references: method.references.clone(), ..clone_cfg(base) };
+    // TN- methods in Figures 2-4 warm-start the reference from a full
+    // gradient (§4.2); charged via broadcast accounting in the driver.
+    cfg.warm_start_reference = method.is_tng();
+    Ok(driver::run(obj, codec.as_ref(), label, &cfg))
+}
+
+/// DriverConfig is plain data but holds no Clone derive (Vec fields are
+/// cheap); manual clone keeps the struct definition honest.
+pub fn clone_cfg(c: &DriverConfig) -> DriverConfig {
+    DriverConfig {
+        seed: c.seed,
+        workers: c.workers,
+        rounds: c.rounds,
+        batch: c.batch,
+        schedule: c.schedule,
+        estimator: c.estimator,
+        lbfgs_memory: c.lbfgs_memory,
+        mode: c.mode,
+        references: c.references.clone(),
+        broadcast_bits_per_elt: c.broadcast_bits_per_elt,
+        record_every: c.record_every,
+        f_star: c.f_star,
+        eval_loss: c.eval_loss,
+        w0: c.w0.clone(),
+        warm_start_reference: c.warm_start_reference,
+    }
+}
+
+/// Open the standard trace CSV for a figure.
+pub fn open_csv(opts: &Settings, figure: &str) -> Result<CsvWriter> {
+    let outdir = opts.str_or("outdir", "results");
+    CsvWriter::create(
+        std::path::Path::new(&outdir).join(format!("{figure}.csv")),
+        &Trace::CSV_HEADER,
+    )
+}
+
+/// Human summary line used by every figure harness.
+pub fn summarize(trace: &Trace) -> String {
+    format!(
+        "{:<28} rounds={:<6} bits/elt={:<10.1} final_subopt={:<12.4e} cnz={:.3}",
+        trace.label,
+        trace.rounds,
+        trace.final_bits_per_elt(),
+        trace.final_subopt(),
+        trace.records.last().map(|r| r.cnz).unwrap_or(f64::NAN),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_factory_specs() {
+        assert_eq!(make_codec("tg").unwrap().name(), "ternary");
+        assert_eq!(make_codec("qsgd:8").unwrap().name(), "qsgd8");
+        assert_eq!(make_codec("sg").unwrap().name(), "sparse0.25");
+        assert_eq!(make_codec("sparse:0.1").unwrap().name(), "sparse0.10");
+        assert_eq!(make_codec("sign").unwrap().name(), "sign");
+        assert_eq!(make_codec("topk:16").unwrap().name(), "top16");
+        assert_eq!(make_codec("fp32").unwrap().name(), "fp32");
+        assert!(make_codec("nope").is_err());
+        assert!(make_codec("qsgd:abc").is_err());
+    }
+
+    #[test]
+    fn paper_matrix_has_six_methods() {
+        let ms = paper_methods();
+        assert_eq!(ms.len(), 6);
+        assert!(ms.iter().any(|m| m.label == "TN-TG"));
+        assert_eq!(ms.iter().filter(|m| m.is_tng()).count(), 3);
+    }
+}

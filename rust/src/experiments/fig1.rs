@@ -1,0 +1,156 @@
+//! Figure 1 — "TNG on Benchmarking Nonconvex Functions".
+//!
+//! Ackley, Booth and Rosenbrock with synthetic N(0,1) gradient noise and the
+//! paper's fixed step sizes (5e-3 / 1e-4 / 1e-6). Methods: ternary-coded SGD
+//! (SGD-k) vs trajectory-normalized ternary (TNG-k) from three inits each.
+//! The TNG reference is the delayed decoded gradient, explicitly
+//! re-broadcast every 16 iterations at 16-bit precision — the paper's
+//! comm-parity rule (one fp16 broadcast = 8 rounds of 2-bit ternary), which
+//! the bits/element axis in the emitted CSV realizes exactly.
+
+use anyhow::Result;
+
+use crate::codec::ternary::TernaryCodec;
+use crate::config::Settings;
+use crate::coordinator::{driver, DriverConfig};
+use crate::experiments::common::{open_csv, summarize};
+use crate::objectives::nonconvex::{Func, NoisyFunc};
+use crate::optim::StepSchedule;
+use crate::tng::{Normalization, ReferenceKind};
+
+pub const FUNCS: [Func; 3] = [Func::Ackley, Func::Booth, Func::Rosenbrock];
+
+/// Three initialization points per function (non-convex optimization is
+/// sensitive to init, so the paper plots all three).
+pub fn inits(func: Func) -> [(f32, f32); 3] {
+    match func {
+        Func::Ackley => [(3.0, -3.5), (-2.5, 3.0), (3.5, 3.5)],
+        Func::Booth => [(-8.0, 9.0), (8.0, -8.0), (-6.0, -9.0)],
+        Func::Rosenbrock => [(-1.5, 2.0), (0.0, -1.0), (2.0, -2.0)],
+        _ => [(2.0, 2.0), (-2.0, 2.0), (2.0, -2.0)],
+    }
+}
+
+pub struct Fig1Opts {
+    pub rounds: usize,
+    pub seed: u64,
+    pub record_every: usize,
+    /// Reference refresh period (paper: 16).
+    pub ref_every: usize,
+}
+
+impl Fig1Opts {
+    pub fn from_settings(s: &Settings) -> Result<Self> {
+        let quick = s.bool_or("quick", false)?;
+        Ok(Fig1Opts {
+            rounds: s.usize_or("rounds", if quick { 400 } else { 4000 })?,
+            seed: s.u64_or("seed", 0)?,
+            record_every: s.usize_or("record_every", if quick { 10 } else { 40 })?,
+            ref_every: s.usize_or("ref_every", 16)?,
+        })
+    }
+}
+
+fn base_cfg(o: &Fig1Opts, func: Func, init: (f32, f32)) -> DriverConfig {
+    DriverConfig {
+        seed: o.seed,
+        workers: 1, // the paper's Figure-1 setting is single-stream SGD
+        rounds: o.rounds,
+        batch: 1,
+        schedule: StepSchedule::Const(func.paper_step()),
+        mode: Normalization::Subtractive,
+        record_every: o.record_every,
+        f_star: 0.0, // all three functions have min value 0
+        eval_loss: true,
+        w0: Some(vec![init.0, init.1]),
+        ..Default::default()
+    }
+}
+
+/// Run the full Figure-1 matrix; returns (label, final f) summary rows.
+pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
+    let o = Fig1Opts::from_settings(settings)?;
+    let mut csv = open_csv(settings, "fig1")?;
+    let mut summary = Vec::new();
+
+    for func in FUNCS {
+        for (k, &init) in inits(func).iter().enumerate() {
+            // Baseline: raw ternary SGD (reference = zeros).
+            let cfg = base_cfg(&o, func, init);
+            let tr = driver::run(
+                &NoisyFunc::new(func),
+                &TernaryCodec,
+                &format!("{}-SGD-{}", func.name(), k + 1),
+                &cfg,
+            );
+            println!("{}", summarize(&tr));
+            tr.write_csv(&mut csv)?;
+            summary.push((tr.label.clone(), tr.final_loss()));
+
+            // TNG: delayed reference, fp16 broadcast every `ref_every`.
+            let mut cfg = base_cfg(&o, func, init);
+            cfg.references = vec![ReferenceKind::Delayed {
+                tau: 0,
+                update_every: o.ref_every,
+                charge_broadcast: true,
+            }];
+            cfg.broadcast_bits_per_elt = 16;
+            let tr = driver::run(
+                &NoisyFunc::new(func),
+                &TernaryCodec,
+                &format!("{}-TNG-{}", func.name(), k + 1),
+                &cfg,
+            );
+            println!("{}", summarize(&tr));
+            tr.write_csv(&mut csv)?;
+            summary.push((tr.label.clone(), tr.final_loss()));
+        }
+    }
+    csv.flush()?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_matrix_runs_with_comm_parity_and_convergence() {
+        // The paper's Figure-1 protocol, verified at the level our regime
+        // analysis supports (EXPERIMENTS.md §Fig1): both methods optimize,
+        // Booth converges, and the fp16-reference-every-16 parity keeps the
+        // TNG bit overhead bounded (1 broadcast = 8 ternary rounds).
+        let s = Settings::from_args(&[
+            "quick=true",
+            "rounds=2000",
+            "record_every=100",
+            "outdir=/tmp/tng_fig1_test",
+        ])
+        .unwrap();
+        let rows = run(&s).unwrap();
+        assert_eq!(rows.len(), 18); // 3 funcs x 3 inits x 2 methods
+        assert!(rows.iter().all(|(_, f)| f.is_finite()));
+        // Booth (strong gradients, benign surface) must make real progress
+        // from f(init) ~ 150-450 for both methods (eta = 1e-4 is the
+        // paper's small step, so 2000 quick rounds reach ~f < 100).
+        for (l, f) in rows.iter().filter(|(l, _)| l.starts_with("booth")) {
+            assert!(*f < 100.0, "{l}: f={f}");
+        }
+        // With N(0,1) gradient noise the methods are statistically close on
+        // every function; neither may blow up relative to the other.
+        let avg = |pat: &str| {
+            let v: Vec<f64> = rows
+                .iter()
+                .filter(|(l, _)| l.starts_with(pat))
+                .map(|&(_, f)| f)
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        for f in ["ackley", "booth", "rosenbrock"] {
+            let sgd = avg(&format!("{f}-SGD"));
+            let tng = avg(&format!("{f}-TNG"));
+            assert!(tng < 2.0 * sgd + 1.0, "{f}: tng={tng} sgd={sgd}");
+        }
+        std::fs::remove_dir_all("/tmp/tng_fig1_test").ok();
+    }
+}

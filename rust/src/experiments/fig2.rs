@@ -1,0 +1,189 @@
+//! Figure 2 — "Convergence of SGD Methods" (and the SVRG estimator).
+//!
+//! Skewed synthetic logistic regression (D=512, N=2048, C_th = 0.6), M=4
+//! servers, batch 8. Grid cell (i, j): λ₂ ∝ 1/2^i (convexity) and
+//! C_sk ∝ 1/4^j (gradient skewness). Methods: {QG, TG, SG} raw and
+//! TN-wrapped, under SGD and SVRG gradient estimators. X-axis of the CSV is
+//! cumulative communications in bits/element; Y is F(w_t) − F(w*), with w*
+//! from a high-precision full-gradient solve.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::coordinator::DriverConfig;
+use crate::data::synthetic::{generate, SkewConfig};
+use crate::experiments::common::{open_csv, paper_methods, run_method, summarize};
+use crate::objectives::logreg::LogReg;
+use crate::optim::{EstimatorKind, StepSchedule};
+use crate::util::csv::CsvWriter;
+
+pub struct GridOpts {
+    pub n: usize,
+    pub dim: usize,
+    pub rounds: usize,
+    pub seed: u64,
+    pub record_every: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Base λ₂ (cell i gets base/2^i) and base C_sk (cell j gets base/4^j).
+    pub lambda_base: f32,
+    pub csk_base: f32,
+    pub eta: f32,
+    pub workers: usize,
+    pub batch: usize,
+    pub opt_iters: usize,
+}
+
+impl GridOpts {
+    pub fn from_settings(s: &Settings) -> Result<Self> {
+        let quick = s.bool_or("quick", false)?;
+        Ok(GridOpts {
+            n: s.usize_or("n", if quick { 512 } else { 2048 })?,
+            dim: s.usize_or("dim", if quick { 128 } else { 512 })?,
+            rounds: s.usize_or("rounds", if quick { 200 } else { 800 })?,
+            seed: s.u64_or("seed", 0)?,
+            record_every: s.usize_or("record_every", if quick { 10 } else { 20 })?,
+            rows: s.usize_or("rows", if quick { 2 } else { 3 })?,
+            cols: s.usize_or("cols", if quick { 2 } else { 3 })?,
+            lambda_base: s.f32_or("lambda_base", 0.02)?,
+            csk_base: s.f32_or("csk_base", 1.0)?,
+            eta: s.f32_or("eta", 0.5)?,
+            workers: s.usize_or("workers", 4)?,
+            batch: s.usize_or("batch", 8)?,
+            opt_iters: s.usize_or("opt_iters", if quick { 200 } else { 400 })?,
+        })
+    }
+
+    pub fn lambda(&self, i: usize) -> f32 {
+        self.lambda_base / (1 << i) as f32
+    }
+
+    pub fn c_sk(&self, j: usize) -> f32 {
+        self.csk_base / 4f32.powi(j as i32)
+    }
+}
+
+/// Build the (i, j) cell's objective + solved optimum.
+pub fn cell_objective(o: &GridOpts, i: usize, j: usize) -> (LogReg, f64) {
+    let ds = generate(&SkewConfig {
+        n: o.n,
+        dim: o.dim,
+        c_sk: o.c_sk(j),
+        c_th: 0.6,
+        seed: o.seed.wrapping_add((i * 31 + j) as u64),
+    });
+    let obj = LogReg::new(ds, o.lambda(i));
+    let (_, f_star) = obj.solve_optimum(o.opt_iters);
+    (obj, f_star)
+}
+
+/// Run the full grid for a set of estimators; emit CSV + summaries.
+pub fn run_grid(
+    o: &GridOpts,
+    estimators: &[(EstimatorKind, &str)],
+    lbfgs_memory: Option<usize>,
+    csv: &mut CsvWriter,
+) -> Result<Vec<(String, f64)>> {
+    let mut summary = Vec::new();
+    for i in 0..o.rows {
+        for j in 0..o.cols {
+            let (obj, f_star) = cell_objective(o, i, j);
+            for (est, est_name) in estimators {
+                // η ∝ 1/variance heuristic (§4.2): TNG/SVRG tolerate the
+                // base step; the grid uses one tuned η per the paper.
+                let base = DriverConfig {
+                    seed: o.seed,
+                    workers: o.workers,
+                    rounds: o.rounds,
+                    batch: o.batch,
+                    schedule: StepSchedule::Const(o.eta),
+                    estimator: *est,
+                    lbfgs_memory,
+                    record_every: o.record_every,
+                    f_star,
+                    ..Default::default()
+                };
+                for m in paper_methods() {
+                    let label = format!(
+                        "i{i}j{j}-lam{:.4}-csk{:.4}-{est_name}-{}",
+                        o.lambda(i),
+                        o.c_sk(j),
+                        m.label
+                    );
+                    let tr = run_method(&obj, &m, &base, &label)?;
+                    println!("{}", summarize(&tr));
+                    tr.write_csv(csv)?;
+                    summary.push((label, tr.final_subopt()));
+                }
+            }
+        }
+    }
+    Ok(summary)
+}
+
+pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
+    let o = GridOpts::from_settings(settings)?;
+    let mut csv = open_csv(settings, "fig2")?;
+    let anchor = (o.n / (o.batch * o.workers)).max(8);
+    // SGD and SVRG are the paper's two estimators (batch 8). GD
+    // (deterministic shard gradients) is our added series: the regime
+    // analysis (EXPERIMENTS.md §Regimes) shows batch-8 gradients are
+    // noise-dominated, where no reference can help (Prop. 4's C_nz ≥ ~1);
+    // the GD rows exhibit the paper's claimed TN- gains decisively.
+    let rows = run_grid(
+        &o,
+        &[
+            (EstimatorKind::Sgd, "SGD"),
+            (EstimatorKind::Svrg { anchor_every: anchor }, "SVRG"),
+            (EstimatorKind::FullBatch, "GD"),
+        ],
+        None,
+        &mut csv,
+    )?;
+    csv.flush()?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_cell_tng_beats_raw_in_gd_regime() {
+        // One cell, GD estimator, reduced size — the Figure-2 shape check
+        // in the regime where the mechanism operates (deterministic shard
+        // gradients): TN-TG must end well below TG.
+        let s = Settings::from_args(&[
+            "quick=true",
+            "rows=1",
+            "cols=1",
+            "rounds=400",
+            "n=512",
+            "dim=128",
+            "eta=1.0",
+            "outdir=/tmp/tng_fig2_test",
+        ])
+        .unwrap();
+        let o = GridOpts::from_settings(&s).unwrap();
+        let mut csv = open_csv(&s, "fig2").unwrap();
+        let rows =
+            run_grid(&o, &[(EstimatorKind::FullBatch, "GD")], None, &mut csv).unwrap();
+        assert_eq!(rows.len(), 6);
+        let get = |pat: &str| {
+            rows.iter()
+                .find(|(l, _)| l.ends_with(pat))
+                .map(|&(_, v)| v)
+                .unwrap()
+        };
+        assert!(
+            get("-TN-TG") < 0.5 * get("-GD-TG"),
+            "tn-tg={} tg={}",
+            get("-TN-TG"),
+            get("-GD-TG")
+        );
+        // SG/QG TN-variants must also not be (much) worse than raw.
+        assert!(get("-TN-SG") < 2.0 * get("-GD-SG") + 1e-3);
+        assert!(get("-TN-QG") < 2.0 * get("-GD-QG") + 1e-3);
+        std::fs::remove_dir_all("/tmp/tng_fig2_test").ok();
+    }
+}

@@ -1,0 +1,54 @@
+//! Figure 3 — "Convergence of Stochastic Quasi-Newton Methods".
+//!
+//! Exactly the Figure-2 grid (same data, convexity and skewness settings)
+//! but the leader applies the stochastic L-BFGS direction p_t = H_t v_t
+//! (Byrd et al. 2016) built from the decoded trajectory (Eqs. 5–6).
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::experiments::common::open_csv;
+use crate::experiments::fig2::{run_grid, GridOpts};
+use crate::optim::EstimatorKind;
+
+pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
+    let o = GridOpts::from_settings(settings)?;
+    let memory = settings.usize_or("memory", 5)?;
+    let mut csv = open_csv(settings, "fig3")?;
+    let anchor = (o.n / (o.batch * o.workers)).max(8);
+    let rows = run_grid(
+        &o,
+        &[
+            (EstimatorKind::Sgd, "QN-SGD"),
+            (EstimatorKind::Svrg { anchor_every: anchor }, "QN-SVRG"),
+        ],
+        Some(memory),
+        &mut csv,
+    )?;
+    csv.flush()?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_cell_runs_with_lbfgs() {
+        let s = Settings::from_args(&[
+            "quick=true",
+            "rows=1",
+            "cols=1",
+            "rounds=150",
+            "n=256",
+            "dim=64",
+            "eta=0.2",
+            "outdir=/tmp/tng_fig3_test",
+        ])
+        .unwrap();
+        let rows = run(&s).unwrap();
+        assert_eq!(rows.len(), 12); // 1 cell x 2 estimators x 6 methods
+        assert!(rows.iter().all(|(_, v)| v.is_finite()));
+        std::fs::remove_dir_all("/tmp/tng_fig3_test").ok();
+    }
+}

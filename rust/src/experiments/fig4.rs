@@ -1,0 +1,83 @@
+//! Figure 4 — sensitivity to the number of servers M and the quasi-Newton
+//! memory K.
+//!
+//! Grid cell (i, j): M = 4i servers, K = 2j memory (the paper's setting).
+//! Methods: TG vs TN-TG under the stochastic quasi-Newton optimizer. The
+//! paper's observations to reproduce: vertically, more servers yield a
+//! better reference; horizontally, memory helps then saturates.
+
+use anyhow::Result;
+
+use crate::config::Settings;
+use crate::coordinator::DriverConfig;
+use crate::data::synthetic::{generate, SkewConfig};
+use crate::experiments::common::{open_csv, paper_methods, run_method, summarize};
+use crate::objectives::logreg::LogReg;
+use crate::optim::StepSchedule;
+
+pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
+    let quick = settings.bool_or("quick", false)?;
+    let n = settings.usize_or("n", if quick { 512 } else { 2048 })?;
+    let dim = settings.usize_or("dim", if quick { 128 } else { 512 })?;
+    let rounds = settings.usize_or("rounds", if quick { 200 } else { 600 })?;
+    let seed = settings.u64_or("seed", 0)?;
+    let eta = settings.f32_or("eta", 0.3)?;
+    let lambda = settings.f32_or("lambda", 0.01)?;
+    let c_sk = settings.f32_or("csk", 0.25)?;
+    let servers: Vec<usize> = if quick { vec![4, 8] } else { vec![4, 8, 12] };
+    let memories: Vec<usize> = if quick { vec![2, 4] } else { vec![2, 4, 6] };
+
+    let ds = generate(&SkewConfig { n, dim, c_sk, c_th: 0.6, seed });
+    let obj = LogReg::new(ds, lambda);
+    let (_, f_star) = obj.solve_optimum(if quick { 200 } else { 400 });
+
+    let mut csv = open_csv(settings, "fig4")?;
+    let mut summary = Vec::new();
+    for (i, &m) in servers.iter().enumerate() {
+        for (j, &k) in memories.iter().enumerate() {
+            let base = DriverConfig {
+                seed,
+                workers: m,
+                rounds,
+                batch: 8,
+                schedule: StepSchedule::Const(eta),
+                lbfgs_memory: Some(k),
+                record_every: if quick { 10 } else { 20 },
+                f_star,
+                ..Default::default()
+            };
+            // TG and TN-TG only (the paper's Figure-4 pair).
+            for method in paper_methods().into_iter().filter(|m| m.label.ends_with("TG")) {
+                let label = format!("i{i}j{j}-M{m}-K{k}-{}", method.label);
+                let tr = run_method(&obj, &method, &base, &label)?;
+                println!("{}", summarize(&tr));
+                tr.write_csv(&mut csv)?;
+                summary.push((label, tr.final_subopt()));
+            }
+        }
+    }
+    csv.flush()?;
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_runs_and_more_servers_help_tng() {
+        let s = Settings::from_args(&[
+            "quick=true",
+            "rounds=150",
+            "n=256",
+            "dim=64",
+            "outdir=/tmp/tng_fig4_test",
+        ])
+        .unwrap();
+        let rows = run(&s).unwrap();
+        // 2 servers x 2 memories x 2 methods
+        assert_eq!(rows.len(), 8);
+        assert!(rows.iter().all(|(_, v)| v.is_finite()));
+        std::fs::remove_dir_all("/tmp/tng_fig4_test").ok();
+    }
+}

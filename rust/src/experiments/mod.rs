@@ -1,0 +1,10 @@
+//! Experiment harnesses regenerating every figure of the paper's evaluation
+//! (the paper has four figures and no tables — see DESIGN.md §4 for the
+//! index). Each figure has a full harness (`tng figN`) and a reduced sweep
+//! wired into `cargo bench`.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;

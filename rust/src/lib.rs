@@ -1,0 +1,28 @@
+//! # TNG — Trajectory Normalized Gradients for Distributed Optimization
+//!
+//! Full reproduction of Wangni, Li, Shi & Malik (2019): a
+//! communication-efficient distributed-optimization framework where servers
+//! compress the *normalized* gradient `g − g̃` against a trajectory-derived
+//! reference `g̃` shared by all ends at (near-)zero extra cost.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the coordinator: leader/worker protocol with
+//!   byte-exact communication accounting, codecs, reference strategies,
+//!   optimizers, experiment harnesses.
+//! * **L2/L1 (python/compile)** — JAX models + Pallas kernels, AOT-lowered
+//!   to HLO text once at build time.
+//! * **runtime** — loads those artifacts through the XLA PJRT C API and
+//!   executes them from the Rust hot path (no Python at runtime).
+
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod objectives;
+pub mod optim;
+pub mod runtime;
+pub mod tng;
+pub mod util;

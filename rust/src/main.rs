@@ -1,0 +1,125 @@
+//! `tng` — leader entrypoint / CLI for the TNG reproduction.
+//!
+//! See `tng help` (or [`tng::cli::USAGE`]) for commands. The figure
+//! harnesses write CSV traces under `outdir=` (default `results/`).
+
+use anyhow::Result;
+
+use tng::cli;
+use tng::config::Settings;
+use tng::coordinator::{driver, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::experiments::{common, fig1, fig2, fig3, fig4};
+use tng::objectives::logreg::LogReg;
+use tng::optim::{EstimatorKind, StepSchedule};
+use tng::tng::ReferenceKind;
+
+fn main() -> Result<()> {
+    tng::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match cli::parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    match parsed.command.as_str() {
+        "help" | "help-cmd" => println!("{}", cli::USAGE),
+        "info" => info()?,
+        "fig1" => {
+            fig1::run(&parsed.opts)?;
+        }
+        "fig2" => {
+            fig2::run(&parsed.opts)?;
+        }
+        "fig3" => {
+            fig3::run(&parsed.opts)?;
+        }
+        "fig4" => {
+            fig4::run(&parsed.opts)?;
+        }
+        "run" => custom_run(&parsed.opts)?,
+        other => unreachable!("cli::parse admitted '{other}'"),
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let dir = tng::runtime::default_artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    match tng::runtime::Engine::cpu() {
+        Ok(mut e) => {
+            println!("PJRT platform: {}", e.platform());
+            match e.load_dir(&dir) {
+                Ok(n) => {
+                    let mut names = e.names();
+                    names.sort_unstable();
+                    println!("loaded {n} artifacts: {names:?}");
+                }
+                Err(err) => println!("artifacts not loaded: {err}"),
+            }
+        }
+        Err(err) => println!("PJRT unavailable: {err}"),
+    }
+    Ok(())
+}
+
+/// One custom run on skewed logreg: `tng run codec=ternary tng=true
+/// rounds=500 workers=4 eta=0.3 lambda=0.01 csk=0.25 ...`.
+fn custom_run(s: &Settings) -> Result<()> {
+    let n = s.usize_or("n", 2048)?;
+    let dim = s.usize_or("dim", 512)?;
+    let ds = generate(&SkewConfig {
+        n,
+        dim,
+        c_sk: s.f32_or("csk", 0.25)?,
+        c_th: s.f32_or("cth", 0.6)?,
+        seed: s.u64_or("seed", 0)?,
+    });
+    let obj = LogReg::new(ds, s.f32_or("lambda", 0.01)?);
+    let (_, f_star) = obj.solve_optimum(s.usize_or("opt_iters", 300)?);
+
+    let codec = common::make_codec(&s.str_or("codec", "ternary"))?;
+    let use_tng = s.bool_or("tng", true)?;
+    let anchor = s.usize_or("anchor_every", 64)?;
+    let cfg = DriverConfig {
+        seed: s.u64_or("seed", 0)?,
+        workers: s.usize_or("workers", 4)?,
+        rounds: s.usize_or("rounds", 500)?,
+        batch: s.usize_or("batch", 8)?,
+        schedule: StepSchedule::Const(s.f32_or("eta", 0.3)?),
+        estimator: if s.str_or("estimator", "sgd") == "svrg" {
+            EstimatorKind::Svrg { anchor_every: anchor }
+        } else {
+            EstimatorKind::Sgd
+        },
+        lbfgs_memory: match s.usize_or("memory", 0)? {
+            0 => None,
+            k => Some(k),
+        },
+        references: if use_tng {
+            vec![ReferenceKind::AvgDecoded { window: s.usize_or("ref_window", 1)? }]
+        } else {
+            vec![ReferenceKind::Zeros]
+        },
+        record_every: s.usize_or("record_every", 10)?,
+        f_star,
+        warm_start_reference: use_tng,
+        ..Default::default()
+    };
+    let label = format!(
+        "{}{}",
+        if use_tng { "TN-" } else { "" },
+        codec.name()
+    );
+    let tr = driver::run(&obj, codec.as_ref(), &label, &cfg);
+    println!("{}", common::summarize(&tr));
+    for r in &tr.records {
+        println!(
+            "  round={:<6} bits/elt={:<10.1} subopt={:.4e} cnz={:.3}",
+            r.round, r.bits_per_elt, r.subopt, r.cnz
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,207 @@
+//! L2-regularized logistic regression — the paper's convex workload (§4.2).
+//!
+//! `F(w) = (1/N) Σ_n log(1 + exp(−b_n a_nᵀw)) + (λ/2)‖w‖²`
+//!
+//! This pure-Rust implementation is dimension-generic and is what the sweep
+//! harnesses use; the XLA-backed path (`runtime::engine` executing the
+//! Pallas `logreg_grad` artifact) computes the identical quantity and the
+//! two are cross-checked in `rust/tests/xla_integration.rs`.
+
+use super::Objective;
+use crate::data::synthetic::Dataset;
+use crate::util::math::{log1p_exp, sigmoid};
+use crate::util::Rng;
+
+pub struct LogReg {
+    pub data: Dataset,
+    pub lambda: f32,
+}
+
+impl LogReg {
+    pub fn new(data: Dataset, lambda: f32) -> Self {
+        LogReg { data, lambda }
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        let d = self.data.dim;
+        &self.data.x[i * d..(i + 1) * d]
+    }
+
+    /// Margin b_i * a_iᵀ w.
+    #[inline]
+    fn margin(&self, w: &[f32], i: usize) -> f64 {
+        self.data.y[i] as f64 * crate::util::math::dot(self.row(i), w)
+    }
+
+    /// Solve to high precision with deterministic full-gradient descent +
+    /// backtracking line search; used to obtain `w*` / `F(w*)` for the
+    /// suboptimality axis of Figures 2–4.
+    pub fn solve_optimum(&self, iters: usize) -> (Vec<f32>, f64) {
+        let d = self.dim();
+        let mut w = vec![0.0f32; d];
+        let mut g = vec![0.0f32; d];
+        let mut step = 1.0f32;
+        let mut fw = self.loss(&w);
+        for _ in 0..iters {
+            self.full_grad(&w, &mut g);
+            let gn = crate::util::math::norm2_sq(&g);
+            if gn < 1e-24 {
+                break;
+            }
+            // Backtracking Armijo line search.
+            let mut t = step * 2.0;
+            loop {
+                let cand: Vec<f32> =
+                    w.iter().zip(&g).map(|(&wi, &gi)| wi - t * gi).collect();
+                let fc = self.loss(&cand);
+                if fc <= fw - 0.25 * t as f64 * gn || t < 1e-12 {
+                    w = cand;
+                    fw = fc;
+                    step = t;
+                    break;
+                }
+                t *= 0.5;
+            }
+        }
+        (w, fw)
+    }
+}
+
+impl Objective for LogReg {
+    fn dim(&self) -> usize {
+        self.data.dim
+    }
+
+    fn n(&self) -> usize {
+        self.data.n
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..self.data.n {
+            acc += log1p_exp(-self.margin(w, i));
+        }
+        acc / self.data.n as f64
+            + 0.5 * self.lambda as f64 * crate::util::math::norm2_sq(w)
+    }
+
+    fn full_grad(&self, w: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        let inv_n = 1.0 / self.data.n as f32;
+        for i in 0..self.data.n {
+            let coef = (-self.data.y[i] as f64 * sigmoid(-self.margin(w, i))) as f32;
+            crate::util::math::axpy(coef * inv_n, self.row(i), out);
+        }
+        crate::util::math::axpy(self.lambda, w, out);
+    }
+
+    fn sample_grad(&self, w: &[f32], i: usize, out: &mut [f32]) {
+        let coef = (-self.data.y[i] as f64 * sigmoid(-self.margin(w, i))) as f32;
+        for (o, &x) in out.iter_mut().zip(self.row(i)) {
+            *o = coef * x;
+        }
+        crate::util::math::axpy(self.lambda, w, out);
+    }
+
+    fn stoch_grad(&self, w: &[f32], idx: &[usize], _rng: &mut Rng, out: &mut [f32]) {
+        super::minibatch_from_samples(self, w, idx, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{SkewConfig, generate};
+    use crate::util::math;
+
+    fn small() -> LogReg {
+        let cfg = SkewConfig { n: 64, dim: 16, c_sk: 1.0, c_th: 0.6, seed: 1 };
+        LogReg::new(generate(&cfg), 0.05)
+    }
+
+    #[test]
+    fn full_grad_matches_finite_difference() {
+        let obj = small();
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..16).map(|_| 0.3 * rng.gauss_f32()).collect();
+        let mut g = vec![0.0f32; 16];
+        obj.full_grad(&w, &mut g);
+        let h = 1e-3f32;
+        for d in [0usize, 5, 15] {
+            let mut wp = w.clone();
+            wp[d] += h;
+            let mut wm = w.clone();
+            wm[d] -= h;
+            let fd = (obj.loss(&wp) - obj.loss(&wm)) / (2.0 * h as f64);
+            assert!(
+                (fd - g[d] as f64).abs() < 1e-3 * (1.0 + fd.abs()),
+                "coord {d}: fd={fd} analytic={}",
+                g[d]
+            );
+        }
+    }
+
+    #[test]
+    fn sample_grads_average_to_full() {
+        let obj = small();
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..16).map(|_| rng.gauss_f32()).collect();
+        let mut full = vec![0.0f32; 16];
+        obj.full_grad(&w, &mut full);
+        let idx: Vec<usize> = (0..obj.n()).collect();
+        let mut mb = vec![0.0f32; 16];
+        obj.stoch_grad(&w, &idx, &mut rng, &mut mb);
+        for (a, b) in mb.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn minibatch_is_unbiased_over_uniform_sampling() {
+        let obj = small();
+        let mut rng = Rng::new(4);
+        let w: Vec<f32> = (0..16).map(|_| rng.gauss_f32()).collect();
+        let mut full = vec![0.0f32; 16];
+        obj.full_grad(&w, &mut full);
+        let mut acc = vec![0.0f64; 16];
+        let trials = 3000;
+        let mut g = vec![0.0f32; 16];
+        for _ in 0..trials {
+            let idx = rng.sample_indices(obj.n(), 8);
+            obj.stoch_grad(&w, &idx, &mut rng, &mut g);
+            for (a, &x) in acc.iter_mut().zip(&g) {
+                *a += x as f64;
+            }
+        }
+        for (a, &f) in acc.iter().zip(&full) {
+            let mean = a / trials as f64;
+            assert!((mean - f as f64).abs() < 0.05 * (1.0 + f.abs() as f64));
+        }
+    }
+
+    #[test]
+    fn solver_reaches_stationarity() {
+        let obj = small();
+        let (w_star, f_star) = obj.solve_optimum(400);
+        let mut g = vec![0.0f32; 16];
+        obj.full_grad(&w_star, &mut g);
+        assert!(math::norm2(&g) < 1e-5, "grad norm {}", math::norm2(&g));
+        // Optimum must be below the origin's value.
+        assert!(f_star < obj.loss(&vec![0.0; 16]));
+    }
+
+    #[test]
+    fn regularizer_strongly_convexifies() {
+        // loss(w) >= loss(w*) + (lambda/2)||w - w*||^2
+        let obj = small();
+        let (w_star, f_star) = obj.solve_optimum(400);
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            let w: Vec<f32> = (0..16).map(|_| rng.gauss_f32()).collect();
+            let gap = obj.loss(&w) - f_star;
+            let quad = 0.5 * obj.lambda as f64 * math::dist_sq(&w, &w_star);
+            assert!(gap >= quad - 1e-9, "gap={gap} quad={quad}");
+        }
+    }
+}

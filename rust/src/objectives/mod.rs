@@ -1,0 +1,66 @@
+//! Optimization objectives: the paper's workloads plus test substrates.
+//!
+//! * [`logreg`] — L2-regularized logistic regression (§4.2, Figures 2–4)
+//! * [`nonconvex`] — Ackley / Booth / Rosenbrock benchmark suite (Figure 1)
+//! * [`quadratic`] — diagonal strongly-convex quadratic (test substrate with
+//!   a closed-form optimum, used by convergence property tests)
+
+pub mod logreg;
+pub mod nonconvex;
+pub mod quadratic;
+
+use crate::util::Rng;
+
+/// A (possibly finite-sum) objective `F(w)`.
+///
+/// Finite-sum objectives (`n() > 0`) expose per-sample gradients so workers
+/// can run minibatch SGD/SVRG over their shard; noise-oracle objectives
+/// (`n() == 0`, e.g. the Figure-1 suite) synthesize stochasticity by adding
+/// Gaussian noise to the exact gradient, exactly as §4.1 does.
+///
+/// Deliberately NOT `Send + Sync`: the XLA-backed objective wraps PJRT
+/// handles (Rc/raw pointers). The threaded runtime takes
+/// `&(dyn Objective + Sync)`; pure-Rust objectives satisfy that bound.
+pub trait Objective {
+    fn dim(&self) -> usize;
+
+    /// Data-set size; 0 means "noise oracle".
+    fn n(&self) -> usize {
+        0
+    }
+
+    /// Full objective value F(w).
+    fn loss(&self, w: &[f32]) -> f64;
+
+    /// Exact gradient ∇F(w).
+    fn full_grad(&self, w: &[f32], out: &mut [f32]);
+
+    /// Gradient of the single loss term `i` (finite-sum only).
+    /// Includes the regularizer so that averaging sample grads = full grad.
+    fn sample_grad(&self, _w: &[f32], _i: usize, _out: &mut [f32]) {
+        unimplemented!("not a finite-sum objective")
+    }
+
+    /// Stochastic gradient over minibatch `idx` (finite-sum), or noisy exact
+    /// gradient (noise oracle — `idx` ignored).
+    fn stoch_grad(&self, w: &[f32], idx: &[usize], rng: &mut Rng, out: &mut [f32]);
+}
+
+/// Average of sample gradients over `idx` — default minibatch implementation
+/// shared by the finite-sum objectives.
+pub(crate) fn minibatch_from_samples<O: Objective>(
+    obj: &O,
+    w: &[f32],
+    idx: &[usize],
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    if idx.is_empty() {
+        return;
+    }
+    let mut tmp = vec![0.0f32; w.len()];
+    for &i in idx {
+        obj.sample_grad(w, i, &mut tmp);
+        crate::util::math::axpy(1.0 / idx.len() as f32, &tmp, out);
+    }
+}

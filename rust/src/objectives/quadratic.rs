@@ -1,0 +1,131 @@
+//! Diagonal strongly-convex quadratic — a test substrate with closed-form
+//! optimum, used by the convergence property tests and Theorem-7 checks.
+//!
+//! `F(w) = 0.5 Σ_d a_d (w_d − c_d)²`, `a_d ≥ λ > 0`; `w* = c`, `F(w*) = 0`.
+//! The stochastic oracle adds N(0, σ²) per element (noise oracle) — the
+//! setting where Theorem 7's O(1/t) rate is exactly checkable.
+
+use super::Objective;
+use crate::util::Rng;
+
+pub struct Quadratic {
+    pub a: Vec<f32>,
+    pub c: Vec<f32>,
+    pub sigma: f32,
+}
+
+impl Quadratic {
+    pub fn new(a: Vec<f32>, c: Vec<f32>, sigma: f32) -> Self {
+        assert_eq!(a.len(), c.len());
+        assert!(a.iter().all(|&x| x > 0.0), "must be strongly convex");
+        Quadratic { a, c, sigma }
+    }
+
+    /// Condition-number-κ instance in dimension d (eigenvalues linearly
+    /// spaced in [1, κ]), optimum drawn from the rng.
+    pub fn conditioned(dim: usize, kappa: f32, sigma: f32, rng: &mut Rng) -> Self {
+        let a: Vec<f32> = (0..dim)
+            .map(|i| 1.0 + (kappa - 1.0) * i as f32 / (dim.max(2) - 1) as f32)
+            .collect();
+        let c: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+        Quadratic::new(a, c, sigma)
+    }
+
+    pub fn strong_convexity(&self) -> f32 {
+        self.a.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn smoothness(&self) -> f32 {
+        self.a.iter().copied().fold(0.0, f32::max)
+    }
+}
+
+impl Objective for Quadratic {
+    fn dim(&self) -> usize {
+        self.a.len()
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        w.iter()
+            .zip(self.a.iter().zip(&self.c))
+            .map(|(&wi, (&ai, &ci))| 0.5 * ai as f64 * ((wi - ci) as f64).powi(2))
+            .sum()
+    }
+
+    fn full_grad(&self, w: &[f32], out: &mut [f32]) {
+        for (o, (&wi, (&ai, &ci))) in out.iter_mut().zip(w.iter().zip(self.a.iter().zip(&self.c)))
+        {
+            *o = ai * (wi - ci);
+        }
+    }
+
+    fn stoch_grad(&self, w: &[f32], _idx: &[usize], rng: &mut Rng, out: &mut [f32]) {
+        self.full_grad(w, out);
+        for o in out.iter_mut() {
+            *o += self.sigma * rng.gauss_f32();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math;
+
+    #[test]
+    fn optimum_is_c() {
+        let q = Quadratic::new(vec![1.0, 4.0], vec![2.0, -1.0], 0.0);
+        assert_eq!(q.loss(&[2.0, -1.0]), 0.0);
+        let mut g = [0.0f32; 2];
+        q.full_grad(&[2.0, -1.0], &mut g);
+        assert_eq!(g, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn gradient_linear_in_displacement() {
+        let q = Quadratic::new(vec![3.0], vec![1.0], 0.0);
+        let mut g = [0.0f32];
+        q.full_grad(&[2.0], &mut g);
+        assert_eq!(g[0], 3.0);
+    }
+
+    #[test]
+    fn conditioned_spectrum() {
+        let mut rng = Rng::new(1);
+        let q = Quadratic::conditioned(16, 10.0, 0.0, &mut rng);
+        assert!((q.strong_convexity() - 1.0).abs() < 1e-6);
+        assert!((q.smoothness() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gd_converges_linearly() {
+        let mut rng = Rng::new(2);
+        let q = Quadratic::conditioned(8, 5.0, 0.0, &mut rng);
+        let mut w = vec![0.0f32; 8];
+        let mut g = vec![0.0f32; 8];
+        let eta = 1.0 / q.smoothness();
+        let f0 = q.loss(&w);
+        for _ in 0..100 {
+            q.full_grad(&w, &mut g);
+            math::axpy(-eta, &g, &mut w);
+        }
+        assert!(q.loss(&w) < 1e-8 * f0);
+    }
+
+    #[test]
+    fn noise_oracle_variance() {
+        let q = Quadratic::new(vec![1.0; 32], vec![0.0; 32], 0.5);
+        let w = vec![0.0f32; 32];
+        let mut rng = Rng::new(3);
+        let mut g = vec![0.0f32; 32];
+        let mut acc = 0.0f64;
+        let trials = 2000;
+        for _ in 0..trials {
+            q.stoch_grad(&w, &[], &mut rng, &mut g);
+            acc += math::norm2_sq(&g);
+        }
+        // E||g||^2 = D * sigma^2 = 8
+        let mean = acc / trials as f64;
+        assert!((mean - 8.0).abs() < 0.5, "mean={mean}");
+    }
+}

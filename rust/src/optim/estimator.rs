@@ -1,0 +1,244 @@
+//! Worker-side stochastic gradient estimators: plain minibatch SGD and
+//! SVRG (Johnson & Zhang 2013), the two `g_t` generators of Figure 2.
+//!
+//! SVRG: `g = ∇f_B(w) − ∇f_B(w̃) + ∇F(w̃)` with anchor `w̃` refreshed every
+//! `anchor_every` rounds. In the distributed protocol the anchor refresh is
+//! one full-gradient round (every worker contributes its shard's full
+//! gradient once), after which `μ = ∇F(w̃)` is known to all ends — the
+//! natural SVRG-style reference of §3.1 falls out of the same state.
+
+use crate::objectives::Objective;
+use crate::util::math::axpy;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EstimatorKind {
+    Sgd,
+    Svrg { anchor_every: usize },
+    /// Deterministic full-shard gradient (distributed batch GD). The
+    /// regime where trajectory references are most effective: worker
+    /// gradients are pure signal, so C_nz = ‖∇F_t−g̃‖²/‖∇F_t‖² ≪ 1 once the
+    /// trajectory settles — see EXPERIMENTS.md §Regimes.
+    FullBatch,
+}
+
+impl EstimatorKind {
+    pub fn name(&self) -> String {
+        match self {
+            EstimatorKind::Sgd => "sgd".into(),
+            EstimatorKind::Svrg { anchor_every } => format!("svrg{anchor_every}"),
+            EstimatorKind::FullBatch => "fullbatch".into(),
+        }
+    }
+}
+
+/// Per-worker estimator state.
+pub struct GradEstimator {
+    pub kind: EstimatorKind,
+    pub batch: usize,
+    /// SVRG anchor parameters w̃ (shared; broadcast by the leader).
+    anchor_w: Vec<f32>,
+    /// Shard-local full gradient at the anchor ∇F_shard(w̃).
+    anchor_mu: Vec<f32>,
+    has_anchor: bool,
+    scratch_a: Vec<f32>,
+    scratch_b: Vec<f32>,
+}
+
+impl GradEstimator {
+    pub fn new(kind: EstimatorKind, batch: usize, dim: usize) -> Self {
+        GradEstimator {
+            kind,
+            batch,
+            anchor_w: vec![0.0; dim],
+            anchor_mu: vec![0.0; dim],
+            has_anchor: false,
+            scratch_a: vec![0.0; dim],
+            scratch_b: vec![0.0; dim],
+        }
+    }
+
+    /// Is an anchor refresh due at `round`?
+    pub fn anchor_due(&self, round: usize) -> bool {
+        matches!(self.kind, EstimatorKind::Svrg { anchor_every } if round % anchor_every == 0)
+    }
+
+    /// Install a new anchor: parameters + shard full gradient at them.
+    pub fn set_anchor(&mut self, obj: &dyn Objective, shard: &[usize], w: &[f32]) {
+        self.anchor_w.copy_from_slice(w);
+        self.anchor_mu.fill(0.0);
+        if shard.is_empty() {
+            return;
+        }
+        let mut tmp = vec![0.0f32; w.len()];
+        for &i in shard {
+            obj.sample_grad(w, i, &mut tmp);
+            axpy(1.0 / shard.len() as f32, &tmp, &mut self.anchor_mu);
+        }
+        self.has_anchor = true;
+    }
+
+    /// The shard-local anchor gradient (used to assemble the global μ).
+    pub fn anchor_mu(&self) -> &[f32] {
+        &self.anchor_mu
+    }
+
+    /// Overwrite the anchor gradient with the *global* μ after aggregation.
+    pub fn set_global_mu(&mut self, mu: &[f32]) {
+        self.anchor_mu.copy_from_slice(mu);
+        self.has_anchor = true;
+    }
+
+    /// Compute this worker's stochastic gradient for the round.
+    pub fn grad(
+        &mut self,
+        obj: &dyn Objective,
+        shard: &[usize],
+        w: &[f32],
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        match self.kind {
+            EstimatorKind::Sgd => {
+                let idx = sample_batch(shard, self.batch, rng);
+                obj.stoch_grad(w, &idx, rng, out);
+            }
+            EstimatorKind::FullBatch => {
+                if shard.is_empty() {
+                    // Noise-oracle objective: fall back to its exact grad.
+                    obj.full_grad(w, out);
+                } else {
+                    obj.stoch_grad(w, shard, rng, out);
+                }
+            }
+            EstimatorKind::Svrg { .. } => {
+                if !self.has_anchor {
+                    // Degenerate to SGD until the first anchor lands.
+                    let idx = sample_batch(shard, self.batch, rng);
+                    obj.stoch_grad(w, &idx, rng, out);
+                    return;
+                }
+                let idx = sample_batch(shard, self.batch, rng);
+                obj.stoch_grad(w, &idx, rng, &mut self.scratch_a);
+                obj.stoch_grad(&self.anchor_w, &idx, rng, &mut self.scratch_b);
+                for (o, ((&a, &b), &m)) in out.iter_mut().zip(
+                    self.scratch_a.iter().zip(&self.scratch_b).zip(&self.anchor_mu),
+                ) {
+                    *o = a - b + m;
+                }
+            }
+        }
+    }
+}
+
+/// Uniform minibatch from a shard (noise oracles have empty shards and get
+/// an empty index list, which `stoch_grad` ignores).
+fn sample_batch(shard: &[usize], batch: usize, rng: &mut Rng) -> Vec<usize> {
+    if shard.is_empty() {
+        return Vec::new();
+    }
+    (0..batch).map(|_| shard[rng.below(shard.len())]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SkewConfig};
+    use crate::objectives::logreg::LogReg;
+    use crate::util::math;
+
+    fn setup() -> (LogReg, Vec<usize>) {
+        let ds = generate(&SkewConfig { n: 64, dim: 16, seed: 5, ..Default::default() });
+        (LogReg::new(ds, 0.05), (0..64).collect())
+    }
+
+    #[test]
+    fn sgd_estimator_unbiased() {
+        let (obj, shard) = setup();
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..16).map(|_| rng.gauss_f32()).collect();
+        let mut full = vec![0.0f32; 16];
+        obj.full_grad(&w, &mut full);
+        let mut est = GradEstimator::new(EstimatorKind::Sgd, 8, 16);
+        let mut acc = vec![0.0f64; 16];
+        let trials = 4000;
+        let mut g = vec![0.0f32; 16];
+        for _ in 0..trials {
+            est.grad(&obj, &shard, &w, &mut rng, &mut g);
+            for (a, &x) in acc.iter_mut().zip(&g) {
+                *a += x as f64;
+            }
+        }
+        for (a, &f) in acc.iter().zip(&full) {
+            assert!((a / trials as f64 - f as f64).abs() < 0.03);
+        }
+    }
+
+    #[test]
+    fn svrg_variance_shrinks_near_anchor() {
+        let (obj, shard) = setup();
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..16).map(|_| 0.5 * rng.gauss_f32()).collect();
+
+        let mut svrg = GradEstimator::new(EstimatorKind::Svrg { anchor_every: 100 }, 4, 16);
+        svrg.set_anchor(&obj, &shard, &w); // anchor at the evaluation point
+        let mut sgd = GradEstimator::new(EstimatorKind::Sgd, 4, 16);
+
+        let mut full = vec![0.0f32; 16];
+        obj.full_grad(&w, &mut full);
+        let var = |est: &mut GradEstimator, rng: &mut Rng| {
+            let mut acc = 0.0;
+            let mut g = vec![0.0f32; 16];
+            for _ in 0..800 {
+                est.grad(&obj, &shard, &w, rng, &mut g);
+                acc += math::dist_sq(&g, &full);
+            }
+            acc / 800.0
+        };
+        let v_svrg = var(&mut svrg, &mut rng);
+        let v_sgd = var(&mut sgd, &mut rng);
+        // At the anchor the SVRG correction cancels the sampling noise
+        // exactly (up to regularizer terms): variance must collapse.
+        assert!(v_svrg < 0.05 * v_sgd, "svrg={v_svrg} sgd={v_sgd}");
+    }
+
+    #[test]
+    fn svrg_without_anchor_degenerates_to_sgd() {
+        let (obj, shard) = setup();
+        let mut rng = Rng::new(3);
+        let w = vec![0.1f32; 16];
+        let mut est = GradEstimator::new(EstimatorKind::Svrg { anchor_every: 8 }, 4, 16);
+        let mut g = vec![0.0f32; 16];
+        est.grad(&obj, &shard, &w, &mut rng, &mut g); // must not panic
+        assert!(math::norm2(&g) > 0.0);
+    }
+
+    #[test]
+    fn anchor_due_schedule() {
+        let est = GradEstimator::new(EstimatorKind::Svrg { anchor_every: 4 }, 4, 4);
+        assert!(est.anchor_due(0));
+        assert!(!est.anchor_due(1));
+        assert!(est.anchor_due(4));
+        let sgd = GradEstimator::new(EstimatorKind::Sgd, 4, 4);
+        assert!(!sgd.anchor_due(0));
+    }
+
+    #[test]
+    fn shard_anchor_mu_averages_shard_grads() {
+        let (obj, _) = setup();
+        let shard: Vec<usize> = (0..8).collect();
+        let w = vec![0.05f32; 16];
+        let mut est = GradEstimator::new(EstimatorKind::Svrg { anchor_every: 1 }, 4, 16);
+        est.set_anchor(&obj, &shard, &w);
+        // brute-force average
+        let mut expect = vec![0.0f32; 16];
+        let mut tmp = vec![0.0f32; 16];
+        for &i in &shard {
+            obj.sample_grad(&w, i, &mut tmp);
+            math::axpy(1.0 / 8.0, &tmp, &mut expect);
+        }
+        for (a, b) in est.anchor_mu().iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

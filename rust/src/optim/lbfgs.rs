@@ -1,0 +1,232 @@
+//! Online stochastic L-BFGS (Byrd et al. 2016) — the quasi-Newton outer
+//! optimizer of Figures 3–4.
+//!
+//! The leader maintains a memory of K curvature pairs from the *parameter
+//! and (decoded) gradient trajectory*:
+//!
+//! `s_k = w_k − w_{k−1}`, `y_k = g_k − g_{k−1}` (Eq. 5), and replaces the
+//! applied direction by `p_t = H_t g_t` via the classic two-loop recursion,
+//! initializing `H_t^{t−K} = (s_tᵀy_t / ‖y_t‖²) I` (Eq. 6).
+//!
+//! Robustness with compressed gradients: pairs with `s_kᵀ y_k ≤ ε‖s‖‖y‖`
+//! are skipped (curvature cannot be trusted from noisy decoded gradients) —
+//! standard practice for stochastic quasi-Newton.
+
+use std::collections::VecDeque;
+
+use crate::util::math::{axpy, dot, norm2_sq};
+
+pub struct Lbfgs {
+    pub memory: usize,
+    s_hist: VecDeque<Vec<f32>>,
+    y_hist: VecDeque<Vec<f32>>,
+    rho: VecDeque<f64>,
+    prev_w: Option<Vec<f32>>,
+    prev_g: Option<Vec<f32>>,
+    /// Curvature acceptance threshold (cosine-like).
+    pub curvature_eps: f64,
+    pairs_skipped: usize,
+}
+
+impl Lbfgs {
+    pub fn new(memory: usize) -> Self {
+        assert!(memory >= 1);
+        Lbfgs {
+            memory,
+            s_hist: VecDeque::new(),
+            y_hist: VecDeque::new(),
+            rho: VecDeque::new(),
+            prev_w: None,
+            prev_g: None,
+            curvature_eps: 1e-8,
+            pairs_skipped: 0,
+        }
+    }
+
+    pub fn pairs(&self) -> usize {
+        self.s_hist.len()
+    }
+
+    pub fn pairs_skipped(&self) -> usize {
+        self.pairs_skipped
+    }
+
+    /// Record the new iterate/gradient, harvesting a curvature pair.
+    pub fn observe(&mut self, w: &[f32], g: &[f32]) {
+        if let (Some(pw), Some(pg)) = (&self.prev_w, &self.prev_g) {
+            let s: Vec<f32> = w.iter().zip(pw).map(|(a, b)| a - b).collect();
+            let y: Vec<f32> = g.iter().zip(pg).map(|(a, b)| a - b).collect();
+            let sy = dot(&s, &y);
+            let gate = self.curvature_eps * norm2_sq(&s).sqrt() * norm2_sq(&y).sqrt();
+            if sy > gate && sy.is_finite() && sy > 0.0 {
+                self.s_hist.push_back(s);
+                self.y_hist.push_back(y);
+                self.rho.push_back(1.0 / sy);
+                if self.s_hist.len() > self.memory {
+                    self.s_hist.pop_front();
+                    self.y_hist.pop_front();
+                    self.rho.pop_front();
+                }
+            } else {
+                self.pairs_skipped += 1;
+            }
+        }
+        self.prev_w = Some(w.to_vec());
+        self.prev_g = Some(g.to_vec());
+    }
+
+    /// Two-loop recursion: p = H_t g (falls back to g with empty memory).
+    pub fn direction(&self, g: &[f32]) -> Vec<f32> {
+        let m = self.s_hist.len();
+        let mut q = g.to_vec();
+        if m == 0 {
+            return q;
+        }
+        let mut alpha = vec![0.0f64; m];
+        for k in (0..m).rev() {
+            alpha[k] = self.rho[k] * dot(&self.s_hist[k], &q);
+            axpy(-alpha[k] as f32, &self.y_hist[k], &mut q);
+        }
+        // H0 = (s^T y / ||y||^2) I from the newest pair.
+        let k_last = m - 1;
+        let sy = 1.0 / self.rho[k_last];
+        let yy = norm2_sq(&self.y_hist[k_last]);
+        let gamma = if yy > 0.0 { (sy / yy) as f32 } else { 1.0 };
+        for qi in q.iter_mut() {
+            *qi *= gamma;
+        }
+        for k in 0..m {
+            let beta = self.rho[k] * dot(&self.y_hist[k], &q);
+            axpy((alpha[k] - beta) as f32, &self.s_hist[k], &mut q);
+        }
+        q
+    }
+
+    pub fn reset(&mut self) {
+        self.s_hist.clear();
+        self.y_hist.clear();
+        self.rho.clear();
+        self.prev_w = None;
+        self.prev_g = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectives::quadratic::Quadratic;
+    use crate::objectives::Objective;
+    use crate::util::math;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty_memory_is_identity() {
+        let l = Lbfgs::new(4);
+        let g = vec![1.0f32, -2.0, 3.0];
+        assert_eq!(l.direction(&g), g);
+    }
+
+    #[test]
+    fn direction_is_descent_on_quadratic() {
+        let mut rng = Rng::new(1);
+        let q = Quadratic::conditioned(8, 20.0, 0.0, &mut rng);
+        let mut l = Lbfgs::new(5);
+        let mut w = vec![0.0f32; 8];
+        let mut g = vec![0.0f32; 8];
+        for _ in 0..10 {
+            q.full_grad(&w, &mut g);
+            l.observe(&w, &g);
+            let p = l.direction(&g);
+            assert!(math::dot(&p, &g) > 0.0, "descent direction required");
+            math::axpy(-0.05, &p, &mut w);
+        }
+    }
+
+    #[test]
+    fn converges_faster_than_gd_on_ill_conditioned_quadratic() {
+        let mut rng = Rng::new(2);
+        let kappa = 100.0;
+        let q = Quadratic::conditioned(16, kappa, 0.0, &mut rng);
+        let eta_gd = 1.0 / q.smoothness();
+        let iters = 60;
+
+        // Plain GD
+        let mut w = vec![0.0f32; 16];
+        let mut g = vec![0.0f32; 16];
+        for _ in 0..iters {
+            q.full_grad(&w, &mut g);
+            math::axpy(-eta_gd, &g, &mut w);
+        }
+        let loss_gd = q.loss(&w);
+
+        // L-BFGS with unit step after warmup.
+        let mut l = Lbfgs::new(10);
+        let mut w = vec![0.0f32; 16];
+        for t in 0..iters {
+            q.full_grad(&w, &mut g);
+            l.observe(&w, &g);
+            let p = l.direction(&g);
+            let eta = if t < 3 { eta_gd } else { 1.0 };
+            math::axpy(-eta, &p, &mut w);
+        }
+        let loss_lbfgs = q.loss(&w);
+        assert!(
+            loss_lbfgs < 1e-4 * loss_gd.max(1e-18),
+            "lbfgs={loss_lbfgs} gd={loss_gd}"
+        );
+    }
+
+    #[test]
+    fn memory_bounded() {
+        let mut l = Lbfgs::new(3);
+        let mut rng = Rng::new(3);
+        let mut w = vec![0.0f32; 4];
+        for _ in 0..10 {
+            // random strictly-curved walk
+            let g: Vec<f32> = w.iter().map(|&x| x + 1.0).collect();
+            l.observe(&w, &g);
+            for x in w.iter_mut() {
+                *x += rng.gauss_f32().abs() + 0.1;
+            }
+        }
+        assert!(l.pairs() <= 3);
+    }
+
+    #[test]
+    fn rejects_negative_curvature_pairs() {
+        let mut l = Lbfgs::new(4);
+        // Move +1 while gradient *decreases* => s^T y < 0 (non-convex blip).
+        l.observe(&[0.0, 0.0], &[1.0, 1.0]);
+        l.observe(&[1.0, 1.0], &[0.0, 0.0]);
+        assert_eq!(l.pairs(), 0);
+        assert_eq!(l.pairs_skipped(), 1);
+    }
+
+    #[test]
+    fn exact_on_quadratic_with_full_memory() {
+        // On a D-dim quadratic, L-BFGS with memory >= D solves in few steps.
+        let mut rng = Rng::new(4);
+        let q = Quadratic::conditioned(6, 50.0, 0.0, &mut rng);
+        let mut l = Lbfgs::new(6);
+        let mut w = vec![0.0f32; 6];
+        let mut g = vec![0.0f32; 6];
+        for t in 0..25 {
+            q.full_grad(&w, &mut g);
+            l.observe(&w, &g);
+            let p = l.direction(&g);
+            math::axpy(if t < 2 { -1.0 / q.smoothness() } else { -1.0 }, &p, &mut w);
+        }
+        assert!(q.loss(&w) < 1e-9, "loss={}", q.loss(&w));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut l = Lbfgs::new(2);
+        l.observe(&[0.0], &[1.0]);
+        l.observe(&[-1.0], &[0.5]);
+        assert!(l.pairs() > 0);
+        l.reset();
+        assert_eq!(l.pairs(), 0);
+        assert_eq!(l.direction(&[2.0]), vec![2.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Outer optimizers: step schedules (incl. Theorem 7), worker-side gradient
+//! estimators (SGD / SVRG), and the leader-side stochastic L-BFGS
+//! preconditioner (Byrd et al. 2016) used by Figures 3–4.
+
+pub mod estimator;
+pub mod lbfgs;
+pub mod schedule;
+
+pub use estimator::{EstimatorKind, GradEstimator};
+pub use lbfgs::Lbfgs;
+pub use schedule::StepSchedule;

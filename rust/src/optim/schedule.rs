@@ -1,0 +1,65 @@
+//! Step-size schedules, including Theorem 7's strongly-convex schedule
+//! `η_t = α / (λ (t + α κ))` with `κ = 2 L C_{q,nz} / λ`, capped at `1/(2L)`.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepSchedule {
+    Const(f32),
+    /// Theorem 7: η_t = α / (λ (t + α κ)), clamped to ≤ 1/(2L).
+    Theorem7 { alpha: f32, lambda: f32, smoothness: f32, c_qnz: f32 },
+    /// Generic 1/t decay: η_t = η0 / (1 + t / t0).
+    InvT { eta0: f32, t0: f32 },
+}
+
+impl StepSchedule {
+    pub fn step(&self, t: usize) -> f32 {
+        match *self {
+            StepSchedule::Const(eta) => eta,
+            StepSchedule::Theorem7 { alpha, lambda, smoothness, c_qnz } => {
+                let kappa = 2.0 * smoothness * c_qnz / lambda;
+                let eta = alpha / (lambda * (t as f32 + alpha * kappa));
+                eta.min(1.0 / (2.0 * smoothness))
+            }
+            StepSchedule::InvT { eta0, t0 } => eta0 / (1.0 + t as f32 / t0),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            StepSchedule::Const(e) => format!("const{e}"),
+            StepSchedule::Theorem7 { .. } => "thm7".into(),
+            StepSchedule::InvT { .. } => "invt".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_is_constant() {
+        let s = StepSchedule::Const(0.1);
+        assert_eq!(s.step(0), 0.1);
+        assert_eq!(s.step(10_000), 0.1);
+    }
+
+    #[test]
+    fn theorem7_capped_and_decaying() {
+        let s = StepSchedule::Theorem7 { alpha: 2.0, lambda: 0.1, smoothness: 1.0, c_qnz: 2.0 };
+        // cap: 1/(2L) = 0.5
+        assert!(s.step(0) <= 0.5);
+        assert!(s.step(10) > s.step(100));
+        assert!(s.step(100) > s.step(10_000));
+        // asymptotically ~ alpha / (lambda t)
+        let t = 1_000_000usize;
+        let expect = 2.0 / (0.1 * t as f32);
+        assert!((s.step(t) - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    fn invt_halves_at_t0() {
+        let s = StepSchedule::InvT { eta0: 0.4, t0: 50.0 };
+        assert_eq!(s.step(0), 0.4);
+        assert!((s.step(50) - 0.2).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT engine: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from JAX/Pallas) and executes them on the XLA
+//! CPU client — Python is never on this path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md / aot recipe). All artifact graphs are
+//! lowered with `return_tuple=True`, so every execution unwraps a tuple.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Conventional artifact directory for this repo.
+pub fn default_artifact_dir() -> PathBuf {
+    // CARGO_MANIFEST_DIR = repo root (Cargo.toml lives there).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A loaded, compiled model registry over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// CPU PJRT client (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory (name = file stem before
+    /// `.hlo.txt`). Returns how many were loaded.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<usize> {
+        let mut n = 0;
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?
+        {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                self.load(stem, &path)?;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            bail!("no *.hlo.txt artifacts in {} — run `make artifacts`", dir.display());
+        }
+        Ok(n)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute by name; returns the flattened tuple elements.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing '{name}'"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{name}'"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and convert every output to Vec<f32>.
+    pub fn execute_f32(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.execute(name, inputs)?
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// 1-D f32 literal.
+pub fn lit_f32_1d(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// 2-D row-major f32 literal.
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch: {} != {rows}x{cols}", v.len());
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// 2-D row-major i32 literal (token batches).
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch: {} != {rows}x{cols}", v.len());
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Read `artifacts/transformer_init.bin` (little-endian f32).
+pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "truncated f32 file");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = default_artifact_dir();
+        dir.join("logreg_grad.hlo.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_cpu_boots() {
+        let e = Engine::cpu().unwrap();
+        assert!(!e.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_executable_errors() {
+        let e = Engine::cpu().unwrap();
+        assert!(e.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn load_and_execute_logreg_grad_artifact() {
+        let Some(dir) = artifacts() else {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let mut e = Engine::cpu().unwrap();
+        e.load("logreg_grad", &dir.join("logreg_grad.hlo.txt")).unwrap();
+        // B=8, D=512 (the artifact's static shapes).
+        let mut rng = crate::util::Rng::new(1);
+        let x: Vec<f32> = (0..8 * 512).map(|_| rng.gauss_f32()).collect();
+        let y: Vec<f32> = (0..8).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let w: Vec<f32> = (0..512).map(|_| 0.1 * rng.gauss_f32()).collect();
+        let lam = [0.01f32];
+        let out = e
+            .execute_f32(
+                "logreg_grad",
+                &[
+                    lit_f32_2d(&x, 8, 512).unwrap(),
+                    lit_f32_1d(&y),
+                    lit_f32_1d(&w),
+                    lit_f32_1d(&lam),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 512);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn lit_shape_guards() {
+        assert!(lit_f32_2d(&[1.0; 6], 2, 3).is_ok());
+        assert!(lit_f32_2d(&[1.0; 5], 2, 3).is_err());
+        assert!(lit_i32_2d(&[1; 4], 2, 3).is_err());
+    }
+
+    #[test]
+    fn read_f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("tng_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals = [1.5f32, -2.0, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_bin(&p).unwrap(), vals.to_vec());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,6 @@
+//! XLA PJRT runtime: load + execute the AOT artifacts from the L3 hot path.
+
+pub mod engine;
+pub mod xla_objective;
+
+pub use engine::{default_artifact_dir, Engine};

@@ -1,0 +1,115 @@
+//! `Objective` implementation backed by the AOT artifacts: gradients and
+//! losses come from the Pallas/JAX graphs executed through PJRT, so the
+//! full L1→L2→AOT→PJRT→L3 stack runs inside the ordinary driver loop.
+//!
+//! Shapes are static per artifact (B=8, D=512, N=2048 — the paper's §4.2
+//! setting); construction validates the dataset against them. The pure-Rust
+//! `objectives::logreg::LogReg` computes the identical math and the two are
+//! cross-checked in `rust/tests/xla_integration.rs`.
+
+use anyhow::{ensure, Result};
+
+use crate::data::synthetic::Dataset;
+use crate::objectives::Objective;
+use crate::runtime::engine::{lit_f32_1d, lit_f32_2d, Engine};
+use crate::util::Rng;
+
+pub const XLA_BATCH: usize = 8;
+pub const XLA_DIM: usize = 512;
+pub const XLA_N: usize = 2048;
+
+pub struct XlaLogReg {
+    engine: Engine,
+    data: Dataset,
+    pub lambda: f32,
+}
+
+impl XlaLogReg {
+    /// Wrap a dataset; `engine` must have `logreg_grad`, `logreg_full_grad`
+    /// and `logreg_loss` loaded (see [`Engine::load_dir`]).
+    pub fn new(engine: Engine, data: Dataset, lambda: f32) -> Result<Self> {
+        ensure!(data.dim == XLA_DIM, "artifact expects D={XLA_DIM}, got {}", data.dim);
+        ensure!(data.n == XLA_N, "artifact expects N={XLA_N}, got {}", data.n);
+        for name in ["logreg_grad", "logreg_full_grad", "logreg_loss"] {
+            ensure!(engine.has(name), "engine missing artifact '{name}'");
+        }
+        Ok(XlaLogReg { engine, data, lambda })
+    }
+
+    fn run_full(&self, name: &str, w: &[f32], lambda: f32) -> Vec<f32> {
+        let x = lit_f32_2d(&self.data.x, self.data.n, self.data.dim).unwrap();
+        let out = self
+            .engine
+            .execute_f32(
+                name,
+                &[x, lit_f32_1d(&self.data.y), lit_f32_1d(w), lit_f32_1d(&[lambda])],
+            )
+            .expect("artifact execution failed");
+        out.into_iter().next().unwrap()
+    }
+}
+
+impl Objective for XlaLogReg {
+    fn dim(&self) -> usize {
+        XLA_DIM
+    }
+
+    fn n(&self) -> usize {
+        self.data.n
+    }
+
+    fn loss(&self, w: &[f32]) -> f64 {
+        self.run_full("logreg_loss", w, self.lambda)[0] as f64
+    }
+
+    fn full_grad(&self, w: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(&self.run_full("logreg_full_grad", w, self.lambda));
+    }
+
+    fn sample_grad(&self, w: &[f32], i: usize, out: &mut [f32]) {
+        // One sample = a batch with the row repeated (keeps the static
+        // artifact shape). Mean over identical rows equals the row grad.
+        let mut xb = Vec::with_capacity(XLA_BATCH * XLA_DIM);
+        let mut yb = Vec::with_capacity(XLA_BATCH);
+        for _ in 0..XLA_BATCH {
+            xb.extend_from_slice(self.data.row(i));
+            yb.push(self.data.y[i]);
+        }
+        let g = self
+            .engine
+            .execute_f32(
+                "logreg_grad",
+                &[
+                    lit_f32_2d(&xb, XLA_BATCH, XLA_DIM).unwrap(),
+                    lit_f32_1d(&yb),
+                    lit_f32_1d(w),
+                    lit_f32_1d(&[self.lambda]),
+                ],
+            )
+            .expect("artifact execution failed");
+        out.copy_from_slice(&g[0]);
+    }
+
+    fn stoch_grad(&self, w: &[f32], idx: &[usize], _rng: &mut Rng, out: &mut [f32]) {
+        assert_eq!(idx.len(), XLA_BATCH, "artifact batch is static at {XLA_BATCH}");
+        let mut xb = Vec::with_capacity(XLA_BATCH * XLA_DIM);
+        let mut yb = Vec::with_capacity(XLA_BATCH);
+        for &i in idx {
+            xb.extend_from_slice(self.data.row(i));
+            yb.push(self.data.y[i]);
+        }
+        let g = self
+            .engine
+            .execute_f32(
+                "logreg_grad",
+                &[
+                    lit_f32_2d(&xb, XLA_BATCH, XLA_DIM).unwrap(),
+                    lit_f32_1d(&yb),
+                    lit_f32_1d(w),
+                    lit_f32_1d(&[self.lambda]),
+                ],
+            )
+            .expect("artifact execution failed");
+        out.copy_from_slice(&g[0]);
+    }
+}

@@ -1,0 +1,200 @@
+//! The C_nz machinery of Proposition 4.
+//!
+//! `C_nz = E‖g − g̃‖² / E‖g‖²` measures how much a reference normalizes the
+//! gradient; the compression constant of TNG is `C_{q,nz} = C_q·C_nz + 1`.
+//! This module provides:
+//!
+//! * [`cnz_ratio`] — the instantaneous ratio for one (g, g̃) pair;
+//! * [`CnzEstimator`] — a running estimate over the optimization trajectory;
+//! * [`CnzSelector`] — "search for an optimal reference": pick, per round,
+//!   the reference from a pool minimizing the ratio, charging
+//!   `ceil(log2(pool))` bits to signal the winner (§3.1: "The additional
+//!   communication cost for this is to indicate which g̃ is used").
+
+use crate::util::math::{self, RunningStats};
+
+use super::reference::{ReferenceManager, RoundCtx};
+
+/// ‖g − g̃‖² / ‖g‖² (defined as 1.0 when g = 0, the trivial bound).
+pub fn cnz_ratio(g: &[f32], gref: &[f32]) -> f64 {
+    let den = math::norm2_sq(g);
+    if den == 0.0 {
+        return 1.0;
+    }
+    math::dist_sq(g, gref) / den
+}
+
+/// Running C_nz across rounds (numerator and denominator averaged
+/// separately, matching the expectation in Proposition 4).
+#[derive(Debug, Default, Clone)]
+pub struct CnzEstimator {
+    num: RunningStats,
+    den: RunningStats,
+}
+
+impl CnzEstimator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, g: &[f32], gref: &[f32]) {
+        self.num.push(math::dist_sq(g, gref));
+        self.den.push(math::norm2_sq(g));
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.den.count() == 0 || self.den.mean() == 0.0 {
+            1.0
+        } else {
+            self.num.mean() / self.den.mean()
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.num.count()
+    }
+}
+
+/// A pool of reference strategies searched per round (in hindsight).
+pub struct CnzSelector {
+    pub pool: Vec<ReferenceManager>,
+}
+
+impl CnzSelector {
+    pub fn new(pool: Vec<ReferenceManager>) -> Self {
+        assert!(!pool.is_empty());
+        let dim = pool[0].dim();
+        assert!(pool.iter().all(|m| m.dim() == dim), "pool dims must agree");
+        CnzSelector { pool }
+    }
+
+    /// Bits needed to signal the chosen pool index.
+    pub fn signal_bits(&self) -> usize {
+        if self.pool.len() <= 1 {
+            0
+        } else {
+            (usize::BITS - (self.pool.len() - 1).leading_zeros()) as usize
+        }
+    }
+
+    /// Pick the reference minimizing the instantaneous C_nz for `g`.
+    /// Returns (pool index, achieved ratio, signalling bits).
+    pub fn select(&self, g: &[f32]) -> (usize, f64, usize) {
+        let mut best = (0usize, f64::INFINITY);
+        for (i, m) in self.pool.iter().enumerate() {
+            let r = cnz_ratio(g, m.current());
+            if r < best.1 {
+                best = (i, r);
+            }
+        }
+        (best.0, best.1, self.signal_bits())
+    }
+
+    pub fn current(&self, idx: usize) -> &[f32] {
+        self.pool[idx].current()
+    }
+
+    /// Whether any pool member needs a full gradient this round.
+    pub fn needs_full_grad(&self, round: usize) -> bool {
+        self.pool.iter().any(|m| m.needs_full_grad(round))
+    }
+
+    /// Advance every pool member.
+    pub fn end_round(&mut self, ctx: &RoundCtx) {
+        for m in self.pool.iter_mut() {
+            m.end_round(ctx);
+        }
+    }
+
+    /// Total broadcast bits charged across the pool this round.
+    pub fn take_broadcast_bits(&mut self) -> usize {
+        self.pool.iter_mut().map(|m| m.take_broadcast_bits()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tng::reference::ReferenceKind;
+
+    #[test]
+    fn ratio_basic_cases() {
+        assert_eq!(cnz_ratio(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        assert_eq!(cnz_ratio(&[1.0, 0.0], &[0.0, 0.0]), 1.0);
+        assert_eq!(cnz_ratio(&[0.0], &[0.0]), 1.0); // degenerate convention
+        // g̃ = 2g -> ||g - 2g||^2/||g||^2 = 1
+        assert!((cnz_ratio(&[3.0, 4.0], &[6.0, 8.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimator_averages_expectations_separately() {
+        let mut e = CnzEstimator::new();
+        e.observe(&[2.0], &[1.0]); // num 1, den 4
+        e.observe(&[0.0], &[1.0]); // num 1, den 0
+        // E[num]/E[den] = 1 / 2  (NOT mean of ratios, which would be inf)
+        assert!((e.value() - 0.5).abs() < 1e-12);
+        assert_eq!(e.count(), 2);
+    }
+
+    #[test]
+    fn empty_estimator_is_trivial_bound() {
+        assert_eq!(CnzEstimator::new().value(), 1.0);
+    }
+
+    #[test]
+    fn selector_picks_best_reference() {
+        let zeros = ReferenceManager::new(ReferenceKind::Zeros, 2);
+        let mut avg = ReferenceManager::new(ReferenceKind::AvgDecoded { window: 1 }, 2);
+        // Push avg's reference to (1, 1).
+        let w = [0.0f32; 2];
+        avg.end_round(&RoundCtx {
+            round: 0,
+            decoded_avg: &[1.0, 1.0],
+            w_prev: &w,
+            w_next: &w,
+            eta: 0.1,
+            full_grad: None,
+        });
+        let sel = CnzSelector::new(vec![zeros, avg]);
+        // g close to (1,1): avg wins.
+        let (idx, ratio, bits) = sel.select(&[1.1, 0.9]);
+        assert_eq!(idx, 1);
+        assert!(ratio < 0.05);
+        assert_eq!(bits, 1);
+        // g close to zero-vector scale: zeros wins.
+        let (idx, _, _) = sel.select(&[0.01, -0.02]);
+        assert_eq!(idx, 0);
+    }
+
+    #[test]
+    fn signal_bits_log2_pool() {
+        let mk = || ReferenceManager::new(ReferenceKind::Zeros, 1);
+        assert_eq!(CnzSelector::new(vec![mk()]).signal_bits(), 0);
+        assert_eq!(CnzSelector::new(vec![mk(), mk()]).signal_bits(), 1);
+        assert_eq!(CnzSelector::new(vec![mk(), mk(), mk()]).signal_bits(), 2);
+        assert_eq!(CnzSelector::new(vec![mk(), mk(), mk(), mk()]).signal_bits(), 2);
+        assert_eq!(
+            CnzSelector::new((0..5).map(|_| mk()).collect()).signal_bits(),
+            3
+        );
+    }
+
+    #[test]
+    fn selector_end_round_advances_all() {
+        let mut sel = CnzSelector::new(vec![
+            ReferenceManager::new(ReferenceKind::AvgDecoded { window: 4 }, 2),
+            ReferenceManager::new(ReferenceKind::AvgDecoded { window: 1 }, 2),
+        ]);
+        let w = [0.0f32; 2];
+        sel.end_round(&RoundCtx {
+            round: 0,
+            decoded_avg: &[4.0, 4.0],
+            w_prev: &w,
+            w_next: &w,
+            eta: 0.1,
+            full_grad: None,
+        });
+        assert_eq!(sel.current(0), &[4.0, 4.0]);
+        assert_eq!(sel.current(1), &[4.0, 4.0]);
+    }
+}

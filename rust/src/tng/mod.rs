@@ -1,0 +1,13 @@
+//! Trajectory Normalized Gradients — the paper's contribution.
+//!
+//! * [`normalizer`] — compress `g − g̃` (or `g ./ g̃`) instead of `g` (Eq. 2/3)
+//! * [`reference`] — the §3.1 pool of trajectory-based reference vectors
+//! * [`cnz`] — Proposition 4's C_nz measurement and per-round reference search
+
+pub mod cnz;
+pub mod normalizer;
+pub mod reference;
+
+pub use cnz::{cnz_ratio, CnzEstimator, CnzSelector};
+pub use normalizer::{Normalization, Tng};
+pub use reference::{ReferenceKind, ReferenceManager, RoundCtx};

@@ -1,0 +1,242 @@
+//! The paper's central object: compression of the *normalized* gradient.
+//!
+//! Subtractive form (Eq. 2):   r = Q[g − g̃],          v = g̃ + r
+//! Quotient form (Eq. 3):      r = Q[g ./ g̃],         v = g̃ ⊙ r
+//! Combined form:              r = Q[(g − g̃) ./ g̃′],  v = g̃′ ⊙ r + g̃
+//!
+//! The wrapper is codec-agnostic: any unbiased `Q` keeps the TNG estimate
+//! unbiased in the subtractive/combined forms (conditional on g̃ being known
+//! to both ends, which the coordinator guarantees).
+//!
+//! Quotient form caveat (documented in the paper as a log-domain trick):
+//! coordinates where `|g̃_d|` is tiny produce unbounded ratios, so we clamp
+//! to `±clip` and treat `|g̃_d| < eps` as a zero-reference coordinate coded
+//! subtractively-at-zero (i.e. the raw value). Tests pin this behaviour.
+
+use crate::codec::{Codec, Encoded};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Normalization {
+    /// r = Q[g - g̃]; v = g̃ + r (Eq. 2) — the default everywhere.
+    Subtractive,
+    /// r = Q[g ./ g̃]; v = g̃ ⊙ r (Eq. 3).
+    Quotient { eps: f32, clip: f32 },
+    /// r = Q[(g - g̃) ./ g̃']; v = g̃' ⊙ r + g̃ with g̃' = |g̃| + eps.
+    Combined { eps: f32, clip: f32 },
+}
+
+impl Normalization {
+    pub fn quotient() -> Self {
+        Normalization::Quotient { eps: 1e-6, clip: 1e4 }
+    }
+
+    pub fn combined() -> Self {
+        Normalization::Combined { eps: 1e-3, clip: 1e4 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Normalization::Subtractive => "sub",
+            Normalization::Quotient { .. } => "quot",
+            Normalization::Combined { .. } => "comb",
+        }
+    }
+}
+
+/// TNG wrapper around a base codec.
+pub struct Tng<C: Codec> {
+    pub codec: C,
+    pub mode: Normalization,
+}
+
+impl<C: Codec> Tng<C> {
+    pub fn new(codec: C) -> Self {
+        Tng { codec, mode: Normalization::Subtractive }
+    }
+
+    pub fn with_mode(codec: C, mode: Normalization) -> Self {
+        Tng { codec, mode }
+    }
+
+    pub fn name(&self) -> String {
+        format!("tn({})-{}", self.mode.name(), self.codec.name())
+    }
+
+    /// Encode gradient `g` against the shared reference `gref`.
+    pub fn encode(&self, g: &[f32], gref: &[f32], rng: &mut Rng) -> Encoded {
+        assert_eq!(g.len(), gref.len());
+        let normalized = self.normalize(g, gref);
+        self.codec.encode(&normalized, rng)
+    }
+
+    /// Decode a received message back into gradient space.
+    pub fn decode(&self, e: &Encoded, gref: &[f32]) -> Vec<f32> {
+        let mut r = e.decode();
+        self.denormalize_in_place(&mut r, gref);
+        r
+    }
+
+    /// The forward normalization map (exposed for the C_nz estimator).
+    pub fn normalize(&self, g: &[f32], gref: &[f32]) -> Vec<f32> {
+        match self.mode {
+            Normalization::Subtractive => {
+                g.iter().zip(gref).map(|(&x, &r)| x - r).collect()
+            }
+            Normalization::Quotient { eps, clip } => g
+                .iter()
+                .zip(gref)
+                .map(|(&x, &r)| {
+                    if r.abs() < eps {
+                        x // zero-reference coordinate: raw value
+                    } else {
+                        (x / r).clamp(-clip, clip)
+                    }
+                })
+                .collect(),
+            Normalization::Combined { eps, clip } => g
+                .iter()
+                .zip(gref)
+                .map(|(&x, &r)| ((x - r) / (r.abs() + eps)).clamp(-clip, clip))
+                .collect(),
+        }
+    }
+
+    fn denormalize_in_place(&self, r: &mut [f32], gref: &[f32]) {
+        match self.mode {
+            Normalization::Subtractive => {
+                for (ri, &gr) in r.iter_mut().zip(gref) {
+                    *ri += gr;
+                }
+            }
+            Normalization::Quotient { eps, .. } => {
+                for (ri, &gr) in r.iter_mut().zip(gref) {
+                    if gr.abs() >= eps {
+                        *ri *= gr;
+                    }
+                }
+            }
+            Normalization::Combined { eps, .. } => {
+                for (ri, &gr) in r.iter_mut().zip(gref) {
+                    *ri = *ri * (gr.abs() + eps) + gr;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::identity::IdentityCodec;
+    use crate::codec::ternary::TernaryCodec;
+    use crate::util::math;
+
+    fn randv(seed: u64, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn subtractive_identity_roundtrip_is_exact() {
+        let g = randv(1, 128);
+        let gref = randv(2, 128);
+        let tng = Tng::new(IdentityCodec);
+        let mut rng = Rng::new(3);
+        let e = tng.encode(&g, &gref, &mut rng);
+        let v = tng.decode(&e, &gref);
+        for (a, b) in v.iter().zip(&g) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn quotient_identity_roundtrip_exact_when_ref_dense() {
+        let g = randv(4, 64);
+        // Reference bounded away from 0 so no eps/clip path triggers.
+        let gref: Vec<f32> = randv(5, 64).iter().map(|x| x.signum() * (x.abs() + 0.5)).collect();
+        let tng = Tng::with_mode(IdentityCodec, Normalization::quotient());
+        let mut rng = Rng::new(6);
+        let v = tng.decode(&tng.encode(&g, &gref, &mut rng), &gref);
+        for (a, b) in v.iter().zip(&g) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn combined_identity_roundtrip_exact() {
+        let g = randv(7, 64);
+        let gref = randv(8, 64);
+        let tng = Tng::with_mode(IdentityCodec, Normalization::combined());
+        let mut rng = Rng::new(9);
+        let v = tng.decode(&tng.encode(&g, &gref, &mut rng), &gref);
+        for (a, b) in v.iter().zip(&g) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quotient_zero_reference_passes_raw_value() {
+        let g = [3.0f32, 1.0];
+        let gref = [0.0f32, 2.0];
+        let tng = Tng::with_mode(IdentityCodec, Normalization::quotient());
+        let n = tng.normalize(&g, &gref);
+        assert_eq!(n[0], 3.0); // raw
+        assert_eq!(n[1], 0.5); // ratio
+        let mut rng = Rng::new(10);
+        let v = tng.decode(&tng.encode(&g, &gref, &mut rng), &gref);
+        assert!((v[0] - 3.0).abs() < 1e-6 && (v[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn subtractive_tng_unbiased_through_ternary() {
+        let g = randv(11, 64);
+        let gref: Vec<f32> = g.iter().map(|x| x + 0.1).collect();
+        let tng = Tng::new(TernaryCodec);
+        let mut rng = Rng::new(12);
+        let trials = 4000;
+        let mut acc = vec![0.0f64; 64];
+        for _ in 0..trials {
+            let v = tng.decode(&tng.encode(&g, &gref, &mut rng), &gref);
+            for (a, x) in acc.iter_mut().zip(&v) {
+                *a += *x as f64;
+            }
+        }
+        for (a, &x) in acc.iter().zip(&g) {
+            let mean = a / trials as f64;
+            assert!((mean - x as f64).abs() < 0.02, "mean={mean} x={x}");
+        }
+    }
+
+    #[test]
+    fn good_reference_shrinks_compression_mse() {
+        // The headline mechanism: ternary error scales with R^2 = max|v|^2,
+        // and a trajectory-close reference shrinks R dramatically.
+        let g = randv(13, 256);
+        let close: Vec<f32> = g.iter().map(|x| x + 0.05).collect();
+        let zeros = vec![0.0f32; 256];
+        let tng = Tng::new(TernaryCodec);
+        let mse = |gref: &[f32], seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut acc = 0.0;
+            for _ in 0..400 {
+                let v = tng.decode(&tng.encode(&g, gref, &mut rng), gref);
+                let diff: Vec<f32> = v.iter().zip(&g).map(|(a, b)| a - b).collect();
+                acc += math::norm2_sq(&diff);
+            }
+            acc / 400.0
+        };
+        let with_ref = mse(&close, 14);
+        let without = mse(&zeros, 15);
+        assert!(with_ref < 0.01 * without, "with={with_ref} without={without}");
+    }
+
+    #[test]
+    fn mode_names() {
+        assert_eq!(Tng::new(TernaryCodec).name(), "tn(sub)-ternary");
+        assert_eq!(
+            Tng::with_mode(TernaryCodec, Normalization::quotient()).name(),
+            "tn(quot)-ternary"
+        );
+    }
+}

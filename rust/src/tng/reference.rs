@@ -1,0 +1,337 @@
+//! Reference-vector strategies (§3.1) — the "trajectory" part of TNG.
+//!
+//! All strategies are driven by information both the leader and every worker
+//! already share after each synchronized round (the decoded aggregate
+//! `v_t`, the parameter trajectory, the step size), so most references cost
+//! **zero extra communication**. The exceptions are charged explicitly:
+//!
+//! * `MeanScalar` — one f32 per message (the worker-local mean).
+//! * `SvrgAnchor` — a full-gradient broadcast every `update_every` rounds
+//!   (charged at `broadcast_bits_per_elt`, default fp32; Fig 1 uses fp16).
+//! * `Delayed` with `charge_broadcast` — the paper's Fig-1 accounting where
+//!   the reference is explicitly re-broadcast every `update_every` rounds
+//!   in 16-bit precision (1 broadcast = 8 ternary rounds of parity).
+
+use std::collections::VecDeque;
+
+use crate::util::math;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReferenceKind {
+    /// g̃ = 0 — degenerates to the raw codec (the C_nz = 1 trivial case).
+    Zeros,
+    /// g̃ = mean(g)·1 computed per-message by the worker; costs 32 bits.
+    MeanScalar,
+    /// g̃ = decoded aggregate from `tau` rounds ago (delay-tolerant form,
+    /// Agarwal & Duchi). `update_every` snapshots it on a schedule.
+    Delayed { tau: usize, update_every: usize, charge_broadcast: bool },
+    /// g̃ = mean of the last `window` decoded aggregates Σ v(w_{t−τ})/τ_max.
+    AvgDecoded { window: usize },
+    /// SVRG anchor: g̃ = ∇F(w̃), refreshed every `update_every` rounds
+    /// (full gradient supplied by the driver); broadcast charged.
+    SvrgAnchor { update_every: usize },
+    /// g̃ = (w_{t−1} − w_t)/η — inferred from the parameter step at zero
+    /// communication (§4.2's "infer from past parameters" trick).
+    ParamDelta,
+    /// §3.1's delayed-gradient option `g(w_{t−τ})`, realized per worker:
+    /// every `update_every` rounds the worker transmits its gradient at
+    /// `anchor_bits` precision (charged), which becomes *that worker's*
+    /// reference until the next anchor. The regime analysis in
+    /// EXPERIMENTS.md §Regimes shows this is the reference that makes TNG
+    /// decisively win at D≫1: it is noise-free, so C_nz collapses to the
+    /// trajectory drift ‖g_t − g_anchor‖²/‖g_t‖².
+    WorkerAnchor { update_every: usize, anchor_bits: usize },
+}
+
+impl ReferenceKind {
+    pub fn name(&self) -> String {
+        match self {
+            ReferenceKind::Zeros => "zeros".into(),
+            ReferenceKind::MeanScalar => "mean".into(),
+            ReferenceKind::Delayed { tau, update_every, .. } => {
+                format!("delay{tau}every{update_every}")
+            }
+            ReferenceKind::AvgDecoded { window } => format!("avgdec{window}"),
+            ReferenceKind::SvrgAnchor { update_every } => format!("svrg{update_every}"),
+            ReferenceKind::ParamDelta => "pdelta".into(),
+            ReferenceKind::WorkerAnchor { update_every, anchor_bits } => {
+                format!("anchor{update_every}@{anchor_bits}b")
+            }
+        }
+    }
+}
+
+/// Per-round context handed to [`ReferenceManager::end_round`].
+pub struct RoundCtx<'a> {
+    pub round: usize,
+    /// The decoded, averaged gradient v_t the leader applied.
+    pub decoded_avg: &'a [f32],
+    pub w_prev: &'a [f32],
+    pub w_next: &'a [f32],
+    pub eta: f32,
+    /// Full gradient at the new iterate — only consulted (and only required)
+    /// when an `SvrgAnchor` refresh is due; the driver computes it lazily.
+    pub full_grad: Option<&'a [f32]>,
+}
+
+/// Holds the shared reference vector and its update schedule.
+pub struct ReferenceManager {
+    pub kind: ReferenceKind,
+    dim: usize,
+    gref: Vec<f32>,
+    history: VecDeque<Vec<f32>>,
+    round: usize,
+    /// Broadcast bits charged since the last `take_broadcast_bits` call.
+    pending_bits: usize,
+    /// Precision (bits/element) charged for explicit reference broadcasts.
+    pub broadcast_bits_per_elt: usize,
+}
+
+impl ReferenceManager {
+    pub fn new(kind: ReferenceKind, dim: usize) -> Self {
+        ReferenceManager {
+            kind,
+            dim,
+            gref: vec![0.0; dim],
+            history: VecDeque::new(),
+            round: 0,
+            pending_bits: 0,
+            broadcast_bits_per_elt: 32,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The reference every worker/leader uses *this* round.
+    pub fn current(&self) -> &[f32] {
+        &self.gref
+    }
+
+    /// Does the current round need a full gradient (SVRG refresh due)?
+    pub fn needs_full_grad(&self, round: usize) -> bool {
+        matches!(self.kind, ReferenceKind::SvrgAnchor { update_every } if round % update_every == 0)
+    }
+
+    /// Is a per-worker anchor transmission due this round (WorkerAnchor)?
+    /// Returns the charged precision in bits/element if so.
+    pub fn worker_anchor_due(&self, round: usize) -> Option<usize> {
+        match self.kind {
+            ReferenceKind::WorkerAnchor { update_every, anchor_bits }
+                if round % update_every == 0 =>
+            {
+                Some(anchor_bits)
+            }
+            _ => None,
+        }
+    }
+
+    /// Install a worker-anchor gradient as this (per-worker) manager's
+    /// reference. The caller charges `anchor_bits` per element.
+    pub fn set_worker_anchor(&mut self, g: &[f32]) {
+        debug_assert!(matches!(self.kind, ReferenceKind::WorkerAnchor { .. }));
+        self.gref.copy_from_slice(g);
+    }
+
+    /// Worker-side reference adjustment: for `MeanScalar` the worker centers
+    /// its own gradient and sends the mean; returns (scalar, extra bits).
+    pub fn worker_scalar(&self, g: &[f32]) -> Option<(f32, usize)> {
+        match self.kind {
+            ReferenceKind::MeanScalar => Some((math::mean(g), 32)),
+            _ => None,
+        }
+    }
+
+    /// Advance the shared state after a synchronized round.
+    pub fn end_round(&mut self, ctx: &RoundCtx) {
+        self.round = ctx.round + 1;
+        match &self.kind {
+            // WorkerAnchor advances only via set_worker_anchor (per-worker).
+            ReferenceKind::Zeros
+            | ReferenceKind::MeanScalar
+            | ReferenceKind::WorkerAnchor { .. } => {}
+            ReferenceKind::Delayed { tau, update_every, charge_broadcast } => {
+                self.history.push_back(ctx.decoded_avg.to_vec());
+                while self.history.len() > tau.max(&1) + 1 {
+                    self.history.pop_front();
+                }
+                if self.round % update_every == 0 {
+                    if let Some(old) = self.history.front() {
+                        self.gref.copy_from_slice(old);
+                        if *charge_broadcast {
+                            self.pending_bits += self.broadcast_bits_per_elt * self.dim;
+                        }
+                    }
+                }
+            }
+            ReferenceKind::AvgDecoded { window } => {
+                self.history.push_back(ctx.decoded_avg.to_vec());
+                while self.history.len() > *window {
+                    self.history.pop_front();
+                }
+                self.gref.fill(0.0);
+                let n = self.history.len() as f32;
+                for h in &self.history {
+                    math::axpy(1.0 / n, h, &mut self.gref);
+                }
+            }
+            ReferenceKind::SvrgAnchor { update_every } => {
+                if ctx.round % update_every == 0 {
+                    let fg = ctx
+                        .full_grad
+                        .expect("driver must supply full_grad on SVRG refresh rounds");
+                    self.gref.copy_from_slice(fg);
+                    self.pending_bits += self.broadcast_bits_per_elt * self.dim;
+                }
+            }
+            ReferenceKind::ParamDelta => {
+                if ctx.eta > 0.0 {
+                    for ((g, &wp), &wn) in
+                        self.gref.iter_mut().zip(ctx.w_prev).zip(ctx.w_next)
+                    {
+                        *g = (wp - wn) / ctx.eta;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Broadcast bits charged since last taken (the driver adds these to the
+    /// round's communication tally).
+    pub fn take_broadcast_bits(&mut self) -> usize {
+        std::mem::take(&mut self.pending_bits)
+    }
+
+    /// Warm-start the reference (Figures 2–4 initialize it from a full
+    /// gradient, §4.2). The caller charges the broadcast.
+    pub fn set_reference(&mut self, gref: &[f32]) {
+        self.gref.copy_from_slice(gref);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        round: usize,
+        decoded: &'a [f32],
+        w_prev: &'a [f32],
+        w_next: &'a [f32],
+        eta: f32,
+    ) -> RoundCtx<'a> {
+        RoundCtx { round, decoded_avg: decoded, w_prev, w_next, eta, full_grad: None }
+    }
+
+    #[test]
+    fn zeros_never_changes() {
+        let mut m = ReferenceManager::new(ReferenceKind::Zeros, 4);
+        let d = [1.0f32; 4];
+        let w = [0.0f32; 4];
+        m.end_round(&ctx(0, &d, &w, &w, 0.1));
+        assert_eq!(m.current(), &[0.0; 4]);
+        assert_eq!(m.take_broadcast_bits(), 0);
+    }
+
+    #[test]
+    fn mean_scalar_costs_32_bits() {
+        let m = ReferenceManager::new(ReferenceKind::MeanScalar, 4);
+        let (s, bits) = m.worker_scalar(&[1.0, 2.0, 3.0, 6.0]).unwrap();
+        assert_eq!(s, 3.0);
+        assert_eq!(bits, 32);
+        assert!(ReferenceManager::new(ReferenceKind::Zeros, 4)
+            .worker_scalar(&[1.0])
+            .is_none());
+    }
+
+    #[test]
+    fn delayed_picks_old_aggregate_on_schedule() {
+        let mut m = ReferenceManager::new(
+            ReferenceKind::Delayed { tau: 1, update_every: 2, charge_broadcast: false },
+            2,
+        );
+        let w = [0.0f32; 2];
+        m.end_round(&ctx(0, &[1.0, 1.0], &w, &w, 0.1)); // round->1, no update
+        assert_eq!(m.current(), &[0.0, 0.0]);
+        m.end_round(&ctx(1, &[2.0, 2.0], &w, &w, 0.1)); // round->2, update
+        // history = [v0, v1]; tau=1 -> front is v0
+        assert_eq!(m.current(), &[1.0, 1.0]);
+        assert_eq!(m.take_broadcast_bits(), 0); // free when not charged
+    }
+
+    #[test]
+    fn delayed_charged_broadcast_accounts_bits() {
+        let mut m = ReferenceManager::new(
+            ReferenceKind::Delayed { tau: 0, update_every: 1, charge_broadcast: true },
+            8,
+        );
+        m.broadcast_bits_per_elt = 16;
+        let w = [0.0f32; 8];
+        let d = [1.0f32; 8];
+        m.end_round(&ctx(0, &d, &w, &w, 0.1));
+        assert_eq!(m.take_broadcast_bits(), 16 * 8);
+        assert_eq!(m.take_broadcast_bits(), 0, "bits are taken once");
+    }
+
+    #[test]
+    fn avg_decoded_averages_window() {
+        let mut m = ReferenceManager::new(ReferenceKind::AvgDecoded { window: 2 }, 2);
+        let w = [0.0f32; 2];
+        m.end_round(&ctx(0, &[2.0, 0.0], &w, &w, 0.1));
+        assert_eq!(m.current(), &[2.0, 0.0]);
+        m.end_round(&ctx(1, &[0.0, 2.0], &w, &w, 0.1));
+        assert_eq!(m.current(), &[1.0, 1.0]);
+        m.end_round(&ctx(2, &[0.0, 4.0], &w, &w, 0.1));
+        assert_eq!(m.current(), &[0.0, 3.0]); // window slid
+    }
+
+    #[test]
+    fn svrg_anchor_requires_and_uses_full_grad() {
+        let mut m = ReferenceManager::new(ReferenceKind::SvrgAnchor { update_every: 2 }, 2);
+        assert!(m.needs_full_grad(0));
+        assert!(!m.needs_full_grad(1));
+        let w = [0.0f32; 2];
+        let fg = [5.0f32, -5.0];
+        let c = RoundCtx {
+            round: 0,
+            decoded_avg: &[1.0, 1.0],
+            w_prev: &w,
+            w_next: &w,
+            eta: 0.1,
+            full_grad: Some(&fg),
+        };
+        m.end_round(&c);
+        assert_eq!(m.current(), &fg);
+        assert_eq!(m.take_broadcast_bits(), 32 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "full_grad")]
+    fn svrg_refresh_without_full_grad_panics() {
+        let mut m = ReferenceManager::new(ReferenceKind::SvrgAnchor { update_every: 1 }, 1);
+        let w = [0.0f32; 1];
+        m.end_round(&ctx(0, &[1.0], &w, &w, 0.1));
+    }
+
+    #[test]
+    fn param_delta_recovers_applied_direction() {
+        let mut m = ReferenceManager::new(ReferenceKind::ParamDelta, 2);
+        let w_prev = [1.0f32, 2.0];
+        let w_next = [0.9f32, 2.2];
+        m.end_round(&ctx(0, &[0.0, 0.0], &w_prev, &w_next, 0.1));
+        // (w_prev - w_next)/eta = (0.1, -0.2)/0.1 = (1, -2)
+        let g = m.current();
+        assert!((g[0] - 1.0).abs() < 1e-5 && (g[1] + 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(ReferenceKind::Zeros.name(), "zeros");
+        assert_eq!(
+            ReferenceKind::Delayed { tau: 2, update_every: 16, charge_broadcast: true }.name(),
+            "delay2every16"
+        );
+        assert_eq!(ReferenceKind::AvgDecoded { window: 4 }.name(), "avgdec4");
+    }
+}

@@ -1,0 +1,124 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 / throughput reporting.
+//! All `cargo bench` targets (`rust/benches/*.rs`, `harness = false`) use
+//! this; output format is one line per benchmark:
+//!
+//! `bench <name>  iters=N  mean=…  p50=…  p95=…  [thrpt=… GB/s]`
+
+pub use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters={:<7} mean={:<9} p50={:<9} p95={:<9} min={}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+        );
+    }
+
+    /// Report with bytes-processed-per-iteration throughput.
+    pub fn report_throughput(&self, bytes_per_iter: usize) {
+        let gbs = bytes_per_iter as f64 / self.mean.as_secs_f64() / 1e9;
+        println!(
+            "bench {:<44} iters={:<7} mean={:<9} p50={:<9} p95={:<9} thrpt={gbs:.2}GB/s",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+        );
+    }
+}
+
+/// Run `f` with ~`budget` of measurement time after warmup; returns stats.
+/// `f` should return something to black-box so work is not optimized away.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup: find a rough per-iter cost, spend ~10% of budget.
+    let warm_deadline = Instant::now() + budget.mul_div(1, 10);
+    let mut warm_iters = 0u64;
+    while Instant::now() < warm_deadline || warm_iters < 3 {
+        black_box(f());
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    // Measure in batches so timer overhead stays < ~1%.
+    let mut samples: Vec<Duration> = Vec::new();
+    let deadline = Instant::now() + budget;
+    let mut total_iters = 0u64;
+    while Instant::now() < deadline || samples.is_empty() {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+        total_iters += 1;
+        if total_iters > 5_000_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / samples.len() as u32;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean,
+        p50: p(0.5),
+        p95: p(0.95),
+        min: samples[0],
+    }
+}
+
+trait DurMulDiv {
+    fn mul_div(self, num: u32, den: u32) -> Duration;
+}
+
+impl DurMulDiv for Duration {
+    fn mul_div(self, num: u32, den: u32) -> Duration {
+        self * num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let r = bench("noop", Duration::from_millis(20), || 1 + 1);
+        assert!(r.iters >= 1);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        r.report();
+        r.report_throughput(8);
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny CSV writer for experiment traces (`results/*.csv`).
+//!
+//! Quotes fields only when needed; floats are written with enough digits to
+//! round-trip. The figure harnesses and benches emit all series through
+//! this so downstream plotting is uniform.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl CsvWriter {
+    /// Create (parent dirs included) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let file =
+            File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut w = CsvWriter { out: BufWriter::new(file), cols: header.len() };
+        w.write_row_str(header)?;
+        Ok(w)
+    }
+
+    pub fn write_row_str(&mut self, fields: &[&str]) -> Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        let line: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.out, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    /// Mixed-type row: anything Display.
+    pub fn write_row(&mut self, fields: &[&dyn std::fmt::Display]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.write_row_str(&refs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("tng_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.write_row(&[&1.5f64, &"x,y"]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1.5,\"x,y\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let dir = std::env::temp_dir().join("tng_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.write_row_str(&["only-one"]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn escapes_quotes() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(escape("a,b"), "\"a,b\"");
+    }
+}

@@ -1,0 +1,267 @@
+//! Dense vector math over `&[f32]` — the L3 hot-path primitives.
+//!
+//! Everything is written as straight-line slice loops; LLVM auto-vectorizes
+//! these cleanly (checked in the perf pass, see EXPERIMENTS.md §Perf).
+
+/// Dot product in f64 accumulation (stability for D up to millions).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc += *x as f64 * *y as f64;
+    }
+    acc
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm2_sq(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm2(a: &[f32]) -> f64 {
+    norm2_sq(a).sqrt()
+}
+
+/// max_i |a_i| (0 for empty).
+#[inline]
+pub fn abs_max(a: &[f32]) -> f32 {
+    a.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Sum of |a_i| in f64.
+#[inline]
+pub fn abs_sum(a: &[f32]) -> f64 {
+    a.iter().map(|&x| x.abs() as f64).sum()
+}
+
+/// Arithmetic mean of the elements.
+#[inline]
+pub fn mean(a: &[f32]) -> f32 {
+    if a.is_empty() {
+        0.0
+    } else {
+        (a.iter().map(|&x| x as f64).sum::<f64>() / a.len() as f64) as f32
+    }
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = x (copy)
+#[inline]
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// a *= s
+#[inline]
+pub fn scale(a: &mut [f32], s: f32) {
+    for x in a.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && b.len() == out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// out = a + b
+#[inline]
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && b.len() == out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// ||a - b||^2
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Numerically-stable log(1 + exp(x)).
+#[inline]
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Logistic sigmoid, stable in both tails.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Online mean/variance (Welford). Used by metrics and the C_nz estimator.
+#[derive(Debug, Clone, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        RunningStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator); 0 for n < 2.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(abs_max(&[-7.0, 2.0, 5.5]), 7.0);
+        assert_eq!(abs_max(&[]), 0.0);
+        assert_eq!(abs_sum(&[-1.0, 2.0, -3.0]), 6.0);
+    }
+
+    #[test]
+    fn mean_empty_and_values() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn axpy_and_sub() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        let mut out = [0.0; 2];
+        sub(&y, &x, &mut out);
+        assert_eq!(out, [11.0, 22.0]);
+        add(&x, &x, &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn dist_sq_matches_sub_norm() {
+        let a = [1.0f32, -2.0, 3.0];
+        let b = [0.5f32, 1.0, -1.0];
+        let mut d = [0.0f32; 3];
+        sub(&a, &b, &mut d);
+        assert!((dist_sq(&a, &b) - norm2_sq(&d)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn stable_log1p_exp() {
+        assert!((log1p_exp(0.0) - (2.0f64).ln()).abs() < 1e-12);
+        // Large positive: log(1+e^x) ~ x
+        assert!((log1p_exp(800.0) - 800.0).abs() < 1e-9);
+        // Large negative: ~ 0, no underflow panic
+        assert!(log1p_exp(-800.0) >= 0.0);
+    }
+
+    #[test]
+    fn stable_sigmoid() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(800.0) <= 1.0 && sigmoid(800.0) > 0.999);
+        assert!(sigmoid(-800.0) >= 0.0 && sigmoid(-800.0) < 1e-9);
+        // sigmoid(-x) = 1 - sigmoid(x)
+        assert!((sigmoid(-1.3) + sigmoid(1.3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut st = RunningStats::new();
+        for &x in &xs {
+            st.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((st.mean() - mean).abs() < 1e-12);
+        assert!((st.var() - var).abs() < 1e-12);
+        assert_eq!(st.min(), 1.0);
+        assert_eq!(st.max(), 16.0);
+        assert_eq!(st.count(), 5);
+    }
+
+    #[test]
+    fn welford_degenerate() {
+        let mut st = RunningStats::new();
+        assert_eq!(st.var(), 0.0);
+        st.push(3.0);
+        assert_eq!(st.var(), 0.0);
+        assert_eq!(st.mean(), 3.0);
+    }
+}

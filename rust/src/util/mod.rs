@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, vector math, logging, CSV traces, and the bench harness.
+
+pub mod bench;
+pub mod csv;
+pub mod logger;
+pub mod math;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,285 @@
+//! Deterministic PRNG built from scratch (the `rand` crate is not available
+//! in the offline registry — see DESIGN.md §substitutions).
+//!
+//! `Rng` is xoshiro256** (Blackman/Vigna) seeded through SplitMix64, with a
+//! cached Box–Muller Gaussian. Every stochastic component in the library
+//! (codecs, data generation, noise, sampling) takes `&mut Rng`, so whole
+//! experiment sweeps are reproducible from a single seed and worker streams
+//! can be split deterministically via [`Rng::split`].
+
+/// xoshiro256** PRNG with convenience samplers.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the last Box–Muller draw.
+    spare_gauss: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (any u64, including 0, yields a good state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_gauss: None }
+    }
+
+    /// Derive an independent stream (worker `i` gets `split(i)`).
+    pub fn split(&self, stream: u64) -> Self {
+        // Mix the stream id through SplitMix64 against a snapshot of state.
+        let mut sm = self.s[0] ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_gauss: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) with 24 random bits (matches f32 resolution).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (Lemire's rejection-free-ish method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps the modulo bias below 2^-64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (second value cached).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(g) = self.spare_gauss.take() {
+            return g;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_gauss = Some(r * s);
+            return r * c;
+        }
+    }
+
+    #[inline]
+    pub fn gauss_f32(&mut self) -> f32 {
+        self.gauss() as f32
+    }
+
+    /// Fill `out` with i.i.d. N(0, sigma^2).
+    pub fn fill_gauss(&mut self, out: &mut [f32], sigma: f32) {
+        for o in out.iter_mut() {
+            *o = sigma * self.gauss_f32();
+        }
+    }
+
+    /// Fill `out` with i.i.d. U[0,1).
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for o in out.iter_mut() {
+            *o = self.f32();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k << n assumed; partial
+    /// Fisher–Yates on an index pool for exactness).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Partial Fisher–Yates over a scratch pool.
+        let mut pool: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            pool.swap(i, j);
+        }
+        pool.truncate(k);
+        pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_deterministic() {
+        let root = Rng::new(7);
+        let mut a1 = root.split(0);
+        let mut a2 = root.split(0);
+        let mut b = root.split(1);
+        assert_eq!(a1.next_u64(), a2.next_u64());
+        assert_ne!(a1.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.f64();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let (mut s, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gauss();
+            s += x;
+            s2 += x * x;
+            s3 += x * x * x;
+        }
+        assert!((s / n as f64).abs() < 0.01);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.02);
+        assert!((s3 / n as f64).abs() < 0.05); // symmetry
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(17);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let i = r.below(7);
+            assert!(i < 7);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::new(19);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Rng::new(23);
+        for _ in 0..50 {
+            let idx = r.sample_indices(100, 10);
+            assert_eq!(idx.len(), 10);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 10);
+            assert!(idx.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn sample_indices_full_range() {
+        let mut r = Rng::new(29);
+        let mut idx = r.sample_indices(5, 5);
+        idx.sort_unstable();
+        assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(31);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,230 @@
+//! Convergence-theory integration tests: Theorem 7's rate, Lemma 3's
+//! variance structure, Proposition 2's optimality, and protocol-level
+//! guarantees across runtimes.
+
+use tng::codec::error_feedback::ErrorFeedback;
+use tng::codec::signsgd::SignCodec;
+use tng::codec::ternary::TernaryCodec;
+use tng::codec::Codec;
+use tng::coordinator::{driver, parallel, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::objectives::logreg::LogReg;
+use tng::objectives::quadratic::Quadratic;
+use tng::objectives::Objective;
+use tng::optim::{EstimatorKind, StepSchedule};
+use tng::tng::ReferenceKind;
+use tng::util::{math, Rng};
+
+#[test]
+fn theorem7_rate_on_strongly_convex_quadratic() {
+    // E||w_t - w*||^2 = O(1/t) under the Theorem-7 schedule with
+    // compressed TNG gradients. Check the suboptimality roughly halves
+    // when t doubles (averaged over seeds to tame noise).
+    let run_to = |rounds: usize, seed: u64| {
+        let mut rng = Rng::new(seed);
+        let q = Quadratic::conditioned(16, 4.0, 0.3, &mut rng);
+        let cfg = DriverConfig {
+            seed,
+            rounds,
+            workers: 4,
+            schedule: StepSchedule::Theorem7 {
+                alpha: 4.0,
+                lambda: q.strong_convexity(),
+                smoothness: q.smoothness(),
+                c_qnz: 2.0,
+            },
+            references: vec![ReferenceKind::AvgDecoded { window: 4 }],
+            record_every: rounds,
+            f_star: 0.0,
+            ..Default::default()
+        };
+        driver::run(&q, &TernaryCodec, "thm7", &cfg).final_subopt()
+    };
+    let mut early = 0.0;
+    let mut late = 0.0;
+    for seed in 0..6 {
+        early += run_to(400, seed);
+        late += run_to(1600, seed);
+    }
+    // 4x rounds should cut suboptimality by ~4 (allow looseness: >2).
+    assert!(
+        late < early / 2.0,
+        "O(1/t): subopt(1600)={late} !<< subopt(400)={early}"
+    );
+}
+
+#[test]
+fn lemma3_variance_decays_with_suboptimality() {
+    // E||g(w)||^2 <= 4L(F(w)-F*) + 2 sigma^2: gradient second moment must
+    // shrink as the iterate approaches the optimum.
+    let ds = generate(&SkewConfig { n: 256, dim: 32, seed: 9, ..Default::default() });
+    let obj = LogReg::new(ds, 0.05);
+    let (w_star, _) = obj.solve_optimum(400);
+    let mut rng = Rng::new(10);
+    let second_moment = |w: &[f32], rng: &mut Rng| {
+        let mut acc = 0.0;
+        let mut g = vec![0.0f32; 32];
+        for _ in 0..500 {
+            let idx = rng.sample_indices(256, 8);
+            obj.stoch_grad(w, &idx, rng, &mut g);
+            acc += math::norm2_sq(&g);
+        }
+        acc / 500.0
+    };
+    let far: Vec<f32> = (0..32).map(|_| rng.gauss_f32() * 2.0).collect();
+    let m_far = second_moment(&far, &mut rng);
+    let m_star = second_moment(&w_star, &mut rng);
+    assert!(m_star < 0.5 * m_far, "far={m_far} star={m_star}");
+}
+
+#[test]
+fn proposition2_magnitude_proportional_sampling_is_variance_optimal() {
+    // Among unbiased ternary schemes t_d in {0, +-1} * (|v_d|/p_d) with
+    // budget sum(p) fixed, p ∝ |v| minimizes the variance. Compare against
+    // a uniform-probability scheme with the same expected nnz.
+    let mut rng = Rng::new(11);
+    let v: Vec<f32> = (0..128).map(|_| rng.gauss_f32()).collect();
+    let r = math::abs_max(&v);
+    let p_prop: Vec<f64> = v.iter().map(|&x| (x.abs() / r) as f64).collect();
+    let budget: f64 = p_prop.iter().sum();
+    let p_unif = vec![budget / 128.0; 128];
+
+    let variance = |p: &[f64], rng: &mut Rng| {
+        let mut acc = 0.0;
+        for _ in 0..4000 {
+            let mut err = 0.0f64;
+            for (d, &x) in v.iter().enumerate() {
+                let dec = if p[d] > 0.0 && rng.f64() < p[d] {
+                    x as f64 / p[d] // unbiased reweighting
+                } else {
+                    0.0
+                };
+                err += (dec - x as f64).powi(2);
+            }
+            acc += err;
+        }
+        acc / 4000.0
+    };
+    let var_prop = variance(&p_prop, &mut rng);
+    let var_unif = variance(&p_unif, &mut rng);
+    assert!(var_prop < var_unif, "prop={var_prop} unif={var_unif}");
+}
+
+#[test]
+fn error_feedback_makes_biased_sign_converge() {
+    // Raw sign coding is biased and stalls on a quadratic; with the EF
+    // wrapper the accumulated residual restores convergence.
+    let mut rng = Rng::new(12);
+    let q = Quadratic::conditioned(32, 10.0, 0.0, &mut rng);
+    let eta = 0.02 / q.smoothness();
+    let run = |ef: bool, rng: &mut Rng| {
+        let mut w: Vec<f32> = (0..32).map(|_| rng.gauss_f32()).collect();
+        let mut wrap = ErrorFeedback::new(SignCodec, 32);
+        let mut g = vec![0.0f32; 32];
+        for _ in 0..6000 {
+            q.full_grad(&w, &mut g);
+            let dec = if ef {
+                wrap.encode(&g, rng).decode()
+            } else {
+                SignCodec.encode(&g, rng).decode()
+            };
+            math::axpy(-eta, &dec, &mut w);
+        }
+        q.loss(&w)
+    };
+    let with_ef = run(true, &mut rng);
+    let without = run(false, &mut rng);
+    assert!(
+        with_ef < 0.2 * without + 1e-10,
+        "ef={with_ef} raw={without}"
+    );
+}
+
+#[test]
+fn driver_and_threaded_agree_across_configs() {
+    let ds = generate(&SkewConfig { n: 96, dim: 24, seed: 13, ..Default::default() });
+    let obj = LogReg::new(ds, 0.03);
+    for (est, lbfgs, refs) in [
+        (EstimatorKind::Sgd, None, vec![ReferenceKind::Zeros]),
+        (
+            EstimatorKind::Sgd,
+            Some(4),
+            vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 2 }],
+        ),
+        (
+            EstimatorKind::Svrg { anchor_every: 8 },
+            None,
+            vec![ReferenceKind::AvgDecoded { window: 1 }],
+        ),
+        (EstimatorKind::FullBatch, None, vec![ReferenceKind::ParamDelta]),
+    ] {
+        let cfg = DriverConfig {
+            rounds: 25,
+            workers: 3,
+            estimator: est,
+            lbfgs_memory: lbfgs,
+            schedule: StepSchedule::Const(0.2),
+            references: refs,
+            record_every: 25,
+            ..Default::default()
+        };
+        let seq = driver::run(&obj, &TernaryCodec, "seq", &cfg);
+        let par = parallel::run(&obj, &TernaryCodec, "par", &cfg).unwrap();
+        assert_eq!(
+            seq.final_w, par.final_w,
+            "config {est:?}/{lbfgs:?} diverged between runtimes"
+        );
+    }
+}
+
+#[test]
+fn quotient_normalization_converges_too() {
+    // Eq. (3)'s log-space/quotient form must remain usable end to end.
+    let ds = generate(&SkewConfig { n: 128, dim: 32, seed: 14, ..Default::default() });
+    let obj = LogReg::new(ds, 0.05);
+    let (_, f_star) = obj.solve_optimum(300);
+    let cfg = DriverConfig {
+        rounds: 400,
+        estimator: EstimatorKind::FullBatch,
+        schedule: StepSchedule::Const(0.5),
+        mode: tng::tng::Normalization::quotient(),
+        references: vec![ReferenceKind::WorkerAnchor { update_every: 16, anchor_bits: 32 }],
+        record_every: 100,
+        f_star,
+        ..Default::default()
+    };
+    let tr = driver::run(&obj, &TernaryCodec, "quot", &cfg);
+    assert!(tr.final_subopt() < 0.1, "quotient TNG failed: {}", tr.final_subopt());
+}
+
+#[test]
+fn biased_codecs_flagged_and_unbiased_verified_statistically() {
+    let mut rng = Rng::new(15);
+    let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
+    let codecs: Vec<Box<dyn Codec>> = vec![
+        Box::new(TernaryCodec),
+        Box::new(tng::codec::chunked::ChunkedTernaryCodec::new(16)),
+        Box::new(tng::codec::qsgd::QsgdCodec::new(4)),
+        Box::new(tng::codec::sparse::SparseCodec::new(0.3)),
+    ];
+    for c in &codecs {
+        assert!(c.is_unbiased(), "{}", c.name());
+        let mut acc = vec![0.0f64; 64];
+        let trials = 3000;
+        for _ in 0..trials {
+            for (a, x) in acc.iter_mut().zip(c.encode(&v, &mut rng).decode()) {
+                *a += x as f64;
+            }
+        }
+        for (d, (a, &x)) in acc.iter().zip(&v).enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.25,
+                "{} coord {d}: {mean} vs {x}",
+                c.name()
+            );
+        }
+    }
+    assert!(!SignCodec.is_unbiased());
+    assert!(!tng::codec::topk::TopKCodec::new(4).is_unbiased());
+}

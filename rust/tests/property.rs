@@ -1,0 +1,190 @@
+//! Randomized property tests (proptest is unavailable offline; the harness
+//! is a seeded-case loop — failures print the seed for exact replay).
+//!
+//! Invariants, per codec and across the protocol stack:
+//!   * decode(encode(v)) has the right dim and finite values;
+//!   * wire roundtrip is the identity on Encoded;
+//!   * reconstruction error respects each codec's bound;
+//!   * protocol Msg roundtrip is the identity;
+//!   * TNG normalize/denormalize is the identity for the exact codec;
+//!   * bit accounting is monotone in nnz and >= the entropy bound's floor.
+
+use tng::codec::{
+    chunked::ChunkedTernaryCodec, identity::IdentityCodec, qsgd::QsgdCodec,
+    signsgd::SignCodec, sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec,
+    wire, Codec,
+};
+use tng::coordinator::protocol::Msg;
+use tng::tng::{Normalization, Tng};
+use tng::util::{math, Rng};
+
+const CASES: usize = 60;
+
+fn arb_vec(rng: &mut Rng) -> Vec<f32> {
+    let d = 1 + rng.below(700);
+    let style = rng.below(4);
+    (0..d)
+        .map(|_| match style {
+            0 => rng.gauss_f32(),
+            1 => rng.gauss_f32() * 1e4,            // large scale
+            2 => rng.gauss_f32() * 1e-6,           // tiny scale
+            _ => {
+                // sparse/heavy-tailed
+                if rng.bernoulli(0.1) {
+                    rng.gauss_f32() * 100.0
+                } else {
+                    0.0
+                }
+            }
+        })
+        .collect()
+}
+
+fn all_codecs(rng: &mut Rng, d: usize) -> Vec<Box<dyn Codec>> {
+    vec![
+        Box::new(TernaryCodec),
+        Box::new(ChunkedTernaryCodec::new(1 + rng.below(d.max(2)))),
+        Box::new(QsgdCodec::new(1 + rng.below(100) as u32)),
+        Box::new(SparseCodec::new(0.05 + 0.9 * rng.f64())),
+        Box::new(SignCodec),
+        Box::new(TopKCodec::new(1 + rng.below(d))),
+        Box::new(IdentityCodec),
+    ]
+}
+
+#[test]
+fn prop_decode_shape_and_finiteness() {
+    let mut rng = Rng::new(0xFACE);
+    for case in 0..CASES {
+        let v = arb_vec(&mut rng);
+        for c in all_codecs(&mut rng, v.len()) {
+            let e = c.encode(&v, &mut rng);
+            assert_eq!(e.dim, v.len(), "case {case} codec {}", c.name());
+            let d = e.decode();
+            assert_eq!(d.len(), v.len());
+            assert!(
+                d.iter().all(|x| x.is_finite()),
+                "case {case} codec {} produced non-finite",
+                c.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_identity() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let v = arb_vec(&mut rng);
+        for c in all_codecs(&mut rng, v.len()) {
+            let e = c.encode(&v, &mut rng);
+            let back = wire::from_bytes(&wire::to_bytes(&e))
+                .unwrap_or_else(|err| panic!("case {case} {}: {err}", c.name()));
+            assert_eq!(back, e, "case {case} codec {}", c.name());
+        }
+    }
+}
+
+#[test]
+fn prop_reconstruction_error_bounds() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..CASES {
+        let v = arb_vec(&mut rng);
+        // Ternary: per-coordinate error <= R.
+        let e = TernaryCodec.encode(&v, &mut rng);
+        let r = math::abs_max(&v);
+        for (d, (&x, y)) in v.iter().zip(e.decode()).enumerate() {
+            assert!(
+                (x - y).abs() <= r + r * 1e-5,
+                "case {case} ternary coord {d}: |{x}-{y}| > R={r}"
+            );
+        }
+        // Identity: exact.
+        let e = IdentityCodec.encode(&v, &mut rng);
+        assert_eq!(e.decode(), v);
+        // TopK: decoded coords are either exact or zero.
+        let e = TopKCodec::new(1 + rng.below(v.len())).encode(&v, &mut rng);
+        for (&x, y) in v.iter().zip(e.decode()) {
+            assert!(y == 0.0 || y == x, "case {case} topk: {y} vs {x}");
+        }
+    }
+}
+
+#[test]
+fn prop_protocol_msg_roundtrip() {
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..CASES {
+        let v = arb_vec(&mut rng);
+        let enc = TernaryCodec.encode(&v, &mut rng);
+        let msgs = vec![
+            Msg::Grad {
+                worker: rng.below(1 << 16) as u16,
+                round: rng.next_u32(),
+                enc,
+                scalar: rng.gauss_f32(),
+                ref_idx: rng.below(256) as u8,
+            },
+            Msg::AnchorGrad { worker: 1, round: 2, grad: v.clone() },
+            Msg::Aggregate { round: rng.next_u32(), v: v.clone(), eta: rng.f32() },
+            Msg::AnchorMu { round: 0, mu: v },
+            Msg::Stop { round: rng.next_u32() },
+        ];
+        for m in msgs {
+            let back = Msg::from_bytes(&m.to_bytes()).unwrap();
+            assert_eq!(back, m, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_tng_normalize_denormalize_identity() {
+    let mut rng = Rng::new(0xA11E);
+    for case in 0..CASES {
+        let g = arb_vec(&mut rng);
+        let gref: Vec<f32> = g.iter().map(|x| x + 0.5 * rng.gauss_f32()).collect();
+        for mode in [Normalization::Subtractive, Normalization::combined()] {
+            let tng = Tng::with_mode(IdentityCodec, mode);
+            let v = tng.decode(&tng.encode(&g, &gref, &mut rng), &gref);
+            for (d, (&a, &b)) in v.iter().zip(&g).enumerate() {
+                let tol = 1e-3 * (1.0 + a.abs().max(b.abs()));
+                assert!(
+                    (a - b).abs() <= tol,
+                    "case {case} mode {} coord {d}: {a} vs {b}",
+                    mode.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bits_accounting_sane() {
+    let mut rng = Rng::new(0x1B17);
+    for case in 0..CASES {
+        let v = arb_vec(&mut rng);
+        for c in all_codecs(&mut rng, v.len()) {
+            let e = c.encode(&v, &mut rng);
+            let bits = e.bits();
+            assert!(bits <= e.bits_dense(), "case {case} {}", c.name());
+            assert!(bits <= e.bits_sparse(), "case {case} {}", c.name());
+            assert!(bits > 0 || e.dim == 0, "case {case} {}", c.name());
+            // deflate is a real coder: nonzero and finite.
+            assert!(e.bits_deflate() > 0);
+        }
+    }
+}
+
+#[test]
+fn prop_rng_split_streams_never_collide_early() {
+    // Worker streams from one root must differ pairwise in their first
+    // draws (a weak but practically-sufficient independence check).
+    let root = Rng::new(0x5EED);
+    for a in 0..20u64 {
+        for b in (a + 1)..20u64 {
+            let (mut ra, mut rb) = (root.split(a), root.split(b));
+            let fa: Vec<u64> = (0..4).map(|_| ra.next_u64()).collect();
+            let fb: Vec<u64> = (0..4).map(|_| rb.next_u64()).collect();
+            assert_ne!(fa, fb, "streams {a} and {b} collide");
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Cross-layer integration: the AOT artifacts (JAX/Pallas lowered to HLO
+//! text, executed through PJRT) must agree with the pure-Rust L3
+//! implementations of the same math, and compose inside the coordinator.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::objectives::logreg::LogReg;
+use tng::objectives::Objective;
+use tng::runtime::engine::{lit_f32_1d, lit_f32_2d, Engine};
+use tng::runtime::xla_objective::{XlaLogReg, XLA_DIM, XLA_N};
+use tng::util::{math, Rng};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = tng::runtime::default_artifact_dir();
+    if dir.join("logreg_grad.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn paper_dataset() -> tng::data::synthetic::Dataset {
+    generate(&SkewConfig { n: XLA_N, dim: XLA_DIM, c_sk: 0.25, c_th: 0.6, seed: 3 })
+}
+
+#[test]
+fn xla_logreg_grad_matches_rust_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load("logreg_grad", &dir.join("logreg_grad.hlo.txt")).unwrap();
+
+    let ds = paper_dataset();
+    let rust_obj = LogReg::new(ds.clone(), 0.01);
+    let mut rng = Rng::new(5);
+    let w: Vec<f32> = (0..XLA_DIM).map(|_| 0.3 * rng.gauss_f32()).collect();
+
+    // One minibatch through both paths.
+    let idx: Vec<usize> = (0..8).map(|i| i * 37 % XLA_N).collect();
+    let mut rust_g = vec![0.0f32; XLA_DIM];
+    rust_obj.stoch_grad(&w, &idx, &mut rng, &mut rust_g);
+
+    let mut xb = Vec::new();
+    let mut yb = Vec::new();
+    for &i in &idx {
+        xb.extend_from_slice(ds.row(i));
+        yb.push(ds.y[i]);
+    }
+    let out = engine
+        .execute_f32(
+            "logreg_grad",
+            &[
+                lit_f32_2d(&xb, 8, XLA_DIM).unwrap(),
+                lit_f32_1d(&yb),
+                lit_f32_1d(&w),
+                lit_f32_1d(&[0.01]),
+            ],
+        )
+        .unwrap();
+    let xla_g = &out[0];
+    let rel = math::dist_sq(xla_g, &rust_g).sqrt() / (math::norm2(&rust_g) + 1e-12);
+    assert!(rel < 1e-4, "XLA and Rust gradients diverge: rel={rel}");
+}
+
+#[test]
+fn xla_full_grad_and_loss_match_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_dir(&dir).unwrap();
+    let ds = paper_dataset();
+    let rust_obj = LogReg::new(ds.clone(), 0.02);
+    let xla_obj = XlaLogReg::new(engine, ds, 0.02).unwrap();
+
+    let mut rng = Rng::new(6);
+    let w: Vec<f32> = (0..XLA_DIM).map(|_| 0.2 * rng.gauss_f32()).collect();
+
+    let rust_loss = rust_obj.loss(&w);
+    let xla_loss = xla_obj.loss(&w);
+    assert!(
+        (rust_loss - xla_loss).abs() < 1e-4 * (1.0 + rust_loss.abs()),
+        "loss mismatch: rust={rust_loss} xla={xla_loss}"
+    );
+
+    let mut rust_g = vec![0.0f32; XLA_DIM];
+    let mut xla_g = vec![0.0f32; XLA_DIM];
+    rust_obj.full_grad(&w, &mut rust_g);
+    xla_obj.full_grad(&w, &mut xla_g);
+    let rel = math::dist_sq(&xla_g, &rust_g).sqrt() / (math::norm2(&rust_g) + 1e-12);
+    assert!(rel < 1e-4, "full grad mismatch: rel={rel}");
+}
+
+#[test]
+fn xla_tng_encode_decode_semantics() {
+    // The Pallas encode kernel (through PJRT) must implement Algorithm 1:
+    // outputs ternary in {-1,0,1}*, R = max|g-gref|, signs correct, exact
+    // roundtrip invariants — and must agree with the Rust codec's
+    // distribution (checked via the shared uniform input).
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load("tng_encode", &dir.join("tng_encode.hlo.txt")).unwrap();
+    engine.load("tng_decode", &dir.join("tng_decode.hlo.txt")).unwrap();
+
+    let mut rng = Rng::new(7);
+    let g: Vec<f32> = (0..512).map(|_| rng.gauss_f32()).collect();
+    let gref: Vec<f32> = g.iter().map(|x| x + 0.1 * rng.gauss_f32()).collect();
+    let mut u = vec![0.0f32; 512];
+    rng.fill_uniform(&mut u);
+
+    let out = engine
+        .execute_f32("tng_encode", &[lit_f32_1d(&g), lit_f32_1d(&gref), lit_f32_1d(&u)])
+        .unwrap();
+    let (t, r) = (&out[0], out[1][0]);
+
+    // R = max |g - gref|
+    let v: Vec<f32> = g.iter().zip(&gref).map(|(a, b)| a - b).collect();
+    assert!((r - math::abs_max(&v)).abs() < 1e-6 * (1.0 + r.abs()));
+    // codes ternary with correct signs, and the coding rule u < |v|/R
+    for i in 0..512 {
+        assert!(t[i] == 0.0 || t[i] == 1.0 || t[i] == -1.0);
+        let p = v[i].abs() / r;
+        let expect = if u[i] < p { v[i].signum() } else { 0.0 };
+        assert_eq!(t[i], expect, "coord {i}: u={} p={p}", u[i]);
+    }
+
+    // decode(t, R, gref) == gref + R*t
+    let dec = engine
+        .execute_f32("tng_decode", &[lit_f32_1d(t), lit_f32_1d(&[r]), lit_f32_1d(&gref)])
+        .unwrap();
+    for i in 0..512 {
+        let expect = gref[i] + r * t[i];
+        assert!((dec[0][i] - expect).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn xla_roundtrip_matches_composed_encode_decode() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_dir(&dir).unwrap();
+    let mut rng = Rng::new(8);
+    let g: Vec<f32> = (0..512).map(|_| rng.gauss_f32()).collect();
+    let gref: Vec<f32> = g.iter().map(|x| x * 0.9).collect();
+    let mut u = vec![0.0f32; 512];
+    rng.fill_uniform(&mut u);
+
+    let rt = engine
+        .execute_f32("tng_roundtrip", &[lit_f32_1d(&g), lit_f32_1d(&gref), lit_f32_1d(&u)])
+        .unwrap();
+    let enc = engine
+        .execute_f32("tng_encode", &[lit_f32_1d(&g), lit_f32_1d(&gref), lit_f32_1d(&u)])
+        .unwrap();
+    let dec = engine
+        .execute_f32(
+            "tng_decode",
+            &[lit_f32_1d(&enc[0]), lit_f32_1d(&enc[1]), lit_f32_1d(&gref)],
+        )
+        .unwrap();
+    for i in 0..512 {
+        assert!((rt[0][i] - dec[0][i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn coordinator_drives_xla_objective_end_to_end() {
+    // The full composition: driver loop -> XlaLogReg -> PJRT artifacts,
+    // TNG protocol on top. Few rounds (each stoch_grad is a PJRT call).
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_dir(&dir).unwrap();
+    let ds = paper_dataset();
+    let obj = XlaLogReg::new(engine, ds, 0.01).unwrap();
+
+    let cfg = tng::coordinator::DriverConfig {
+        workers: 2,
+        rounds: 40,
+        batch: 8,
+        // Ternary decode noise at D=512 needs a conservative step.
+        schedule: tng::optim::StepSchedule::Const(0.05),
+        record_every: 20,
+        ..Default::default()
+    };
+    let f0 = obj.loss(&vec![0.0; XLA_DIM]);
+    let tr = tng::coordinator::driver::run(
+        &obj,
+        &tng::codec::ternary::TernaryCodec,
+        "xla-e2e",
+        &cfg,
+    );
+    assert!(tr.final_loss().is_finite());
+    assert!(
+        tr.final_loss() < f0 - 0.005,
+        "40 TNG rounds over PJRT must reduce the loss: {} vs {f0}",
+        tr.final_loss()
+    );
+    assert!(tr.total_up_bits > 0);
+}
