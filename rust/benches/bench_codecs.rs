@@ -1,22 +1,50 @@
 //! Codec hot-path microbenchmarks: encode / decode / wire throughput per
-//! codec and dimension. The L3 perf target (EXPERIMENTS.md §Perf) is that
-//! codec work is negligible next to gradient computation: GB/s-class
-//! elementwise throughput.
+//! codec and dimension, steady-state allocation counts for the scratch
+//! path, and the sharded-parallel speedup. The L3 perf target
+//! (EXPERIMENTS.md §Perf) is that codec work is negligible next to gradient
+//! computation: GB/s-class elementwise throughput, zero steady-state
+//! allocations, and shard-parallel scaling for the 1M-dim regime.
 
 use std::time::Duration;
 
 use tng::codec::{
-    chunked::ChunkedTernaryCodec, qsgd::QsgdCodec, signsgd::SignCodec,
-    sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec, wire, Codec,
+    chunked::ChunkedTernaryCodec, qsgd::QsgdCodec, sharded::ShardedCodec,
+    signsgd::SignCodec, sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec,
+    wire, Codec, CodecScratch,
 };
 use tng::tng::Tng;
+use tng::util::alloc_counter::{alloc_count, CountingAlloc};
 use tng::util::bench::{bench, black_box};
 use tng::util::Rng;
+
+// Shared counting allocator (util::alloc_counter): proves the scratch path
+// is allocation-free without external tooling.
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 const BUDGET: Duration = Duration::from_millis(300);
 
 fn randv(rng: &mut Rng, d: usize) -> Vec<f32> {
     (0..d).map(|_| rng.gauss_f32()).collect()
+}
+
+/// Allocations per steady-state encode+decode round through a scratch
+/// arena (after warmup; should print 0 for the stochastic codecs).
+fn allocs_per_round(codec: &dyn Codec, v: &[f32], rounds: u64) -> f64 {
+    let mut rng = Rng::new(11);
+    let mut scratch = CodecScratch::new();
+    let mut decoded = vec![0.0f32; v.len()];
+    for _ in 0..5 {
+        codec.encode_into(v, &mut rng, &mut scratch.enc);
+        scratch.enc.decode_into(&mut decoded);
+    }
+    let before = alloc_count();
+    for _ in 0..rounds {
+        codec.encode_into(v, &mut rng, &mut scratch.enc);
+        scratch.enc.decode_into(&mut decoded);
+        black_box(&decoded);
+    }
+    (alloc_count() - before) as f64 / rounds as f64
 }
 
 fn main() {
@@ -36,33 +64,100 @@ fn main() {
         ];
         for c in &codecs {
             let mut r = Rng::new(1);
+            let mut scratch = CodecScratch::new();
             bench(&format!("encode/{}/d{}", c.name(), d), BUDGET, || {
-                black_box(c.encode(black_box(&v), &mut r))
+                c.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+                black_box(scratch.enc.dim)
             })
             .report_throughput(bytes);
         }
         // decode + wire for the protocol's default codec
         let mut r = Rng::new(2);
         let e = TernaryCodec.encode(&v, &mut r);
-        bench(&format!("decode/ternary/d{}", d), BUDGET, || black_box(e.decode()))
-            .report_throughput(bytes);
-        bench(&format!("wire_ser/ternary/d{}", d), BUDGET, || {
-            black_box(wire::to_bytes(black_box(&e)))
+        let mut decoded = vec![0.0f32; d];
+        bench(&format!("decode/ternary/d{}", d), BUDGET, || {
+            e.decode_into(black_box(&mut decoded));
         })
         .report_throughput(bytes);
-        let frame = wire::to_bytes(&e);
+        let mut frame = Vec::new();
+        bench(&format!("wire_ser/ternary/d{}", d), BUDGET, || {
+            frame.clear();
+            wire::write_into(black_box(&e), &mut frame);
+            black_box(frame.len())
+        })
+        .report_throughput(bytes);
         bench(&format!("wire_de/ternary/d{}", d), BUDGET, || {
             black_box(wire::from_bytes(black_box(&frame)).unwrap())
         })
         .report_throughput(bytes);
-        // the full TNG normalize+encode+decode round
+        // the full TNG normalize+encode+decode round through one arena
         let gref = randv(&mut rng, d);
         let tng = Tng::new(TernaryCodec);
         let mut r = Rng::new(3);
+        let mut scratch = CodecScratch::new();
+        let mut out = Vec::new();
         bench(&format!("tng_roundtrip/ternary/d{}", d), BUDGET, || {
-            let e = tng.encode(black_box(&v), black_box(&gref), &mut r);
-            black_box(tng.decode(&e, &gref))
+            tng.encode_into(black_box(&v), black_box(&gref), &mut r, &mut scratch);
+            tng.decode_into(&scratch.enc, &gref, &mut out);
+            black_box(out.len())
         })
         .report_throughput(bytes);
+    }
+
+    // ---- steady-state allocation counts (the scratch-arena guarantee) ----
+    println!("# steady-state allocations per encode+decode round (1M dims)");
+    let d = 1 << 20;
+    let v = randv(&mut rng, d);
+    for (name, codec) in [
+        ("ternary", Box::new(TernaryCodec) as Box<dyn Codec>),
+        ("qsgd4", Box::new(QsgdCodec::new(4))),
+        ("cternary4096", Box::new(ChunkedTernaryCodec::new(4096))),
+        ("shard4-ternary(serial)", Box::new(ShardedCodec::new(TernaryCodec, 4).with_threads(1))),
+    ] {
+        println!("allocs/round {:<28} {}", name, allocs_per_round(codec.as_ref(), &v, 50));
+    }
+
+    // ---- sharded-parallel speedup over the single-thread seed path ------
+    println!("# sharded compression speedup, encode+decode of 1M dims");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("# available_parallelism = {cores}");
+    for (label, codec) in [
+        ("ternary", Box::new(TernaryCodec) as Box<dyn Codec>),
+        ("qsgd4", Box::new(QsgdCodec::new(4))),
+    ] {
+        let mut r = Rng::new(5);
+        let mut scratch = CodecScratch::new();
+        let mut decoded = vec![0.0f32; d];
+        let res = bench(&format!("shard1x1/{label}/d{d}"), BUDGET, || {
+            codec.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+            scratch.enc.decode_into(&mut decoded);
+            black_box(decoded[0])
+        });
+        res.report_throughput(4 * d);
+        let base_mean = res.mean.as_secs_f64();
+        for threads in [2usize, 4] {
+            let sharded = ShardedCodec::new(clone_codec(label), threads).with_threads(threads);
+            let mut r = Rng::new(5);
+            let mut scratch = CodecScratch::new();
+            let mut decoded = vec![0.0f32; d];
+            let res = bench(&format!("shard{threads}x{threads}/{label}/d{d}"), BUDGET, || {
+                sharded.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+                sharded.decode_into(&scratch.enc, &mut decoded);
+                black_box(decoded[0])
+            });
+            res.report_throughput(4 * d);
+            println!(
+                "speedup {label} x{threads}: {:.2}x over single-thread",
+                base_mean / res.mean.as_secs_f64()
+            );
+        }
+    }
+}
+
+fn clone_codec(label: &str) -> Box<dyn Codec> {
+    match label {
+        "ternary" => Box::new(TernaryCodec),
+        "qsgd4" => Box::new(QsgdCodec::new(4)),
+        other => unreachable!("unknown codec label {other}"),
     }
 }

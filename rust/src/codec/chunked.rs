@@ -6,7 +6,7 @@
 //!
 //! Unbiased per chunk by the same argument as [`super::ternary`].
 
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded};
 use crate::util::math::abs_max;
 use crate::util::Rng;
 
@@ -27,9 +27,13 @@ impl Codec for ChunkedTernaryCodec {
         format!("cternary{}", self.chunk)
     }
 
-    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded {
-        let mut codes = vec![0i8; v.len()];
-        let mut scales = Vec::with_capacity(v.len().div_ceil(self.chunk));
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+        out.dim = v.len();
+        let (chunk, scales, codes) = out.payload.ternary_chunked_mut();
+        *chunk = self.chunk as u32;
+        codes.clear();
+        codes.resize(v.len(), 0);
+        scales.clear();
         for (ci, block) in v.chunks(self.chunk).enumerate() {
             let r = abs_max(block);
             scales.push(r);
@@ -43,7 +47,6 @@ impl Codec for ChunkedTernaryCodec {
                 }
             }
         }
-        Encoded { dim: v.len(), payload: Payload::TernaryChunked { chunk: self.chunk as u32, scales, codes } }
     }
 }
 

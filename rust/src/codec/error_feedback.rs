@@ -14,29 +14,44 @@ pub struct ErrorFeedback<C: Codec> {
     inner: C,
     residual: Vec<f32>,
     scratch: Vec<f32>,
+    decoded: Vec<f32>,
 }
 
 impl<C: Codec> ErrorFeedback<C> {
     pub fn new(inner: C, dim: usize) -> Self {
-        ErrorFeedback { inner, residual: vec![0.0; dim], scratch: vec![0.0; dim] }
+        ErrorFeedback {
+            inner,
+            residual: vec![0.0; dim],
+            scratch: vec![0.0; dim],
+            decoded: vec![0.0; dim],
+        }
     }
 
     pub fn name(&self) -> String {
         format!("ef-{}", self.inner.name())
     }
 
-    /// Encode `v + residual`, update the residual with what was lost.
-    pub fn encode(&mut self, v: &[f32], rng: &mut Rng) -> Encoded {
+    /// Encode `v + residual` into `out`, update the residual with what was
+    /// lost. Allocation-free in the steady state (all buffers reused).
+    pub fn encode_into(&mut self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
         assert_eq!(v.len(), self.residual.len());
         for (s, (&x, &m)) in self.scratch.iter_mut().zip(v.iter().zip(&self.residual)) {
             *s = x + m;
         }
-        let e = self.inner.encode(&self.scratch, rng);
-        let decoded = e.decode();
-        for (m, (&s, &d)) in self.residual.iter_mut().zip(self.scratch.iter().zip(&decoded)) {
+        self.inner.encode_into(&self.scratch, rng, out);
+        out.decode_into(&mut self.decoded);
+        for (m, (&s, &d)) in
+            self.residual.iter_mut().zip(self.scratch.iter().zip(&self.decoded))
+        {
             *m = s - d;
         }
-        e
+    }
+
+    /// Allocating convenience wrapper around [`ErrorFeedback::encode_into`].
+    pub fn encode(&mut self, v: &[f32], rng: &mut Rng) -> Encoded {
+        let mut out = Encoded::empty();
+        self.encode_into(v, rng, &mut out);
+        out
     }
 
     pub fn residual_norm(&self) -> f64 {

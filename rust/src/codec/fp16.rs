@@ -5,7 +5,7 @@
 //! codecs. Round-to-nearest-even via the standard bit algorithm (no `half`
 //! crate offline). Biased only by rounding (relative error ≤ 2^-11).
 
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded};
 use crate::util::Rng;
 
 #[derive(Debug, Clone, Default)]
@@ -73,12 +73,13 @@ impl Codec for Fp16Codec {
         "fp16".into()
     }
 
-    fn encode(&self, v: &[f32], _rng: &mut Rng) -> Encoded {
-        // Stored decoded (Dense) so the in-memory path is allocation-light;
+    fn encode_into(&self, v: &[f32], _rng: &mut Rng, out: &mut Encoded) {
+        // Stored decoded (Dense) so the in-memory path is allocation-free;
         // the wire/bit cost is still 16/elt via bits() below.
-        let values: Vec<f32> =
-            v.iter().map(|&x| f16_bits_to_f32(f32_to_f16_bits(x))).collect();
-        Encoded { dim: v.len(), payload: Payload::Dense { values } }
+        out.dim = v.len();
+        let values = out.payload.dense_mut();
+        values.clear();
+        values.extend(v.iter().map(|&x| f16_bits_to_f32(f32_to_f16_bits(x))));
     }
 
     fn is_unbiased(&self) -> bool {

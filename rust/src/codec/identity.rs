@@ -1,7 +1,7 @@
 //! Full-precision passthrough codec (32 bits/element) — the uncompressed
 //! baseline and the coding used for reference-vector broadcasts.
 
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded};
 use crate::util::Rng;
 
 #[derive(Debug, Clone, Default)]
@@ -12,8 +12,11 @@ impl Codec for IdentityCodec {
         "fp32".into()
     }
 
-    fn encode(&self, v: &[f32], _rng: &mut Rng) -> Encoded {
-        Encoded { dim: v.len(), payload: Payload::Dense { values: v.to_vec() } }
+    fn encode_into(&self, v: &[f32], _rng: &mut Rng, out: &mut Encoded) {
+        out.dim = v.len();
+        let values = out.payload.dense_mut();
+        values.clear();
+        values.extend_from_slice(v);
     }
 }
 

@@ -9,17 +9,32 @@
 //! * [`topk::TopKCodec`] — top-K magnitude selection (biased; baseline)
 //! * [`identity::IdentityCodec`] — full-precision passthrough
 //! * [`error_feedback::ErrorFeedback`] — error-compensation wrapper (memory)
+//! * [`sharded::ShardedCodec`] — contiguous-shard wrapper that compresses
+//!   shards independently (optionally on multiple threads) and carries
+//!   per-shard scales on the wire
 //!
 //! Each encode produces an [`Encoded`] carrying a typed payload plus exact
 //! bit accounting in several coding models (dense / sparse / entropy bound /
-//! actual deflate) — the paper picks the cheaper of dense vs sparse per
-//! message, which is [`Encoded::bits`].
+//! adaptive-coder estimate) — the paper picks the cheaper of dense vs sparse
+//! per message, which is [`Encoded::bits`].
+//!
+//! # The allocation-free hot path
+//!
+//! The trait's primitive is [`Codec::encode_into`], which writes into a
+//! caller-owned [`Encoded`] whose payload buffers are reused round to round;
+//! [`Codec::encode`] is the allocating convenience wrapper. Decoding has the
+//! same split ([`Encoded::decode_into`] vs [`Encoded::decode`]). A
+//! [`CodecScratch`] bundles every buffer one worker's encode→wire→decode
+//! round needs, so the steady-state protocol loop performs **zero heap
+//! allocation** (enforced by `rust/tests/alloc.rs` and measured in
+//! `benches/bench_codecs.rs`; see DESIGN.md §Scratch).
 
 pub mod chunked;
 pub mod error_feedback;
 pub mod fp16;
 pub mod identity;
 pub mod qsgd;
+pub mod sharded;
 pub mod signsgd;
 pub mod sparse;
 pub mod ternary;
@@ -31,12 +46,28 @@ use crate::util::Rng;
 /// Number of payload bits for a f32 scalar on the wire.
 pub const F32_BITS: usize = 32;
 
+/// ceil(log2(n)): bits needed to address one of `n` alternatives
+/// (0 when there is at most one alternative).
+pub(crate) fn ceil_log2(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
 /// A compressed gradient message.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Encoded {
     /// Original vector dimension.
     pub dim: usize,
     pub payload: Payload,
+}
+
+impl Default for Encoded {
+    fn default() -> Self {
+        Encoded::empty()
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -52,9 +83,89 @@ pub enum Payload {
     Sparse { pairs: Vec<(u32, f32)> },
     /// Raw dense f32 (identity codec / reference broadcasts).
     Dense { values: Vec<f32> },
+    /// Contiguous shards, each independently coded; every part carries its
+    /// own scales/norms, which is how per-shard scaling reaches the wire.
+    /// Produced by [`sharded::ShardedCodec`]; parts tile `dim` in order.
+    Sharded { parts: Vec<Encoded> },
+}
+
+impl Payload {
+    /// Reuse `self` as a `Ternary` payload: returns its fields, replacing
+    /// the variant (with empty buffers) only when it does not match. In the
+    /// steady state the variant matches and no allocation happens.
+    pub fn ternary_mut(&mut self) -> (&mut f32, &mut Vec<i8>) {
+        if !matches!(self, Payload::Ternary { .. }) {
+            *self = Payload::Ternary { scale: 0.0, codes: Vec::new() };
+        }
+        match self {
+            Payload::Ternary { scale, codes } => (scale, codes),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Reuse `self` as a `TernaryChunked` payload (see [`Payload::ternary_mut`]).
+    pub fn ternary_chunked_mut(&mut self) -> (&mut u32, &mut Vec<f32>, &mut Vec<i8>) {
+        if !matches!(self, Payload::TernaryChunked { .. }) {
+            *self = Payload::TernaryChunked { chunk: 1, scales: Vec::new(), codes: Vec::new() };
+        }
+        match self {
+            Payload::TernaryChunked { chunk, scales, codes } => (chunk, scales, codes),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Reuse `self` as a `Quantized` payload (see [`Payload::ternary_mut`]).
+    pub fn quantized_mut(&mut self) -> (&mut f32, &mut u32, &mut Vec<i16>) {
+        if !matches!(self, Payload::Quantized { .. }) {
+            *self = Payload::Quantized { norm: 0.0, levels: 1, q: Vec::new() };
+        }
+        match self {
+            Payload::Quantized { norm, levels, q } => (norm, levels, q),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Reuse `self` as a `Sparse` payload (see [`Payload::ternary_mut`]).
+    pub fn sparse_mut(&mut self) -> &mut Vec<(u32, f32)> {
+        if !matches!(self, Payload::Sparse { .. }) {
+            *self = Payload::Sparse { pairs: Vec::new() };
+        }
+        match self {
+            Payload::Sparse { pairs } => pairs,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Reuse `self` as a `Dense` payload (see [`Payload::ternary_mut`]).
+    pub fn dense_mut(&mut self) -> &mut Vec<f32> {
+        if !matches!(self, Payload::Dense { .. }) {
+            *self = Payload::Dense { values: Vec::new() };
+        }
+        match self {
+            Payload::Dense { values } => values,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Reuse `self` as a `Sharded` payload (see [`Payload::ternary_mut`]).
+    pub fn sharded_mut(&mut self) -> &mut Vec<Encoded> {
+        if !matches!(self, Payload::Sharded { .. }) {
+            *self = Payload::Sharded { parts: Vec::new() };
+        }
+        match self {
+            Payload::Sharded { parts } => parts,
+            _ => unreachable!(),
+        }
+    }
 }
 
 impl Encoded {
+    /// A dimension-0 message (the reusable starting state of a scratch
+    /// buffer); allocates nothing.
+    pub fn empty() -> Self {
+        Encoded { dim: 0, payload: Payload::Dense { values: Vec::new() } }
+    }
+
     /// Decode into a dense vector (unbiased reconstruction for the unbiased
     /// codecs). Allocation-free variant: [`Encoded::decode_into`].
     pub fn decode(&self) -> Vec<f32> {
@@ -90,6 +201,14 @@ impl Encoded {
                 }
             }
             Payload::Dense { values } => out.copy_from_slice(values),
+            Payload::Sharded { parts } => {
+                let mut off = 0usize;
+                for p in parts {
+                    p.decode_into(&mut out[off..off + p.dim]);
+                    off += p.dim;
+                }
+                assert_eq!(off, self.dim, "shard dims must tile the vector");
+            }
         }
     }
 
@@ -102,12 +221,22 @@ impl Encoded {
             Payload::Quantized { q, .. } => q.iter().filter(|&&x| x != 0).count(),
             Payload::Sparse { pairs } => pairs.len(),
             Payload::Dense { values } => values.iter().filter(|&&v| v != 0.0).count(),
+            Payload::Sharded { parts } => parts.iter().map(Encoded::nnz).sum(),
         }
     }
 
+    /// ceil(log2(dim)) bits address one coordinate (0 bits when dim <= 1:
+    /// with a single coordinate there is nothing to signal).
     fn index_bits(&self) -> usize {
-        // ceil(log2(dim)) bits per index, min 1.
-        (usize::BITS - (self.dim.max(2) - 1).leading_zeros()) as usize
+        ceil_log2(self.dim)
+    }
+
+    /// A sparse-coded message must carry its own non-zero count so the
+    /// receiver knows where the payload ends: ceil(log2(dim + 1)) bits
+    /// (the count ranges over 0..=dim). Without this header an empty sparse
+    /// message would cost 0 bits, which no real coder achieves.
+    fn count_bits(&self) -> usize {
+        ceil_log2(self.dim + 1)
     }
 
     /// Dense coding cost in bits (every coordinate transmitted).
@@ -126,32 +255,41 @@ impl Encoded {
             // A dense coding of a sparse payload materializes all coords.
             Payload::Sparse { .. } => F32_BITS * self.dim,
             Payload::Dense { values } => F32_BITS * values.len(),
+            Payload::Sharded { parts } => parts.iter().map(Encoded::bits_dense).sum(),
         }
     }
 
-    /// Sparse coding cost in bits (index + payload per non-zero).
+    /// Sparse coding cost in bits: count header + (index + payload) per
+    /// non-zero, plus any scale scalars.
     pub fn bits_sparse(&self) -> usize {
         let idx = self.index_bits();
+        let header = self.count_bits();
         match &self.payload {
-            Payload::Ternary { .. } => (idx + 1) * self.nnz() + F32_BITS,
+            Payload::Ternary { .. } => header + (idx + 1) * self.nnz() + F32_BITS,
             Payload::TernaryChunked { scales, .. } => {
-                (idx + 1) * self.nnz() + F32_BITS * scales.len()
+                header + (idx + 1) * self.nnz() + F32_BITS * scales.len()
             }
             Payload::Quantized { levels, .. } => {
                 let mag_bits =
                     (u32::BITS - levels.leading_zeros()).max(1) as usize;
-                (idx + 1 + mag_bits) * self.nnz() + F32_BITS
+                header + (idx + 1 + mag_bits) * self.nnz() + F32_BITS
             }
-            Payload::Sparse { pairs } => (idx + F32_BITS) * pairs.len(),
-            Payload::Dense { .. } => (idx + F32_BITS) * self.nnz(),
+            Payload::Sparse { pairs } => header + (idx + F32_BITS) * pairs.len(),
+            Payload::Dense { .. } => header + (idx + F32_BITS) * self.nnz(),
+            Payload::Sharded { parts } => parts.iter().map(Encoded::bits_sparse).sum(),
         }
     }
 
     /// The paper's accounting: the cheaper of dense vs sparse coding
     /// ("we also choose the optimal methods for coding the vectors, whether
-    /// in dense vector form or in sparse vector form", §4.2).
+    /// in dense vector form or in sparse vector form", §4.2). A sharded
+    /// message makes the choice per shard, so its total can undercut the
+    /// whole-message minimum.
     pub fn bits(&self) -> usize {
-        self.bits_dense().min(self.bits_sparse())
+        match &self.payload {
+            Payload::Sharded { parts } => parts.iter().map(Encoded::bits).sum(),
+            _ => self.bits_dense().min(self.bits_sparse()),
+        }
     }
 
     /// Zeroth-order empirical entropy bound in bits (what an ideal
@@ -195,31 +333,102 @@ impl Encoded {
                 let cs: Vec<usize> = counts.values().copied().collect();
                 entropy_bits(&cs, q.len()).ceil() as usize + F32_BITS
             }
+            Payload::Sharded { parts } => parts.iter().map(Encoded::bits_entropy).sum(),
             _ => self.bits(),
         }
     }
 
-    /// Actual deflate-compressed wire size in bits (level 6). Empirical
-    /// check that the entropy estimate is attainable with a real coder.
-    pub fn bits_deflate(&self) -> usize {
-        use flate2::write::DeflateEncoder;
-        use flate2::Compression;
-        use std::io::Write;
+    /// Attainable compressed wire size in bits: the exact code length of an
+    /// adaptive order-0 arithmetic coder (KT estimator) run over the
+    /// byte-exact wire frame. A real adaptive coder emits within O(1) bits
+    /// of this, so it is an empirical check that [`Encoded::bits_entropy`]
+    /// is reachable without any out-of-band statistics. (The offline
+    /// environment has no deflate implementation; this replaces the seed's
+    /// `flate2` dependency with a tighter, self-contained estimate.)
+    pub fn bits_compressed(&self) -> usize {
         let bytes = wire::to_bytes(self);
-        let mut enc = DeflateEncoder::new(Vec::new(), Compression::new(6));
-        enc.write_all(&bytes).expect("deflate write");
-        enc.finish().expect("deflate finish").len() * 8
+        let mut counts = [0.0f64; 256];
+        let mut total = 0.0f64;
+        let mut bits = 0.0f64;
+        for &b in &bytes {
+            // KT (add-1/2) predictive probability of the next byte.
+            let p = (counts[b as usize] + 0.5) / (total + 128.0);
+            bits -= p.log2();
+            counts[b as usize] += 1.0;
+            total += 1.0;
+        }
+        bits.ceil() as usize
     }
 }
 
 /// A gradient compressor. Unbiased codecs satisfy
 /// `E_rng[decode(encode(v))] = v`; `is_unbiased` flags the exceptions
 /// (sign, top-K), which the convergence tests treat differently.
+///
+/// The primitive is [`Codec::encode_into`]: it must fully overwrite `out`
+/// (dimension and payload) while reusing `out`'s buffers, so that encoding
+/// the same-shaped input round after round allocates nothing.
 pub trait Codec: Send + Sync {
     fn name(&self) -> String;
-    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded;
+
+    /// Encode `v` into the caller-owned `out`, reusing its payload buffers.
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded);
+
+    /// Allocating convenience wrapper around [`Codec::encode_into`].
+    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded {
+        let mut out = Encoded::empty();
+        self.encode_into(v, rng, &mut out);
+        out
+    }
+
     fn is_unbiased(&self) -> bool {
         true
+    }
+}
+
+/// Boxed codecs forward the trait, so wrappers like
+/// [`sharded::ShardedCodec`] compose over factory-built codecs.
+impl Codec for Box<dyn Codec> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+        (**self).encode_into(v, rng, out)
+    }
+
+    fn is_unbiased(&self) -> bool {
+        (**self).is_unbiased()
+    }
+}
+
+/// Per-worker scratch arena: every buffer the encode→wire→decode hot path
+/// needs, allocated once and reused so steady-state rounds are
+/// allocation-free. One worker (or one leader slot) owns one arena.
+#[derive(Default)]
+pub struct CodecScratch {
+    /// Reused encoded message (payload buffers keep their capacity).
+    pub enc: Encoded,
+    /// Normalized gradient `g − g̃` (filled by `Tng::encode_into`).
+    pub normalized: Vec<f32>,
+    /// Decoded gradient (filled by `Tng::decode_into` / the leader fold).
+    pub decoded: Vec<f32>,
+    /// Wire-frame scratch (`wire::write_into`).
+    pub bytes: Vec<u8>,
+}
+
+impl CodecScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-reserve the dense buffers for dimension `dim` so even the first
+    /// round does not grow them. The wire buffer is left cold: paths that
+    /// never serialize (e.g. the in-process driver) should not pin frame
+    /// capacity; `wire::write_into` grows it on first use.
+    pub fn warm(&mut self, dim: usize) {
+        self.normalized.reserve(dim);
+        self.decoded.reserve(dim);
     }
 }
 
@@ -289,6 +498,24 @@ mod tests {
     }
 
     #[test]
+    fn decode_sharded_tiles_parts() {
+        let e = Encoded {
+            dim: 5,
+            payload: Payload::Sharded {
+                parts: vec![
+                    Encoded {
+                        dim: 3,
+                        payload: Payload::Ternary { scale: 2.0, codes: vec![1, 0, -1] },
+                    },
+                    Encoded { dim: 2, payload: Payload::Dense { values: vec![5.0, -6.0] } },
+                ],
+            },
+        };
+        assert_eq!(e.decode(), vec![2.0, 0.0, -2.0, 5.0, -6.0]);
+        assert_eq!(e.nnz(), 4);
+    }
+
+    #[test]
     fn nnz_counts() {
         assert_eq!(enc_ternary().nnz(), 3);
     }
@@ -305,8 +532,8 @@ mod tests {
         let e = Encoded { dim: 1024, payload: Payload::Ternary { scale: 1.0, codes } };
         assert!(e.bits_sparse() < e.bits_dense());
         assert_eq!(e.bits(), e.bits_sparse());
-        // 10 index bits + 1 sign bit per nnz + 32-bit scale
-        assert_eq!(e.bits_sparse(), 11 + 32);
+        // 11-bit count header + (10 index + 1 sign) per nnz + 32-bit scale
+        assert_eq!(e.bits_sparse(), 11 + 11 + 32);
     }
 
     #[test]
@@ -314,6 +541,77 @@ mod tests {
         let codes = vec![1i8; 256];
         let e = Encoded { dim: 256, payload: Payload::Ternary { scale: 1.0, codes } };
         assert_eq!(e.bits(), e.bits_dense());
+    }
+
+    #[test]
+    fn dim_one_needs_no_index_bits() {
+        // With a single coordinate the index is implicit: sparse coding is
+        // count header (1 bit: nnz in {0,1}) + 32-bit value.
+        let e = Encoded { dim: 1, payload: Payload::Sparse { pairs: vec![(0, 4.0)] } };
+        assert_eq!(e.bits_sparse(), 1 + 32);
+        assert_eq!(e.bits_dense(), 32);
+        assert_eq!(e.bits(), 32);
+    }
+
+    #[test]
+    fn empty_sparse_payload_still_costs_its_header() {
+        // The seed accounting priced an empty sparse message at 0 bits; a
+        // real coder must still transmit the "nothing follows" count.
+        let e = Encoded { dim: 5, payload: Payload::Sparse { pairs: vec![] } };
+        assert_eq!(e.bits_sparse(), ceil_log2(6));
+        assert!(e.bits() > 0);
+        // ... and a zero-dimensional message is genuinely free.
+        let e0 = Encoded { dim: 0, payload: Payload::Sparse { pairs: vec![] } };
+        assert_eq!(e0.bits(), 0);
+    }
+
+    #[test]
+    fn bits_is_min_of_dense_and_sparse_for_every_flat_variant() {
+        let variants = vec![
+            Encoded { dim: 6, payload: Payload::Ternary { scale: 1.0, codes: vec![1, 0, -1, 0, 0, 1] } },
+            Encoded {
+                dim: 6,
+                payload: Payload::TernaryChunked {
+                    chunk: 3,
+                    scales: vec![1.0, 2.0],
+                    codes: vec![1, 0, -1, 0, 0, 1],
+                },
+            },
+            Encoded { dim: 4, payload: Payload::Quantized { norm: 2.0, levels: 4, q: vec![0, 4, 0, -1] } },
+            Encoded { dim: 9, payload: Payload::Sparse { pairs: vec![(2, 1.5)] } },
+            Encoded { dim: 3, payload: Payload::Dense { values: vec![0.0, 2.0, 0.0] } },
+        ];
+        for e in &variants {
+            assert_eq!(
+                e.bits(),
+                e.bits_dense().min(e.bits_sparse()),
+                "variant {:?}",
+                std::mem::discriminant(&e.payload)
+            );
+        }
+        // A sharded message picks dense/sparse per part, so its total is at
+        // most (and can undercut) the whole-message minimum.
+        let sharded = Encoded {
+            dim: 10,
+            payload: Payload::Sharded {
+                parts: vec![
+                    variants[0].clone(),
+                    Encoded { dim: 4, payload: Payload::Dense { values: vec![1.0; 4] } },
+                ],
+            },
+        };
+        assert_eq!(
+            sharded.bits(),
+            variants[0].bits() + sharded_part1_bits(&sharded)
+        );
+        assert!(sharded.bits() <= sharded.bits_dense().min(sharded.bits_sparse()));
+    }
+
+    fn sharded_part1_bits(e: &Encoded) -> usize {
+        match &e.payload {
+            Payload::Sharded { parts } => parts[1].bits(),
+            _ => unreachable!(),
+        }
     }
 
     #[test]
@@ -336,10 +634,22 @@ mod tests {
     }
 
     #[test]
-    fn deflate_positive_and_finite() {
+    fn compressed_estimate_positive_and_near_entropy_for_skewed() {
         let e = enc_ternary();
-        let b = e.bits_deflate();
-        assert!(b > 0);
+        assert!(e.bits_compressed() > 0);
+        // A long, very sparse ternary message compresses far below its
+        // dense coding (the adaptive coder learns the zero-heavy byte
+        // distribution of the packed wire frame).
+        let mut codes = vec![0i8; 4096];
+        codes[17] = 1;
+        codes[991] = -1;
+        let sk = Encoded { dim: 4096, payload: Payload::Ternary { scale: 1.0, codes } };
+        assert!(
+            sk.bits_compressed() < sk.bits_dense() / 4,
+            "compressed={} dense={}",
+            sk.bits_compressed(),
+            sk.bits_dense()
+        );
     }
 
     #[test]
@@ -350,5 +660,57 @@ mod tests {
             payload: Payload::Quantized { norm: 1.0, levels: 4, q: vec![1; 100] },
         };
         assert_eq!(e.bits_dense(), 4 * 100 + 32);
+    }
+
+    #[test]
+    fn payload_mut_helpers_reuse_buffers() {
+        let mut p = Payload::Ternary { scale: 3.0, codes: vec![1; 64] };
+        {
+            let (scale, codes) = p.ternary_mut();
+            assert_eq!(*scale, 3.0);
+            assert_eq!(codes.len(), 64);
+            let cap = codes.capacity();
+            codes.clear();
+            codes.resize(32, 0);
+            assert_eq!(codes.capacity(), cap, "clear+resize must not reallocate");
+        }
+        // Switching variants replaces the payload...
+        let pairs = p.sparse_mut();
+        assert!(pairs.is_empty());
+        pairs.push((1, 2.0));
+        // ...and switching back starts from empty buffers again.
+        let (scale, codes) = p.ternary_mut();
+        assert_eq!(*scale, 0.0);
+        assert!(codes.is_empty());
+    }
+
+    #[test]
+    fn encode_into_reuses_and_matches_encode() {
+        use crate::codec::qsgd::QsgdCodec;
+        use crate::codec::ternary::TernaryCodec;
+        let mut rng = Rng::new(9);
+        let v: Vec<f32> = (0..256).map(|_| rng.gauss_f32()).collect();
+        let mut out = Encoded::empty();
+        for codec in [&TernaryCodec as &dyn Codec, &QsgdCodec::new(4)] {
+            let mut r1 = Rng::new(7);
+            let mut r2 = Rng::new(7);
+            codec.encode_into(&v, &mut r1, &mut out);
+            let fresh = codec.encode(&v, &mut r2);
+            assert_eq!(out, fresh, "{}", codec.name());
+            // Same codec again: the variant matches, buffers are reused.
+            let mut r3 = Rng::new(8);
+            codec.encode_into(&v, &mut r3, &mut out);
+            assert_eq!(out.dim, v.len());
+        }
+    }
+
+    #[test]
+    fn ceil_log2_edges() {
+        assert_eq!(ceil_log2(0), 0);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
     }
 }

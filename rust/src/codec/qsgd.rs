@@ -5,7 +5,7 @@
 //! construction. `s = 2^(b-1)` levels corresponds to roughly `b` bits per
 //! coordinate (plus sign) before entropy coding.
 
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded};
 use crate::util::math::norm2;
 use crate::util::Rng;
 
@@ -33,10 +33,15 @@ impl Codec for QsgdCodec {
         format!("qsgd{}", self.levels)
     }
 
-    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded {
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+        out.dim = v.len();
+        let (norm_out, levels_out, q) = out.payload.quantized_mut();
         let norm = norm2(v) as f32;
         let s = self.levels;
-        let mut q = vec![0i16; v.len()];
+        *norm_out = norm;
+        *levels_out = s;
+        q.clear();
+        q.resize(v.len(), 0);
         if norm > 0.0 {
             let sf = s as f32 / norm;
             for (qi, &x) in q.iter_mut().zip(v) {
@@ -46,14 +51,13 @@ impl Codec for QsgdCodec {
                 *qi = if x >= 0.0 { level } else { -level };
             }
         }
-        Encoded { dim: v.len(), payload: Payload::Quantized { norm, levels: s, q } }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codec::assert_unbiased;
+    use crate::codec::{assert_unbiased, Payload};
 
     fn randv(seed: u64, d: usize) -> Vec<f32> {
         let mut rng = Rng::new(seed);

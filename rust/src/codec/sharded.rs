@@ -1,0 +1,309 @@
+//! Sharded compression: split a D-dimensional gradient into contiguous
+//! shards and compress each shard independently with the wrapped codec —
+//! optionally on multiple OS threads.
+//!
+//! This generalizes [`super::chunked`] from "per-chunk ternary scales" to
+//! "per-shard *anything*": every part of the resulting
+//! [`Payload::Sharded`](super::Payload::Sharded) message carries its own
+//! scales/norms (restoring local resolution exactly like TernGrad's
+//! per-layer scaling), its own dense-vs-sparse coding choice, and its own
+//! byte-exact wire frame. For large D this is also the parallel hot path:
+//! shards are encoded/decoded concurrently under `std::thread::scope`, which
+//! is how `coordinator::parallel` workers scale compression beyond one core
+//! (see DESIGN.md §Sharding and `benches/bench_codecs.rs`).
+//!
+//! Determinism: the shard RNG streams are derived from a single draw off the
+//! caller's stream, so the encoded message is identical whatever
+//! `threads` is — the deterministic driver and the threaded runtime produce
+//! the same traces with and without sharding (pinned by the
+//! `golden_trace` integration test).
+//!
+//! Unbiasedness: each shard is an independent unbiased estimate of its
+//! slice, so the concatenation is unbiased iff the inner codec is.
+
+use super::{Codec, Encoded};
+use crate::util::Rng;
+
+/// Below this many coordinates the whole message is encoded serially even
+/// when `threads > 1`: OS-thread spawn/teardown (~tens of µs) would swamp
+/// the sub-µs encode of a small vector, and the serial path keeps the
+/// zero-allocation guarantee. The message itself is identical either way
+/// (per-shard RNG streams are derived, not thread-assigned).
+pub const PARALLEL_MIN_DIM: usize = 1 << 14;
+
+pub struct ShardedCodec<C> {
+    pub inner: C,
+    /// Number of contiguous shards the vector is split into (>= 1).
+    pub shards: usize,
+    /// OS threads used to compress/decompress shards (1 = serial; serial
+    /// encoding into a warm scratch buffer is allocation-free).
+    pub threads: usize,
+}
+
+impl<C: Codec> ShardedCodec<C> {
+    /// Shard into `shards` pieces. The default thread count is
+    /// min(shards, available_parallelism): shard count controls message
+    /// granularity, but spawning more OS threads than cores only adds
+    /// spawn/teardown overhead. Override with [`ShardedCodec::with_threads`].
+    pub fn new(inner: C, shards: usize) -> Self {
+        assert!(shards >= 1);
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ShardedCodec { inner, shards, threads: shards.min(cores) }
+    }
+
+    /// Override the thread count (e.g. 1 for the allocation-free serial
+    /// path, or `available_parallelism()` with many small shards).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        assert!(threads >= 1);
+        self.threads = threads;
+        self
+    }
+
+    fn shard_len(&self, dim: usize) -> usize {
+        dim.div_ceil(self.shards).max(1)
+    }
+
+    /// Decode a sharded message with the same thread fan-out as encoding
+    /// (at most `threads` OS threads, shards assigned round-robin; plain
+    /// [`Encoded::decode_into`] decodes shards serially).
+    pub fn decode_into(&self, e: &Encoded, out: &mut [f32]) {
+        assert_eq!(out.len(), e.dim);
+        match &e.payload {
+            super::Payload::Sharded { parts }
+                if self.threads > 1 && parts.len() > 1 && e.dim >= PARALLEL_MIN_DIM =>
+            {
+                let nthreads = self.threads.min(parts.len());
+                std::thread::scope(|scope| {
+                    let mut buckets: Vec<Vec<(&Encoded, &mut [f32])>> =
+                        (0..nthreads).map(|_| Vec::new()).collect();
+                    let mut rest: &mut [f32] = out;
+                    for (i, p) in parts.iter().enumerate() {
+                        let (head, tail) =
+                            std::mem::take(&mut rest).split_at_mut(p.dim);
+                        rest = tail;
+                        buckets[i % nthreads].push((p, head));
+                    }
+                    assert!(rest.is_empty(), "shard dims must tile the vector");
+                    for bucket in buckets {
+                        scope.spawn(move || {
+                            for (p, head) in bucket {
+                                p.decode_into(head);
+                            }
+                        });
+                    }
+                });
+            }
+            _ => e.decode_into(out),
+        }
+    }
+}
+
+impl<C: Codec> Codec for ShardedCodec<C> {
+    fn name(&self) -> String {
+        format!("shard{}-{}", self.shards, self.inner.name())
+    }
+
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+        out.dim = v.len();
+        let parts = out.payload.sharded_mut();
+        let chunk = self.shard_len(v.len());
+        let nparts = v.len().div_ceil(chunk.max(1)).min(v.len());
+        parts.resize_with(nparts, Encoded::empty);
+        if nparts == 0 {
+            return;
+        }
+        // One draw advances the caller's stream between rounds; the per-
+        // shard streams split off it, so the message is independent of the
+        // thread count and identical round ordering is preserved across the
+        // deterministic driver and the threaded runtime.
+        let root = Rng::new(rng.next_u64());
+        if self.threads <= 1 || nparts == 1 || v.len() < PARALLEL_MIN_DIM {
+            for (i, (part, block)) in parts.iter_mut().zip(v.chunks(chunk)).enumerate() {
+                let mut srng = root.split(i as u64);
+                self.inner.encode_into(block, &mut srng, part);
+            }
+        } else {
+            let nthreads = self.threads.min(nparts);
+            std::thread::scope(|scope| {
+                let inner = &self.inner;
+                // Strided assignment: thread j takes shards j, j+T, j+2T, …
+                let mut buckets: Vec<Vec<(usize, &mut Encoded, &[f32])>> =
+                    (0..nthreads).map(|_| Vec::new()).collect();
+                for (i, (part, block)) in
+                    parts.iter_mut().zip(v.chunks(chunk)).enumerate()
+                {
+                    buckets[i % nthreads].push((i, part, block));
+                }
+                for bucket in buckets {
+                    let root = &root;
+                    scope.spawn(move || {
+                        for (i, part, block) in bucket {
+                            let mut srng = root.split(i as u64);
+                            inner.encode_into(block, &mut srng, part);
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    fn is_unbiased(&self) -> bool {
+        self.inner.is_unbiased()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::qsgd::QsgdCodec;
+    use crate::codec::sparse::SparseCodec;
+    use crate::codec::ternary::TernaryCodec;
+    use crate::codec::{assert_unbiased, Payload};
+    use crate::util::math::abs_max;
+
+    fn randv(seed: u64, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn shards_tile_and_carry_local_scales() {
+        let v = randv(1, 100);
+        let codec = ShardedCodec::new(TernaryCodec, 4);
+        let mut rng = Rng::new(2);
+        let e = codec.encode(&v, &mut rng);
+        let Payload::Sharded { parts } = &e.payload else {
+            panic!("wrong payload")
+        };
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts.iter().map(|p| p.dim).sum::<usize>(), 100);
+        for (p, block) in parts.iter().zip(v.chunks(25)) {
+            let Payload::Ternary { scale, .. } = &p.payload else {
+                panic!("inner payload")
+            };
+            assert!((scale - abs_max(block)).abs() < 1e-7, "per-shard scale");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_message() {
+        let v = randv(3, 977); // ragged tail
+        for shards in [2usize, 3, 7] {
+            let serial = ShardedCodec::new(TernaryCodec, shards).with_threads(1);
+            let threaded = ShardedCodec::new(TernaryCodec, shards).with_threads(4);
+            let mut r1 = Rng::new(4);
+            let mut r2 = Rng::new(4);
+            let a = serial.encode(&v, &mut r1);
+            let b = threaded.encode(&v, &mut r2);
+            assert_eq!(a, b, "shards={shards}");
+            // Caller streams advanced identically too.
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+    }
+
+    #[test]
+    fn threaded_path_above_threshold_matches_serial() {
+        // d >= PARALLEL_MIN_DIM actually takes the spawning branch; the
+        // message and decode must be identical to the serial path.
+        let v = randv(4, PARALLEL_MIN_DIM + 37);
+        let serial = ShardedCodec::new(TernaryCodec, 4).with_threads(1);
+        let threaded = ShardedCodec::new(TernaryCodec, 4).with_threads(4);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = serial.encode(&v, &mut r1);
+        let b = threaded.encode(&v, &mut r2);
+        assert_eq!(a, b);
+        let mut serial_out = vec![0.0f32; v.len()];
+        let mut threaded_out = vec![0.0f32; v.len()];
+        serial.decode_into(&a, &mut serial_out);
+        threaded.decode_into(&b, &mut threaded_out);
+        assert_eq!(serial_out, threaded_out);
+    }
+
+    #[test]
+    fn parallel_decode_matches_serial() {
+        let v = randv(5, 500);
+        let codec = ShardedCodec::new(QsgdCodec::new(4), 5);
+        let mut rng = Rng::new(6);
+        let e = codec.encode(&v, &mut rng);
+        let serial = e.decode();
+        let mut par = vec![0.0f32; v.len()];
+        codec.decode_into(&e, &mut par);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn unbiased_when_inner_is() {
+        let v = randv(7, 90);
+        assert_unbiased(&ShardedCodec::new(TernaryCodec, 3).with_threads(1), &v, 4000, 8);
+        assert_unbiased(&ShardedCodec::new(SparseCodec::new(0.3), 4).with_threads(1), &v, 4000, 9);
+        assert!(!ShardedCodec::new(crate::codec::signsgd::SignCodec, 2).is_unbiased());
+    }
+
+    #[test]
+    fn outlier_in_one_shard_does_not_starve_others() {
+        // Same resolution argument as chunked.rs, now codec-generic: a huge
+        // coordinate only inflates its own shard's scale.
+        let mut v = randv(10, 256);
+        v[0] = 1000.0;
+        let mse = |codec: &dyn Codec, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut acc = 0.0;
+            for _ in 0..200 {
+                let d = codec.encode(&v, &mut rng).decode();
+                let diff: Vec<f32> = d.iter().zip(&v).map(|(a, b)| a - b).collect();
+                acc += crate::util::math::norm2_sq(&diff[64..]);
+            }
+            acc / 200.0
+        };
+        let global = mse(&TernaryCodec, 11);
+        let sharded = mse(&ShardedCodec::new(TernaryCodec, 4).with_threads(1), 12);
+        assert!(sharded < 0.05 * global, "sharded={sharded} global={global}");
+    }
+
+    #[test]
+    fn bits_account_per_shard() {
+        let v = randv(13, 256);
+        let mut rng = Rng::new(14);
+        let e = ShardedCodec::new(TernaryCodec, 4).encode(&v, &mut rng);
+        // Dense coding: 2 bits/elt + one 32-bit scale per shard.
+        assert_eq!(e.bits_dense(), 2 * 256 + 32 * 4);
+        assert!(e.bits() <= e.bits_dense());
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let mut rng = Rng::new(15);
+        // Empty vector -> empty message.
+        let e = ShardedCodec::new(TernaryCodec, 4).encode(&[], &mut rng);
+        assert_eq!(e.dim, 0);
+        assert_eq!(e.decode(), Vec::<f32>::new());
+        // More shards than coordinates: one part per coordinate.
+        let v = [1.0f32, -2.0];
+        let e = ShardedCodec::new(TernaryCodec, 8).encode(&v, &mut rng);
+        let Payload::Sharded { parts } = &e.payload else { panic!() };
+        assert_eq!(parts.len(), 2);
+        // One shard behaves like the inner codec (modulo rng stream).
+        let e = ShardedCodec::new(TernaryCodec, 1).encode(&v, &mut rng);
+        let Payload::Sharded { parts } = &e.payload else { panic!() };
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].dim, 2);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_encode() {
+        let v = randv(16, 300);
+        let codec = ShardedCodec::new(QsgdCodec::new(8), 3).with_threads(2);
+        let mut out = Encoded::empty();
+        let mut r1 = Rng::new(17);
+        codec.encode_into(&v, &mut r1, &mut out);
+        let mut r2 = Rng::new(17);
+        let fresh = codec.encode(&v, &mut r2);
+        assert_eq!(out, fresh);
+        // Re-encode a shorter vector into the same scratch: parts shrink.
+        let w = randv(18, 90);
+        codec.encode_into(&w, &mut r1, &mut out);
+        assert_eq!(out.dim, 90);
+        assert_eq!(out.decode().len(), 90);
+    }
+}

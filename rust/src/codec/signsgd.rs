@@ -5,7 +5,7 @@
 //! but the codec is **biased** — it is included as the paper's strongest
 //! 1-bit baseline, and convergence harnesses treat it accordingly.
 
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded};
 use crate::util::math::abs_sum;
 use crate::util::Rng;
 
@@ -17,21 +17,20 @@ impl Codec for SignCodec {
         "sign".into()
     }
 
-    fn encode(&self, v: &[f32], _rng: &mut Rng) -> Encoded {
-        let scale = if v.is_empty() { 0.0 } else { (abs_sum(v) / v.len() as f64) as f32 };
-        let codes: Vec<i8> = v
-            .iter()
-            .map(|&x| {
-                if x > 0.0 {
-                    1
-                } else if x < 0.0 {
-                    -1
-                } else {
-                    0
-                }
-            })
-            .collect();
-        Encoded { dim: v.len(), payload: Payload::Ternary { scale, codes } }
+    fn encode_into(&self, v: &[f32], _rng: &mut Rng, out: &mut Encoded) {
+        out.dim = v.len();
+        let (scale, codes) = out.payload.ternary_mut();
+        *scale = if v.is_empty() { 0.0 } else { (abs_sum(v) / v.len() as f64) as f32 };
+        codes.clear();
+        codes.extend(v.iter().map(|&x| {
+            if x > 0.0 {
+                1
+            } else if x < 0.0 {
+                -1
+            } else {
+                0
+            }
+        }));
     }
 
     fn is_unbiased(&self) -> bool {
@@ -42,6 +41,7 @@ impl Codec for SignCodec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::Payload;
 
     #[test]
     fn signs_and_scale() {

@@ -6,7 +6,7 @@
 //! with the overflow from saturated coordinates re-distributed (one round of
 //! the paper's water-filling recursion — enough for the distributions here).
 
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded};
 use crate::util::math::abs_sum;
 use crate::util::Rng;
 
@@ -22,41 +22,48 @@ impl SparseCodec {
         SparseCodec { ratio }
     }
 
-    /// Keep-probabilities for `v` (exposed for tests).
-    pub fn probabilities(&self, v: &[f32]) -> Vec<f64> {
+    /// Water-filling coefficient `c` such that `p_d = min(1, c·|v_d|)`.
+    ///
+    /// The paper's recursion clamps saturated coordinates to 1 and boosts
+    /// the unsaturated rest proportionally; since every pass multiplies the
+    /// unsaturated block by one common factor, the whole recursion stays in
+    /// the family `min(1, c·|v_d|)` — so it suffices to iterate on the
+    /// scalar `c`, which keeps the encode path allocation-free (the seed
+    /// materialized a `Vec<f64>` of probabilities per call).
+    fn coefficient(&self, v: &[f32]) -> f64 {
         let d = v.len();
-        let budget = self.ratio * d as f64;
         let total = abs_sum(v);
-        if total == 0.0 {
-            return vec![0.0; d];
+        if total == 0.0 || d == 0 {
+            return 0.0;
         }
-        let mut p: Vec<f64> = v.iter().map(|&x| budget * x.abs() as f64 / total).collect();
-        // Water-filling (the paper's recursion): clamp saturated coords to 1
-        // and redistribute the budget shortfall proportionally among the
-        // unsaturated rest until the expected nnz meets the budget (or
-        // everything saturates). Converges in <= D passes; bounded anyway.
+        let budget = self.ratio * d as f64;
         let target = budget.min(d as f64);
+        let mut c = budget / total;
         for _ in 0..d.max(8) {
-            for x in p.iter_mut() {
-                *x = x.min(1.0);
-            }
-            let sum: f64 = p.iter().sum();
-            let deficit = target - sum;
-            if deficit <= 1e-9 {
-                break;
-            }
-            let under_sum: f64 = p.iter().filter(|&&x| x < 1.0).sum();
-            if under_sum <= 0.0 {
-                break;
-            }
-            let boost = 1.0 + deficit / under_sum;
-            for x in p.iter_mut() {
-                if *x < 1.0 {
-                    *x *= boost;
+            let mut sum = 0.0f64;
+            let mut under = 0.0f64;
+            for &x in v {
+                let p = c * x.abs() as f64;
+                if p >= 1.0 {
+                    sum += 1.0;
+                } else {
+                    sum += p;
+                    under += p;
                 }
             }
+            let deficit = target - sum;
+            if deficit <= 1e-9 || under <= 0.0 {
+                break;
+            }
+            c *= 1.0 + deficit / under;
         }
-        p
+        c
+    }
+
+    /// Keep-probabilities for `v` (exposed for tests).
+    pub fn probabilities(&self, v: &[f32]) -> Vec<f64> {
+        let c = self.coefficient(v);
+        v.iter().map(|&x| (c * x.abs() as f64).min(1.0)).collect()
     }
 }
 
@@ -65,15 +72,19 @@ impl Codec for SparseCodec {
         format!("sparse{:.2}", self.ratio)
     }
 
-    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded {
-        let p = self.probabilities(v);
-        let mut pairs = Vec::with_capacity((self.ratio * v.len() as f64 * 1.5) as usize + 4);
-        for (i, (&x, &pi)) in v.iter().zip(&p).enumerate() {
-            if pi > 0.0 && rng.f64() < pi {
-                pairs.push((i as u32, (x as f64 / pi) as f32));
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+        out.dim = v.len();
+        let pairs = out.payload.sparse_mut();
+        pairs.clear();
+        let c = self.coefficient(v);
+        if c > 0.0 {
+            for (i, &x) in v.iter().enumerate() {
+                let p = (c * x.abs() as f64).min(1.0);
+                if p > 0.0 && rng.f64() < p {
+                    pairs.push((i as u32, (x as f64 / p) as f32));
+                }
             }
         }
-        Encoded { dim: v.len(), payload: Payload::Sparse { pairs } }
     }
 }
 

@@ -6,7 +6,7 @@
 //! `E[R t_d] = R * sign(v_d) * |v_d|/R = v_d`. Proposition 2 shows the
 //! magnitude-proportional probability is the variance-optimal ternary rule.
 
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded};
 use crate::util::math::abs_max;
 use crate::util::Rng;
 
@@ -24,9 +24,13 @@ impl Codec for TernaryCodec {
         "ternary".into()
     }
 
-    fn encode(&self, v: &[f32], rng: &mut Rng) -> Encoded {
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+        out.dim = v.len();
+        let (scale, codes) = out.payload.ternary_mut();
         let r = abs_max(v);
-        let mut codes = vec![0i8; v.len()];
+        *scale = r;
+        codes.clear();
+        codes.resize(v.len(), 0);
         if r > 0.0 {
             let inv_r = 1.0 / r;
             // Unconditional store with a cmov-style sign select: the
@@ -39,14 +43,13 @@ impl Codec for TernaryCodec {
                 *c = if x < 0.0 { -keep } else { keep };
             }
         }
-        Encoded { dim: v.len(), payload: Payload::Ternary { scale: r, codes } }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codec::assert_unbiased;
+    use crate::codec::{assert_unbiased, Payload};
     use crate::util::math::{norm2_sq, abs_max};
 
     fn randv(seed: u64, d: usize) -> Vec<f32> {

@@ -3,7 +3,7 @@
 //! Keeps the K largest-|v| coordinates at full precision. Biased (the tail
 //! is dropped), so it is normally paired with [`super::error_feedback`].
 
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded};
 use crate::util::Rng;
 
 #[derive(Debug, Clone)]
@@ -23,8 +23,16 @@ impl Codec for TopKCodec {
         format!("top{}", self.k)
     }
 
-    fn encode(&self, v: &[f32], _rng: &mut Rng) -> Encoded {
+    fn encode_into(&self, v: &[f32], _rng: &mut Rng, out: &mut Encoded) {
+        out.dim = v.len();
+        let pairs = out.payload.sparse_mut();
+        pairs.clear();
+        if v.is_empty() {
+            return;
+        }
         let k = self.k.min(v.len());
+        // Selection scratch: unlike the stochastic codecs, top-K needs an
+        // index permutation, so this path allocates O(D) per call.
         let mut idx: Vec<u32> = (0..v.len() as u32).collect();
         // Partial selection: O(D) average via select_nth_unstable.
         idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
@@ -33,10 +41,8 @@ impl Codec for TopKCodec {
                 .partial_cmp(&v[a as usize].abs())
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
-        let mut pairs: Vec<(u32, f32)> =
-            idx[..k].iter().map(|&i| (i, v[i as usize])).collect();
+        pairs.extend(idx[..k].iter().map(|&i| (i, v[i as usize])));
         pairs.sort_unstable_by_key(|&(i, _)| i);
-        Encoded { dim: v.len(), payload: Payload::Sparse { pairs } }
     }
 
     fn is_unbiased(&self) -> bool {
@@ -47,6 +53,7 @@ impl Codec for TopKCodec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::Payload;
 
     #[test]
     fn keeps_largest_k() {

@@ -2,12 +2,17 @@
 //!
 //! This is what actually crosses the coordinator's (simulated) network, so
 //! it is deliberately compact: ternary codes are bit-packed 4-per-byte
-//! (2 bits each), quantized levels are i16 LE, sparse pairs are (u32, f32).
-//! `bits()` accounting in `codec::Encoded` is the *information* cost model;
-//! this module is the byte-exact transport encoding (whose size the network
-//! simulator also records — the two are cross-checked in tests).
+//! (2 bits each), quantized levels are i16 LE, sparse pairs are (u32, f32),
+//! and sharded messages nest each part's frame behind a u32 length so the
+//! per-shard scales travel inside their parts. `bits()` accounting in
+//! `codec::Encoded` is the *information* cost model; this module is the
+//! byte-exact transport encoding (whose size the network simulator also
+//! records — the two are cross-checked in tests).
 //!
 //! Layout: `u8 tag | u32 dim | payload…` (little-endian throughout).
+//! The hot path is [`write_into`], which appends to a caller-owned buffer
+//! (see [`super::CodecScratch::bytes`]); [`to_bytes`] is the allocating
+//! convenience wrapper.
 
 use anyhow::{bail, Result};
 use byteorder::{LittleEndian as LE, ReadBytesExt, WriteBytesExt};
@@ -19,10 +24,17 @@ const TAG_QUANTIZED: u8 = 1;
 const TAG_SPARSE: u8 = 2;
 const TAG_DENSE: u8 = 3;
 const TAG_TERNARY_CHUNKED: u8 = 4;
+const TAG_SHARDED: u8 = 5;
 
-/// Pack ternary codes 2 bits each: 00 -> 0, 01 -> +1, 10 -> -1.
-fn pack_ternary(codes: &[i8]) -> Vec<u8> {
-    let mut out = vec![0u8; codes.len().div_ceil(4)];
+/// Sharded frames may nest (a part can itself be sharded); cap the depth so
+/// a malicious frame cannot blow the parser's stack.
+const MAX_SHARD_DEPTH: usize = 8;
+
+/// Append packed ternary codes, 2 bits each: 00 -> 0, 01 -> +1, 10 -> -1.
+fn pack_ternary_into(codes: &[i8], out: &mut Vec<u8>) {
+    let start = out.len();
+    out.resize(start + codes.len().div_ceil(4), 0);
+    let packed = &mut out[start..];
     for (i, &c) in codes.iter().enumerate() {
         let bits: u8 = match c {
             0 => 0b00,
@@ -30,9 +42,8 @@ fn pack_ternary(codes: &[i8]) -> Vec<u8> {
             -1 => 0b10,
             other => panic!("non-ternary code {other}"),
         };
-        out[i / 4] |= bits << ((i % 4) * 2);
+        packed[i / 4] |= bits << ((i % 4) * 2);
     }
-    out
 }
 
 fn unpack_ternary(bytes: &[u8], n: usize) -> Result<Vec<i8>> {
@@ -49,14 +60,15 @@ fn unpack_ternary(bytes: &[u8], n: usize) -> Result<Vec<i8>> {
     Ok(codes)
 }
 
-pub fn to_bytes(e: &Encoded) -> Vec<u8> {
-    let mut out = Vec::with_capacity(16 + e.dim / 2);
+/// Append the frame for `e` to `out` (the allocation-free hot path: with a
+/// warm buffer this only writes).
+pub fn write_into(e: &Encoded, out: &mut Vec<u8>) {
     match &e.payload {
         Payload::Ternary { scale, codes } => {
             out.write_u8(TAG_TERNARY).unwrap();
             out.write_u32::<LE>(e.dim as u32).unwrap();
             out.write_f32::<LE>(*scale).unwrap();
-            out.extend_from_slice(&pack_ternary(codes));
+            pack_ternary_into(codes, out);
         }
         Payload::TernaryChunked { chunk, scales, codes } => {
             out.write_u8(TAG_TERNARY_CHUNKED).unwrap();
@@ -65,7 +77,7 @@ pub fn to_bytes(e: &Encoded) -> Vec<u8> {
             for &s in scales {
                 out.write_f32::<LE>(s).unwrap();
             }
-            out.extend_from_slice(&pack_ternary(codes));
+            pack_ternary_into(codes, out);
         }
         Payload::Quantized { norm, levels, q } => {
             out.write_u8(TAG_QUANTIZED).unwrap();
@@ -92,11 +104,53 @@ pub fn to_bytes(e: &Encoded) -> Vec<u8> {
                 out.write_f32::<LE>(v).unwrap();
             }
         }
+        Payload::Sharded { parts } => {
+            out.write_u8(TAG_SHARDED).unwrap();
+            out.write_u32::<LE>(e.dim as u32).unwrap();
+            out.write_u32::<LE>(parts.len() as u32).unwrap();
+            for p in parts {
+                // u32 length prefix, patched after the part is written.
+                let len_pos = out.len();
+                out.write_u32::<LE>(0).unwrap();
+                write_into(p, out);
+                let part_len = (out.len() - len_pos - 4) as u32;
+                out[len_pos..len_pos + 4].copy_from_slice(&part_len.to_le_bytes());
+            }
+        }
     }
+}
+
+pub fn to_bytes(e: &Encoded) -> Vec<u8> {
+    let mut out = Vec::with_capacity(frame_len(e));
+    write_into(e, &mut out);
     out
 }
 
-pub fn from_bytes(mut buf: &[u8]) -> Result<Encoded> {
+/// Exact byte length of the frame [`write_into`] produces for `e` — lets
+/// hot paths allocate the frame once with the right capacity.
+pub fn frame_len(e: &Encoded) -> usize {
+    match &e.payload {
+        Payload::Ternary { codes, .. } => 9 + codes.len().div_ceil(4),
+        Payload::TernaryChunked { scales, codes, .. } => {
+            9 + 4 * scales.len() + codes.len().div_ceil(4)
+        }
+        Payload::Quantized { q, .. } => 13 + 2 * q.len(),
+        Payload::Sparse { pairs } => 9 + 8 * pairs.len(),
+        Payload::Dense { values } => 5 + 4 * values.len(),
+        Payload::Sharded { parts } => {
+            9 + parts.iter().map(|p| 4 + frame_len(p)).sum::<usize>()
+        }
+    }
+}
+
+/// Parse one frame. The whole buffer must be consumed: trailing bytes are
+/// an error, so parse→serialize is byte-exact by construction (the network
+/// simulator's byte accounting stays in sync with the information content).
+pub fn from_bytes(buf: &[u8]) -> Result<Encoded> {
+    from_bytes_at_depth(buf, 0)
+}
+
+fn from_bytes_at_depth(mut buf: &[u8], depth: usize) -> Result<Encoded> {
     let tag = buf.read_u8()?;
     let dim = buf.read_u32::<LE>()? as usize;
     let payload = match tag {
@@ -107,6 +161,7 @@ pub fn from_bytes(mut buf: &[u8]) -> Result<Encoded> {
                 bail!("ternary payload truncated: {} < {need}", buf.len());
             }
             let codes = unpack_ternary(&buf[..need], dim)?;
+            buf = &buf[need..];
             Payload::Ternary { scale, codes }
         }
         TAG_TERNARY_CHUNKED => {
@@ -115,7 +170,10 @@ pub fn from_bytes(mut buf: &[u8]) -> Result<Encoded> {
                 bail!("zero chunk size");
             }
             let nchunks = dim.div_ceil(chunk as usize);
-            let mut scales = Vec::with_capacity(nchunks);
+            // Capacity hints are capped by what the frame could possibly
+            // hold, so a forged dim header cannot force a huge allocation
+            // before the reads below fail (same for every variant).
+            let mut scales = Vec::with_capacity(nchunks.min(buf.len() / 4));
             for _ in 0..nchunks {
                 scales.push(buf.read_f32::<LE>()?);
             }
@@ -124,12 +182,13 @@ pub fn from_bytes(mut buf: &[u8]) -> Result<Encoded> {
                 bail!("chunked ternary payload truncated");
             }
             let codes = unpack_ternary(&buf[..need], dim)?;
+            buf = &buf[need..];
             Payload::TernaryChunked { chunk, scales, codes }
         }
         TAG_QUANTIZED => {
             let norm = buf.read_f32::<LE>()?;
             let levels = buf.read_u32::<LE>()?;
-            let mut q = Vec::with_capacity(dim);
+            let mut q = Vec::with_capacity(dim.min(buf.len() / 2));
             for _ in 0..dim {
                 q.push(buf.read_i16::<LE>()?);
             }
@@ -140,7 +199,7 @@ pub fn from_bytes(mut buf: &[u8]) -> Result<Encoded> {
             if n > dim {
                 bail!("sparse nnz {n} exceeds dim {dim}");
             }
-            let mut pairs = Vec::with_capacity(n);
+            let mut pairs = Vec::with_capacity(n.min(buf.len() / 8));
             for _ in 0..n {
                 let i = buf.read_u32::<LE>()?;
                 let v = buf.read_f32::<LE>()?;
@@ -152,14 +211,48 @@ pub fn from_bytes(mut buf: &[u8]) -> Result<Encoded> {
             Payload::Sparse { pairs }
         }
         TAG_DENSE => {
-            let mut values = Vec::with_capacity(dim);
+            let mut values = Vec::with_capacity(dim.min(buf.len() / 4));
             for _ in 0..dim {
                 values.push(buf.read_f32::<LE>()?);
             }
             Payload::Dense { values }
         }
+        TAG_SHARDED => {
+            if depth >= MAX_SHARD_DEPTH {
+                bail!("sharded frame nested deeper than {MAX_SHARD_DEPTH}");
+            }
+            let nparts = buf.read_u32::<LE>()? as usize;
+            if nparts > dim.max(1) {
+                bail!("sharded part count {nparts} exceeds dim {dim}");
+            }
+            // Every part costs at least a 4-byte length prefix, so a frame
+            // of `buf.len()` bytes cannot hold more than len/4 parts —
+            // bounds the pre-allocation against forged headers.
+            if nparts > buf.len() / 4 {
+                bail!("sharded part count {nparts} exceeds frame capacity {}", buf.len());
+            }
+            let mut parts = Vec::with_capacity(nparts);
+            let mut covered = 0usize;
+            for _ in 0..nparts {
+                let len = buf.read_u32::<LE>()? as usize;
+                if buf.len() < len {
+                    bail!("sharded part truncated: {} < {len}", buf.len());
+                }
+                let part = from_bytes_at_depth(&buf[..len], depth + 1)?;
+                covered += part.dim;
+                parts.push(part);
+                buf = &buf[len..];
+            }
+            if covered != dim {
+                bail!("shard dims total {covered}, expected {dim}");
+            }
+            Payload::Sharded { parts }
+        }
         other => bail!("unknown payload tag {other}"),
     };
+    if !buf.is_empty() {
+        bail!("{} trailing bytes after payload (tag {tag})", buf.len());
+    }
     Ok(Encoded { dim, payload })
 }
 
@@ -167,15 +260,18 @@ pub fn from_bytes(mut buf: &[u8]) -> Result<Encoded> {
 mod tests {
     use super::*;
     use crate::codec::{
-        identity::IdentityCodec, qsgd::QsgdCodec, sparse::SparseCodec,
-        ternary::TernaryCodec, Codec,
+        identity::IdentityCodec, qsgd::QsgdCodec, sharded::ShardedCodec,
+        sparse::SparseCodec, ternary::TernaryCodec, Codec,
     };
     use crate::util::Rng;
 
     fn roundtrip(e: &Encoded) {
         let bytes = to_bytes(e);
+        assert_eq!(bytes.len(), frame_len(e), "frame_len must be exact");
         let back = from_bytes(&bytes).expect("decode");
         assert_eq!(&back, e);
+        // Byte-exact: re-serializing the parse reproduces the frame.
+        assert_eq!(to_bytes(&back), bytes);
     }
 
     #[test]
@@ -187,6 +283,8 @@ mod tests {
         roundtrip(&QsgdCodec::new(4).encode(&v, &mut rng));
         roundtrip(&SparseCodec::new(0.2).encode(&v, &mut rng));
         roundtrip(&IdentityCodec.encode(&v, &mut rng));
+        roundtrip(&ShardedCodec::new(TernaryCodec, 4).encode(&v, &mut rng));
+        roundtrip(&ShardedCodec::new(QsgdCodec::new(4), 3).encode(&v, &mut rng));
     }
 
     #[test]
@@ -195,6 +293,7 @@ mod tests {
         for d in [1usize, 2, 3, 4, 5, 7, 8, 9] {
             let v: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
             roundtrip(&TernaryCodec.encode(&v, &mut rng));
+            roundtrip(&ShardedCodec::new(TernaryCodec, 3).encode(&v, &mut rng));
         }
     }
 
@@ -209,9 +308,30 @@ mod tests {
     }
 
     #[test]
+    fn sharded_frame_overhead_is_9_bytes_plus_4_per_part() {
+        let mut rng = Rng::new(7);
+        let v: Vec<f32> = (0..1024).map(|_| rng.gauss_f32()).collect();
+        let e = ShardedCodec::new(TernaryCodec, 4).encode(&v, &mut rng);
+        // outer header 9 + 4 * (len prefix 4 + part header 9 + 64 packed)
+        assert_eq!(to_bytes(&e).len(), 9 + 4 * (4 + 9 + 64));
+    }
+
+    #[test]
+    fn write_into_appends_and_matches_to_bytes() {
+        let mut rng = Rng::new(8);
+        let v: Vec<f32> = (0..33).map(|_| rng.gauss_f32()).collect();
+        let e = TernaryCodec.encode(&v, &mut rng);
+        let mut buf = vec![0xAA, 0xBB];
+        write_into(&e, &mut buf);
+        assert_eq!(&buf[..2], &[0xAA, 0xBB]);
+        assert_eq!(&buf[2..], &to_bytes(&e)[..]);
+    }
+
+    #[test]
     fn pack_unpack_exact() {
         let codes: Vec<i8> = (0..37).map(|i| ((i % 3) as i8) - 1).collect();
-        let packed = pack_ternary(&codes);
+        let mut packed = Vec::new();
+        pack_ternary_into(&codes, &mut packed);
         assert_eq!(unpack_ternary(&packed, 37).unwrap(), codes);
     }
 
@@ -230,6 +350,8 @@ mod tests {
         let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
         let bytes = to_bytes(&TernaryCodec.encode(&v, &mut rng));
         assert!(from_bytes(&bytes[..8]).is_err());
+        let sharded = to_bytes(&ShardedCodec::new(TernaryCodec, 2).encode(&v, &mut rng));
+        assert!(from_bytes(&sharded[..sharded.len() - 3]).is_err());
     }
 
     #[test]
@@ -240,5 +362,76 @@ mod tests {
         };
         let bytes = to_bytes(&e);
         assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn sharded_with_wrong_tiling_rejected() {
+        let e = Encoded {
+            dim: 10,
+            payload: Payload::Sharded {
+                parts: vec![Encoded {
+                    dim: 3,
+                    payload: Payload::Dense { values: vec![1.0; 3] },
+                }],
+            },
+        };
+        let bytes = to_bytes(&e);
+        assert!(from_bytes(&bytes).is_err(), "parts must tile dim exactly");
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut rng = Rng::new(9);
+        let v: Vec<f32> = (0..32).map(|_| rng.gauss_f32()).collect();
+        // Garbage after a flat frame...
+        let mut bytes = to_bytes(&TernaryCodec.encode(&v, &mut rng));
+        bytes.extend_from_slice(&[0xDE, 0xAD]);
+        assert!(from_bytes(&bytes).is_err());
+        // ...and inside a sharded part whose length prefix overstates it.
+        let e = ShardedCodec::new(TernaryCodec, 2).encode(&v, &mut rng);
+        let mut bytes = to_bytes(&e);
+        // First part's length prefix sits right after tag+dim+nparts.
+        let len_pos = 9;
+        let len = u32::from_le_bytes(bytes[len_pos..len_pos + 4].try_into().unwrap());
+        bytes[len_pos..len_pos + 4].copy_from_slice(&(len + 2).to_le_bytes());
+        let part_end = len_pos + 4 + len as usize;
+        bytes.insert(part_end, 0xEF);
+        bytes.insert(part_end, 0xBE);
+        assert!(from_bytes(&bytes).is_err(), "padded part must be rejected");
+    }
+
+    #[test]
+    fn forged_sharded_part_count_rejected_before_allocation() {
+        // tag=5, dim=u32::MAX, nparts=u32::MAX, no part bytes: must be
+        // rejected by the frame-capacity bound, not attempted as a huge
+        // Vec::with_capacity.
+        let mut bytes = vec![5u8];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn forged_dim_headers_error_without_huge_allocation() {
+        // Every variant: a frame claiming dim=u32::MAX with an empty body
+        // must fail on the truncated reads, and its capacity hints must be
+        // bounded by the (tiny) frame, not the forged header.
+        for tag in [0u8, 1, 2, 3, 4] {
+            let mut bytes = vec![tag];
+            bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+            // A few plausible-looking body bytes so the per-variant fixed
+            // fields parse and the element loops are entered.
+            bytes.extend_from_slice(&[1, 0, 0, 0, 1, 0, 0, 0]);
+            assert!(from_bytes(&bytes).is_err(), "tag {tag}");
+        }
+    }
+
+    #[test]
+    fn deeply_nested_sharded_rejected() {
+        let mut e = Encoded { dim: 1, payload: Payload::Dense { values: vec![1.0] } };
+        for _ in 0..12 {
+            e = Encoded { dim: 1, payload: Payload::Sharded { parts: vec![e] } };
+        }
+        assert!(from_bytes(&to_bytes(&e)).is_err());
     }
 }

@@ -18,7 +18,7 @@
 
 use std::time::Instant;
 
-use crate::codec::Codec;
+use crate::codec::{Codec, CodecScratch};
 use crate::coordinator::metrics::{RoundRecord, Trace};
 use crate::objectives::Objective;
 use crate::optim::{EstimatorKind, GradEstimator, Lbfgs, StepSchedule};
@@ -131,6 +131,14 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
     let mut v_avg = vec![0.0f32; dim];
     let mut full_grad_buf = vec![0.0f32; dim];
     let mut mean_ref = vec![0.0f32; dim];
+    let mut w_prev = vec![0.0f32; dim];
+    // One scratch arena per worker: encode/decode buffers are allocated in
+    // the first rounds and reused, so the steady-state loop is
+    // allocation-free (see codec::CodecScratch).
+    let mut scratches: Vec<CodecScratch> = (0..m).map(|_| CodecScratch::new()).collect();
+    for s in scratches.iter_mut() {
+        s.warm(dim);
+    }
 
     if cfg.warm_start_reference {
         obj.full_grad(&w, &mut full_grad_buf);
@@ -211,23 +219,25 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             };
             cnz_est.observe(&g, gref);
 
-            let enc = tng.encode(&g, gref, &mut rngs[wk]);
-            bits_up += (enc.bits() + sig_bits + scalar_bits) as u64;
+            let scratch = &mut scratches[wk];
+            tng.encode_into(&g, gref, &mut rngs[wk], scratch);
+            bits_up += (scratch.enc.bits() + sig_bits + scalar_bits) as u64;
 
-            // Leader decodes and accumulates.
-            let v = tng.decode(&enc, gref);
-            math::axpy(1.0 / m as f32, &v, &mut v_avg);
+            // Leader decodes and accumulates (same arena, no allocation).
+            let CodecScratch { enc, decoded, .. } = scratch;
+            tng.decode_into(enc, gref, decoded);
+            math::axpy(1.0 / m as f32, decoded, &mut v_avg);
         }
 
         // ---- leader: precondition + step --------------------------------
-        let w_prev = w.clone();
-        let dir: Vec<f32> = if let Some(l) = lbfgs.as_mut() {
+        w_prev.copy_from_slice(&w);
+        if let Some(l) = lbfgs.as_mut() {
             l.observe(&w, &v_avg);
-            l.direction(&v_avg)
+            let dir = l.direction(&v_avg);
+            math::axpy(-eta, &dir, &mut w);
         } else {
-            v_avg.clone()
-        };
-        math::axpy(-eta, &dir, &mut w);
+            math::axpy(-eta, &v_avg, &mut w);
+        }
 
         // ---- advance shared reference state ------------------------------
         let ctx = RoundCtx {
@@ -286,8 +296,8 @@ impl<'a> Codec for PassthroughCodec<'a> {
         self.0.name()
     }
 
-    fn encode(&self, v: &[f32], rng: &mut Rng) -> crate::codec::Encoded {
-        self.0.encode(v, rng)
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut crate::codec::Encoded) {
+        self.0.encode_into(v, rng, out)
     }
 
     fn is_unbiased(&self) -> bool {

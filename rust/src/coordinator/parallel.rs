@@ -5,7 +5,14 @@
 //! The state machines are the same as `driver::run`; determinism is kept by
 //! (a) per-worker RNG streams split identically, and (b) the leader folding
 //! gradients in worker-id order regardless of arrival order. The
-//! `driver_parallel_equivalence` integration test pins trace equality.
+//! `golden_trace` integration test pins trace equality between the two
+//! runtimes, with and without sharded compression.
+//!
+//! Hot-path notes: every worker owns a `CodecScratch` arena, so the
+//! normalize→encode→frame path performs no steady-state allocation beyond
+//! the channel frame itself, and a `ShardedCodec` additionally fans each
+//! message's shards out over OS threads *inside* the worker — that is where
+//! per-round compression scales past one core (see DESIGN.md §Sharding).
 //!
 //! Scope note: the `SvrgAnchor` *reference* strategy needs a full-gradient
 //! broadcast that only the deterministic driver implements; this runtime
@@ -16,7 +23,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::codec::Codec;
+use crate::codec::{Codec, CodecScratch};
 use crate::coordinator::driver::DriverConfig;
 use crate::coordinator::metrics::{RoundRecord, Trace};
 use crate::coordinator::network::{star, StarFabric, WorkerPort};
@@ -46,8 +53,8 @@ impl<'a> Codec for BorrowedCodec<'a> {
     fn name(&self) -> String {
         self.0.name()
     }
-    fn encode(&self, v: &[f32], rng: &mut Rng) -> crate::codec::Encoded {
-        self.0.encode(v, rng)
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut crate::codec::Encoded) {
+        self.0.encode_into(v, rng, out)
     }
     fn is_unbiased(&self) -> bool {
         self.0.is_unbiased()
@@ -73,6 +80,9 @@ fn worker_loop(
     let mut w = cfg.w0.clone().unwrap_or_else(|| vec![0.0f32; dim]);
     let mut g = vec![0.0f32; dim];
     let mut mean_ref = vec![0.0f32; dim];
+    let mut w_prev = vec![0.0f32; dim];
+    let mut scratch = CodecScratch::new();
+    scratch.warm(dim);
 
     for t in 0..cfg.rounds {
         // SVRG anchor synchronization.
@@ -98,23 +108,29 @@ fn worker_loop(
             } else {
                 (0.0, selector.current(ref_idx))
             };
-        let enc = tng.encode(&g, gref, &mut rng);
-        port.up.send(
-            Msg::Grad { worker: id as u16, round: t as u32, enc, scalar, ref_idx: ref_idx as u8 }
-                .to_bytes(),
-        )?;
+        // Normalize + compress into the reusable arena (a ShardedCodec
+        // fans the shards out over threads here), then frame the message
+        // straight from the borrowed Encoded.
+        tng.encode_into(&g, gref, &mut rng, &mut scratch);
+        port.up.send(Msg::grad_frame(
+            id as u16,
+            t as u32,
+            &scratch.enc,
+            scalar,
+            ref_idx as u8,
+        ))?;
 
         // Apply the round's aggregate to local replicas.
         match Msg::from_bytes(&port.rx.recv()?)? {
             Msg::Aggregate { v, eta, .. } => {
-                let w_prev = w.clone();
-                let dir: Vec<f32> = if let Some(l) = lbfgs.as_mut() {
+                w_prev.copy_from_slice(&w);
+                if let Some(l) = lbfgs.as_mut() {
                     l.observe(&w, &v);
-                    l.direction(&v)
+                    let dir = l.direction(&v);
+                    math::axpy(-eta, &dir, &mut w);
                 } else {
-                    v.clone()
-                };
-                math::axpy(-eta, &dir, &mut w);
+                    math::axpy(-eta, &v, &mut w);
+                }
                 selector.end_round(&RoundCtx {
                     round: t,
                     decoded_avg: &v,
@@ -155,6 +171,9 @@ fn leader_loop(
     let mut w = cfg.w0.clone().unwrap_or_else(|| vec![0.0f32; dim]);
     let mut records = Vec::new();
     let mut mean_ref = vec![0.0f32; dim];
+    let mut w_prev = vec![0.0f32; dim];
+    let mut scratch = CodecScratch::new();
+    scratch.warm(dim);
     let total_n: usize = shard_sizes.iter().sum();
     let svrg = matches!(cfg.estimator, crate::optim::EstimatorKind::Svrg { .. });
 
@@ -216,20 +235,20 @@ fn leader_loop(
                 } else {
                     selector.current(ref_idx as usize)
                 };
-            let v = tng.decode(&enc, gref);
-            cnz.observe(&v, gref); // decoded-side estimate (diagnostic)
-            math::axpy(1.0 / m as f32, &v, &mut v_avg);
+            tng.decode_into(&enc, gref, &mut scratch.decoded);
+            cnz.observe(&scratch.decoded, gref); // decoded-side estimate (diagnostic)
+            math::axpy(1.0 / m as f32, &scratch.decoded, &mut v_avg);
         }
 
         // Step + broadcast.
-        let w_prev = w.clone();
-        let dir: Vec<f32> = if let Some(l) = lbfgs.as_mut() {
+        w_prev.copy_from_slice(&w);
+        if let Some(l) = lbfgs.as_mut() {
             l.observe(&w, &v_avg);
-            l.direction(&v_avg)
+            let dir = l.direction(&v_avg);
+            math::axpy(-eta, &dir, &mut w);
         } else {
-            v_avg.clone()
-        };
-        math::axpy(-eta, &dir, &mut w);
+            math::axpy(-eta, &v_avg, &mut w);
+        }
         let msg = Msg::Aggregate { round: t as u32, v: v_avg.clone(), eta };
         for d in &fabric.down {
             d.send(msg.to_bytes())?;
@@ -313,11 +332,12 @@ pub fn run(
     let shard_sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
     let (fabric, ports) = star(m);
 
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for (id, (port, shard)) in ports.into_iter().zip(shards.into_iter()).enumerate() {
             let cfg_ref = &*cfg;
-            handles.push(scope.spawn(move |_| worker_loop(id, obj, codec, cfg_ref, shard, port)));
+            handles
+                .push(scope.spawn(move || worker_loop(id, obj, codec, cfg_ref, shard, port)));
         }
         let trace = leader_loop(obj, codec, label, cfg, &shard_sizes, fabric);
         for h in handles {
@@ -325,12 +345,12 @@ pub fn run(
         }
         trace
     })
-    .expect("scope panicked")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::sharded::ShardedCodec;
     use crate::codec::ternary::TernaryCodec;
     use crate::data::synthetic::{generate, SkewConfig};
     use crate::objectives::logreg::LogReg;
@@ -355,6 +375,24 @@ mod tests {
         let seq = crate::coordinator::driver::run(&obj, &TernaryCodec, "seq", &cfg);
         let par = run(&obj, &TernaryCodec, "par", &cfg).unwrap();
         assert_eq!(seq.final_w, par.final_w, "trajectories must be identical");
+    }
+
+    #[test]
+    fn threaded_matches_driver_with_sharded_codec() {
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 25,
+            workers: 3,
+            schedule: StepSchedule::Const(0.3),
+            references: vec![crate::tng::ReferenceKind::AvgDecoded { window: 1 }],
+            record_every: 5,
+            ..Default::default()
+        };
+        let codec = ShardedCodec::new(TernaryCodec, 4).with_threads(2);
+        let seq = crate::coordinator::driver::run(&obj, &codec, "seq", &cfg);
+        let par = run(&obj, &codec, "par", &cfg).unwrap();
+        assert_eq!(seq.final_w, par.final_w, "sharded trajectories must be identical");
+        assert!(seq.total_up_bits > 0);
     }
 
     #[test]

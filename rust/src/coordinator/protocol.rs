@@ -57,10 +57,41 @@ impl Msg {
         }
     }
 
+    /// Serialize a gradient frame straight from a borrowed [`Encoded`] —
+    /// the worker hot path sends from its scratch arena without cloning the
+    /// message into an owned [`Msg::Grad`] first. Byte-identical to
+    /// `Msg::Grad { .. }.to_bytes()`.
+    pub fn grad_frame(
+        worker: u16,
+        round: u32,
+        enc: &Encoded,
+        scalar: f32,
+        ref_idx: u8,
+    ) -> Vec<u8> {
+        // Exact capacity: 11-byte frame header + 5-byte grad body prefix +
+        // the wire frame — the one unavoidable channel allocation per send.
+        let mut out = Vec::with_capacity(16 + wire::frame_len(enc));
+        out.write_u8(K_GRAD).unwrap();
+        out.write_u16::<LE>(worker).unwrap();
+        out.write_u32::<LE>(round).unwrap();
+        // u32 body length, patched once the body is written.
+        let len_pos = out.len();
+        out.write_u32::<LE>(0).unwrap();
+        out.write_f32::<LE>(scalar).unwrap();
+        out.write_u8(ref_idx).unwrap();
+        wire::write_into(enc, &mut out);
+        let body_len = (out.len() - len_pos - 4) as u32;
+        out[len_pos..len_pos + 4].copy_from_slice(&body_len.to_le_bytes());
+        out
+    }
+
     pub fn to_bytes(&self) -> Vec<u8> {
+        if let Msg::Grad { worker, round, enc, scalar, ref_idx } = self {
+            return Msg::grad_frame(*worker, *round, enc, *scalar, *ref_idx);
+        }
         let mut out = Vec::new();
         let (kind, worker, round) = match self {
-            Msg::Grad { worker, round, .. } => (K_GRAD, *worker, *round),
+            Msg::Grad { .. } => unreachable!("handled above"),
             Msg::AnchorGrad { worker, round, .. } => (K_ANCHOR_GRAD, *worker, *round),
             Msg::Aggregate { round, .. } => (K_AGGREGATE, 0, *round),
             Msg::AnchorMu { round, .. } => (K_ANCHOR_MU, 0, *round),
@@ -71,11 +102,7 @@ impl Msg {
         out.write_u32::<LE>(round).unwrap();
         let mut body = Vec::new();
         match self {
-            Msg::Grad { enc, scalar, ref_idx, .. } => {
-                body.write_f32::<LE>(*scalar).unwrap();
-                body.write_u8(*ref_idx).unwrap();
-                body.extend_from_slice(&wire::to_bytes(enc));
-            }
+            Msg::Grad { .. } => unreachable!("handled above"),
             Msg::AnchorGrad { grad, .. } => {
                 body.write_u32::<LE>(grad.len() as u32).unwrap();
                 write_f32s(&mut body, grad);
@@ -162,6 +189,30 @@ mod tests {
         let m = Msg::Grad { worker: 0, round: 0, enc, scalar: 0.0, ref_idx: 0 };
         // header 11 + scalar 4 + ref_idx 1
         assert_eq!(m.to_bytes().len(), wire_len + 16);
+    }
+
+    #[test]
+    fn grad_frame_layout_pinned_byte_by_byte() {
+        // `to_bytes` delegates Grad to `grad_frame`, so comparing the two
+        // would be tautological — pin the layout against an independently
+        // hand-built frame instead: kind u8 | worker u16 | round u32 |
+        // body_len u32 | scalar f32 | ref_idx u8 | wire frame.
+        let mut rng = Rng::new(6);
+        let v: Vec<f32> = (0..100).map(|_| rng.gauss_f32()).collect();
+        let enc = crate::codec::sharded::ShardedCodec::new(TernaryCodec, 4)
+            .encode(&v, &mut rng);
+        let wire_bytes = wire::to_bytes(&enc);
+        let mut expect = vec![1u8]; // K_GRAD
+        expect.extend_from_slice(&2u16.to_le_bytes());
+        expect.extend_from_slice(&9u32.to_le_bytes());
+        expect.extend_from_slice(&((5 + wire_bytes.len()) as u32).to_le_bytes());
+        expect.extend_from_slice(&1.25f32.to_le_bytes());
+        expect.push(3u8); // ref_idx
+        expect.extend_from_slice(&wire_bytes);
+        assert_eq!(Msg::grad_frame(2, 9, &enc, 1.25, 3), expect);
+        // And the parser accepts it as the equivalent owned message.
+        let back = Msg::from_bytes(&expect).unwrap();
+        assert_eq!(back, Msg::Grad { worker: 2, round: 9, enc, scalar: 1.25, ref_idx: 3 });
     }
 
     #[test]

@@ -16,13 +16,24 @@ use crate::util::csv::CsvWriter;
 
 /// Build a codec from a spec string:
 /// `tg` | `ternary`, `qg` | `qsgd:<levels>`, `sg` | `sparse:<ratio>`,
-/// `sign`, `topk:<k>`, `fp32`.
+/// `sign`, `topk:<k>`, `fp32`, and the sharded wrapper
+/// `shard:<shards>:<inner spec>` (e.g. `shard:4:ternary`, `shard:8:qsgd:4`).
 pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
     let (name, arg) = match spec.split_once(':') {
         Some((n, a)) => (n, Some(a)),
         None => (spec, None),
     };
     Ok(match name {
+        "shard" => {
+            let Some((n, inner)) = arg.and_then(|a| a.split_once(':')) else {
+                bail!("shard spec is shard:<shards>:<inner codec>, got '{spec}'");
+            };
+            let shards: usize = n.parse()?;
+            if shards == 0 {
+                bail!("shard count must be >= 1 in '{spec}'");
+            }
+            Box::new(crate::codec::sharded::ShardedCodec::new(make_codec(inner)?, shards))
+        }
         "tg" | "ternary" => Box::new(TernaryCodec),
         "cternary" => {
             let chunk: usize = arg.unwrap_or("4096").parse()?;
@@ -163,8 +174,12 @@ mod tests {
         assert_eq!(make_codec("sign").unwrap().name(), "sign");
         assert_eq!(make_codec("topk:16").unwrap().name(), "top16");
         assert_eq!(make_codec("fp32").unwrap().name(), "fp32");
+        assert_eq!(make_codec("shard:4:ternary").unwrap().name(), "shard4-ternary");
+        assert_eq!(make_codec("shard:2:qsgd:8").unwrap().name(), "shard2-qsgd8");
         assert!(make_codec("nope").is_err());
         assert!(make_codec("qsgd:abc").is_err());
+        assert!(make_codec("shard:0:ternary").is_err());
+        assert!(make_codec("shard:ternary").is_err());
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //! * **L2/L1 (python/compile)** — JAX models + Pallas kernels, AOT-lowered
 //!   to HLO text once at build time.
 //! * **runtime** — loads those artifacts through the XLA PJRT C API and
-//!   executes them from the Rust hot path (no Python at runtime).
+//!   executes them from the Rust hot path (no Python at runtime). Gated
+//!   behind the `xla` cargo feature: the offline build has no `xla` crate,
+//!   so the default build is the pure-Rust L3 stack.
 
 pub mod cli;
 pub mod codec;
@@ -23,6 +25,7 @@ pub mod data;
 pub mod experiments;
 pub mod objectives;
 pub mod optim;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod tng;
 pub mod util;

@@ -45,6 +45,7 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn info() -> Result<()> {
     let dir = tng::runtime::default_artifact_dir();
     println!("artifact dir: {}", dir.display());
@@ -62,6 +63,13 @@ fn info() -> Result<()> {
         }
         Err(err) => println!("PJRT unavailable: {err}"),
     }
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn info() -> Result<()> {
+    println!("PJRT runtime disabled: this build has no `xla` feature.");
+    println!("The pure-Rust coordinator (fig1..fig4, run) is fully available.");
     Ok(())
 }
 

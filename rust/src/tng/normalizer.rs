@@ -13,7 +13,7 @@
 //! to `±clip` and treat `|g̃_d| < eps` as a zero-reference coordinate coded
 //! subtractively-at-zero (i.e. the raw value). Tests pin this behaviour.
 
-use crate::codec::{Codec, Encoded};
+use crate::codec::{Codec, CodecScratch, Encoded};
 use crate::util::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -63,43 +63,70 @@ impl<C: Codec> Tng<C> {
         format!("tn({})-{}", self.mode.name(), self.codec.name())
     }
 
-    /// Encode gradient `g` against the shared reference `gref`.
-    pub fn encode(&self, g: &[f32], gref: &[f32], rng: &mut Rng) -> Encoded {
+    /// Normalize + encode into the caller's scratch arena: `g − g̃` (or the
+    /// quotient form) is computed in place into `scratch.normalized` and
+    /// compressed into `scratch.enc` — zero allocation in the steady state.
+    pub fn encode_into(&self, g: &[f32], gref: &[f32], rng: &mut Rng, scratch: &mut CodecScratch) {
         assert_eq!(g.len(), gref.len());
-        let normalized = self.normalize(g, gref);
-        self.codec.encode(&normalized, rng)
+        let CodecScratch { normalized, enc, .. } = scratch;
+        self.normalize_into(g, gref, normalized);
+        self.codec.encode_into(normalized, rng, enc);
     }
 
-    /// Decode a received message back into gradient space.
+    /// Allocating convenience wrapper around [`Tng::encode_into`].
+    pub fn encode(&self, g: &[f32], gref: &[f32], rng: &mut Rng) -> Encoded {
+        let mut scratch = CodecScratch::new();
+        self.encode_into(g, gref, rng, &mut scratch);
+        scratch.enc
+    }
+
+    /// Decode a received message back into gradient space, into a reusable
+    /// buffer (resized to the message dimension).
+    pub fn decode_into(&self, e: &Encoded, gref: &[f32], out: &mut Vec<f32>) {
+        out.resize(e.dim, 0.0);
+        e.decode_into(out);
+        self.denormalize_in_place(out, gref);
+    }
+
+    /// Allocating convenience wrapper around [`Tng::decode_into`].
     pub fn decode(&self, e: &Encoded, gref: &[f32]) -> Vec<f32> {
-        let mut r = e.decode();
-        self.denormalize_in_place(&mut r, gref);
-        r
+        let mut out = Vec::new();
+        self.decode_into(e, gref, &mut out);
+        out
     }
 
-    /// The forward normalization map (exposed for the C_nz estimator).
-    pub fn normalize(&self, g: &[f32], gref: &[f32]) -> Vec<f32> {
+    /// The forward normalization map, into a reusable buffer (exposed for
+    /// the C_nz estimator).
+    pub fn normalize_into(&self, g: &[f32], gref: &[f32], out: &mut Vec<f32>) {
+        out.clear();
         match self.mode {
             Normalization::Subtractive => {
-                g.iter().zip(gref).map(|(&x, &r)| x - r).collect()
+                out.extend(g.iter().zip(gref).map(|(&x, &r)| x - r));
             }
-            Normalization::Quotient { eps, clip } => g
-                .iter()
-                .zip(gref)
-                .map(|(&x, &r)| {
+            Normalization::Quotient { eps, clip } => {
+                out.extend(g.iter().zip(gref).map(|(&x, &r)| {
                     if r.abs() < eps {
                         x // zero-reference coordinate: raw value
                     } else {
                         (x / r).clamp(-clip, clip)
                     }
-                })
-                .collect(),
-            Normalization::Combined { eps, clip } => g
-                .iter()
-                .zip(gref)
-                .map(|(&x, &r)| ((x - r) / (r.abs() + eps)).clamp(-clip, clip))
-                .collect(),
+                }));
+            }
+            Normalization::Combined { eps, clip } => {
+                out.extend(
+                    g.iter()
+                        .zip(gref)
+                        .map(|(&x, &r)| ((x - r) / (r.abs() + eps)).clamp(-clip, clip)),
+                );
+            }
         }
+    }
+
+    /// Allocating convenience wrapper around [`Tng::normalize_into`].
+    pub fn normalize(&self, g: &[f32], gref: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(g.len());
+        self.normalize_into(g, gref, &mut out);
+        out
     }
 
     fn denormalize_in_place(&self, r: &mut [f32], gref: &[f32]) {
@@ -229,6 +256,24 @@ mod tests {
         let with_ref = mse(&close, 14);
         let without = mse(&zeros, 15);
         assert!(with_ref < 0.01 * without, "with={with_ref} without={without}");
+    }
+
+    #[test]
+    fn scratch_and_allocating_paths_agree() {
+        let g = randv(20, 96);
+        let gref = randv(21, 96);
+        let tng = Tng::new(TernaryCodec);
+        let mut scratch = CodecScratch::new();
+        let mut out = Vec::new();
+        for round in 0..3u64 {
+            let mut r1 = Rng::new(100 + round);
+            let mut r2 = Rng::new(100 + round);
+            tng.encode_into(&g, &gref, &mut r1, &mut scratch);
+            let e = tng.encode(&g, &gref, &mut r2);
+            assert_eq!(scratch.enc, e, "round {round}");
+            tng.decode_into(&scratch.enc, &gref, &mut out);
+            assert_eq!(out, tng.decode(&e, &gref));
+        }
     }
 
     #[test]

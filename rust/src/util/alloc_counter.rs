@@ -1,0 +1,43 @@
+//! Allocation-counting global allocator, shared by the zero-allocation
+//! test (`rust/tests/alloc.rs`) and the codec bench so the two cannot
+//! drift apart.
+//!
+//! The library itself never registers it — only dedicated test/bench
+//! binaries opt in:
+//!
+//! ```text
+//! use tng::util::alloc_counter::{alloc_count, CountingAlloc};
+//! #[global_allocator]
+//! static GLOBAL: CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! `alloc` and `realloc` are counted (a realloc that grows is exactly the
+//! event the steady-state guarantee forbids); `dealloc` is free.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Number of counted allocation events since process start.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+}

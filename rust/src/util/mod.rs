@@ -1,6 +1,7 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! PRNG, vector math, logging, CSV traces, and the bench harness.
 
+pub mod alloc_counter;
 pub mod bench;
 pub mod csv;
 pub mod logger;

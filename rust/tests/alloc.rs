@@ -1,0 +1,85 @@
+//! Enforces the scratch-arena guarantee: once warm, the steady-state
+//! normalize→encode→wire→decode round performs **zero** heap allocation for
+//! the dense stochastic codecs (ternary, chunked ternary, QSGD) and for the
+//! serial sharded path.
+//!
+//! This file intentionally holds a single #[test]: the counting allocator
+//! is process-global, and a lone test keeps other threads from muddying the
+//! counters.
+
+use tng::codec::{
+    chunked::ChunkedTernaryCodec, qsgd::QsgdCodec, sharded::ShardedCodec,
+    ternary::TernaryCodec, wire, Codec, CodecScratch,
+};
+use tng::tng::Tng;
+use tng::util::alloc_counter::{alloc_count, CountingAlloc};
+use tng::util::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `rounds` steady-state rounds of encode → wire-serialize → decode
+/// through one warm arena and return the number of allocations observed.
+fn steady_state_allocs(codec: &dyn Codec, v: &[f32], rounds: usize) -> u64 {
+    let mut rng = Rng::new(5);
+    let mut scratch = CodecScratch::new();
+    scratch.warm(v.len());
+    let mut decoded = vec![0.0f32; v.len()];
+    // Warmup: let every buffer reach its steady-state capacity.
+    for _ in 0..4 {
+        codec.encode_into(v, &mut rng, &mut scratch.enc);
+        scratch.bytes.clear();
+        wire::write_into(&scratch.enc, &mut scratch.bytes);
+        scratch.enc.decode_into(&mut decoded);
+    }
+    let before = alloc_count();
+    for _ in 0..rounds {
+        codec.encode_into(v, &mut rng, &mut scratch.enc);
+        scratch.bytes.clear();
+        wire::write_into(&scratch.enc, &mut scratch.bytes);
+        scratch.enc.decode_into(&mut decoded);
+        std::hint::black_box(&decoded);
+    }
+    alloc_count() - before
+}
+
+#[test]
+fn steady_state_rounds_allocate_nothing() {
+    let d = 1 << 16;
+    let mut rng = Rng::new(1);
+    let v: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+
+    for (name, codec) in [
+        ("ternary", Box::new(TernaryCodec) as Box<dyn Codec>),
+        ("qsgd4", Box::new(QsgdCodec::new(4))),
+        ("cternary1024", Box::new(ChunkedTernaryCodec::new(1024))),
+        (
+            "shard4-ternary-serial",
+            Box::new(ShardedCodec::new(TernaryCodec, 4).with_threads(1)),
+        ),
+    ] {
+        let allocs = steady_state_allocs(codec.as_ref(), &v, 25);
+        assert_eq!(allocs, 0, "{name}: steady-state rounds must not allocate");
+    }
+
+    // The full TNG path: normalize into the arena, encode, decode back.
+    let gref: Vec<f32> = v.iter().map(|x| x * 0.9).collect();
+    let tng = Tng::new(TernaryCodec);
+    let mut scratch = CodecScratch::new();
+    let mut out = Vec::new();
+    for _ in 0..4 {
+        tng.encode_into(&v, &gref, &mut rng, &mut scratch);
+        tng.decode_into(&scratch.enc, &gref, &mut out);
+    }
+    let before = alloc_count();
+    for _ in 0..25 {
+        tng.encode_into(&v, &gref, &mut rng, &mut scratch);
+        tng.decode_into(&scratch.enc, &gref, &mut out);
+        std::hint::black_box(&out);
+    }
+    assert_eq!(
+        alloc_count() - before,
+        0,
+        "TNG normalize+encode+decode must not allocate in the steady state"
+    );
+}

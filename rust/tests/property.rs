@@ -2,17 +2,21 @@
 //! is a seeded-case loop — failures print the seed for exact replay).
 //!
 //! Invariants, per codec and across the protocol stack:
+//!   * decode(encode(g)) is an *unbiased* estimator of g for the unbiased
+//!     codecs — mean over >= 1k seeded trials within a CLT bound;
 //!   * decode(encode(v)) has the right dim and finite values;
-//!   * wire roundtrip is the identity on Encoded;
+//!   * wire roundtrip is byte-exact and the identity on Encoded, for every
+//!     Payload variant including the sharded per-shard-scales payload;
 //!   * reconstruction error respects each codec's bound;
 //!   * protocol Msg roundtrip is the identity;
 //!   * TNG normalize/denormalize is the identity for the exact codec;
-//!   * bit accounting is monotone in nnz and >= the entropy bound's floor.
+//!   * bit accounting is min(dense, sparse), positive for dim > 0, and
+//!     above the adaptive-coder floor's sanity checks.
 
 use tng::codec::{
     chunked::ChunkedTernaryCodec, identity::IdentityCodec, qsgd::QsgdCodec,
-    signsgd::SignCodec, sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec,
-    wire, Codec,
+    sharded::ShardedCodec, signsgd::SignCodec, sparse::SparseCodec,
+    ternary::TernaryCodec, topk::TopKCodec, wire, Codec, Encoded, Payload,
 };
 use tng::coordinator::protocol::Msg;
 use tng::tng::{Normalization, Tng};
@@ -49,7 +53,76 @@ fn all_codecs(rng: &mut Rng, d: usize) -> Vec<Box<dyn Codec>> {
         Box::new(SignCodec),
         Box::new(TopKCodec::new(1 + rng.below(d))),
         Box::new(IdentityCodec),
+        Box::new(ShardedCodec::new(TernaryCodec, 1 + rng.below(6)).with_threads(1)),
+        Box::new(ShardedCodec::new(QsgdCodec::new(4), 1 + rng.below(4)).with_threads(2)),
     ]
+}
+
+/// Mean of `trials` decode(encode(v)) runs must approach v (CLT bound).
+fn assert_unbiased_mean(codec: &dyn Codec, v: &[f32], trials: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let mut acc = vec![0.0f64; v.len()];
+    let mut worst = 0.0f64;
+    let mut decoded = vec![0.0f32; v.len()];
+    let mut enc = Encoded::empty();
+    for _ in 0..trials {
+        codec.encode_into(v, &mut rng, &mut enc);
+        enc.decode_into(&mut decoded);
+        for (a, &x) in acc.iter_mut().zip(&decoded) {
+            *a += x as f64;
+        }
+        worst = worst.max(math::abs_max(&decoded) as f64);
+    }
+    let bound =
+        6.0 * worst.max(math::abs_max(v) as f64) / (trials as f64).sqrt() + 1e-6;
+    for (i, (a, &x)) in acc.iter().zip(v).enumerate() {
+        let mean = a / trials as f64;
+        assert!(
+            (mean - x as f64).abs() < bound,
+            "{} coord {i}: mean={mean} true={x} bound={bound}",
+            codec.name()
+        );
+    }
+}
+
+#[test]
+fn prop_ternary_decode_encode_unbiased() {
+    let mut rng = Rng::new(0x7E57);
+    for case in 0..4u64 {
+        let d = 24 + 8 * case as usize;
+        let v: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+        assert_unbiased_mean(&TernaryCodec, &v, 1500, 100 + case);
+    }
+}
+
+#[test]
+fn prop_qsgd_decode_encode_unbiased() {
+    let mut rng = Rng::new(0x7E58);
+    for (case, levels) in [(0u64, 2u32), (1, 4), (2, 16)].into_iter() {
+        let v: Vec<f32> = (0..48).map(|_| rng.gauss_f32()).collect();
+        assert_unbiased_mean(&QsgdCodec::new(levels), &v, 1500, 200 + case);
+    }
+}
+
+#[test]
+fn prop_sparse_decode_encode_unbiased() {
+    let mut rng = Rng::new(0x7E59);
+    for (case, ratio) in [(0u64, 0.1f64), (1, 0.3), (2, 0.7)].into_iter() {
+        let v: Vec<f32> = (0..48).map(|_| rng.gauss_f32()).collect();
+        assert_unbiased_mean(&SparseCodec::new(ratio), &v, 1500, 300 + case);
+    }
+}
+
+#[test]
+fn prop_sharded_decode_encode_unbiased() {
+    let mut rng = Rng::new(0x7E5A);
+    let v: Vec<f32> = (0..60).map(|_| rng.gauss_f32()).collect();
+    assert_unbiased_mean(
+        &ShardedCodec::new(TernaryCodec, 4).with_threads(1),
+        &v,
+        1500,
+        400,
+    );
 }
 
 #[test]
@@ -72,16 +145,55 @@ fn prop_decode_shape_and_finiteness() {
 }
 
 #[test]
-fn prop_wire_roundtrip_identity() {
+fn prop_wire_roundtrip_identity_and_byte_exact() {
     let mut rng = Rng::new(0xBEEF);
     for case in 0..CASES {
         let v = arb_vec(&mut rng);
         for c in all_codecs(&mut rng, v.len()) {
             let e = c.encode(&v, &mut rng);
-            let back = wire::from_bytes(&wire::to_bytes(&e))
+            let bytes = wire::to_bytes(&e);
+            let back = wire::from_bytes(&bytes)
                 .unwrap_or_else(|err| panic!("case {case} {}: {err}", c.name()));
             assert_eq!(back, e, "case {case} codec {}", c.name());
+            assert_eq!(
+                wire::to_bytes(&back),
+                bytes,
+                "case {case} codec {}: reserialization must be byte-exact",
+                c.name()
+            );
         }
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_every_payload_variant() {
+    // Hand-built messages exercise each variant — including a heterogeneous
+    // sharded payload — independent of what the codecs happen to emit.
+    let variants = vec![
+        Encoded { dim: 5, payload: Payload::Ternary { scale: 1.5, codes: vec![1, 0, -1, 0, 1] } },
+        Encoded {
+            dim: 5,
+            payload: Payload::TernaryChunked {
+                chunk: 2,
+                scales: vec![0.5, 2.0, 8.0],
+                codes: vec![1, -1, 0, 0, 1],
+            },
+        },
+        Encoded { dim: 3, payload: Payload::Quantized { norm: 4.0, levels: 8, q: vec![-8, 0, 3] } },
+        Encoded { dim: 7, payload: Payload::Sparse { pairs: vec![(0, 1.0), (6, -2.5)] } },
+        Encoded { dim: 7, payload: Payload::Sparse { pairs: vec![] } },
+        Encoded { dim: 2, payload: Payload::Dense { values: vec![f32::MIN_POSITIVE, -0.0] } },
+        Encoded { dim: 1, payload: Payload::Ternary { scale: 0.0, codes: vec![0] } },
+    ];
+    let sharded = Encoded {
+        dim: variants.iter().map(|e| e.dim).sum(),
+        payload: Payload::Sharded { parts: variants.clone() },
+    };
+    for e in variants.iter().chain(std::iter::once(&sharded)) {
+        let bytes = wire::to_bytes(e);
+        let back = wire::from_bytes(&bytes).expect("roundtrip");
+        assert_eq!(&back, e);
+        assert_eq!(wire::to_bytes(&back), bytes, "byte-exact reserialization");
     }
 }
 
@@ -97,6 +209,14 @@ fn prop_reconstruction_error_bounds() {
             assert!(
                 (x - y).abs() <= r + r * 1e-5,
                 "case {case} ternary coord {d}: |{x}-{y}| > R={r}"
+            );
+        }
+        // Sharded ternary: per-coordinate error <= the *shard's* R <= R.
+        let e = ShardedCodec::new(TernaryCodec, 3).with_threads(1).encode(&v, &mut rng);
+        for (d, (&x, y)) in v.iter().zip(e.decode()).enumerate() {
+            assert!(
+                (x - y).abs() <= r + r * 1e-5,
+                "case {case} sharded coord {d}: |{x}-{y}| > R={r}"
             );
         }
         // Identity: exact.
@@ -115,7 +235,11 @@ fn prop_protocol_msg_roundtrip() {
     let mut rng = Rng::new(0xD00D);
     for case in 0..CASES {
         let v = arb_vec(&mut rng);
-        let enc = TernaryCodec.encode(&v, &mut rng);
+        let enc = if case % 2 == 0 {
+            TernaryCodec.encode(&v, &mut rng)
+        } else {
+            ShardedCodec::new(TernaryCodec, 3).with_threads(1).encode(&v, &mut rng)
+        };
         let msgs = vec![
             Msg::Grad {
                 worker: rng.below(1 << 16) as u16,
@@ -168,8 +292,16 @@ fn prop_bits_accounting_sane() {
             assert!(bits <= e.bits_dense(), "case {case} {}", c.name());
             assert!(bits <= e.bits_sparse(), "case {case} {}", c.name());
             assert!(bits > 0 || e.dim == 0, "case {case} {}", c.name());
-            // deflate is a real coder: nonzero and finite.
-            assert!(e.bits_deflate() > 0);
+            if !matches!(e.payload, Payload::Sharded { .. }) {
+                assert_eq!(
+                    bits,
+                    e.bits_dense().min(e.bits_sparse()),
+                    "case {case} {}",
+                    c.name()
+                );
+            }
+            // The adaptive-coder estimate is a real code length: positive.
+            assert!(e.bits_compressed() > 0);
         }
     }
 }

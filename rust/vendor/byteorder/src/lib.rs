@@ -1,0 +1,208 @@
+//! Std-only shim of the `byteorder` API surface this repository uses:
+//! fixed-width integer/float reads and writes over `std::io` streams,
+//! parameterized by endianness marker types.
+
+use std::io;
+
+/// Endianness marker: converts between native values and byte arrays.
+pub trait ByteOrder {
+    fn read_u16(buf: &[u8; 2]) -> u16;
+    fn read_u32(buf: &[u8; 4]) -> u32;
+    fn read_u64(buf: &[u8; 8]) -> u64;
+    fn write_u16(buf: &mut [u8; 2], v: u16);
+    fn write_u32(buf: &mut [u8; 4], v: u32);
+    fn write_u64(buf: &mut [u8; 8], v: u64);
+}
+
+/// Little-endian byte order.
+pub enum LittleEndian {}
+
+/// Big-endian byte order.
+pub enum BigEndian {}
+
+impl ByteOrder for LittleEndian {
+    fn read_u16(buf: &[u8; 2]) -> u16 {
+        u16::from_le_bytes(*buf)
+    }
+    fn read_u32(buf: &[u8; 4]) -> u32 {
+        u32::from_le_bytes(*buf)
+    }
+    fn read_u64(buf: &[u8; 8]) -> u64 {
+        u64::from_le_bytes(*buf)
+    }
+    fn write_u16(buf: &mut [u8; 2], v: u16) {
+        *buf = v.to_le_bytes();
+    }
+    fn write_u32(buf: &mut [u8; 4], v: u32) {
+        *buf = v.to_le_bytes();
+    }
+    fn write_u64(buf: &mut [u8; 8], v: u64) {
+        *buf = v.to_le_bytes();
+    }
+}
+
+impl ByteOrder for BigEndian {
+    fn read_u16(buf: &[u8; 2]) -> u16 {
+        u16::from_be_bytes(*buf)
+    }
+    fn read_u32(buf: &[u8; 4]) -> u32 {
+        u32::from_be_bytes(*buf)
+    }
+    fn read_u64(buf: &[u8; 8]) -> u64 {
+        u64::from_be_bytes(*buf)
+    }
+    fn write_u16(buf: &mut [u8; 2], v: u16) {
+        *buf = v.to_be_bytes();
+    }
+    fn write_u32(buf: &mut [u8; 4], v: u32) {
+        *buf = v.to_be_bytes();
+    }
+    fn write_u64(buf: &mut [u8; 8], v: u64) {
+        *buf = v.to_be_bytes();
+    }
+}
+
+/// Typed reads over any `io::Read`.
+pub trait ReadBytesExt: io::Read {
+    fn read_u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn read_i8(&mut self) -> io::Result<i8> {
+        Ok(self.read_u8()? as i8)
+    }
+
+    fn read_u16<B: ByteOrder>(&mut self) -> io::Result<u16> {
+        let mut b = [0u8; 2];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u16(&b))
+    }
+
+    fn read_i16<B: ByteOrder>(&mut self) -> io::Result<i16> {
+        Ok(self.read_u16::<B>()? as i16)
+    }
+
+    fn read_u32<B: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u32(&b))
+    }
+
+    fn read_i32<B: ByteOrder>(&mut self) -> io::Result<i32> {
+        Ok(self.read_u32::<B>()? as i32)
+    }
+
+    fn read_u64<B: ByteOrder>(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(B::read_u64(&b))
+    }
+
+    fn read_i64<B: ByteOrder>(&mut self) -> io::Result<i64> {
+        Ok(self.read_u64::<B>()? as i64)
+    }
+
+    fn read_f32<B: ByteOrder>(&mut self) -> io::Result<f32> {
+        Ok(f32::from_bits(self.read_u32::<B>()?))
+    }
+
+    fn read_f64<B: ByteOrder>(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.read_u64::<B>()?))
+    }
+}
+
+impl<R: io::Read + ?Sized> ReadBytesExt for R {}
+
+/// Typed writes over any `io::Write`.
+pub trait WriteBytesExt: io::Write {
+    fn write_u8(&mut self, v: u8) -> io::Result<()> {
+        self.write_all(&[v])
+    }
+
+    fn write_i8(&mut self, v: i8) -> io::Result<()> {
+        self.write_u8(v as u8)
+    }
+
+    fn write_u16<B: ByteOrder>(&mut self, v: u16) -> io::Result<()> {
+        let mut b = [0u8; 2];
+        B::write_u16(&mut b, v);
+        self.write_all(&b)
+    }
+
+    fn write_i16<B: ByteOrder>(&mut self, v: i16) -> io::Result<()> {
+        self.write_u16::<B>(v as u16)
+    }
+
+    fn write_u32<B: ByteOrder>(&mut self, v: u32) -> io::Result<()> {
+        let mut b = [0u8; 4];
+        B::write_u32(&mut b, v);
+        self.write_all(&b)
+    }
+
+    fn write_i32<B: ByteOrder>(&mut self, v: i32) -> io::Result<()> {
+        self.write_u32::<B>(v as u32)
+    }
+
+    fn write_u64<B: ByteOrder>(&mut self, v: u64) -> io::Result<()> {
+        let mut b = [0u8; 8];
+        B::write_u64(&mut b, v);
+        self.write_all(&b)
+    }
+
+    fn write_i64<B: ByteOrder>(&mut self, v: i64) -> io::Result<()> {
+        self.write_u64::<B>(v as u64)
+    }
+
+    fn write_f32<B: ByteOrder>(&mut self, v: f32) -> io::Result<()> {
+        self.write_u32::<B>(v.to_bits())
+    }
+
+    fn write_f64<B: ByteOrder>(&mut self, v: f64) -> io::Result<()> {
+        self.write_u64::<B>(v.to_bits())
+    }
+}
+
+impl<W: io::Write + ?Sized> WriteBytesExt for W {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_le() {
+        let mut buf = Vec::new();
+        buf.write_u8(7).unwrap();
+        buf.write_u16::<LittleEndian>(0xBEEF).unwrap();
+        buf.write_u32::<LittleEndian>(0xDEAD_BEEF).unwrap();
+        buf.write_i16::<LittleEndian>(-5).unwrap();
+        buf.write_f32::<LittleEndian>(1.5).unwrap();
+        buf.write_f64::<LittleEndian>(-2.25).unwrap();
+
+        let mut r: &[u8] = &buf;
+        assert_eq!(r.read_u8().unwrap(), 7);
+        assert_eq!(r.read_u16::<LittleEndian>().unwrap(), 0xBEEF);
+        assert_eq!(r.read_u32::<LittleEndian>().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.read_i16::<LittleEndian>().unwrap(), -5);
+        assert_eq!(r.read_f32::<LittleEndian>().unwrap(), 1.5);
+        assert_eq!(r.read_f64::<LittleEndian>().unwrap(), -2.25);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn le_layout_is_little_endian() {
+        let mut buf = Vec::new();
+        buf.write_u32::<LittleEndian>(1).unwrap();
+        assert_eq!(buf, [1, 0, 0, 0]);
+        let mut buf = Vec::new();
+        buf.write_u32::<BigEndian>(1).unwrap();
+        assert_eq!(buf, [0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn short_reads_error() {
+        let mut r: &[u8] = &[1, 2];
+        assert!(r.read_u32::<LittleEndian>().is_err());
+    }
+}
