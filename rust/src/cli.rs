@@ -8,6 +8,8 @@
 //! tng fig3 [...]                              Figure 3 (quasi-Newton grid)
 //! tng fig4 [...]                              Figure 4 (servers × memory)
 //! tng run  codec=ternary tng=true [...]       one custom configuration
+//! tng leader addr=H:P workers=N [...]         TCP leader for N processes
+//! tng worker addr=H:P id=K [...]              TCP worker process K
 //! tng info                                    artifact + platform info
 //! ```
 
@@ -33,6 +35,11 @@ COMMANDS:
     fig3    Figure 3: stochastic quasi-Newton (L-BFGS) variant of fig2
     fig4    Figure 4: sensitivity to #servers (M) and L-BFGS memory (K)
     run     One custom run (codec=, tng=, rounds=, workers=, eta=, ...)
+    leader  TCP cluster leader: bind addr= (addr=127.0.0.1:0 picks a free
+            port, announced as 'listening addr=...'), accept workers=N
+            sockets, run the rounds, print the trace summary + param digest
+    worker  TCP cluster worker: connect addr=, identify as id=K; every
+            config key must mirror the leader's (see EXPERIMENTS.md §Cluster)
     info    Show PJRT platform + loaded artifacts
     help    Show this help
 
@@ -51,7 +58,7 @@ pub fn parse<S: AsRef<str>>(args: &[S]) -> Result<Cli> {
     };
     let command = command.as_ref().to_string();
     match command.as_str() {
-        "fig1" | "fig2" | "fig3" | "fig4" | "run" | "info" | "help" => {}
+        "fig1" | "fig2" | "fig3" | "fig4" | "run" | "leader" | "worker" | "info" | "help" => {}
         other => bail!("unknown command '{other}'\n\n{USAGE}"),
     }
     let rest: Vec<&str> = args[1..].iter().map(|s| s.as_ref()).collect();
@@ -72,6 +79,16 @@ mod tests {
         assert_eq!(c.command, "fig2");
         assert_eq!(c.opts.usize_or("rounds", 0).unwrap(), 100);
         assert_eq!(c.opts.str_or("outdir", ""), "/tmp/x");
+    }
+
+    #[test]
+    fn parses_cluster_commands() {
+        let c = parse(&["leader", "addr=127.0.0.1:0", "workers=4"]).unwrap();
+        assert_eq!(c.command, "leader");
+        assert_eq!(c.opts.str_or("addr", ""), "127.0.0.1:0");
+        let c = parse(&["worker", "addr=127.0.0.1:7000", "id=2"]).unwrap();
+        assert_eq!(c.command, "worker");
+        assert_eq!(c.opts.usize_or("id", 99).unwrap(), 2);
     }
 
     #[test]

@@ -65,6 +65,13 @@ impl Settings {
         self.map.get(key).map(|s| s.as_str())
     }
 
+    /// The value for `key`, or an error naming the missing option — for
+    /// CLI-mandatory keys like the TCP worker's `addr=`/`id=`.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.raw(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required option {key}=..."))
+    }
+
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.raw(key).unwrap_or(default).to_string()
     }
@@ -150,6 +157,14 @@ mod tests {
         assert_eq!(s.usize_or("rounds", 0).unwrap(), 42);
         assert_eq!(s.f32_or("eta", 0.0).unwrap(), 0.1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn require_present_and_missing() {
+        let s = Settings::from_args(&["addr=127.0.0.1:9"]).unwrap();
+        assert_eq!(s.require("addr").unwrap(), "127.0.0.1:9");
+        let err = s.require("id").unwrap_err();
+        assert!(err.to_string().contains("id="), "{err}");
     }
 
     #[test]

@@ -51,6 +51,23 @@ impl Trace {
         self.records.last().map(|r| r.loss).unwrap_or(f64::NAN)
     }
 
+    /// FNV-1a digest over the final iterate's exact f32 bit patterns: a
+    /// compact fingerprint for cross-*process* trace comparison. The TCP
+    /// `tng leader` prints it and `rust/tests/transport_tcp.rs` compares it
+    /// against the in-process driver's digest — equality means the whole
+    /// trajectory agreed bit for bit (f32 steps are deterministic functions
+    /// of prior state, so a divergence anywhere propagates to the end).
+    pub fn param_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &x in &self.final_w {
+            for b in x.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
     pub fn final_subopt(&self) -> f64 {
         self.records.last().map(|r| r.subopt).unwrap_or(f64::NAN)
     }
@@ -142,5 +159,19 @@ mod tests {
         let t = trace();
         assert!((t.final_subopt() - 0.05).abs() < 1e-12);
         assert!((t.final_loss() - 1.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn param_digest_separates_and_is_stable() {
+        let a = trace();
+        assert_eq!(a.param_digest(), a.param_digest());
+        let mut b = trace();
+        b.final_w = vec![1.0e-7];
+        assert_ne!(a.param_digest(), b.param_digest());
+        // Bit-exactness: -0.0 and 0.0 are equal floats but different bits,
+        // and the digest must see the bits.
+        let mut c = trace();
+        c.final_w = vec![-0.0];
+        assert_ne!(a.param_digest(), c.param_digest());
     }
 }

@@ -1,8 +1,10 @@
 //! The L3 coordinator: the paper's distributed-optimization protocol.
 //!
 //! * [`driver`] — deterministic in-process BSP simulation (figure harnesses)
-//! * [`parallel`] — threaded leader/worker runtime over the counted fabric
-//! * [`protocol`] — framed wire messages
+//! * [`parallel`] — transport-generic leader/worker runtime (threads over
+//!   the counted channel fabric, or real OS processes over TCP via
+//!   `crate::transport`) — byte-identical trajectories to the driver
+//! * [`protocol`] — framed wire messages incl. the Hello/Bye lifecycle
 //! * [`network`] — simulated star fabric with exact byte accounting
 //! * [`metrics`] — round records / traces with the paper's bits-per-element axis
 

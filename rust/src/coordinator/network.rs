@@ -1,11 +1,14 @@
 //! Simulated cluster network.
 //!
-//! The paper's metric is bits communicated, not wall-clock, so the network
-//! is an in-process fabric: channels carrying byte frames, with per-link
-//! counters and a simple `latency + size/bandwidth` cost model that the
-//! benches use to *estimate* synchronization time on a real cluster
-//! (DESIGN.md §substitutions). The byte counts are exact; the time model is
-//! configurable per experiment.
+//! The paper's metric is bits communicated, not wall-clock, so the default
+//! network is an in-process fabric: channels carrying byte frames, with
+//! per-link counters and a simple `latency + size/bandwidth` cost model
+//! that the benches use to *estimate* synchronization time on a real
+//! cluster (DESIGN.md §substitutions). The byte counts are exact; the time
+//! model is configurable per experiment. This fabric is the channel backend
+//! of `crate::transport` (the TCP backend reuses [`NetStats`] so both count
+//! the same frames); for actual bytes on an actual wire see
+//! `transport::tcp` and DESIGN.md §Transport.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -32,11 +35,14 @@ impl LinkModel {
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 
-    /// Modeled time for a synchronous fan-in of M messages (serialized at
-    /// the leader NIC — the congestion effect centralized PS suffers).
+    /// Modeled time for a synchronous fan-in of M messages, serialized at
+    /// the leader NIC (the congestion effect centralized PS suffers): each
+    /// of the M messages pays its own per-message latency on top of the
+    /// shared bandwidth term. (The seed charged one latency regardless of
+    /// M, which made fan-in of M tiny messages as cheap as one.)
     pub fn fan_in_time(&self, sizes: &[usize]) -> f64 {
         let total: usize = sizes.iter().sum();
-        self.latency_s + total as f64 / self.bandwidth_bps
+        sizes.len() as f64 * self.latency_s + total as f64 / self.bandwidth_bps
     }
 }
 
@@ -136,9 +142,35 @@ mod tests {
     fn link_model_times() {
         let m = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
         assert!((m.transfer_time(1000) - 2e-3).abs() < 1e-12);
-        assert!((m.fan_in_time(&[500, 500]) - 2e-3).abs() < 1e-12);
-        // fan-in of M equals one message of the summed size (leader NIC).
+        // Two messages: 2 latency terms + summed transfer at the NIC.
+        assert!((m.fan_in_time(&[500, 500]) - 3e-3).abs() < 1e-12);
         assert!(m.fan_in_time(&[100; 4]) > m.transfer_time(100));
+        // M=1 fan-in degenerates to one transfer; M=0 costs nothing.
+        assert!((m.fan_in_time(&[700]) - m.transfer_time(700)).abs() < 1e-15);
+        assert_eq!(m.fan_in_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn fan_in_time_monotone_in_messages_and_bytes() {
+        let m = LinkModel::default();
+        // Strictly increasing in the number of fan-in messages at fixed
+        // per-message size (each message pays its latency)...
+        let mut prev = 0.0;
+        for k in 1..=16 {
+            let t = m.fan_in_time(&vec![256usize; k]);
+            assert!(t > prev, "fan-in time must grow with M: {t} !> {prev} at M={k}");
+            prev = t;
+        }
+        // ...and increasing in per-message size at fixed M.
+        assert!(m.fan_in_time(&[2000, 2000]) > m.fan_in_time(&[1000, 1000]));
+        // M messages of size s cost more than one message of size M*s:
+        // the extra (M-1) latency terms are the centralization penalty.
+        let one = m.transfer_time(4 * 256);
+        assert!(m.fan_in_time(&[256; 4]) > one);
+        assert!(
+            (m.fan_in_time(&[256; 4]) - one - 3.0 * m.latency_s).abs() < 1e-12,
+            "penalty must be exactly (M-1) latencies"
+        );
     }
 
     #[test]

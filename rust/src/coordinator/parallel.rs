@@ -1,12 +1,26 @@
-//! Threaded leader/worker runtime — the "real" coordinator.
+//! Transport-generic leader/worker runtime — the "real" coordinator.
 //!
-//! M worker threads and a leader exchange the `protocol::Msg` frames over
-//! the simulated star fabric (`network::star`), with every byte counted.
+//! The leader and worker state machines are written once against the
+//! `transport` traits and run unchanged over every backend:
+//!
+//! * [`run`] — M OS threads + leader over the in-process counted channel
+//!   fabric (the original threaded runtime);
+//! * [`run_leader`] / [`run_worker`] — the same loops over *any*
+//!   [`LeaderTransport`] / [`WorkerTransport`], which is how the `tng
+//!   leader` / `tng worker` CLI subcommands run the protocol as N genuine
+//!   OS processes over TCP (`transport::tcp`).
+//!
 //! The state machines are the same as `driver::run`; determinism is kept by
 //! (a) per-worker RNG streams split identically, and (b) the leader folding
-//! gradients in worker-id order regardless of arrival order. The
-//! `golden_trace` integration test pins trace equality between the two
-//! runtimes, with and without sharded compression.
+//! gradients in worker-id order regardless of arrival order — so for one
+//! config the parameter trajectory is identical across driver, threads, and
+//! TCP processes, and the wire byte totals are identical across channel and
+//! TCP (both count the same `protocol::Msg` frames). The `golden_trace` and
+//! `transport_tcp` integration tests pin both invariants.
+//!
+//! Shutdown is a handshake: the leader broadcasts `Stop`, every worker acks
+//! with `Bye` before closing its uplink, and the leader drains all Byes
+//! before taking its final byte snapshot — totals are never racy.
 //!
 //! Hot-path notes: every worker owns a `CodecScratch` arena, so the
 //! normalize→encode→frame path performs no steady-state allocation beyond
@@ -26,11 +40,11 @@ use anyhow::{bail, Result};
 use crate::codec::{Codec, CodecScratch};
 use crate::coordinator::driver::DriverConfig;
 use crate::coordinator::metrics::{RoundRecord, Trace};
-use crate::coordinator::network::{star, StarFabric, WorkerPort};
 use crate::coordinator::protocol::Msg;
 use crate::objectives::Objective;
 use crate::optim::{GradEstimator, Lbfgs};
 use crate::tng::{CnzSelector, ReferenceKind, ReferenceManager, RoundCtx, Tng};
+use crate::transport::{channel_pair, LeaderTransport, WorkerTransport};
 use crate::util::math;
 use crate::util::Rng;
 
@@ -61,7 +75,33 @@ impl<'a> Codec for BorrowedCodec<'a> {
     }
 }
 
-/// Worker thread body: compute → normalize → encode → send; then apply the
+/// Reject configurations only the deterministic driver can honor — shared
+/// by every entry point so a TCP worker and its leader agree on what runs.
+pub fn validate(cfg: &DriverConfig) -> Result<()> {
+    if cfg
+        .references
+        .iter()
+        .any(|k| matches!(k, ReferenceKind::SvrgAnchor { .. }))
+    {
+        bail!("SvrgAnchor reference requires the deterministic driver (full-grad broadcast)");
+    }
+    if cfg.warm_start_reference {
+        bail!("warm_start_reference requires the deterministic driver");
+    }
+    if cfg
+        .references
+        .iter()
+        .any(|k| matches!(k, ReferenceKind::WorkerAnchor { .. }))
+    {
+        bail!("WorkerAnchor reference requires the deterministic driver");
+    }
+    if cfg.workers == 0 || cfg.workers > u16::MAX as usize {
+        bail!("worker count {} out of range", cfg.workers);
+    }
+    Ok(())
+}
+
+/// Worker body: compute → normalize → encode → send; then apply the
 /// broadcast aggregate to the local replicas of w / L-BFGS / references.
 fn worker_loop(
     id: usize,
@@ -69,7 +109,7 @@ fn worker_loop(
     codec: &dyn Codec,
     cfg: &DriverConfig,
     shard: Vec<usize>,
-    port: WorkerPort,
+    tp: &mut dyn WorkerTransport,
 ) -> Result<()> {
     let dim = obj.dim();
     let mut rng = Rng::new(cfg.seed).split(1 + id as u64);
@@ -88,11 +128,11 @@ fn worker_loop(
         // SVRG anchor synchronization.
         if est.anchor_due(t) && obj.n() > 0 {
             est.set_anchor(obj, &shard, &w);
-            port.up.send(
+            tp.send(
                 Msg::AnchorGrad { worker: id as u16, round: t as u32, grad: est.anchor_mu().to_vec() }
                     .to_bytes(),
             )?;
-            match Msg::from_bytes(&port.rx.recv()?)? {
+            match Msg::from_bytes(&tp.recv()?)? {
                 Msg::AnchorMu { mu, .. } => est.set_global_mu(&mu),
                 other => bail!("worker {id}: expected AnchorMu, got {}", other.kind_name()),
             }
@@ -112,7 +152,7 @@ fn worker_loop(
         // fans the shards out over threads here), then frame the message
         // straight from the borrowed Encoded.
         tng.encode_into(&g, gref, &mut rng, &mut scratch);
-        port.up.send(Msg::grad_frame(
+        tp.send(Msg::grad_frame(
             id as u16,
             t as u32,
             &scratch.enc,
@@ -121,7 +161,7 @@ fn worker_loop(
         ))?;
 
         // Apply the round's aggregate to local replicas.
-        match Msg::from_bytes(&port.rx.recv()?)? {
+        match Msg::from_bytes(&tp.recv()?)? {
             Msg::Aggregate { v, eta, .. } => {
                 w_prev.copy_from_slice(&w);
                 if let Some(l) = lbfgs.as_mut() {
@@ -141,15 +181,26 @@ fn worker_loop(
                 });
                 let _ = selector.take_broadcast_bits();
             }
-            Msg::Stop { .. } => return Ok(()),
+            Msg::Stop { round } => {
+                // The leader only ever sends Stop after its full round loop,
+                // so a mid-run Stop means the two sides disagree on rounds=
+                // (a config mismatch the docs forbid) — surface it instead
+                // of acking a truncated run as success.
+                bail!(
+                    "worker {id}: leader stopped at round {round} but this \
+                     worker expected {} rounds — config mismatch",
+                    cfg.rounds
+                );
+            }
             other => bail!("worker {id}: expected Aggregate, got {}", other.kind_name()),
         }
     }
-    // Drain the final Stop if present.
-    if let Ok(frame) = port.rx.recv() {
-        let _ = Msg::from_bytes(&frame);
+    // Shutdown handshake: wait for the final Stop, ack with Bye, close.
+    match Msg::from_bytes(&tp.recv()?)? {
+        Msg::Stop { .. } => {}
+        other => bail!("worker {id}: expected Stop, got {}", other.kind_name()),
     }
-    Ok(())
+    tp.send(Msg::Bye { worker: id as u16 }.to_bytes())
 }
 
 /// Leader body, returning the run trace.
@@ -159,7 +210,7 @@ fn leader_loop(
     label: &str,
     cfg: &DriverConfig,
     shard_sizes: &[usize],
-    fabric: StarFabric,
+    tp: &mut dyn LeaderTransport,
 ) -> Result<Trace> {
     let t_start = Instant::now();
     let dim = obj.dim();
@@ -176,19 +227,28 @@ fn leader_loop(
     scratch.warm(dim);
     let total_n: usize = shard_sizes.iter().sum();
     let svrg = matches!(cfg.estimator, crate::optim::EstimatorKind::Svrg { .. });
+    // anchor_due is a pure function of (estimator kind, round); one probe
+    // serves every round instead of churning dim-sized buffers per round.
+    let est_probe = GradEstimator::new(cfg.estimator, cfg.batch, dim);
 
     for t in 0..cfg.rounds {
         // SVRG anchor fan-in/out.
-        let est_probe = GradEstimator::new(cfg.estimator, cfg.batch, dim);
         if svrg && est_probe.anchor_due(t) && total_n > 0 {
             // Buffer and fold in worker-id order: float addition is not
             // associative, and the deterministic driver folds 0..M.
             let mut anchors: Vec<Option<Vec<f32>>> = (0..m).map(|_| None).collect();
             let mut seen = 0usize;
             while seen < m {
-                match Msg::from_bytes(&fabric.leader_rx.recv()?)? {
+                match Msg::from_bytes(&tp.recv()?)? {
                     Msg::AnchorGrad { worker, grad, .. } => {
-                        anchors[worker as usize] = Some(grad);
+                        let idx = worker as usize;
+                        if idx >= m {
+                            bail!("anchor from unknown worker {idx} (m = {m})");
+                        }
+                        if anchors[idx].is_some() {
+                            bail!("duplicate anchor from worker {idx}");
+                        }
+                        anchors[idx] = Some(grad);
                         seen += 1;
                     }
                     other => bail!("leader: expected AnchorGrad, got {}", other.kind_name()),
@@ -202,19 +262,19 @@ fn leader_loop(
                     &mut mu,
                 );
             }
-            let msg = Msg::AnchorMu { round: t as u32, mu };
-            for d in &fabric.down {
-                d.send(msg.to_bytes())?;
-            }
+            tp.broadcast(&Msg::AnchorMu { round: t as u32, mu }.to_bytes())?;
         }
 
         // Gather M gradient frames; fold in worker-id order (determinism).
         let mut slots: Vec<Option<Msg>> = (0..m).map(|_| None).collect();
         let mut seen = 0usize;
         while seen < m {
-            let msg = Msg::from_bytes(&fabric.leader_rx.recv()?)?;
+            let msg = Msg::from_bytes(&tp.recv()?)?;
             if let Msg::Grad { worker, .. } = &msg {
                 let idx = *worker as usize;
+                if idx >= m {
+                    bail!("gradient from unknown worker {idx} (m = {m})");
+                }
                 if slots[idx].is_some() {
                     bail!("duplicate gradient from worker {idx}");
                 }
@@ -228,6 +288,16 @@ fn leader_loop(
         let mut v_avg = vec![0.0f32; dim];
         for slot in slots.into_iter() {
             let Some(Msg::Grad { enc, scalar, ref_idx, .. }) = slot else { unreachable!() };
+            // ref_idx is remotely controlled: a worker whose tng= config
+            // disagrees with the leader's pool must be an error, not an
+            // out-of-bounds panic.
+            if ref_idx as usize >= cfg.references.len() {
+                bail!(
+                    "gradient references pool index {ref_idx} but the leader has {} \
+                     references — config mismatch",
+                    cfg.references.len()
+                );
+            }
             let gref: &[f32] =
                 if matches!(cfg.references[ref_idx as usize], ReferenceKind::MeanScalar) {
                     mean_ref.fill(scalar);
@@ -249,10 +319,7 @@ fn leader_loop(
         } else {
             math::axpy(-eta, &v_avg, &mut w);
         }
-        let msg = Msg::Aggregate { round: t as u32, v: v_avg.clone(), eta };
-        for d in &fabric.down {
-            d.send(msg.to_bytes())?;
-        }
+        tp.broadcast(&Msg::Aggregate { round: t as u32, v: v_avg.clone(), eta }.to_bytes())?;
         selector.end_round(&RoundCtx {
             round: t,
             decoded_avg: &v_avg,
@@ -265,10 +332,10 @@ fn leader_loop(
 
         if t % cfg.record_every == 0 || t + 1 == cfg.rounds {
             let loss = if cfg.eval_loss { obj.loss(&w) } else { f64::NAN };
-            let (up_b, down_b, _, _) = fabric.stats.snapshot();
+            let s = tp.stats();
             records.push(RoundRecord {
                 round: t,
-                bits_per_elt: (up_b as f64 * 8.0 / m as f64 + down_b as f64 * 8.0)
+                bits_per_elt: (s.up_bytes as f64 * 8.0 / m as f64 + s.down_bytes as f64 * 8.0)
                     / dim as f64,
                 loss,
                 subopt: loss - cfg.f_star,
@@ -280,17 +347,31 @@ fn leader_loop(
             });
         }
     }
-    let stop = Msg::Stop { round: cfg.rounds as u32 };
-    for d in &fabric.down {
-        let _ = d.send(stop.to_bytes());
+    // Shutdown handshake: Stop out, one Bye back per worker. Only after the
+    // last Bye is the byte snapshot final (no frame is in flight).
+    tp.broadcast(&Msg::Stop { round: cfg.rounds as u32 }.to_bytes())?;
+    let mut byes = vec![false; m];
+    let mut seen = 0usize;
+    while seen < m {
+        match Msg::from_bytes(&tp.recv()?)? {
+            Msg::Bye { worker } => {
+                let idx = worker as usize;
+                if idx >= m || byes[idx] {
+                    bail!("unexpected Bye from worker {idx}");
+                }
+                byes[idx] = true;
+                seen += 1;
+            }
+            other => bail!("leader: expected Bye, got {}", other.kind_name()),
+        }
     }
-    let (up_b, down_b, _, _) = fabric.stats.snapshot();
+    let s = tp.stats();
     Ok(Trace {
         label: label.to_string(),
         records,
         final_w: w,
-        total_up_bits: up_b * 8,
-        total_down_bits: down_b * 8,
+        total_up_bits: s.up_bytes * 8,
+        total_down_bits: s.down_bytes * 8,
         rounds: cfg.rounds,
         workers: m,
         dim,
@@ -298,31 +379,61 @@ fn leader_loop(
     })
 }
 
+/// Run the leader role of one cluster over any transport (blocking the
+/// calling thread until the run and its shutdown handshake complete).
+pub fn run_leader(
+    obj: &(dyn Objective + Sync),
+    codec: &dyn Codec,
+    label: &str,
+    cfg: &DriverConfig,
+    tp: &mut dyn LeaderTransport,
+) -> Result<Trace> {
+    validate(cfg)?;
+    if tp.workers() != cfg.workers {
+        bail!("transport has {} workers, config wants {}", tp.workers(), cfg.workers);
+    }
+    let shard_sizes: Vec<usize> = if obj.n() > 0 {
+        crate::data::shard_indices(obj.n(), cfg.workers)
+            .iter()
+            .map(|s| s.len())
+            .collect()
+    } else {
+        vec![0; cfg.workers]
+    };
+    leader_loop(obj, codec, label, cfg, &shard_sizes, tp)
+}
+
+/// Run worker `id`'s role over any transport. The worker derives its data
+/// shard from `(obj.n(), cfg.workers)` exactly as the leader and the driver
+/// do, so a TCP worker process needs nothing but the shared config.
+pub fn run_worker(
+    id: usize,
+    obj: &(dyn Objective + Sync),
+    codec: &dyn Codec,
+    cfg: &DriverConfig,
+    tp: &mut dyn WorkerTransport,
+) -> Result<()> {
+    validate(cfg)?;
+    if id >= cfg.workers {
+        bail!("worker id {id} out of range for {} workers", cfg.workers);
+    }
+    let shard = if obj.n() > 0 {
+        crate::data::shard_indices(obj.n(), cfg.workers).swap_remove(id)
+    } else {
+        Vec::new()
+    };
+    worker_loop(id, obj, codec, cfg, shard, tp)
+}
+
 /// Run the threaded coordinator: M OS threads + leader on the calling
-/// thread, communicating only through the counted byte fabric.
+/// thread, communicating only through the counted in-process byte fabric.
 pub fn run(
     obj: &(dyn Objective + Sync),
     codec: &dyn Codec,
     label: &str,
     cfg: &DriverConfig,
 ) -> Result<Trace> {
-    if cfg
-        .references
-        .iter()
-        .any(|k| matches!(k, ReferenceKind::SvrgAnchor { .. }))
-    {
-        bail!("SvrgAnchor reference requires the deterministic driver (full-grad broadcast)");
-    }
-    if cfg.warm_start_reference {
-        bail!("warm_start_reference requires the deterministic driver");
-    }
-    if cfg
-        .references
-        .iter()
-        .any(|k| matches!(k, ReferenceKind::WorkerAnchor { .. }))
-    {
-        bail!("WorkerAnchor reference requires the deterministic driver");
-    }
+    validate(cfg)?;
     let m = cfg.workers;
     let shards: Vec<Vec<usize>> = if obj.n() > 0 {
         crate::data::shard_indices(obj.n(), m)
@@ -330,16 +441,20 @@ pub fn run(
         vec![Vec::new(); m]
     };
     let shard_sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
-    let (fabric, ports) = star(m);
+    let (mut leader, workers) = channel_pair(m, None);
 
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
-        for (id, (port, shard)) in ports.into_iter().zip(shards.into_iter()).enumerate() {
+        for (id, (mut tp, shard)) in workers.into_iter().zip(shards.into_iter()).enumerate() {
             let cfg_ref = &*cfg;
-            handles
-                .push(scope.spawn(move || worker_loop(id, obj, codec, cfg_ref, shard, port)));
+            handles.push(
+                scope.spawn(move || worker_loop(id, obj, codec, cfg_ref, shard, &mut tp)),
+            );
         }
-        let trace = leader_loop(obj, codec, label, cfg, &shard_sizes, fabric);
+        let trace = leader_loop(obj, codec, label, cfg, &shard_sizes, &mut leader);
+        // On leader error paths, dropping the leader transport unblocks any
+        // worker still waiting on a downlink frame (its recv errors out).
+        drop(leader);
         for h in handles {
             h.join().expect("worker panicked")?;
         }
@@ -418,5 +533,37 @@ mod tests {
             ..Default::default()
         };
         assert!(run(&obj, &TernaryCodec, "x", &cfg).is_err());
+    }
+
+    #[test]
+    fn handshake_bytes_are_deterministic() {
+        // Two identical runs must agree byte-for-byte on wire totals,
+        // including the Stop/Bye shutdown handshake (11 bytes each way per
+        // worker).
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 8,
+            workers: 3,
+            schedule: StepSchedule::Const(0.3),
+            record_every: 4,
+            ..Default::default()
+        };
+        let a = run(&obj, &TernaryCodec, "a", &cfg).unwrap();
+        let b = run(&obj, &TernaryCodec, "b", &cfg).unwrap();
+        assert_eq!(a.total_up_bits, b.total_up_bits);
+        assert_eq!(a.total_down_bits, b.total_down_bits);
+        // Byes: one 11-byte frame per worker is part of the uplink total.
+        assert!(a.total_up_bits >= 3 * 11 * 8);
+    }
+
+    #[test]
+    fn run_worker_validates_id_and_config() {
+        let obj = logreg();
+        let cfg = DriverConfig { workers: 2, ..Default::default() };
+        let (_leader, mut workers) = channel_pair(2, None);
+        let err = run_worker(5, &obj, &TernaryCodec, &cfg, &mut workers[0]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let bad = DriverConfig { warm_start_reference: true, ..Default::default() };
+        assert!(run_worker(0, &obj, &TernaryCodec, &bad, &mut workers[1]).is_err());
     }
 }

@@ -1,9 +1,14 @@
-//! Leader ⇄ worker wire protocol for the threaded runtime.
+//! Leader ⇄ worker wire protocol, shared by every transport backend (the
+//! in-process channel fabric and the TCP runtime — see `crate::transport`).
 //!
 //! Framed messages: `u8 kind | u16 worker | u32 round | u32 body_len | body`.
 //! Gradient bodies reuse the codec wire format (`codec::wire`); parameter /
 //! anchor bodies are raw little-endian f32. Every frame's exact byte length
-//! feeds the network simulator's accounting.
+//! feeds the per-link byte accounting, so channel and TCP runs report
+//! identical wire totals. `Hello`/`Bye` are the connection lifecycle: a TCP
+//! worker introduces itself with `Hello` (control plane), and every worker
+//! acknowledges the final `Stop` with `Bye` before closing (data plane, on
+//! all transports — the shutdown handshake).
 
 use anyhow::{bail, Result};
 use byteorder::{LittleEndian as LE, ReadBytesExt, WriteBytesExt};
@@ -24,6 +29,15 @@ pub enum Msg {
     AnchorMu { round: u32, mu: Vec<f32> },
     /// Leader -> workers: shut down after this round.
     Stop { round: u32 },
+    /// Worker -> leader: transport join — identifies which worker owns a
+    /// freshly opened connection before round 0. The in-process channel
+    /// fabric carries identity implicitly and never sends it; the TCP
+    /// backend requires it and accounts it as control-plane bytes.
+    Hello { worker: u16 },
+    /// Worker -> leader: shutdown handshake — acknowledges `Stop` just
+    /// before the worker closes its uplink, so the leader knows every frame
+    /// it is owed has been drained (and the byte totals are final).
+    Bye { worker: u16 },
 }
 
 const K_GRAD: u8 = 1;
@@ -31,6 +45,8 @@ const K_ANCHOR_GRAD: u8 = 2;
 const K_AGGREGATE: u8 = 3;
 const K_ANCHOR_MU: u8 = 4;
 const K_STOP: u8 = 5;
+const K_HELLO: u8 = 6;
+const K_BYE: u8 = 7;
 
 fn write_f32s(out: &mut Vec<u8>, xs: &[f32]) {
     for &x in xs {
@@ -39,7 +55,10 @@ fn write_f32s(out: &mut Vec<u8>, xs: &[f32]) {
 }
 
 fn read_f32s(buf: &mut &[u8], n: usize) -> Result<Vec<f32>> {
-    let mut v = Vec::with_capacity(n);
+    // The capacity hint is bounded by what the frame could possibly hold:
+    // a forged count header must fail on the truncated reads below, never
+    // trigger a giant allocation first (same rule as codec::wire).
+    let mut v = Vec::with_capacity(n.min(buf.len() / 4));
     for _ in 0..n {
         v.push(buf.read_f32::<LE>()?);
     }
@@ -54,6 +73,8 @@ impl Msg {
             Msg::Aggregate { .. } => "aggregate",
             Msg::AnchorMu { .. } => "anchor_mu",
             Msg::Stop { .. } => "stop",
+            Msg::Hello { .. } => "hello",
+            Msg::Bye { .. } => "bye",
         }
     }
 
@@ -96,6 +117,8 @@ impl Msg {
             Msg::Aggregate { round, .. } => (K_AGGREGATE, 0, *round),
             Msg::AnchorMu { round, .. } => (K_ANCHOR_MU, 0, *round),
             Msg::Stop { round } => (K_STOP, 0, *round),
+            Msg::Hello { worker } => (K_HELLO, *worker, 0),
+            Msg::Bye { worker } => (K_BYE, *worker, 0),
         };
         out.write_u8(kind).unwrap();
         out.write_u16::<LE>(worker).unwrap();
@@ -116,7 +139,7 @@ impl Msg {
                 body.write_u32::<LE>(mu.len() as u32).unwrap();
                 write_f32s(&mut body, mu);
             }
-            Msg::Stop { .. } => {}
+            Msg::Stop { .. } | Msg::Hello { .. } | Msg::Bye { .. } => {}
         }
         out.write_u32::<LE>(body.len() as u32).unwrap();
         out.extend_from_slice(&body);
@@ -152,6 +175,8 @@ impl Msg {
                 Msg::AnchorMu { round, mu: read_f32s(&mut buf, n)? }
             }
             K_STOP => Msg::Stop { round },
+            K_HELLO => Msg::Hello { worker },
+            K_BYE => Msg::Bye { worker },
             other => bail!("unknown message kind {other}"),
         })
     }
@@ -178,6 +203,17 @@ mod tests {
         roundtrip(&Msg::Aggregate { round: 5, v: v.clone(), eta: 0.1 });
         roundtrip(&Msg::AnchorMu { round: 9, mu: v });
         roundtrip(&Msg::Stop { round: 99 });
+        roundtrip(&Msg::Hello { worker: 12 });
+        roundtrip(&Msg::Bye { worker: 7 });
+    }
+
+    #[test]
+    fn handshake_frames_are_header_only() {
+        // Hello/Bye carry no body: 11-byte fixed header, body_len 0 — the
+        // shutdown handshake costs exactly 11 bytes per worker per run.
+        for m in [Msg::Hello { worker: 3 }, Msg::Bye { worker: 3 }] {
+            assert_eq!(m.to_bytes().len(), 11, "{}", m.kind_name());
+        }
     }
 
     #[test]
@@ -213,6 +249,19 @@ mod tests {
         // And the parser accepts it as the equivalent owned message.
         let back = Msg::from_bytes(&expect).unwrap();
         assert_eq!(back, Msg::Grad { worker: 2, round: 9, enc, scalar: 1.25, ref_idx: 3 });
+    }
+
+    #[test]
+    fn forged_element_count_errors_without_huge_allocation() {
+        // An AnchorGrad frame claiming u32::MAX floats with an empty body:
+        // must fail on the truncated read, and the capacity hint must be
+        // bounded by the (tiny) frame, not the forged header.
+        let mut b = vec![K_ANCHOR_GRAD];
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&4u32.to_le_bytes()); // body_len = 4
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // forged count
+        assert!(Msg::from_bytes(&b).is_err());
     }
 
     #[test]

@@ -10,7 +10,10 @@ use crate::codec::{
 use crate::config::Settings;
 use crate::coordinator::metrics::Trace;
 use crate::coordinator::{driver, DriverConfig};
+use crate::data::synthetic::{generate, SkewConfig};
+use crate::objectives::logreg::LogReg;
 use crate::objectives::Objective;
+use crate::optim::{EstimatorKind, StepSchedule};
 use crate::tng::ReferenceKind;
 use crate::util::csv::CsvWriter;
 
@@ -55,6 +58,79 @@ pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
         "fp32" | "identity" => Box::new(IdentityCodec),
         other => bail!("unknown codec spec '{other}'"),
     })
+}
+
+/// Build the shared (objective, codec, config, label) for one cluster run —
+/// the single source of truth behind the `tng leader` / `tng worker` TCP
+/// subcommands *and* the in-process runtimes they are compared against.
+///
+/// Every process of one cluster (the leader and all N workers) must call
+/// this with identical settings: the skewed-logreg dataset is regenerated
+/// from the seed on each end, the shard split is a pure function of
+/// `(n, workers)`, and the per-worker RNG streams split from `seed` — which
+/// is what makes a TCP run byte-identical to the deterministic driver.
+/// Keys (all `key=value`): `n dim csk cth seed lambda codec tng ref_window
+/// workers rounds batch eta estimator anchor_every memory record_every eval
+/// opt opt_iters`.
+pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConfig, String)> {
+    let n = s.usize_or("n", 1024)?;
+    let dim = s.usize_or("dim", 128)?;
+    let ds = generate(&SkewConfig {
+        n,
+        dim,
+        c_sk: s.f32_or("csk", 0.25)?,
+        c_th: s.f32_or("cth", 0.6)?,
+        seed: s.u64_or("seed", 0)?,
+    });
+    let obj = LogReg::new(ds, s.f32_or("lambda", 0.01)?);
+    // The optimum solve is a local full-batch computation; skip it by
+    // default so worker processes start instantly.
+    let f_star = if s.bool_or("opt", false)? {
+        obj.solve_optimum(s.usize_or("opt_iters", 300)?).1
+    } else {
+        f64::NAN
+    };
+    let codec = make_codec(&s.str_or("codec", "ternary"))?;
+    let use_tng = s.bool_or("tng", true)?;
+    let anchor = s.usize_or("anchor_every", 64)?;
+    let cfg = DriverConfig {
+        seed: s.u64_or("seed", 0)?,
+        workers: s.usize_or("workers", 4)?,
+        rounds: s.usize_or("rounds", 200)?,
+        batch: s.usize_or("batch", 8)?,
+        schedule: StepSchedule::Const(s.f32_or("eta", 0.3)?),
+        estimator: if s.str_or("estimator", "sgd") == "svrg" {
+            EstimatorKind::Svrg { anchor_every: anchor }
+        } else {
+            EstimatorKind::Sgd
+        },
+        lbfgs_memory: match s.usize_or("memory", 0)? {
+            0 => None,
+            k => Some(k),
+        },
+        references: if use_tng {
+            vec![
+                ReferenceKind::Zeros,
+                ReferenceKind::AvgDecoded { window: s.usize_or("ref_window", 1)? },
+            ]
+        } else {
+            vec![ReferenceKind::Zeros]
+        },
+        record_every: s.usize_or("record_every", 10)?,
+        f_star,
+        eval_loss: s.bool_or("eval", true)?,
+        // Warm starts are driver-only (parallel::validate rejects them);
+        // the cluster pool leans on the per-round C_nz search instead.
+        warm_start_reference: false,
+        ..Default::default()
+    };
+    let label = format!(
+        "{}{}@M{}",
+        if use_tng { "TN-" } else { "" },
+        codec.name(),
+        cfg.workers
+    );
+    Ok((obj, codec, cfg, label))
 }
 
 /// One method of the paper's matrix.
@@ -180,6 +256,36 @@ mod tests {
         assert!(make_codec("qsgd:abc").is_err());
         assert!(make_codec("shard:0:ternary").is_err());
         assert!(make_codec("shard:ternary").is_err());
+    }
+
+    #[test]
+    fn cluster_setup_is_deterministic_across_calls() {
+        // Leader and worker processes each rebuild the objective/config from
+        // the same key=value settings; two builds must drive bit-identical
+        // runs or the TCP cluster could never match the driver.
+        let s = Settings::from_args(&["n=64", "dim=8", "workers=2", "rounds=6", "record_every=3"])
+            .unwrap();
+        let (obj_a, codec_a, cfg_a, label_a) = cluster_setup(&s).unwrap();
+        let (obj_b, codec_b, cfg_b, label_b) = cluster_setup(&s).unwrap();
+        assert_eq!(label_a, label_b);
+        let a = driver::run(&obj_a, codec_a.as_ref(), &label_a, &cfg_a);
+        let b = driver::run(&obj_b, codec_b.as_ref(), &label_b, &cfg_b);
+        assert_eq!(a.final_w, b.final_w);
+        assert_eq!(a.param_digest(), b.param_digest());
+    }
+
+    #[test]
+    fn cluster_setup_defaults_are_parallel_compatible() {
+        let s = Settings::from_args(&["workers=3", "n=32", "dim=8"]).unwrap();
+        let (_obj, _codec, cfg, label) = cluster_setup(&s).unwrap();
+        crate::coordinator::parallel::validate(&cfg).unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert!(label.starts_with("TN-ternary"), "{label}");
+        // tng=false degrades to the raw codec (Zeros reference only).
+        let s = Settings::from_args(&["tng=false", "n=32", "dim=8"]).unwrap();
+        let (_, _, cfg, label) = cluster_setup(&s).unwrap();
+        assert_eq!(cfg.references, vec![ReferenceKind::Zeros]);
+        assert!(!label.starts_with("TN-"), "{label}");
     }
 
     #[test]

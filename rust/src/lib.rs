@@ -28,4 +28,5 @@ pub mod optim;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod tng;
+pub mod transport;
 pub mod util;

@@ -3,16 +3,17 @@
 //! See `tng help` (or [`tng::cli::USAGE`]) for commands. The figure
 //! harnesses write CSV traces under `outdir=` (default `results/`).
 
-use anyhow::Result;
+use std::io::Write as _;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
 
 use tng::cli;
 use tng::config::Settings;
-use tng::coordinator::{driver, DriverConfig};
-use tng::data::synthetic::{generate, SkewConfig};
+use tng::coordinator::{driver, parallel};
 use tng::experiments::{common, fig1, fig2, fig3, fig4};
-use tng::objectives::logreg::LogReg;
-use tng::optim::{EstimatorKind, StepSchedule};
 use tng::tng::ReferenceKind;
+use tng::transport::tcp::{TcpLeaderBuilder, TcpWorker};
 
 fn main() -> Result<()> {
     tng::util::logger::init();
@@ -40,6 +41,8 @@ fn main() -> Result<()> {
             fig4::run(&parsed.opts)?;
         }
         "run" => custom_run(&parsed.opts)?,
+        "leader" => tcp_leader(&parsed.opts)?,
+        "worker" => tcp_worker(&parsed.opts)?,
         other => unreachable!("cli::parse admitted '{other}'"),
     }
     Ok(())
@@ -73,61 +76,89 @@ fn info() -> Result<()> {
     Ok(())
 }
 
-/// One custom run on skewed logreg: `tng run codec=ternary tng=true
-/// rounds=500 workers=4 eta=0.3 lambda=0.01 csk=0.25 ...`.
-fn custom_run(s: &Settings) -> Result<()> {
-    let n = s.usize_or("n", 2048)?;
-    let dim = s.usize_or("dim", 512)?;
-    let ds = generate(&SkewConfig {
-        n,
-        dim,
-        c_sk: s.f32_or("csk", 0.25)?,
-        c_th: s.f32_or("cth", 0.6)?,
-        seed: s.u64_or("seed", 0)?,
-    });
-    let obj = LogReg::new(ds, s.f32_or("lambda", 0.01)?);
-    let (_, f_star) = obj.solve_optimum(s.usize_or("opt_iters", 300)?);
+/// `timeout_s=` as a validated Duration (the panicking from_secs_f64 would
+/// crash on negative, non-finite, or overflowing input; bad options must be
+/// errors, not panics).
+fn timeout_opt(s: &Settings) -> Result<Duration> {
+    let secs = s.f64_or("timeout_s", 30.0)?;
+    Duration::try_from_secs_f64(secs)
+        .with_context(|| format!("timeout_s={secs} is not a valid duration"))
+}
 
-    let codec = common::make_codec(&s.str_or("codec", "ternary"))?;
-    let use_tng = s.bool_or("tng", true)?;
-    let anchor = s.usize_or("anchor_every", 64)?;
-    let cfg = DriverConfig {
-        seed: s.u64_or("seed", 0)?,
-        workers: s.usize_or("workers", 4)?,
-        rounds: s.usize_or("rounds", 500)?,
-        batch: s.usize_or("batch", 8)?,
-        schedule: StepSchedule::Const(s.f32_or("eta", 0.3)?),
-        estimator: if s.str_or("estimator", "sgd") == "svrg" {
-            EstimatorKind::Svrg { anchor_every: anchor }
-        } else {
-            EstimatorKind::Sgd
-        },
-        lbfgs_memory: match s.usize_or("memory", 0)? {
-            0 => None,
-            k => Some(k),
-        },
-        references: if use_tng {
-            vec![ReferenceKind::AvgDecoded { window: s.usize_or("ref_window", 1)? }]
-        } else {
-            vec![ReferenceKind::Zeros]
-        },
-        record_every: s.usize_or("record_every", 10)?,
-        f_star,
-        warm_start_reference: use_tng,
-        ..Default::default()
-    };
-    let label = format!(
-        "{}{}",
-        if use_tng { "TN-" } else { "" },
-        codec.name()
-    );
-    let tr = driver::run(&obj, codec.as_ref(), &label, &cfg);
-    println!("{}", common::summarize(&tr));
+fn print_records(tr: &tng::coordinator::metrics::Trace) {
     for r in &tr.records {
         println!(
             "  round={:<6} bits/elt={:<10.1} subopt={:.4e} cnz={:.3}",
             r.round, r.bits_per_elt, r.subopt, r.cnz
         );
     }
+}
+
+/// TCP cluster leader: bind, accept `workers=` connections (each worker
+/// process introduces itself with a Hello frame), run the protocol, print
+/// the trace. `addr=127.0.0.1:0` binds a free port, announced on the first
+/// stdout line as `listening addr=HOST:PORT` so a launcher (or the
+/// `transport_tcp` integration test) can start workers race-free.
+fn tcp_leader(s: &Settings) -> Result<()> {
+    let (obj, codec, cfg, label) = common::cluster_setup(s)?;
+    let addr = s.str_or("addr", "127.0.0.1:17017");
+    let timeout = timeout_opt(s)?;
+    let builder = TcpLeaderBuilder::bind(&addr)?.with_timeout(Some(timeout));
+    println!("listening addr={}", builder.local_addr()?);
+    std::io::stdout().flush().ok();
+    let mut tp = builder.accept(cfg.workers)?;
+    let tr = parallel::run_leader(&obj, codec.as_ref(), &label, &cfg, &mut tp)?;
+    println!("{}", common::summarize(&tr));
+    print_records(&tr);
+    println!(
+        "wire up_bits={} down_bits={} ctrl_bytes={} param_digest={:016x}",
+        tr.total_up_bits,
+        tr.total_down_bits,
+        tp.ctrl_bytes(),
+        tr.param_digest()
+    );
+    Ok(())
+}
+
+/// TCP cluster worker `id=K`: rebuild the identical objective/config from
+/// the same settings the leader got, connect, and run worker K's state
+/// machine until the shutdown handshake.
+fn tcp_worker(s: &Settings) -> Result<()> {
+    let (obj, codec, cfg, _label) = common::cluster_setup(s)?;
+    let addr = s.require("addr")?;
+    let id: usize = s
+        .require("id")?
+        .parse()
+        .context("id= must be a worker index")?;
+    if id >= cfg.workers {
+        bail!("id={id} out of range for workers={}", cfg.workers);
+    }
+    let timeout = timeout_opt(s)?;
+    let mut tp = TcpWorker::connect(addr, id as u16, Some(timeout))?;
+    parallel::run_worker(id, &obj, codec.as_ref(), &cfg, &mut tp)
+}
+
+/// One custom run on skewed logreg: `tng run codec=ternary tng=true
+/// rounds=500 workers=4 eta=0.3 lambda=0.01 csk=0.25 ...`.
+///
+/// Shares `cluster_setup`'s settings parsing (one source of truth for the
+/// key set), then applies the driver harness's own defaults and driver-only
+/// features: a bigger default problem, a solved optimum for the subopt
+/// axis, and the §4.2 warm-started single-reference pool (which
+/// `parallel::validate` rejects — this path runs the deterministic driver).
+fn custom_run(s: &Settings) -> Result<()> {
+    let mut opts = Settings::from_args(&["n=2048", "dim=512", "rounds=500", "opt=true"])?;
+    opts.merge(s);
+    let (obj, codec, mut cfg, label) = common::cluster_setup(&opts)?;
+    let use_tng = opts.bool_or("tng", true)?;
+    cfg.references = if use_tng {
+        vec![ReferenceKind::AvgDecoded { window: opts.usize_or("ref_window", 1)? }]
+    } else {
+        vec![ReferenceKind::Zeros]
+    };
+    cfg.warm_start_reference = use_tng;
+    let tr = driver::run(&obj, codec.as_ref(), &label, &cfg);
+    println!("{}", common::summarize(&tr));
+    print_records(&tr);
     Ok(())
 }

@@ -1,0 +1,116 @@
+//! In-process transport backend: the counted mpsc star fabric of
+//! `coordinator::network`, adapted to the [`super::LeaderTransport`] /
+//! [`super::WorkerTransport`] traits. This is the original threaded-runtime
+//! fabric — zero-copy sends, exact byte counters — now one backend among
+//! several behind the same synchronization loop.
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::network::{star, StarFabric, WorkerPort};
+
+use super::{LeaderTransport, NetSnapshot, WorkerTransport};
+
+pub struct ChannelLeader {
+    fabric: StarFabric,
+    /// Straggler timeout for the fan-in receive (`None` = block forever,
+    /// correct when workers are in-process threads joined by the caller).
+    timeout: Option<Duration>,
+}
+
+pub struct ChannelWorker {
+    port: WorkerPort,
+}
+
+/// Build the leader + M worker transports over one in-process fabric.
+pub fn channel_pair(
+    workers: usize,
+    timeout: Option<Duration>,
+) -> (ChannelLeader, Vec<ChannelWorker>) {
+    let (fabric, ports) = star(workers);
+    (
+        ChannelLeader { fabric, timeout },
+        ports.into_iter().map(|port| ChannelWorker { port }).collect(),
+    )
+}
+
+impl LeaderTransport for ChannelLeader {
+    fn workers(&self) -> usize {
+        self.fabric.down.len()
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        match self.timeout {
+            None => self.fabric.leader_rx.recv().map_err(|_| anyhow!("all workers hung up")),
+            Some(d) => match self.fabric.leader_rx.recv_timeout(d) {
+                Ok(f) => Ok(f),
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("straggler timeout: no uplink frame within {d:?}")
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("all workers hung up"),
+            },
+        }
+    }
+
+    fn send_to(&mut self, worker: usize, frame: &[u8]) -> Result<()> {
+        self.fabric.down[worker].send(frame.to_vec())
+    }
+
+    fn stats(&self) -> NetSnapshot {
+        let (up_bytes, down_bytes, up_msgs, down_msgs) = self.fabric.stats.snapshot();
+        NetSnapshot { up_bytes, down_bytes, up_msgs, down_msgs }
+    }
+}
+
+impl WorkerTransport for ChannelWorker {
+    fn send(&mut self, frame: Vec<u8>) -> Result<()> {
+        self.port.up.send(frame)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.port.rx.recv().map_err(|_| anyhow!("leader hung up"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_and_counts_through_traits() {
+        let (mut leader, mut workers) = channel_pair(2, None);
+        workers[0].send(vec![1, 2, 3]).unwrap();
+        workers[1].send(vec![4]).unwrap();
+        leader.send_to(1, &[9, 9]).unwrap();
+        leader.broadcast(&[5]).unwrap();
+
+        assert_eq!(leader.recv().unwrap().len(), 3);
+        assert_eq!(leader.recv().unwrap().len(), 1);
+        assert_eq!(workers[1].recv().unwrap(), vec![9, 9]);
+        assert_eq!(workers[0].recv().unwrap(), vec![5]);
+        assert_eq!(workers[1].recv().unwrap(), vec![5]);
+
+        let s = leader.stats();
+        assert_eq!(
+            (s.up_bytes, s.down_bytes, s.up_msgs, s.down_msgs),
+            (4, 4, 2, 3)
+        );
+    }
+
+    #[test]
+    fn straggler_timeout_fires() {
+        let (mut leader, _workers) = channel_pair(1, Some(Duration::from_millis(20)));
+        let err = leader.recv().unwrap_err();
+        assert!(err.to_string().contains("straggler"), "{err}");
+    }
+
+    #[test]
+    fn recv_after_workers_drop_errors() {
+        let (mut leader, workers) = channel_pair(1, None);
+        drop(workers);
+        assert!(leader.recv().is_err());
+        assert!(leader.send_to(0, &[1]).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Length-prefixed stream framing — the TCP reassembly path.
+//!
+//! A frame on a byte stream is `u32 LE length | length bytes`, where the
+//! bytes are exactly one `coordinator::protocol::Msg` frame (which itself
+//! nests `codec::wire` frames verbatim). The length prefix is transport
+//! overhead, not message content: byte accounting counts the framed bytes
+//! only, so channel and TCP backends report identical wire totals.
+//!
+//! [`Reassembler`] is the single reassembly state machine: the socket
+//! reader threads feed it whatever `read()` returns — arbitrarily torn
+//! chunks, frames split mid-header, several frames coalesced into one
+//! segment — and pop complete frames. It is deliberately I/O-free so the
+//! torn-read property suite (`rust/tests/transport_framing.rs`) can drive
+//! it byte by byte; [`read_frame`] is the blocking adapter the TCP backend
+//! uses on a real stream.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Hard cap on one frame's payload length. A forged or corrupt length
+/// header must be rejected before any allocation of that size is attempted;
+/// 64 MiB comfortably holds a dense fp32 gradient of 16M coordinates.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Write one length-prefixed frame (prefix + payload) to `w`.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> Result<()> {
+    if frame.len() > MAX_FRAME_BYTES {
+        bail!("frame of {} bytes exceeds cap {MAX_FRAME_BYTES}", frame.len());
+    }
+    w.write_all(&(frame.len() as u32).to_le_bytes())?;
+    w.write_all(frame)?;
+    Ok(())
+}
+
+/// Incremental reassembly of length-prefixed frames from torn byte chunks.
+///
+/// Consumed bytes are tracked by a read cursor rather than drained per
+/// frame, so popping a frame costs one payload copy (the returned `Vec`),
+/// not an additional memmove of everything still buffered; the consumed
+/// prefix is compacted lazily when it dominates the buffer.
+#[derive(Debug)]
+pub struct Reassembler {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (always <= buf.len()).
+    start: usize,
+    max_frame: usize,
+}
+
+impl Default for Reassembler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Reassembler {
+    pub fn new() -> Self {
+        Self::with_max_frame(MAX_FRAME_BYTES)
+    }
+
+    /// A reassembler with a custom frame cap (tests exercise small caps
+    /// without allocating oversized frames).
+    pub fn with_max_frame(max_frame: usize) -> Self {
+        Reassembler { buf: Vec::new(), start: 0, max_frame }
+    }
+
+    /// Feed bytes exactly as they arrived from the stream — any tearing is
+    /// acceptable, including mid-header.
+    pub fn push(&mut self, chunk: &[u8]) {
+        // Amortized compaction: drop the consumed prefix once it is at
+        // least as large as the live tail, so each byte is moved O(1)
+        // times overall.
+        if self.start > 0 && self.start >= self.buf.len() - self.start {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Bytes buffered but not yet returned as a frame (a non-zero value at
+    /// EOF means the stream died mid-frame).
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Pop the next complete frame: `Ok(Some(frame))` when one is fully
+    /// buffered, `Ok(None)` when more bytes are needed, `Err` on a length
+    /// header exceeding the cap. Never panics, never yields a partial frame.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let avail = self.buf.len() - self.start;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let header = &self.buf[self.start..self.start + 4];
+        let len = u32::from_le_bytes(header.try_into().unwrap()) as usize;
+        if len > self.max_frame {
+            bail!("frame length {len} exceeds cap {} (forged or corrupt header)", self.max_frame);
+        }
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let body = self.start + 4;
+        let frame = self.buf[body..body + len].to_vec();
+        self.start = body + len;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        }
+        Ok(Some(frame))
+    }
+}
+
+/// Blocking read of one frame from `r` through `re`. Returns `Ok(None)` on
+/// a clean EOF at a frame boundary; a mid-frame EOF, a read error (including
+/// a socket read timeout), or an oversized header is an `Err`.
+pub fn read_frame(r: &mut impl Read, re: &mut Reassembler) -> Result<Option<Vec<u8>>> {
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        if let Some(frame) = re.next_frame()? {
+            return Ok(Some(frame));
+        }
+        let n = match r.read(&mut chunk) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => bail!("stream read failed: {e}"),
+        };
+        if n == 0 {
+            if re.pending_bytes() == 0 {
+                return Ok(None);
+            }
+            bail!("stream closed mid-frame with {} buffered bytes", re.pending_bytes());
+        }
+        re.push(&chunk[..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_one_frame() {
+        let stream = framed(b"hello");
+        let mut re = Reassembler::new();
+        re.push(&stream);
+        assert_eq!(re.next_frame().unwrap().unwrap(), b"hello");
+        assert_eq!(re.next_frame().unwrap(), None);
+        assert_eq!(re.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn empty_frame_is_legal() {
+        let stream = framed(b"");
+        let mut re = Reassembler::new();
+        re.push(&stream);
+        assert_eq!(re.next_frame().unwrap().unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn byte_at_a_time_reassembly() {
+        let mut stream = framed(b"abc");
+        stream.extend_from_slice(&framed(b"defg"));
+        let mut re = Reassembler::new();
+        let mut frames = Vec::new();
+        for &b in &stream {
+            re.push(&[b]);
+            while let Some(f) = re.next_frame().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames, vec![b"abc".to_vec(), b"defg".to_vec()]);
+    }
+
+    #[test]
+    fn header_split_across_pushes() {
+        let stream = framed(&[7u8; 300]);
+        let mut re = Reassembler::new();
+        re.push(&stream[..2]); // half the length prefix
+        assert_eq!(re.next_frame().unwrap(), None);
+        re.push(&stream[2..5]);
+        assert_eq!(re.next_frame().unwrap(), None);
+        re.push(&stream[5..]);
+        assert_eq!(re.next_frame().unwrap().unwrap(), vec![7u8; 300]);
+    }
+
+    #[test]
+    fn oversized_header_rejected_before_payload() {
+        let mut re = Reassembler::with_max_frame(16);
+        re.push(&17u32.to_le_bytes());
+        assert!(re.next_frame().is_err());
+        let mut re = Reassembler::new();
+        re.push(&u32::MAX.to_le_bytes());
+        assert!(re.next_frame().is_err());
+    }
+
+    #[test]
+    fn write_frame_refuses_oversized() {
+        // The write side checks the same cap as the reader, so a local bug
+        // cannot emit a frame every receiver rejects: one byte over the cap
+        // must be refused with nothing written to the stream.
+        let big = vec![0u8; MAX_FRAME_BYTES + 1];
+        let mut out = Vec::new();
+        assert!(write_frame(&mut out, &big).is_err());
+        assert!(out.is_empty(), "refusal must not write a partial frame");
+        // The boundary itself is legal.
+        assert!(write_frame(&mut out, &big[..MAX_FRAME_BYTES]).is_ok());
+        assert_eq!(out.len(), 4 + MAX_FRAME_BYTES);
+    }
+
+    #[test]
+    fn read_frame_clean_eof_vs_torn_eof() {
+        let stream = framed(b"xyz");
+        // Clean EOF after a full frame.
+        let mut cur = std::io::Cursor::new(stream.clone());
+        let mut re = Reassembler::new();
+        assert_eq!(read_frame(&mut cur, &mut re).unwrap().unwrap(), b"xyz");
+        assert_eq!(read_frame(&mut cur, &mut re).unwrap(), None);
+        // EOF mid-frame is an error, not a silent truncation.
+        let mut cur = std::io::Cursor::new(stream[..stream.len() - 1].to_vec());
+        let mut re = Reassembler::new();
+        assert!(read_frame(&mut cur, &mut re).is_err());
+    }
+}

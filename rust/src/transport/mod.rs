@@ -1,0 +1,80 @@
+//! Transport abstraction: how leader and workers exchange protocol frames.
+//!
+//! The coordinator's synchronization loop (`coordinator::parallel`) is
+//! written once against two narrow traits and runs unchanged over:
+//!
+//! * [`channel`] — the in-process mpsc star fabric (M worker threads), the
+//!   original counted-byte simulator;
+//! * [`tcp`] — real sockets on `std::net`, blocking I/O with one reader
+//!   thread per connection, for N genuine OS processes on a host.
+//!
+//! Both carry the exact same `coordinator::protocol::Msg` frames and count
+//! the exact same data-plane bytes, so a TCP run is byte-identical — in
+//! iterates *and* wire totals — to a channel run of the same config (pinned
+//! by `rust/tests/transport_tcp.rs`). [`frame`] holds the stream framing
+//! (length prefix + torn-read reassembly) the TCP backend is built on.
+//!
+//! Accounting convention: [`NetSnapshot`] counts protocol frames only. The
+//! TCP length prefix (4 bytes/frame, recoverable from the message counts)
+//! and the `Hello` join frame are transport overhead, tracked separately by
+//! the TCP backend (`tcp::TcpLeader::ctrl_bytes`) so the data-plane totals
+//! stay comparable across backends.
+
+pub mod channel;
+pub mod frame;
+pub mod tcp;
+
+pub use channel::{channel_pair, ChannelLeader, ChannelWorker};
+pub use frame::{read_frame, write_frame, Reassembler, MAX_FRAME_BYTES};
+pub use tcp::{TcpLeader, TcpLeaderBuilder, TcpWorker};
+
+use anyhow::Result;
+
+/// Data-plane byte/message counters for one fabric, leader's view.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetSnapshot {
+    /// Bytes of worker→leader protocol frames.
+    pub up_bytes: u64,
+    /// Bytes of leader→worker protocol frames.
+    pub down_bytes: u64,
+    pub up_msgs: u64,
+    pub down_msgs: u64,
+}
+
+/// The leader's side of a star fabric over `workers()` workers.
+///
+/// Implementations must deliver each worker's frames in send order (frames
+/// from different workers may interleave arbitrarily — the protocol layer
+/// folds by worker id, not arrival order) and count every frame's exact
+/// byte length.
+pub trait LeaderTransport {
+    fn workers(&self) -> usize;
+
+    /// Receive the next uplink frame from any worker. Implementations with
+    /// a straggler timeout must return an `Err` mentioning "straggler" when
+    /// no frame arrives in time, rather than blocking forever.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+
+    /// Send one frame to worker `worker`.
+    fn send_to(&mut self, worker: usize, frame: &[u8]) -> Result<()>;
+
+    /// Send one frame to every worker.
+    fn broadcast(&mut self, frame: &[u8]) -> Result<()> {
+        for i in 0..self.workers() {
+            self.send_to(i, frame)?;
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> NetSnapshot;
+}
+
+/// One worker's side of the fabric.
+pub trait WorkerTransport {
+    /// Send one uplink frame (ownership passes to the transport: the
+    /// channel backend forwards the buffer without copying).
+    fn send(&mut self, frame: Vec<u8>) -> Result<()>;
+
+    /// Receive the next downlink frame from the leader.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}

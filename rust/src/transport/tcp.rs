@@ -1,0 +1,396 @@
+//! TCP transport backend: N real OS processes over loopback or a LAN.
+//!
+//! Topology is the same star as the channel fabric, but over `std::net`
+//! blocking sockets. The leader binds, accepts `M` connections, and reads
+//! exactly one [`Msg::Hello`] join frame per connection to learn which
+//! worker owns it (connection order is nondeterministic; worker ids come
+//! from the worker's own CLI, so the fold order — and therefore the math —
+//! is identical to the channel and driver runtimes). One reader thread per
+//! connection reassembles length-prefixed frames (`super::frame`) and
+//! pushes them onto a single fan-in queue; partial reads, coalesced frames,
+//! and forged/oversized length headers are handled there, never in the
+//! protocol loop.
+//!
+//! Straggler policy: the leader's fan-in `recv` applies a configurable
+//! timeout (an `Err` naming the wait, instead of a silent hang); the accept
+//! phase applies the same deadline to slow joiners, and workers apply it to
+//! their downlink reads. Shutdown: `Stop` → each worker acks `Bye` and
+//! closes; the leader drains all Byes before reporting final byte totals,
+//! so those totals are deterministic and byte-identical to a channel run.
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::network::NetStats;
+use crate::coordinator::protocol::Msg;
+
+use super::frame::{read_frame, write_frame, Reassembler};
+use super::{LeaderTransport, NetSnapshot, WorkerTransport};
+
+/// Default deadline for joins, straggler waits, and worker downlink reads.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Bound listener waiting for its workers: split from [`TcpLeader`] so the
+/// caller can learn the OS-assigned port (`addr=127.0.0.1:0`) and announce
+/// it *before* blocking in accept.
+#[derive(Debug)]
+pub struct TcpLeaderBuilder {
+    listener: TcpListener,
+    timeout: Option<Duration>,
+}
+
+impl TcpLeaderBuilder {
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding leader on {addr}"))?;
+        Ok(TcpLeaderBuilder { listener, timeout: Some(DEFAULT_TIMEOUT) })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Straggler/join deadline (`None` = wait forever).
+    pub fn with_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Accept exactly `workers` connections, each introduced by a
+    /// [`Msg::Hello`] carrying its worker id, and start one reader thread
+    /// per connection. A malformed join (bad frame, id out of range,
+    /// duplicate id) aborts the accept: this runtime trusts its cluster and
+    /// prefers failing loudly over running with a hole in the fold order.
+    pub fn accept(self, workers: usize) -> Result<TcpLeader> {
+        if workers == 0 || workers > u16::MAX as usize {
+            bail!("worker count {workers} out of range");
+        }
+        let deadline = self.timeout.map(|d| Instant::now() + d);
+        self.listener.set_nonblocking(true)?;
+        let stats = Arc::new(NetStats::default());
+        let (tx, rx) = channel::<Result<Vec<u8>>>();
+        let mut conns: Vec<Option<TcpStream>> = (0..workers).map(|_| None).collect();
+        let mut ctrl_bytes = 0u64;
+        let mut joined = 0usize;
+        while joined < workers {
+            let (mut stream, peer) = match self.listener.accept() {
+                Ok(ok) => ok,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Some(dl) = deadline {
+                        if Instant::now() > dl {
+                            bail!(
+                                "accept timeout: {joined}/{workers} workers joined within {:?}",
+                                self.timeout.unwrap()
+                            );
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            stream.set_nonblocking(false)?;
+            stream.set_nodelay(true)?;
+            // Bound the Hello read by the time *remaining* to the join
+            // deadline: k connected-but-silent peers must not be able to
+            // serially stretch the accept phase to k full timeouts.
+            let hello_timeout = match deadline {
+                None => None,
+                Some(dl) => {
+                    let left = dl.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        bail!("accept timeout: {joined}/{workers} workers joined");
+                    }
+                    Some(left)
+                }
+            };
+            stream.set_read_timeout(hello_timeout)?;
+            // The join frame; any bytes the worker sent right behind it stay
+            // buffered in this reassembler, which the reader thread inherits.
+            let mut re = Reassembler::new();
+            let hello = read_frame(&mut stream, &mut re)
+                .with_context(|| format!("{peer}: reading Hello"))?
+                .ok_or_else(|| anyhow!("{peer}: closed before Hello"))?;
+            ctrl_bytes += hello.len() as u64;
+            let id = match Msg::from_bytes(&hello)
+                .with_context(|| format!("{peer}: parsing Hello"))?
+            {
+                Msg::Hello { worker } => worker as usize,
+                other => bail!("{peer}: expected Hello, got {}", other.kind_name()),
+            };
+            if id >= workers {
+                bail!("{peer}: worker id {id} out of range 0..{workers}");
+            }
+            if conns[id].is_some() {
+                bail!("{peer}: duplicate Hello for worker {id}");
+            }
+            // Stragglers are caught at the fan-in queue, not per socket —
+            // but writes keep the deadline: a joined-then-wedged worker
+            // whose buffers fill must fail the leader's send, not hang it.
+            stream.set_read_timeout(None)?;
+            stream.set_write_timeout(self.timeout)?;
+            conns[id] = Some(stream.try_clone()?);
+            let tx = tx.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || reader_loop(id, stream, re, tx, stats));
+            joined += 1;
+        }
+        let conns = conns.into_iter().map(|c| c.expect("all joined")).collect();
+        Ok(TcpLeader { conns, rx, stats, timeout: self.timeout, ctrl_bytes })
+    }
+}
+
+/// Per-connection reader: reassemble frames, count them, fan them in. The
+/// thread is detached — it exits on clean EOF (worker sent Bye and closed),
+/// on error (reported through the queue), or when the leader drops the
+/// queue receiver.
+fn reader_loop(
+    worker: usize,
+    mut sock: TcpStream,
+    mut re: Reassembler,
+    tx: Sender<Result<Vec<u8>>>,
+    stats: Arc<NetStats>,
+) {
+    loop {
+        match read_frame(&mut sock, &mut re) {
+            Ok(Some(frame)) => {
+                stats.up_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+                stats.up_msgs.fetch_add(1, Ordering::Relaxed);
+                if tx.send(Ok(frame)).is_err() {
+                    return; // leader gone
+                }
+            }
+            Ok(None) => return, // clean EOF at a frame boundary
+            Err(e) => {
+                let _ = tx.send(Err(anyhow!("worker {worker} uplink: {e}")));
+                return;
+            }
+        }
+    }
+}
+
+/// Leader's transport over M accepted connections.
+#[derive(Debug)]
+pub struct TcpLeader {
+    /// Write halves, indexed by worker id.
+    conns: Vec<TcpStream>,
+    /// Fan-in of reassembled uplink frames from all reader threads.
+    rx: Receiver<Result<Vec<u8>>>,
+    stats: Arc<NetStats>,
+    timeout: Option<Duration>,
+    ctrl_bytes: u64,
+}
+
+impl TcpLeader {
+    /// Control-plane bytes (the `Hello` join frames) — transport overhead
+    /// excluded from the data-plane [`NetSnapshot`] so TCP and channel runs
+    /// report identical wire totals.
+    pub fn ctrl_bytes(&self) -> u64 {
+        self.ctrl_bytes
+    }
+}
+
+impl LeaderTransport for TcpLeader {
+    fn workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        match self.timeout {
+            None => match self.rx.recv() {
+                Ok(r) => r,
+                Err(_) => bail!("all uplink readers exited"),
+            },
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("straggler timeout: no uplink frame within {d:?}")
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("all uplink readers exited"),
+            },
+        }
+    }
+
+    fn send_to(&mut self, worker: usize, frame: &[u8]) -> Result<()> {
+        let sock = &mut self.conns[worker];
+        write_frame(sock, frame).with_context(|| format!("send to worker {worker}"))?;
+        sock.flush()?;
+        self.stats.down_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.stats.down_msgs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn stats(&self) -> NetSnapshot {
+        let (up_bytes, down_bytes, up_msgs, down_msgs) = self.stats.snapshot();
+        NetSnapshot { up_bytes, down_bytes, up_msgs, down_msgs }
+    }
+}
+
+/// One worker's connection to the leader.
+#[derive(Debug)]
+pub struct TcpWorker {
+    sock: TcpStream,
+    re: Reassembler,
+}
+
+impl TcpWorker {
+    /// Dial the leader (retrying, up to the timeout, while the leader is
+    /// not listening yet) and introduce this worker id with a `Hello`
+    /// frame. Only not-yet-listening failures are retried; a permanent
+    /// error (unparseable address, unroutable host) surfaces immediately.
+    pub fn connect(addr: &str, worker: u16, timeout: Option<Duration>) -> Result<Self> {
+        use std::io::ErrorKind;
+        let deadline = timeout.map(|d| Instant::now() + d);
+        let mut sock = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    let transient = matches!(
+                        e.kind(),
+                        ErrorKind::ConnectionRefused
+                            | ErrorKind::ConnectionReset
+                            | ErrorKind::ConnectionAborted
+                            | ErrorKind::TimedOut
+                    );
+                    let expired =
+                        deadline.map(|dl| Instant::now() > dl).unwrap_or(false);
+                    if !transient || expired {
+                        return Err(anyhow!("connecting worker {worker} to {addr}: {e}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        sock.set_nodelay(true)?;
+        // Straggler guards both ways: a leader that stops broadcasting (or
+        // stops draining) turns into an I/O error here rather than a worker
+        // wedged forever.
+        sock.set_read_timeout(timeout)?;
+        sock.set_write_timeout(timeout)?;
+        write_frame(&mut sock, &Msg::Hello { worker }.to_bytes())?;
+        sock.flush()?;
+        Ok(TcpWorker { sock, re: Reassembler::new() })
+    }
+}
+
+impl WorkerTransport for TcpWorker {
+    fn send(&mut self, frame: Vec<u8>) -> Result<()> {
+        write_frame(&mut self.sock, &frame)?;
+        self.sock.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        match read_frame(&mut self.sock, &mut self.re)? {
+            Some(frame) => Ok(frame),
+            None => bail!("leader closed the connection"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Frame-level loopback through real sockets: identity-tagged joins,
+    /// fan-in ordering per worker, byte accounting, broadcast.
+    #[test]
+    fn tcp_loopback_frames_and_accounting() {
+        let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Some(Duration::from_secs(20)));
+        let addr = builder.local_addr().unwrap().to_string();
+        let workers = 2usize;
+
+        let handles: Vec<_> = (0..workers as u16)
+            .map(|id| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut w =
+                        TcpWorker::connect(&addr, id, Some(Duration::from_secs(20))).unwrap();
+                    w.send(vec![id as u8; 3 + id as usize]).unwrap();
+                    w.send(vec![0xF0 | id as u8]).unwrap();
+                    let down = w.recv().unwrap();
+                    assert_eq!(down, vec![7, 7]);
+                })
+            })
+            .collect();
+
+        let mut leader = builder.accept(workers).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..2 * workers {
+            got.push(leader.recv().unwrap());
+        }
+        // Per-worker order is preserved: the 3+id-byte frame precedes the
+        // 1-byte frame for each id.
+        for id in 0..workers as u8 {
+            let a = got.iter().position(|f| f == &vec![id; 3 + id as usize]).unwrap();
+            let b = got.iter().position(|f| f == &vec![0xF0 | id]).unwrap();
+            assert!(a < b, "worker {id} frames reordered");
+        }
+        leader.broadcast(&[7, 7]).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = leader.stats();
+        assert_eq!(s.up_bytes, (3 + 1) as u64 + (4 + 1) as u64);
+        assert_eq!(s.up_msgs, 4);
+        assert_eq!(s.down_bytes, 2 * 2);
+        assert_eq!(s.down_msgs, 2);
+        // Hello join frames (11 bytes each) are control plane, not data.
+        assert_eq!(leader.ctrl_bytes(), 2 * 11);
+    }
+
+    #[test]
+    fn tcp_duplicate_worker_id_rejected() {
+        let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Some(Duration::from_secs(20)));
+        let addr = builder.local_addr().unwrap().to_string();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    // Both claim id 0; hold the socket until the leader decides.
+                    let w = TcpWorker::connect(&addr, 0, Some(Duration::from_secs(20)));
+                    std::thread::sleep(Duration::from_millis(300));
+                    drop(w);
+                })
+            })
+            .collect();
+        let err = builder.accept(2).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tcp_connect_fails_fast_on_permanent_error() {
+        // An unparseable address is not a not-yet-listening condition: it
+        // must surface immediately, not after the full retry window.
+        let t0 = Instant::now();
+        let err = TcpWorker::connect("not an address", 0, Some(Duration::from_secs(30)));
+        assert!(err.is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "permanent connect errors must not be retried"
+        );
+    }
+
+    #[test]
+    fn tcp_accept_times_out_without_enough_workers() {
+        let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Some(Duration::from_millis(100)));
+        let err = builder.accept(1).unwrap_err();
+        assert!(err.to_string().contains("accept timeout"), "{err}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Focused coverage for the TNG reference machinery (`tng::reference`,
+//! `tng::cnz`) beyond the per-module smoke tests: reference-search
+//! optimality on hand-computable 2-D trajectories, and the degenerate
+//! corners (empty trajectory, constant gradients, single worker, zero
+//! gradients) where the conventions — not the formulas — carry the load.
+
+use tng::codec::ternary::TernaryCodec;
+use tng::coordinator::{driver, parallel, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::objectives::logreg::LogReg;
+use tng::optim::StepSchedule;
+use tng::tng::{cnz_ratio, CnzEstimator, CnzSelector, ReferenceKind, ReferenceManager, RoundCtx};
+use tng::util::Rng;
+
+fn ctx<'a>(
+    round: usize,
+    decoded: &'a [f32],
+    w_prev: &'a [f32],
+    w_next: &'a [f32],
+    eta: f32,
+) -> RoundCtx<'a> {
+    RoundCtx { round, decoded_avg: decoded, w_prev, w_next, eta, full_grad: None }
+}
+
+fn pool_2d() -> CnzSelector {
+    CnzSelector::new(vec![
+        ReferenceManager::new(ReferenceKind::Zeros, 2),
+        ReferenceManager::new(ReferenceKind::AvgDecoded { window: 2 }, 2),
+        ReferenceManager::new(ReferenceKind::ParamDelta, 2),
+    ])
+}
+
+/// Drive the pool through a hand-computable 2-D trajectory where every
+/// reference ends up distinct, then check `select` returns the argmin with
+/// exactly the hand-derived ratio.
+#[test]
+fn reference_search_optimal_on_hand_trajectory() {
+    let mut sel = pool_2d();
+    // Round 0: v=(2,2); w: (1,1) -> (0.5,1) at eta=0.5 => ParamDelta (1,0).
+    sel.end_round(&ctx(0, &[2.0, 2.0], &[1.0, 1.0], &[0.5, 1.0], 0.5));
+    // Round 1: v=(0,2); w: (0.5,1) -> (0.5,0) => ParamDelta (0,2).
+    sel.end_round(&ctx(1, &[0.0, 2.0], &[0.5, 1.0], &[0.5, 0.0], 0.5));
+    // Pool state now: zeros=(0,0), avgdec2=((2,2)+(0,2))/2=(1,2), pdelta=(0,2).
+    assert_eq!(sel.current(0), &[0.0, 0.0]);
+    assert_eq!(sel.current(1), &[1.0, 2.0]);
+    assert_eq!(sel.current(2), &[0.0, 2.0]);
+
+    // g near (1,2): avgdec wins with ratio ||(0.1,-0.1)||²/||g||².
+    let g = [1.1f32, 1.9];
+    let den = f64::from(g[0]) * f64::from(g[0]) + f64::from(g[1]) * f64::from(g[1]);
+    let (idx, ratio, bits) = sel.select(&g);
+    assert_eq!(idx, 1);
+    let expect = (0.1f64 * 0.1 + 0.1 * 0.1) / den;
+    assert!((ratio - expect).abs() < 1e-6, "ratio={ratio} expect={expect}");
+    assert_eq!(bits, 2, "3-way pool signals in 2 bits");
+
+    // g near (0,2): pdelta wins. g tiny: zeros wins (ratio 1 is the floor
+    // only when the pool has nothing closer than the origin).
+    assert_eq!(sel.select(&[0.05, 2.1]).0, 2);
+    assert_eq!(sel.select(&[0.01, -0.01]).0, 0);
+}
+
+/// `select` must agree with a brute-force argmin over the pool for a cloud
+/// of random gradients — no tie-break or indexing slip.
+#[test]
+fn reference_search_matches_bruteforce_argmin() {
+    let mut sel = pool_2d();
+    sel.end_round(&ctx(0, &[2.0, 2.0], &[1.0, 1.0], &[0.5, 1.0], 0.5));
+    sel.end_round(&ctx(1, &[0.0, 2.0], &[0.5, 1.0], &[0.5, 0.0], 0.5));
+    let mut rng = Rng::new(42);
+    for _ in 0..500 {
+        let g = [rng.gauss_f32() * 2.0, rng.gauss_f32() * 2.0];
+        let (idx, ratio, _) = sel.select(&g);
+        let brute: Vec<f64> =
+            (0..3).map(|i| cnz_ratio(&g, sel.current(i))).collect();
+        let best = brute
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert!((ratio - best.1).abs() < 1e-12);
+        assert_eq!(brute[idx], *best.1, "selected ratio must be minimal");
+    }
+}
+
+/// Empty trajectory: before any `end_round`, every reference is the zero
+/// vector, the search degenerates to the trivial C_nz = 1 (first index wins
+/// ties), and the g = 0 convention holds.
+#[test]
+fn empty_trajectory_degenerates_to_trivial_bound() {
+    let sel = pool_2d();
+    for i in 0..3 {
+        assert_eq!(sel.current(i), &[0.0, 0.0]);
+    }
+    let (idx, ratio, _) = sel.select(&[3.0, -4.0]);
+    assert_eq!(idx, 0, "ties keep the first (Zeros) entry");
+    assert!((ratio - 1.0).abs() < 1e-12);
+    // g = 0 is defined as ratio 1.0, not NaN/inf.
+    let (_, ratio0, _) = sel.select(&[0.0, 0.0]);
+    assert_eq!(ratio0, 1.0);
+    assert_eq!(cnz_ratio(&[0.0, 0.0], &[5.0, 5.0]), 1.0);
+}
+
+/// Constant gradients: with v_t constant, AvgDecoded converges to exactly
+/// that constant (any window), C_nz hits 0, and the estimator certifies it.
+#[test]
+fn constant_gradients_drive_cnz_to_zero() {
+    let mut mgr = ReferenceManager::new(ReferenceKind::AvgDecoded { window: 3 }, 2);
+    let v = [1.5f32, -2.5];
+    let w = [0.0f32; 2];
+    let mut est = CnzEstimator::new();
+    for t in 0..5 {
+        mgr.end_round(&ctx(t, &v, &w, &w, 0.1));
+        est.observe(&v, mgr.current());
+    }
+    assert_eq!(mgr.current(), &v);
+    assert!(est.value() < 1e-12, "cnz={}", est.value());
+    assert_eq!(est.count(), 5);
+}
+
+/// All-zero gradient stream: numerator and denominator means are both 0;
+/// the estimator must fall back to the trivial bound, not 0/0.
+#[test]
+fn zero_gradient_stream_is_trivial_bound_not_nan() {
+    let mut est = CnzEstimator::new();
+    est.observe(&[0.0, 0.0], &[0.0, 0.0]);
+    est.observe(&[0.0, 0.0], &[1.0, 1.0]);
+    assert!(est.value().is_finite());
+    // den mean is 0 -> convention 1.0.
+    let mut only_zero = CnzEstimator::new();
+    only_zero.observe(&[0.0], &[0.0]);
+    assert_eq!(only_zero.value(), 1.0);
+}
+
+/// cnz_ratio is scale invariant: scaling (g, g̃) together cannot change the
+/// normalization quality (Proposition 4 is a ratio of expectations).
+#[test]
+fn cnz_ratio_scale_invariant() {
+    let g = [0.3f32, -1.2];
+    let r = [0.1f32, -1.0];
+    let base = cnz_ratio(&g, &r);
+    for c in [0.5f32, 2.0, 17.0] {
+        let gc: Vec<f32> = g.iter().map(|x| x * c).collect();
+        let rc: Vec<f32> = r.iter().map(|x| x * c).collect();
+        assert!((cnz_ratio(&gc, &rc) - base).abs() < 1e-6);
+    }
+}
+
+/// Single-entry pool: no signalling bits, and the delayed reference follows
+/// its hand-computable schedule.
+#[test]
+fn singleton_pool_and_delayed_schedule() {
+    let sel = CnzSelector::new(vec![ReferenceManager::new(ReferenceKind::Zeros, 2)]);
+    assert_eq!(sel.signal_bits(), 0);
+    assert_eq!(sel.select(&[1.0, 1.0]).2, 0);
+
+    let mut mgr = ReferenceManager::new(
+        ReferenceKind::Delayed { tau: 1, update_every: 2, charge_broadcast: false },
+        1,
+    );
+    let w = [0.0f32; 1];
+    mgr.end_round(&ctx(0, &[10.0], &w, &w, 0.1));
+    assert_eq!(mgr.current(), &[0.0], "no update before the schedule fires");
+    mgr.end_round(&ctx(1, &[20.0], &w, &w, 0.1));
+    assert_eq!(mgr.current(), &[10.0], "update installs the tau-delayed aggregate");
+    mgr.end_round(&ctx(2, &[30.0], &w, &w, 0.1));
+    assert_eq!(mgr.current(), &[10.0], "holds between updates");
+    mgr.end_round(&ctx(3, &[40.0], &w, &w, 0.1));
+    assert_eq!(mgr.current(), &[30.0]);
+}
+
+/// Single worker, M = 1: the whole protocol collapses to plain compressed
+/// SGD and both runtimes must still agree bit-for-bit with the driver
+/// (the shard is the full dataset, the fold is a single message).
+#[test]
+fn single_worker_runtimes_agree() {
+    let ds = generate(&SkewConfig { n: 48, dim: 12, seed: 4, ..Default::default() });
+    let obj = LogReg::new(ds, 0.05);
+    let cfg = DriverConfig {
+        rounds: 20,
+        workers: 1,
+        schedule: StepSchedule::Const(0.3),
+        references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 1 }],
+        record_every: 5,
+        ..Default::default()
+    };
+    let seq = driver::run(&obj, &TernaryCodec, "seq", &cfg);
+    let par = parallel::run(&obj, &TernaryCodec, "par", &cfg).unwrap();
+    assert_eq!(seq.final_w, par.final_w);
+    assert_eq!(seq.param_digest(), par.param_digest());
+    assert!(par.total_up_bits > 0 && par.total_down_bits > 0);
+}

@@ -1,0 +1,284 @@
+//! Loopback TCP integration: the transport must change *nothing* about the
+//! math. For each codec config, a cluster of real sockets (leader + 4
+//! workers) must reproduce the deterministic driver's trace point for point
+//! — and its wire byte totals must equal the in-process channel runtime's
+//! exactly (both count the same `protocol::Msg` frames; the length prefix
+//! and `Hello` join are control plane). Extends the golden-trace pattern of
+//! `golden_trace.rs` across a process boundary: one test drives genuine OS
+//! processes through the `tng leader` / `tng worker` CLI.
+//!
+//! Every test here binds sockets, so every fn is named `tcp_*`: CI runs
+//! this file in its own serial job (`--test-threads=1`, hard timeout) and
+//! skips `tcp_*` in the main matrix. Plain `cargo test` still runs
+//! everything.
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use tng::codec::Codec;
+use tng::config::Settings;
+use tng::coordinator::metrics::Trace;
+use tng::coordinator::{driver, parallel, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::experiments::common;
+use tng::objectives::logreg::LogReg;
+use tng::optim::StepSchedule;
+use tng::tng::ReferenceKind;
+use tng::transport::tcp::{TcpLeaderBuilder, TcpWorker};
+use tng::transport::LeaderTransport;
+
+const NET_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Run one cluster over real loopback sockets: leader on this thread,
+/// every worker on its own thread with its own `TcpWorker` connection.
+fn run_tcp(obj: &LogReg, codec: &dyn Codec, cfg: &DriverConfig) -> Trace {
+    let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+        .unwrap()
+        .with_timeout(Some(NET_TIMEOUT));
+    let addr = builder.local_addr().unwrap().to_string();
+    std::thread::scope(|scope| {
+        for id in 0..cfg.workers {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut tp =
+                    TcpWorker::connect(&addr, id as u16, Some(NET_TIMEOUT)).unwrap();
+                parallel::run_worker(id, obj, codec, cfg, &mut tp).unwrap();
+            });
+        }
+        let mut leader = builder.accept(cfg.workers).unwrap();
+        parallel::run_leader(obj, codec, "tcp", cfg, &mut leader).unwrap()
+    })
+}
+
+fn assert_traces_identical(seq: &Trace, par: &Trace, what: &str) {
+    assert_eq!(seq.final_w, par.final_w, "{what}: final iterate diverged");
+    assert_eq!(seq.param_digest(), par.param_digest(), "{what}: digest");
+    assert_eq!(seq.records.len(), par.records.len(), "{what}: record counts");
+    for (a, b) in seq.records.iter().zip(&par.records) {
+        assert_eq!(a.round, b.round, "{what}: record rounds");
+        assert_eq!(a.w0.to_bits(), b.w0.to_bits(), "{what}: w0 at round {}", a.round);
+        assert_eq!(a.w1.to_bits(), b.w1.to_bits(), "{what}: w1 at round {}", a.round);
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "{what}: loss at round {} ({} vs {})",
+            a.round,
+            a.loss,
+            b.loss
+        );
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "{what}: grad_norm at round {}",
+            a.round
+        );
+    }
+}
+
+fn logreg() -> LogReg {
+    let ds = generate(&SkewConfig { n: 96, dim: 24, seed: 7, ..Default::default() });
+    LogReg::new(ds, 0.05)
+}
+
+fn base_cfg() -> DriverConfig {
+    DriverConfig {
+        seed: 3,
+        rounds: 25,
+        workers: 4,
+        batch: 4,
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 2 }],
+        record_every: 5,
+        ..Default::default()
+    }
+}
+
+/// The acceptance pin: for ternary, QSGD, and sharded-ternary, the TCP run
+/// is byte-identical to the deterministic driver (iterates + records) and
+/// to the channel runtime (wire bits).
+#[test]
+fn tcp_golden_trace_three_codecs() {
+    let obj = logreg();
+    for spec in ["ternary", "qsgd:4", "shard:4:ternary"] {
+        let codec = common::make_codec(spec).unwrap();
+        let cfg = base_cfg();
+        let seq = driver::run(&obj, codec.as_ref(), "seq", &cfg);
+        let chan = parallel::run(&obj, codec.as_ref(), "chan", &cfg).unwrap();
+        let tcp = run_tcp(&obj, codec.as_ref(), &cfg);
+        assert_traces_identical(&seq, &tcp, &format!("driver-vs-tcp/{spec}"));
+        assert_traces_identical(&chan, &tcp, &format!("chan-vs-tcp/{spec}"));
+        assert_eq!(
+            (chan.total_up_bits, chan.total_down_bits),
+            (tcp.total_up_bits, tcp.total_down_bits),
+            "{spec}: wire bits must be identical across transports"
+        );
+        assert!(tcp.total_up_bits > 0 && tcp.total_down_bits > 0, "{spec}");
+    }
+}
+
+/// SVRG's anchor fan-in/out crosses the sockets too; it must match the
+/// driver's trajectory like everything else.
+#[test]
+fn tcp_svrg_anchor_sync_matches_driver() {
+    let obj = logreg();
+    let cfg = DriverConfig {
+        estimator: tng::optim::EstimatorKind::Svrg { anchor_every: 10 },
+        rounds: 20,
+        ..base_cfg()
+    };
+    let codec = common::make_codec("ternary").unwrap();
+    let seq = driver::run(&obj, codec.as_ref(), "seq", &cfg);
+    let tcp = run_tcp(&obj, codec.as_ref(), &cfg);
+    assert_traces_identical(&seq, &tcp, "svrg");
+    let chan = parallel::run(&obj, codec.as_ref(), "chan", &cfg).unwrap();
+    assert_eq!(chan.total_up_bits, tcp.total_up_bits, "svrg wire bits");
+}
+
+/// A worker that joins but never sends a gradient must surface as a
+/// straggler-timeout error at the leader, not a hang.
+#[test]
+fn tcp_straggler_timeout_surfaces() {
+    let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+        .unwrap()
+        .with_timeout(Some(Duration::from_millis(250)));
+    let addr = builder.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || {
+        let tp = TcpWorker::connect(&addr, 0, Some(Duration::from_secs(10))).unwrap();
+        // Joined, then stalls: hold the socket open past the leader timeout.
+        std::thread::sleep(Duration::from_millis(900));
+        drop(tp);
+    });
+    let mut leader = builder.accept(1).unwrap();
+    let err = leader.recv().unwrap_err();
+    assert!(err.to_string().contains("straggler"), "{err}");
+    h.join().unwrap();
+}
+
+/// A forged oversized length header is rejected in the reader thread and
+/// surfaced as a leader recv error — never an allocation or a hang.
+#[test]
+fn tcp_oversized_frame_rejected() {
+    use std::io::Write as _;
+    use tng::coordinator::protocol::Msg;
+
+    let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+        .unwrap()
+        .with_timeout(Some(Duration::from_secs(10)));
+    let addr = builder.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || {
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        tng::transport::write_frame(&mut sock, &Msg::Hello { worker: 0 }.to_bytes()).unwrap();
+        // Forged header: claims u32::MAX bytes follow.
+        sock.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        sock.write_all(&[1, 2, 3]).unwrap();
+        sock.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(800));
+        drop(sock);
+    });
+    let mut leader = builder.accept(1).unwrap();
+    let err = leader.recv().unwrap_err();
+    assert!(err.to_string().contains("exceeds cap"), "{err}");
+    h.join().unwrap();
+}
+
+/// A join claiming an out-of-range worker id aborts the accept loudly.
+#[test]
+fn tcp_bad_worker_id_rejected_at_join() {
+    use tng::coordinator::protocol::Msg;
+
+    let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+        .unwrap()
+        .with_timeout(Some(Duration::from_secs(10)));
+    let addr = builder.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || {
+        let mut sock = std::net::TcpStream::connect(addr).unwrap();
+        tng::transport::write_frame(&mut sock, &Msg::Hello { worker: 9 }.to_bytes()).unwrap();
+        std::thread::sleep(Duration::from_millis(500));
+        drop(sock);
+    });
+    let err = builder.accept(2).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+    h.join().unwrap();
+}
+
+/// The real thing: leader + 2 workers as separate OS processes through the
+/// `tng leader` / `tng worker` CLI, compared against the in-process driver
+/// via the printed param digest. `addr=127.0.0.1:0` + the announced
+/// `listening addr=` line make the port handoff race-free.
+#[test]
+fn tcp_process_cluster_matches_driver() {
+    let exe = env!("CARGO_BIN_EXE_tng");
+    let shared = [
+        "workers=2",
+        "rounds=12",
+        "n=64",
+        "dim=16",
+        "batch=4",
+        "codec=ternary",
+        "record_every=4",
+        "seed=3",
+    ];
+
+    let mut leader = Command::new(exe)
+        .arg("leader")
+        .arg("addr=127.0.0.1:0")
+        .arg("timeout_s=120")
+        .args(shared)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn leader");
+    let mut reader = BufReader::new(leader.stdout.take().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let addr = line
+        .trim()
+        .strip_prefix("listening addr=")
+        .unwrap_or_else(|| panic!("leader must announce its address, got {line:?}"))
+        .to_string();
+
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            Command::new(exe)
+                .arg("worker")
+                .arg(format!("addr={addr}"))
+                .arg(format!("id={i}"))
+                .arg("timeout_s=120")
+                .args(shared)
+                .stderr(Stdio::inherit())
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    let status = leader.wait().unwrap();
+    assert!(status.success(), "leader failed; stdout:\n{rest}");
+    for mut w in workers {
+        assert!(w.wait().unwrap().success(), "worker failed");
+    }
+
+    // The same settings produce the same objective/config in-process; the
+    // driver's digest must appear verbatim in the leader's report.
+    let s = Settings::from_args(&shared).unwrap();
+    let (obj, codec, cfg, label) = common::cluster_setup(&s).unwrap();
+    let seq = driver::run(&obj, codec.as_ref(), &label, &cfg);
+    let expect = format!("param_digest={:016x}", seq.param_digest());
+    assert!(
+        rest.contains(&expect),
+        "leader stdout must contain {expect}; got:\n{rest}"
+    );
+    // And the cross-process wire totals must match an in-process channel
+    // run of the identical config.
+    let chan = parallel::run(&obj, codec.as_ref(), "chan", &cfg).unwrap();
+    let expect_bits = format!(
+        "wire up_bits={} down_bits={}",
+        chan.total_up_bits, chan.total_down_bits
+    );
+    assert!(
+        rest.contains(&expect_bits),
+        "leader stdout must contain {expect_bits:?}; got:\n{rest}"
+    );
+}
