@@ -8,9 +8,9 @@
 use std::time::Duration;
 
 use tng::codec::{
-    chunked::ChunkedTernaryCodec, qsgd::QsgdCodec, sharded::ShardedCodec,
-    signsgd::SignCodec, sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec,
-    wire, Codec, CodecScratch,
+    chunked::ChunkedTernaryCodec, entropy::EntropyCodec, qsgd::QsgdCodec,
+    sharded::ShardedCodec, signsgd::SignCodec, sparse::SparseCodec,
+    ternary::TernaryCodec, topk::TopKCodec, wire, Codec, CodecScratch, Payload,
 };
 use tng::tng::Tng;
 use tng::util::alloc_counter::{alloc_count, CountingAlloc};
@@ -104,6 +104,36 @@ fn main() {
         .report_throughput(bytes);
     }
 
+    // ---- entropy-coded wire: measured bytes vs the coding models --------
+    // The headline measurement: what actually crosses the wire under
+    // `entropy:<inner>` vs the information models the repo used to report.
+    println!("# entropy wire: measured stream vs coding-model estimates");
+    for d in [4096usize, 65_536] {
+        let v = randv(&mut rng, d);
+        for (label, codec) in [
+            ("entropy-ternary", Box::new(EntropyCodec::new(TernaryCodec)) as Box<dyn Codec>),
+            ("entropy-qsgd4", Box::new(EntropyCodec::new(QsgdCodec::new(4)))),
+        ] {
+            let mut r = Rng::new(7);
+            let mut scratch = CodecScratch::new();
+            bench(&format!("encode/{label}/d{d}"), BUDGET, || {
+                codec.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+                black_box(scratch.enc.dim)
+            })
+            .report_throughput(4 * d);
+            let Payload::Entropy { inner, coded } = &scratch.enc.payload else {
+                unreachable!("entropy codec must emit an entropy payload")
+            };
+            println!(
+                "bytes/{label}/d{d}: measured={} model_min={} entropy_bound={} kt_estimate={}",
+                coded.len(),
+                inner.bits().div_ceil(8),
+                inner.bits_entropy().div_ceil(8),
+                inner.bits_compressed().div_ceil(8),
+            );
+        }
+    }
+
     // ---- steady-state allocation counts (the scratch-arena guarantee) ----
     println!("# steady-state allocations per encode+decode round (1M dims)");
     let d = 1 << 20;
@@ -113,6 +143,7 @@ fn main() {
         ("qsgd4", Box::new(QsgdCodec::new(4))),
         ("cternary4096", Box::new(ChunkedTernaryCodec::new(4096))),
         ("shard4-ternary(serial)", Box::new(ShardedCodec::new(TernaryCodec, 4).with_threads(1))),
+        ("entropy-ternary", Box::new(EntropyCodec::new(TernaryCodec))),
     ] {
         println!("allocs/round {:<28} {}", name, allocs_per_round(codec.as_ref(), &v, 50));
     }

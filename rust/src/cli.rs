@@ -49,6 +49,13 @@ COMMON OPTIONS (key=value):
     rounds=N            override round count
     quick=true          reduced sweep (what `cargo bench` uses)
 
+RUN/LEADER/WORKER OPTIONS (the figure harnesses use their own method grid):
+    codec=SPEC          ternary | qsgd:<s> | sparse:<r> | sign | topk:<k> |
+                        fp32 | cternary:<chunk> | shard:<n>:<inner> |
+                        entropy:<inner>   (entropy = measured-bytes wire)
+    ref_score=cnz       reference search scoring: cnz (fast ratio) | bytes
+                        (measured encoded frame size per candidate)
+
 `tng <cmd> help` prints command-specific options.";
 
 /// Parse argv (excluding argv[0]).

@@ -1,0 +1,335 @@
+//! Adaptive symbol models for the entropy wire format — one model family
+//! per payload alphabet, all reduced to [`BitModel`] trees over the binary
+//! range coder.
+//!
+//! The complete model set ([`Models`]) is a fixed-size struct (~2 KiB, no
+//! heap), built fresh per frame: **models reset at every frame boundary**,
+//! so each wire frame is independently decodable and the coder needs no
+//! out-of-band statistics (DESIGN.md §Entropy documents this contract).
+//!
+//! Alphabets:
+//!
+//! * **trits** (ternary codes −1/0/+1): an is-zero decision plus a sign
+//!   decision — zero-heavy trajectory-normalized streams collapse to the
+//!   adapted is-zero model's cost.
+//! * **quantization levels** (QSGD): is-zero, sign, then the magnitude's
+//!   bit-length through a 5-bit tree plus raw low bits (Elias-gamma style
+//!   bucketing, so tiny levels dominate the model space).
+//! * **u32 integers** (sparse index gaps, counts, shard dims, chunk sizes):
+//!   bit-length through a 6-bit tree plus raw low bits. Sparse indices are
+//!   delta-coded (`wrapping_sub` of the previous index + 1), so sorted
+//!   index lists become small-gap symbols.
+//! * **f32 scalars** (scales, norms, dense/sparse values): four per-byte
+//!   position-conditioned 8-bit trees over the little-endian bytes —
+//!   repeated exponent bytes adapt toward zero cost.
+
+use anyhow::{bail, Result};
+
+use super::rc::{BitModel, RangeDecoder, RangeEncoder};
+
+/// A balanced binary tree of `M = 2^bits − 1` adaptive models coding one
+/// `bits`-wide symbol (LZMA-style bit tree).
+#[derive(Debug, Clone, Copy)]
+pub struct BitTree<const M: usize> {
+    models: [BitModel; M],
+}
+
+impl<const M: usize> BitTree<M> {
+    pub fn new() -> Self {
+        BitTree { models: [BitModel::new(); M] }
+    }
+
+    fn encode(&mut self, rc: &mut RangeEncoder, sym: u32, nbits: u32) {
+        debug_assert_eq!(M + 1, 1usize << nbits);
+        debug_assert!((sym as usize) < M + 1);
+        let mut ctx = 1usize;
+        for i in (0..nbits).rev() {
+            let bit = (sym >> i) & 1 != 0;
+            rc.encode_bit(&mut self.models[ctx - 1], bit);
+            ctx = (ctx << 1) | bit as usize;
+        }
+    }
+
+    fn decode(&mut self, rc: &mut RangeDecoder, nbits: u32) -> Result<u32> {
+        debug_assert_eq!(M + 1, 1usize << nbits);
+        let mut ctx = 1usize;
+        for _ in 0..nbits {
+            let bit = rc.decode_bit(&mut self.models[ctx - 1])?;
+            ctx = (ctx << 1) | bit as usize;
+        }
+        Ok(ctx as u32 - (M as u32 + 1))
+    }
+}
+
+impl<const M: usize> Default for BitTree<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The per-frame model bank. Shared across the parts of a sharded message
+/// (so homogeneous shards keep sharpening one distribution), reset at frame
+/// boundaries.
+pub struct Models {
+    /// 3-bit payload tag (mirrors the `codec::wire` tag space).
+    tag: BitTree<7>,
+    /// Ternary codes: P(code == 0), then P(code < 0).
+    trit_zero: BitModel,
+    trit_sign: BitModel,
+    /// Quantized levels: P(level == 0), P(level < 0), magnitude bit-length.
+    q_zero: BitModel,
+    q_sign: BitModel,
+    q_mag_bucket: BitTree<31>,
+    /// Generic u32s: bit-length bucket (0..=32 valid of a 6-bit tree).
+    u32_bucket: BitTree<63>,
+    /// f32 little-endian bytes, conditioned on byte position.
+    f32_bytes: [BitTree<255>; 4],
+    /// Raw bytes of a nested entropy frame.
+    raw_byte: BitTree<255>,
+}
+
+impl Models {
+    pub fn new() -> Self {
+        Models {
+            tag: BitTree::new(),
+            trit_zero: BitModel::new(),
+            trit_sign: BitModel::new(),
+            q_zero: BitModel::new(),
+            q_sign: BitModel::new(),
+            q_mag_bucket: BitTree::new(),
+            u32_bucket: BitTree::new(),
+            f32_bytes: [BitTree::new(); 4],
+            raw_byte: BitTree::new(),
+        }
+    }
+
+    pub fn put_tag(&mut self, rc: &mut RangeEncoder, tag: u8) {
+        debug_assert!(tag < 8);
+        self.tag.encode(rc, tag as u32, 3);
+    }
+
+    pub fn get_tag(&mut self, rc: &mut RangeDecoder) -> Result<u8> {
+        Ok(self.tag.decode(rc, 3)? as u8)
+    }
+
+    /// Ternary code in {−1, 0, +1}; panics on anything else, mirroring the
+    /// wire serializer's contract.
+    pub fn put_trit(&mut self, rc: &mut RangeEncoder, c: i8) {
+        match c {
+            0 => rc.encode_bit(&mut self.trit_zero, true),
+            1 | -1 => {
+                rc.encode_bit(&mut self.trit_zero, false);
+                rc.encode_bit(&mut self.trit_sign, c < 0);
+            }
+            other => panic!("non-ternary code {other}"),
+        }
+    }
+
+    pub fn get_trit(&mut self, rc: &mut RangeDecoder) -> Result<i8> {
+        if rc.decode_bit(&mut self.trit_zero)? {
+            return Ok(0);
+        }
+        Ok(if rc.decode_bit(&mut self.trit_sign)? { -1 } else { 1 })
+    }
+
+    /// Signed quantization level (any i16 except `i16::MIN`, whose
+    /// magnitude exceeds the 16-bit bucket space; real QSGD levels are
+    /// bounded by `levels <= i16::MAX`).
+    pub fn put_level(&mut self, rc: &mut RangeEncoder, q: i16) {
+        if q == 0 {
+            rc.encode_bit(&mut self.q_zero, true);
+            return;
+        }
+        assert_ne!(q, i16::MIN, "quantized level {q} out of entropy-codable range");
+        rc.encode_bit(&mut self.q_zero, false);
+        rc.encode_bit(&mut self.q_sign, q < 0);
+        let mag = q.unsigned_abs() as u32; // 1..=32767
+        let bl = 32 - mag.leading_zeros(); // 1..=15
+        self.q_mag_bucket.encode(rc, bl, 5);
+        if bl > 1 {
+            rc.encode_direct(mag & ((1 << (bl - 1)) - 1), bl - 1);
+        }
+    }
+
+    pub fn get_level(&mut self, rc: &mut RangeDecoder) -> Result<i16> {
+        if rc.decode_bit(&mut self.q_zero)? {
+            return Ok(0);
+        }
+        let neg = rc.decode_bit(&mut self.q_sign)?;
+        let bl = self.q_mag_bucket.decode(rc, 5)?;
+        if bl == 0 || bl > 15 {
+            bail!("invalid quantized-magnitude bit-length {bl}");
+        }
+        let mag = if bl == 1 { 1 } else { (1 << (bl - 1)) | rc.decode_direct(bl - 1)? };
+        Ok(if neg { -(mag as i16) } else { mag as i16 })
+    }
+
+    /// Generic u32 (gaps, counts, dims): bit-length bucket + raw low bits.
+    pub fn put_u32(&mut self, rc: &mut RangeEncoder, v: u32) {
+        let bl = 32 - v.leading_zeros(); // 0..=32
+        self.u32_bucket.encode(rc, bl, 6);
+        if bl > 1 {
+            rc.encode_direct(v & (u32::MAX >> (33 - bl)), bl - 1);
+        }
+    }
+
+    pub fn get_u32(&mut self, rc: &mut RangeDecoder) -> Result<u32> {
+        let bl = self.u32_bucket.decode(rc, 6)?;
+        Ok(match bl {
+            0 => 0,
+            1 => 1,
+            2..=32 => (1 << (bl - 1)) | rc.decode_direct(bl - 1)?,
+            other => bail!("invalid u32 bit-length {other}"),
+        })
+    }
+
+    pub fn put_f32(&mut self, rc: &mut RangeEncoder, x: f32) {
+        for (tree, b) in self.f32_bytes.iter_mut().zip(x.to_le_bytes()) {
+            tree.encode(rc, b as u32, 8);
+        }
+    }
+
+    pub fn get_f32(&mut self, rc: &mut RangeDecoder) -> Result<f32> {
+        let mut bytes = [0u8; 4];
+        for (tree, b) in self.f32_bytes.iter_mut().zip(bytes.iter_mut()) {
+            *b = tree.decode(rc, 8)? as u8;
+        }
+        Ok(f32::from_le_bytes(bytes))
+    }
+
+    /// A byte of an already-entropy-coded nested frame (near-uniform).
+    pub fn put_raw_byte(&mut self, rc: &mut RangeEncoder, b: u8) {
+        self.raw_byte.encode(rc, b as u32, 8);
+    }
+
+    pub fn get_raw_byte(&mut self, rc: &mut RangeDecoder) -> Result<u8> {
+        Ok(self.raw_byte.decode(rc, 8)? as u8)
+    }
+}
+
+impl Default for Models {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn roundtrip<T, P, G>(items: &[T], mut put: P, mut get: G)
+    where
+        T: Copy + PartialEq + std::fmt::Debug,
+        P: FnMut(&mut Models, &mut RangeEncoder, T),
+        G: FnMut(&mut Models, &mut RangeDecoder) -> Result<T>,
+    {
+        let mut out = Vec::new();
+        let mut ms = Models::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        for &x in items {
+            put(&mut ms, &mut enc, x);
+        }
+        enc.finish();
+        let mut ms = Models::new();
+        let mut dec = RangeDecoder::new(&out).unwrap();
+        for &x in items {
+            assert_eq!(get(&mut ms, &mut dec).unwrap(), x);
+        }
+        dec.finish().unwrap();
+    }
+
+    #[test]
+    fn trit_roundtrip_and_skewed_compression() {
+        let mut rng = Rng::new(1);
+        let trits: Vec<i8> = (0..4096)
+            .map(|_| if rng.bernoulli(0.05) { if rng.bernoulli(0.5) { 1 } else { -1 } } else { 0 })
+            .collect();
+        let mut out = Vec::new();
+        let mut ms = Models::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        for &c in &trits {
+            ms.put_trit(&mut enc, c);
+        }
+        enc.finish();
+        // 4096 trits at 2 bits dense = 1024 bytes; a 5%-dense stream must
+        // land far below (H ≈ 0.34 bits/trit).
+        assert!(out.len() < 300, "{} bytes", out.len());
+        let mut ms = Models::new();
+        let mut dec = RangeDecoder::new(&out).unwrap();
+        for &c in &trits {
+            assert_eq!(ms.get_trit(&mut dec).unwrap(), c);
+        }
+        dec.finish().unwrap();
+    }
+
+    #[test]
+    fn level_roundtrip_full_range() {
+        let mut vals: Vec<i16> = vec![0, 1, -1, 2, -2, 7, -8, 127, -128, 32767, -32767];
+        let mut rng = Rng::new(2);
+        for _ in 0..500 {
+            let v = (rng.next_u32() & 0x7FFF) as i16;
+            vals.push(if rng.bernoulli(0.5) { v } else { -v });
+        }
+        roundtrip(&vals, |m, rc, x| m.put_level(rc, x), |m, rc| m.get_level(rc));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of entropy-codable range")]
+    fn level_i16_min_panics_like_wire_rejects() {
+        let mut out = Vec::new();
+        let mut ms = Models::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        ms.put_level(&mut enc, i16::MIN);
+    }
+
+    #[test]
+    fn u32_roundtrip_edges_and_random() {
+        let mut vals = vec![0u32, 1, 2, 3, 4, 7, 8, 255, 256, 65535, 1 << 30, u32::MAX - 1, u32::MAX];
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            vals.push(rng.next_u32() >> (rng.below(33).min(31)));
+        }
+        roundtrip(&vals, |m, rc, x| m.put_u32(rc, x), |m, rc| m.get_u32(rc));
+    }
+
+    #[test]
+    fn f32_roundtrip_bit_exact_including_specials() {
+        let mut vals = vec![
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::NAN,
+            f32::INFINITY,
+        ];
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            vals.push(rng.gauss_f32());
+        }
+        let mut out = Vec::new();
+        let mut ms = Models::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        for &x in &vals {
+            ms.put_f32(&mut enc, x);
+        }
+        enc.finish();
+        let mut ms = Models::new();
+        let mut dec = RangeDecoder::new(&out).unwrap();
+        for &x in &vals {
+            let got = ms.get_f32(&mut dec).unwrap();
+            assert_eq!(got.to_bits(), x.to_bits(), "{x} vs {got}");
+        }
+        dec.finish().unwrap();
+    }
+
+    #[test]
+    fn tag_and_raw_byte_roundtrip() {
+        let tags: Vec<u8> = (0u8..64).map(|i| i % 7).collect();
+        roundtrip(&tags, |m, rc, x| m.put_tag(rc, x), |m, rc| m.get_tag(rc));
+        let bytes: Vec<u8> = (0..=255).collect();
+        roundtrip(&bytes, |m, rc, x| m.put_raw_byte(rc, x), |m, rc| m.get_raw_byte(rc));
+    }
+}

@@ -1,0 +1,340 @@
+//! The binary range coder underneath the entropy wire format.
+//!
+//! A 32-bit carry-propagating range coder (Subbotin style) over adaptive
+//! binary decisions: every multi-symbol model in [`super::models`] reduces
+//! its alphabet to a tree of [`BitModel`] decisions, so this file is the
+//! only place arithmetic-coding state lives. Integer-only, so encoded
+//! streams are bit-identical on every platform — the determinism contract
+//! of DESIGN.md §Entropy rests on this.
+//!
+//! Stream discipline: the encoder emits one byte per renormalization plus a
+//! fixed 4-byte flush; the decoder consumes 4 bytes at init plus one per
+//! renormalization. Renormalization points are a pure function of the coded
+//! decisions, so **bytes consumed always equals bytes emitted** — which is
+//! what lets [`RangeDecoder::finish`] demand exact consumption and lets a
+//! truncated stream fail deterministically (the decoder's next byte read
+//! errors instead of fabricating zeros).
+
+use anyhow::{bail, Result};
+
+/// Probability precision: probabilities live in [1, 2^12 - 1] of 2^12.
+pub const PROB_BITS: u32 = 12;
+const PROB_ONE: u16 = 1 << PROB_BITS;
+/// Renormalize whenever `range` drops below 2^24 (one byte at a time).
+const TOP: u32 = 1 << 24;
+/// Adaptation rate: models move 1/32 of the distance per observation.
+const ADAPT_SHIFT: u16 = 5;
+
+/// Adaptive probability that the next bit is 0, in units of 2^-12.
+///
+/// The update rule keeps the probability inside [31, 4065], so both
+/// outcomes always stay codable and the worst-case cost of one bit is
+/// bounded (~7 bits) even when a model is maximally wrong.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitModel {
+    p0: u16,
+}
+
+impl Default for BitModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BitModel {
+    pub fn new() -> Self {
+        BitModel { p0: PROB_ONE / 2 }
+    }
+
+    #[inline]
+    fn update(&mut self, bit: bool) {
+        if bit {
+            self.p0 -= self.p0 >> ADAPT_SHIFT;
+        } else {
+            self.p0 += (PROB_ONE - self.p0) >> ADAPT_SHIFT;
+        }
+    }
+}
+
+/// Encoder half. Appends to a caller-owned buffer so the hot path reuses
+/// one warm `Vec` round after round (see `CodecScratch`-style reuse in
+/// [`super::EntropyCodec`]).
+pub struct RangeEncoder<'a> {
+    /// 33-bit working window: bit 32 is a pending carry into `out`.
+    low: u64,
+    range: u32,
+    out: &'a mut Vec<u8>,
+}
+
+impl<'a> RangeEncoder<'a> {
+    pub fn new(out: &'a mut Vec<u8>) -> Self {
+        RangeEncoder { low: 0, range: u32::MAX, out }
+    }
+
+    /// Code one bit under an adaptive model (and adapt it).
+    #[inline]
+    pub fn encode_bit(&mut self, m: &mut BitModel, bit: bool) {
+        let bound = (self.range >> PROB_BITS) * m.p0 as u32;
+        if bit {
+            self.low += bound as u64;
+            self.range -= bound;
+        } else {
+            self.range = bound;
+        }
+        m.update(bit);
+        self.normalize();
+    }
+
+    /// Code `nbits` equiprobable bits (no model, exactly 1 bit each) —
+    /// used for the low bits of bucketed integers and the frame terminator.
+    pub fn encode_direct(&mut self, val: u32, nbits: u32) {
+        debug_assert!(nbits <= 32);
+        for i in (0..nbits).rev() {
+            let bound = self.range >> 1;
+            if (val >> i) & 1 != 0 {
+                self.low += bound as u64;
+                self.range -= bound;
+            } else {
+                self.range = bound;
+            }
+            self.normalize();
+        }
+    }
+
+    #[inline]
+    fn normalize(&mut self) {
+        if self.low > u32::MAX as u64 {
+            // Carry: increment the emitted byte string. The coder's global
+            // invariant (emitted·2^32 + low + range never exceeds the value
+            // space) guarantees a non-0xFF byte exists before the front.
+            for b in self.out.iter_mut().rev() {
+                *b = b.wrapping_add(1);
+                if *b != 0 {
+                    break;
+                }
+            }
+            self.low &= u32::MAX as u64;
+        }
+        while self.range < TOP {
+            self.out.push((self.low >> 24) as u8);
+            self.low = (self.low << 8) & u32::MAX as u64;
+            self.range <<= 8;
+        }
+    }
+
+    /// Flush the window. After this the stream decodes to exactly the
+    /// coded decisions with `bytes consumed == bytes emitted`.
+    pub fn finish(mut self) {
+        for _ in 0..4 {
+            self.out.push((self.low >> 24) as u8);
+            self.low = (self.low << 8) & u32::MAX as u64;
+        }
+    }
+}
+
+/// Decoder half over a borrowed byte slice. Every read past the end is a
+/// hard error (never zero-fill), so truncation fails deterministically.
+pub struct RangeDecoder<'a> {
+    code: u32,
+    range: u32,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RangeDecoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Result<Self> {
+        let mut d = RangeDecoder { code: 0, range: u32::MAX, buf, pos: 0 };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte()? as u32;
+        }
+        Ok(d)
+    }
+
+    /// Bytes of the backing stream (used to bound pre-allocations against
+    /// forged element counts, the `codec::wire` convention).
+    pub fn stream_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> Result<u8> {
+        let Some(&b) = self.buf.get(self.pos) else {
+            bail!("entropy stream truncated at byte {}", self.pos);
+        };
+        self.pos += 1;
+        Ok(b)
+    }
+
+    #[inline]
+    pub fn decode_bit(&mut self, m: &mut BitModel) -> Result<bool> {
+        let bound = (self.range >> PROB_BITS) * m.p0 as u32;
+        let bit = if self.code < bound {
+            self.range = bound;
+            false
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            true
+        };
+        m.update(bit);
+        self.normalize()?;
+        Ok(bit)
+    }
+
+    /// Inverse of [`RangeEncoder::encode_direct`].
+    pub fn decode_direct(&mut self, nbits: u32) -> Result<u32> {
+        debug_assert!(nbits <= 32);
+        let mut val = 0u32;
+        for _ in 0..nbits {
+            let bound = self.range >> 1;
+            let bit = if self.code < bound {
+                self.range = bound;
+                false
+            } else {
+                self.code -= bound;
+                self.range -= bound;
+                true
+            };
+            val = (val << 1) | bit as u32;
+            self.normalize()?;
+        }
+        Ok(val)
+    }
+
+    #[inline]
+    fn normalize(&mut self) -> Result<()> {
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.next_byte()? as u32;
+            self.range <<= 8;
+        }
+        Ok(())
+    }
+
+    /// Demand the stream was consumed exactly: appended garbage (or a frame
+    /// whose length header overstates the stream) is an error, mirroring
+    /// `codec::wire`'s trailing-bytes rule.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "entropy stream length mismatch: consumed {} of {} bytes",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Drive random bit sequences through matched model banks: the decoder
+    /// must reproduce every bit and consume exactly the emitted stream.
+    #[test]
+    fn random_bit_streams_roundtrip_exactly() {
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed);
+            let n = 1 + rng.below(2000);
+            let n_models = 1 + rng.below(8);
+            let bias = rng.f64();
+            let bits: Vec<bool> = (0..n).map(|_| rng.bernoulli(bias)).collect();
+            let picks: Vec<usize> = (0..n).map(|_| rng.below(n_models)).collect();
+
+            let mut out = Vec::new();
+            let mut enc_models = vec![BitModel::new(); n_models];
+            let mut enc = RangeEncoder::new(&mut out);
+            for (&bit, &m) in bits.iter().zip(&picks) {
+                enc.encode_bit(&mut enc_models[m], bit);
+            }
+            enc.finish();
+
+            let mut dec_models = vec![BitModel::new(); n_models];
+            let mut dec = RangeDecoder::new(&out).unwrap();
+            for (i, (&bit, &m)) in bits.iter().zip(&picks).enumerate() {
+                assert_eq!(
+                    dec.decode_bit(&mut dec_models[m]).unwrap(),
+                    bit,
+                    "seed {seed} bit {i}"
+                );
+            }
+            dec.finish().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn direct_bits_roundtrip_and_interleave_with_models() {
+        let mut rng = Rng::new(99);
+        let vals: Vec<(u32, u32)> = (0..500)
+            .map(|_| {
+                let nbits = rng.below(33) as u32;
+                let v = if nbits == 0 { 0 } else { rng.next_u32() >> (32 - nbits) };
+                (v, nbits)
+            })
+            .collect();
+        let mut out = Vec::new();
+        let mut m = BitModel::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        for &(v, nbits) in &vals {
+            enc.encode_direct(v, nbits);
+            enc.encode_bit(&mut m, v & 1 != 0);
+        }
+        enc.finish();
+        let mut md = BitModel::new();
+        let mut dec = RangeDecoder::new(&out).unwrap();
+        for &(v, nbits) in &vals {
+            assert_eq!(dec.decode_direct(nbits).unwrap(), v);
+            assert_eq!(dec.decode_bit(&mut md).unwrap(), v & 1 != 0);
+        }
+        dec.finish().unwrap();
+    }
+
+    #[test]
+    fn skewed_streams_compress_below_one_bit_per_symbol() {
+        let mut rng = Rng::new(7);
+        let bits: Vec<bool> = (0..8192).map(|_| rng.bernoulli(0.02)).collect();
+        let mut out = Vec::new();
+        let mut m = BitModel::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        for &b in &bits {
+            enc.encode_bit(&mut m, b);
+        }
+        enc.finish();
+        // H(0.02) ≈ 0.14 bits; the adaptive model must land well under 0.5.
+        assert!(out.len() * 8 < bits.len() / 2, "{} bytes", out.len());
+    }
+
+    #[test]
+    fn truncation_is_a_deterministic_error() {
+        let mut rng = Rng::new(13);
+        let bits: Vec<bool> = (0..4096).map(|_| rng.bernoulli(0.5)).collect();
+        let mut out = Vec::new();
+        let mut m = BitModel::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        for &b in &bits {
+            enc.encode_bit(&mut m, b);
+        }
+        enc.finish();
+        for cut in [0, 1, 3, out.len() / 2, out.len() - 1] {
+            let truncated = &out[..cut];
+            let mut m = BitModel::new();
+            let r = RangeDecoder::new(truncated).and_then(|mut dec| {
+                for _ in 0..bits.len() {
+                    dec.decode_bit(&mut m)?;
+                }
+                dec.finish()
+            });
+            assert!(r.is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn empty_payload_is_four_bytes_and_finishes_clean() {
+        let mut out = Vec::new();
+        RangeEncoder::new(&mut out).finish();
+        assert_eq!(out, vec![0, 0, 0, 0]);
+        RangeDecoder::new(&out).unwrap().finish().unwrap();
+        assert!(RangeDecoder::new(&[0, 0, 0]).is_err(), "short init must error");
+    }
+}

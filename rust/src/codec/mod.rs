@@ -12,11 +12,16 @@
 //! * [`sharded::ShardedCodec`] — contiguous-shard wrapper that compresses
 //!   shards independently (optionally on multiple threads) and carries
 //!   per-shard scales on the wire
+//! * [`entropy::EntropyCodec`] — entropy-coding wrapper: the inner message
+//!   crosses the wire as an adaptive range-coder stream, so its cost is
+//!   *measured* bytes rather than a coding-model estimate (see the
+//!   [`entropy`] module docs for the symbol-model format)
 //!
 //! Each encode produces an [`Encoded`] carrying a typed payload plus exact
 //! bit accounting in several coding models (dense / sparse / entropy bound /
 //! adaptive-coder estimate) — the paper picks the cheaper of dense vs sparse
-//! per message, which is [`Encoded::bits`].
+//! per message, which is [`Encoded::bits`]. An entropy-coded message is the
+//! exception: its [`Encoded::bits`] *is* its measured stream size.
 //!
 //! # The allocation-free hot path
 //!
@@ -30,6 +35,7 @@
 //! `benches/bench_codecs.rs`; see DESIGN.md §Scratch).
 
 pub mod chunked;
+pub mod entropy;
 pub mod error_feedback;
 pub mod fp16;
 pub mod identity;
@@ -87,6 +93,12 @@ pub enum Payload {
     /// own scales/norms, which is how per-shard scaling reaches the wire.
     /// Produced by [`sharded::ShardedCodec`]; parts tile `dim` in order.
     Sharded { parts: Vec<Encoded> },
+    /// An entropy-coded envelope: `coded` is the adaptive range-coder
+    /// stream for `inner` (produced by [`entropy::encode_frame`], carried
+    /// verbatim on the wire), and `inner` is the decoded message it
+    /// represents. Produced by [`entropy::EntropyCodec`]; the two fields
+    /// are a canonical pair by construction.
+    Entropy { inner: Box<Encoded>, coded: Vec<u8> },
 }
 
 impl Payload {
@@ -157,6 +169,19 @@ impl Payload {
             _ => unreachable!(),
         }
     }
+
+    /// Reuse `self` as an `Entropy` payload (see [`Payload::ternary_mut`]):
+    /// in the steady state both the inner message's buffers and the coded
+    /// byte stream keep their capacity.
+    pub fn entropy_mut(&mut self) -> (&mut Encoded, &mut Vec<u8>) {
+        if !matches!(self, Payload::Entropy { .. }) {
+            *self = Payload::Entropy { inner: Box::new(Encoded::empty()), coded: Vec::new() };
+        }
+        match self {
+            Payload::Entropy { inner, coded } => (inner.as_mut(), coded),
+            _ => unreachable!(),
+        }
+    }
 }
 
 impl Encoded {
@@ -209,6 +234,10 @@ impl Encoded {
                 }
                 assert_eq!(off, self.dim, "shard dims must tile the vector");
             }
+            Payload::Entropy { inner, .. } => {
+                assert_eq!(inner.dim, self.dim, "entropy inner dim must match");
+                inner.decode_into(out);
+            }
         }
     }
 
@@ -222,6 +251,7 @@ impl Encoded {
             Payload::Sparse { pairs } => pairs.len(),
             Payload::Dense { values } => values.iter().filter(|&&v| v != 0.0).count(),
             Payload::Sharded { parts } => parts.iter().map(Encoded::nnz).sum(),
+            Payload::Entropy { inner, .. } => inner.nnz(),
         }
     }
 
@@ -256,6 +286,8 @@ impl Encoded {
             Payload::Sparse { .. } => F32_BITS * self.dim,
             Payload::Dense { values } => F32_BITS * values.len(),
             Payload::Sharded { parts } => parts.iter().map(Encoded::bits_dense).sum(),
+            // Coding models describe the underlying message.
+            Payload::Entropy { inner, .. } => inner.bits_dense(),
         }
     }
 
@@ -277,6 +309,7 @@ impl Encoded {
             Payload::Sparse { pairs } => header + (idx + F32_BITS) * pairs.len(),
             Payload::Dense { .. } => header + (idx + F32_BITS) * self.nnz(),
             Payload::Sharded { parts } => parts.iter().map(Encoded::bits_sparse).sum(),
+            Payload::Entropy { inner, .. } => inner.bits_sparse(),
         }
     }
 
@@ -284,10 +317,14 @@ impl Encoded {
     /// ("we also choose the optimal methods for coding the vectors, whether
     /// in dense vector form or in sparse vector form", §4.2). A sharded
     /// message makes the choice per shard, so its total can undercut the
-    /// whole-message minimum.
+    /// whole-message minimum. An entropy-coded message needs no model at
+    /// all: its cost is the **measured** size of the coded stream, which is
+    /// how `entropy:<inner>` runs put real bytes on the paper's
+    /// bits-per-element axis.
     pub fn bits(&self) -> usize {
         match &self.payload {
             Payload::Sharded { parts } => parts.iter().map(Encoded::bits).sum(),
+            Payload::Entropy { coded, .. } => 8 * coded.len(),
             _ => self.bits_dense().min(self.bits_sparse()),
         }
     }
@@ -334,6 +371,7 @@ impl Encoded {
                 entropy_bits(&cs, q.len()).ceil() as usize + F32_BITS
             }
             Payload::Sharded { parts } => parts.iter().map(Encoded::bits_entropy).sum(),
+            Payload::Entropy { inner, .. } => inner.bits_entropy(),
             _ => self.bits(),
         }
     }
@@ -346,6 +384,12 @@ impl Encoded {
     /// environment has no deflate implementation; this replaces the seed's
     /// `flate2` dependency with a tighter, self-contained estimate.)
     pub fn bits_compressed(&self) -> usize {
+        // Coding models describe the underlying message: estimating the
+        // compressibility of an already-entropy-coded (near-incompressible)
+        // stream would be meaningless.
+        if let Payload::Entropy { inner, .. } = &self.payload {
+            return inner.bits_compressed();
+        }
         let bytes = wire::to_bytes(self);
         let mut counts = [0.0f64; 256];
         let mut total = 0.0f64;
@@ -702,6 +746,36 @@ mod tests {
             codec.encode_into(&v, &mut r3, &mut out);
             assert_eq!(out.dim, v.len());
         }
+    }
+
+    #[test]
+    fn entropy_payload_delegates_models_and_prices_measured_bytes() {
+        let inner = enc_ternary();
+        let e = entropy::wrap(inner.clone());
+        assert_eq!(e.dim, inner.dim);
+        assert_eq!(e.decode(), inner.decode());
+        assert_eq!(e.nnz(), inner.nnz());
+        assert_eq!(e.bits_dense(), inner.bits_dense());
+        assert_eq!(e.bits_sparse(), inner.bits_sparse());
+        assert_eq!(e.bits_entropy(), inner.bits_entropy());
+        // bits() is the measured stream size, not a model.
+        let Payload::Entropy { coded, .. } = &e.payload else { unreachable!() };
+        assert_eq!(e.bits(), 8 * coded.len());
+        assert!(e.bits() > 0);
+    }
+
+    #[test]
+    fn entropy_mut_reuses_buffers() {
+        let mut p = Payload::Ternary { scale: 1.0, codes: vec![1; 8] };
+        {
+            let (inner, coded) = p.entropy_mut();
+            assert_eq!(inner.dim, 0, "fresh envelope starts empty");
+            assert!(coded.is_empty());
+            coded.extend_from_slice(&[1, 2, 3]);
+        }
+        // Same variant again: buffers (and their contents) survive.
+        let (_, coded) = p.entropy_mut();
+        assert_eq!(coded, &[1, 2, 3]);
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! This is what actually crosses the coordinator's (simulated) network, so
 //! it is deliberately compact: ternary codes are bit-packed 4-per-byte
 //! (2 bits each), quantized levels are i16 LE, sparse pairs are (u32, f32),
-//! and sharded messages nest each part's frame behind a u32 length so the
-//! per-shard scales travel inside their parts. `bits()` accounting in
+//! sharded messages nest each part's frame behind a u32 length so the
+//! per-shard scales travel inside their parts, and entropy-coded messages
+//! carry their adaptive range-coder stream behind a u32 length (tag 6; the
+//! stream format lives in [`super::entropy`]). `bits()` accounting in
 //! `codec::Encoded` is the *information* cost model; this module is the
 //! byte-exact transport encoding (whose size the network simulator also
 //! records — the two are cross-checked in tests).
@@ -19,16 +21,18 @@ use byteorder::{LittleEndian as LE, ReadBytesExt, WriteBytesExt};
 
 use super::{Encoded, Payload};
 
-const TAG_TERNARY: u8 = 0;
-const TAG_QUANTIZED: u8 = 1;
-const TAG_SPARSE: u8 = 2;
-const TAG_DENSE: u8 = 3;
-const TAG_TERNARY_CHUNKED: u8 = 4;
-const TAG_SHARDED: u8 = 5;
+pub(crate) const TAG_TERNARY: u8 = 0;
+pub(crate) const TAG_QUANTIZED: u8 = 1;
+pub(crate) const TAG_SPARSE: u8 = 2;
+pub(crate) const TAG_DENSE: u8 = 3;
+pub(crate) const TAG_TERNARY_CHUNKED: u8 = 4;
+pub(crate) const TAG_SHARDED: u8 = 5;
+pub(crate) const TAG_ENTROPY: u8 = 6;
 
-/// Sharded frames may nest (a part can itself be sharded); cap the depth so
-/// a malicious frame cannot blow the parser's stack.
-const MAX_SHARD_DEPTH: usize = 8;
+/// Sharded and entropy frames may nest (a part can itself be sharded or
+/// entropy-coded); cap the depth so a malicious frame cannot blow the
+/// parser's stack.
+pub(crate) const MAX_SHARD_DEPTH: usize = 8;
 
 /// Append packed ternary codes, 2 bits each: 00 -> 0, 01 -> +1, 10 -> -1.
 fn pack_ternary_into(codes: &[i8], out: &mut Vec<u8>) {
@@ -117,6 +121,15 @@ pub fn write_into(e: &Encoded, out: &mut Vec<u8>) {
                 out[len_pos..len_pos + 4].copy_from_slice(&part_len.to_le_bytes());
             }
         }
+        Payload::Entropy { coded, .. } => {
+            // The coded stream is already the canonical encoding of the
+            // inner message (see `entropy::encode_frame`); ship it verbatim
+            // behind a length prefix.
+            out.write_u8(TAG_ENTROPY).unwrap();
+            out.write_u32::<LE>(e.dim as u32).unwrap();
+            out.write_u32::<LE>(coded.len() as u32).unwrap();
+            out.extend_from_slice(coded);
+        }
     }
 }
 
@@ -140,6 +153,7 @@ pub fn frame_len(e: &Encoded) -> usize {
         Payload::Sharded { parts } => {
             9 + parts.iter().map(|p| 4 + frame_len(p)).sum::<usize>()
         }
+        Payload::Entropy { coded, .. } => 9 + coded.len(),
     }
 }
 
@@ -248,6 +262,19 @@ fn from_bytes_at_depth(mut buf: &[u8], depth: usize) -> Result<Encoded> {
             }
             Payload::Sharded { parts }
         }
+        TAG_ENTROPY => {
+            if depth >= MAX_SHARD_DEPTH {
+                bail!("entropy frame nested deeper than {MAX_SHARD_DEPTH}");
+            }
+            let len = buf.read_u32::<LE>()? as usize;
+            if buf.len() < len {
+                bail!("entropy payload truncated: {} < {len}", buf.len());
+            }
+            let coded = &buf[..len];
+            buf = &buf[len..];
+            let inner = super::entropy::decode_frame(coded, dim, depth + 1)?;
+            Payload::Entropy { inner: Box::new(inner), coded: coded.to_vec() }
+        }
         other => bail!("unknown payload tag {other}"),
     };
     if !buf.is_empty() {
@@ -333,6 +360,64 @@ mod tests {
         let mut packed = Vec::new();
         pack_ternary_into(&codes, &mut packed);
         assert_eq!(unpack_ternary(&packed, 37).unwrap(), codes);
+    }
+
+    #[test]
+    fn roundtrip_entropy_frames() {
+        use crate::codec::entropy::{wrap, EntropyCodec};
+        let mut rng = Rng::new(21);
+        for d in [1usize, 5, 64, 300] {
+            let v: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+            roundtrip(&EntropyCodec::new(TernaryCodec).encode(&v, &mut rng));
+            roundtrip(&EntropyCodec::new(QsgdCodec::new(4)).encode(&v, &mut rng));
+            roundtrip(
+                &EntropyCodec::new(ShardedCodec::new(TernaryCodec, 3).with_threads(1))
+                    .encode(&v, &mut rng),
+            );
+            // Entropy part nested inside a sharded payload.
+            let sharded = Encoded {
+                dim: d,
+                payload: Payload::Sharded {
+                    parts: vec![wrap(TernaryCodec.encode(&v, &mut rng))],
+                },
+            };
+            roundtrip(&sharded);
+        }
+    }
+
+    #[test]
+    fn entropy_frame_truncations_rejected() {
+        use crate::codec::entropy::EntropyCodec;
+        let mut rng = Rng::new(22);
+        let v: Vec<f32> = (0..128).map(|_| rng.gauss_f32()).collect();
+        let e = EntropyCodec::new(TernaryCodec).encode(&v, &mut rng);
+        let bytes = to_bytes(&e);
+        for cut in [0, 4, 5, 8, 9, 12, bytes.len() / 2, bytes.len() - 1] {
+            assert!(from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // The u32 length prefix sits after tag (1) + dim (4), at [5..9].
+        // Inflated prefix (claims more stream than present):
+        let mut forged = bytes.clone();
+        let len = u32::from_le_bytes(forged[5..9].try_into().unwrap());
+        assert_eq!(len as usize, bytes.len() - 9, "length prefix location");
+        forged[5..9].copy_from_slice(&(len + 4).to_le_bytes());
+        assert!(from_bytes(&forged).is_err());
+        // Deflated length prefix: the parser slices a shorter stream, whose
+        // exact-consumption check fails, and the leftover bytes trail.
+        let mut forged = bytes.clone();
+        forged[5..9].copy_from_slice(&(len - 2).to_le_bytes());
+        assert!(from_bytes(&forged).is_err());
+    }
+
+    #[test]
+    fn entropy_frame_with_forged_dim_rejected() {
+        // dim far over the entropy cap must be rejected up front, not
+        // decoded into a giant allocation.
+        let mut bytes = vec![6u8];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&8u32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(from_bytes(&bytes).is_err());
     }
 
     #[test]

@@ -18,11 +18,15 @@
 
 use std::time::Instant;
 
-use crate::codec::{Codec, CodecScratch};
+use crate::codec::{wire, Codec, CodecScratch};
 use crate::coordinator::metrics::{RoundRecord, Trace};
+use crate::coordinator::protocol::MSG_HEADER_BYTES;
 use crate::objectives::Objective;
 use crate::optim::{EstimatorKind, GradEstimator, Lbfgs, StepSchedule};
-use crate::tng::{CnzEstimator, CnzSelector, Normalization, ReferenceKind, ReferenceManager, RoundCtx, Tng};
+use crate::tng::{
+    CnzEstimator, CnzSelector, Normalization, RefScore, ReferenceKind, ReferenceManager,
+    RoundCtx, Tng,
+};
 use crate::util::math;
 use crate::util::Rng;
 
@@ -43,6 +47,11 @@ pub struct DriverConfig {
     pub mode: Normalization,
     /// Reference pool; one entry = fixed strategy, several = C_nz search.
     pub references: Vec<ReferenceKind>,
+    /// How the pool search scores candidates: the fast C_nz-ratio
+    /// estimator, or the measured wire size of a trial encode per candidate
+    /// (`RefScore::MeasuredBytes` — the code length the paper's search
+    /// claims to minimize, exact under an `entropy:<inner>` codec).
+    pub ref_score: RefScore,
     /// Bits/element charged for explicit reference broadcasts (16 in Fig 1).
     pub broadcast_bits_per_elt: usize,
     /// Record a trace point every this many rounds.
@@ -71,6 +80,7 @@ impl Default for DriverConfig {
             lbfgs_memory: None,
             mode: Normalization::Subtractive,
             references: vec![ReferenceKind::Zeros],
+            ref_score: RefScore::CnzRatio,
             broadcast_bits_per_elt: 32,
             record_every: 1,
             f_star: f64::NAN,
@@ -125,6 +135,17 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
     assert_eq!(w.len(), dim);
     let mut bits_up: u64 = 0;
     let mut bits_down: u64 = 0;
+    // Measured wire bytes: the driver mirrors, frame for frame, what the
+    // transport runtimes send for the same config (`protocol::Msg` sizes),
+    // so driver, channel, and TCP report identical wire totals — pinned by
+    // `golden_trace` / `transport_tcp`. Driver-only features (WorkerAnchor
+    // rounds, reference broadcasts, warm starts) have no transport
+    // counterpart and are charged as the analogous anchor-style frames.
+    let hdr = MSG_HEADER_BYTES as u64;
+    let agg_frame = hdr + 8 + 4 * dim as u64; // Aggregate: eta + count + f32s
+    let anchor_frame = hdr + 4 + 4 * dim as u64; // AnchorGrad / AnchorMu
+    let mut wire_up: u64 = 0;
+    let mut wire_down: u64 = 0;
     let mut records = Vec::new();
 
     let mut g = vec![0.0f32; dim];
@@ -152,6 +173,7 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             }
         }
         bits_down += (32 * dim) as u64;
+        wire_down += m as u64 * anchor_frame; // driver-only: AnchorMu-style broadcast
     }
 
     for t in 0..cfg.rounds {
@@ -168,11 +190,13 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
                     &mut mu,
                 );
                 bits_up += (32 * dim) as u64; // full-precision shard gradient up
+                wire_up += anchor_frame; // AnchorGrad frame
             }
             for est in estimators.iter_mut() {
                 est.set_global_mu(&mu);
             }
             bits_down += (32 * dim) as u64; // μ broadcast
+            wire_down += m as u64 * anchor_frame; // AnchorMu to each worker
         }
 
         // ---- SVRG-anchor *reference* refresh needs ∇F(w) -----------------
@@ -202,12 +226,15 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
                     }
                 }
                 bits_up += (bpe * dim) as u64;
+                // Driver-only: an anchor-style frame at `bpe`-bit precision.
+                wire_up += hdr + 4 + ((bpe * dim) as u64).div_ceil(8);
                 math::axpy(1.0 / m as f32, &g, &mut v_avg);
                 continue;
             }
 
             // Reference selection (pool search costs signalling bits).
-            let (ref_idx, _ratio, sig_bits) = selector.select(&g);
+            let (ref_idx, _score, sig_bits) =
+                selector.select_scored(cfg.ref_score, &g, &tng, &rngs[wk], &mut scratches[wk]);
             let kind_is_mean =
                 matches!(cfg.references[ref_idx], ReferenceKind::MeanScalar);
             let (gref, scalar_bits): (&[f32], usize) = if kind_is_mean {
@@ -222,6 +249,9 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             let scratch = &mut scratches[wk];
             tng.encode_into(&g, gref, &mut rngs[wk], scratch);
             bits_up += (scratch.enc.bits() + sig_bits + scalar_bits) as u64;
+            // The exact Grad frame a transport worker would send.
+            wire_up += (crate::coordinator::protocol::GRAD_OVERHEAD_BYTES
+                + wire::frame_len(&scratch.enc)) as u64;
 
             // Leader decodes and accumulates (same arena, no allocation).
             let CodecScratch { enc, decoded, .. } = scratch;
@@ -238,6 +268,8 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         } else {
             math::axpy(-eta, &v_avg, &mut w);
         }
+        // The Aggregate broadcast every transport worker receives.
+        wire_down += m as u64 * agg_frame;
 
         // ---- advance shared reference state ------------------------------
         let ctx = RoundCtx {
@@ -264,6 +296,9 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             records.push(RoundRecord {
                 round: t,
                 bits_per_elt: (bits_up as f64 / m as f64 + bits_down as f64) / dim as f64,
+                wire_bits_per_elt: (wire_up as f64 * 8.0 / m as f64
+                    + wire_down as f64 * 8.0)
+                    / dim as f64,
                 loss,
                 subopt: loss - cfg.f_star,
                 grad_norm: math::norm2(&v_avg),
@@ -275,12 +310,18 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         }
     }
 
+    // Shutdown handshake mirror: Stop to each worker, one Bye back each.
+    wire_down += m as u64 * hdr;
+    wire_up += m as u64 * hdr;
+
     Trace {
         label: label.to_string(),
         records,
         final_w: w,
         total_up_bits: bits_up,
         total_down_bits: bits_down,
+        total_wire_up_bytes: wire_up,
+        total_wire_down_bytes: wire_down,
         rounds: cfg.rounds,
         workers: m,
         dim,
@@ -477,6 +518,42 @@ mod tests {
             precond.final_subopt(),
             plain.final_subopt()
         );
+    }
+
+    #[test]
+    fn wire_byte_mirror_matches_frame_arithmetic() {
+        // The driver's measured-wire counters must reproduce the transport
+        // frame sizes exactly: Grad = 16B overhead + codec wire frame,
+        // Aggregate = 19B + 4·dim per worker, Stop/Bye = 11B each way.
+        let obj = logreg(); // dim = 32
+        let cfg = DriverConfig { rounds: 10, ..Default::default() }; // M = 4
+        let tr = run(&obj, &IdentityCodec, "wire", &cfg);
+        let (dim, m, rounds) = (32u64, 4u64, 10u64);
+        let grad_frame = 16 + 5 + 4 * dim; // identity wire frame is 5 + 4·dim
+        let agg_frame = 11 + 8 + 4 * dim;
+        assert_eq!(tr.total_wire_up_bytes, rounds * m * grad_frame + m * 11);
+        assert_eq!(tr.total_wire_down_bytes, rounds * m * agg_frame + m * 11);
+    }
+
+    #[test]
+    fn measured_byte_scoring_is_deterministic_and_converging() {
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 30,
+            references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 1 }],
+            ref_score: RefScore::MeasuredBytes,
+            ..Default::default()
+        };
+        let codec = crate::codec::entropy::EntropyCodec::new(TernaryCodec);
+        let a = run(&obj, &codec, "a", &cfg);
+        let b = run(&obj, &codec, "b", &cfg);
+        assert_eq!(a.final_w, b.final_w, "measured scoring must stay deterministic");
+        assert_eq!(a.total_up_bits, b.total_up_bits);
+        assert_eq!(a.total_wire_up_bytes, b.total_wire_up_bytes);
+        assert!(a.final_loss().is_finite());
+        // With an entropy codec, the charged uplink is the measured stream:
+        // strictly under the 2-bit/elt dense ternary wire, plus headers.
+        assert!(a.total_wire_up_bytes > 0);
     }
 
     #[test]

@@ -13,6 +13,13 @@ pub struct RoundRecord {
     pub round: usize,
     /// Cumulative communications in bits/element (see module docs).
     pub bits_per_elt: f64,
+    /// Cumulative **measured** wire traffic in bits/element: actual
+    /// `protocol::Msg` frame bytes (same per-worker/broadcast convention as
+    /// [`RoundRecord::bits_per_elt`]). On the transport runtimes this is
+    /// counted at the fabric; the deterministic driver mirrors the same
+    /// frames. With an `entropy:<inner>` codec the information model and
+    /// this column converge — that is the paper's claim, measured.
+    pub wire_bits_per_elt: f64,
     /// Full objective F(w_t) (NaN when eval disabled).
     pub loss: f64,
     /// F(w_t) − F(w*) when f_star is known (NaN otherwise).
@@ -34,6 +41,12 @@ pub struct Trace {
     pub final_w: Vec<f32>,
     pub total_up_bits: u64,
     pub total_down_bits: u64,
+    /// Measured wire bytes of all worker→leader protocol frames (equals
+    /// the transport fabric's `NetSnapshot::up_bytes`; the driver mirrors
+    /// the identical frames, so all three runtimes report the same total).
+    pub total_wire_up_bytes: u64,
+    /// Measured wire bytes of all leader→worker protocol frames.
+    pub total_wire_down_bytes: u64,
     pub rounds: usize,
     pub workers: usize,
     pub dim: usize,
@@ -44,6 +57,20 @@ impl Trace {
     /// Final cumulative bits/element (the x-extent of the paper's plots).
     pub fn final_bits_per_elt(&self) -> f64 {
         (self.total_up_bits as f64 / self.workers as f64 + self.total_down_bits as f64)
+            / self.dim as f64
+    }
+
+    /// Total measured wire traffic in bytes, both directions — real bytes,
+    /// not a coding model.
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.total_wire_up_bytes + self.total_wire_down_bytes
+    }
+
+    /// Final measured wire bits/element (same convention as
+    /// [`Trace::final_bits_per_elt`]).
+    pub fn final_wire_bits_per_elt(&self) -> f64 {
+        (self.total_wire_up_bytes as f64 * 8.0 / self.workers as f64
+            + self.total_wire_down_bytes as f64 * 8.0)
             / self.dim as f64
     }
 
@@ -89,6 +116,7 @@ impl Trace {
                 &self.label,
                 &r.round,
                 &r.bits_per_elt,
+                &r.wire_bits_per_elt,
                 &r.loss,
                 &r.subopt,
                 &r.grad_norm,
@@ -101,9 +129,9 @@ impl Trace {
         Ok(())
     }
 
-    pub const CSV_HEADER: [&'static str; 10] = [
-        "label", "round", "bits_per_elt", "loss", "subopt", "grad_norm", "cnz", "eta",
-        "w0", "w1",
+    pub const CSV_HEADER: [&'static str; 11] = [
+        "label", "round", "bits_per_elt", "wire_bpe", "loss", "subopt", "grad_norm",
+        "cnz", "eta", "w0", "w1",
     ];
 }
 
@@ -115,6 +143,7 @@ mod tests {
         RoundRecord {
             round,
             bits_per_elt: bits,
+            wire_bits_per_elt: bits + 1.0,
             loss: sub + 1.0,
             subopt: sub,
             grad_norm: 1.0,
@@ -132,6 +161,8 @@ mod tests {
             final_w: vec![0.0],
             total_up_bits: 4096,
             total_down_bits: 512,
+            total_wire_up_bytes: 1024,
+            total_wire_down_bytes: 128,
             rounds: 3,
             workers: 4,
             dim: 128,
@@ -144,6 +175,14 @@ mod tests {
         let t = trace();
         // 4096/4 per worker + 512 broadcast = 1536 bits over 128 dims = 12
         assert!((t.final_bits_per_elt() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let t = trace();
+        assert_eq!(t.total_wire_bytes(), 1024 + 128);
+        // (1024·8/4 + 128·8) / 128 = (2048 + 1024) / 128 = 24 bits/elt
+        assert!((t.final_wire_bits_per_elt() - 24.0).abs() < 1e-12);
     }
 
     #[test]

@@ -6,7 +6,33 @@
 //!   `crate::transport`) — byte-identical trajectories to the driver
 //! * [`protocol`] — framed wire messages incl. the Hello/Bye lifecycle
 //! * [`network`] — simulated star fabric with exact byte accounting
-//! * [`metrics`] — round records / traces with the paper's bits-per-element axis
+//! * [`metrics`] — round records / traces with the paper's bits-per-element
+//!   axis *and* the measured wire-byte axis
+//!
+//! Two communication ledgers run side by side: the information-cost model
+//! (`Encoded::bits`, the paper's min(dense, sparse) rule) and **measured
+//! wire bytes** (actual [`protocol::Msg`] frame sizes). The transport
+//! runtimes count the latter at the fabric; the driver mirrors the same
+//! frames arithmetically, so all three runtimes report identical
+//! `Trace::total_wire_*` totals for any transport-legal config — pinned by
+//! the `golden_trace` and `transport_tcp` suites. Driver-only features
+//! (per-worker anchors, reference broadcasts, warm starts) have no
+//! transport counterpart and are charged as the analogous anchor frames.
+//!
+//! ```
+//! use tng::codec::ternary::TernaryCodec;
+//! use tng::coordinator::{driver, parallel, DriverConfig};
+//! use tng::data::synthetic::{generate, SkewConfig};
+//! use tng::objectives::logreg::LogReg;
+//!
+//! let ds = generate(&SkewConfig { n: 32, dim: 8, ..Default::default() });
+//! let obj = LogReg::new(ds, 0.05);
+//! let cfg = DriverConfig { rounds: 5, workers: 2, record_every: 2, ..Default::default() };
+//! let seq = driver::run(&obj, &TernaryCodec, "seq", &cfg);
+//! let par = parallel::run(&obj, &TernaryCodec, "par", &cfg).unwrap();
+//! assert_eq!(seq.final_w, par.final_w); // bit-identical trajectories
+//! assert_eq!(seq.total_wire_up_bytes, par.total_wire_up_bytes); // same bytes
+//! ```
 
 pub mod driver;
 pub mod metrics;

@@ -139,7 +139,10 @@ fn worker_loop(
         }
 
         est.grad(obj, &shard, &w, &mut rng, &mut g);
-        let (ref_idx, _ratio, _sig) = selector.select(&g);
+        // Shared scoring dispatch (same entry point as the driver, so the
+        // runtimes cannot diverge on how the search is scored).
+        let (ref_idx, _score, _sig) =
+            selector.select_scored(cfg.ref_score, &g, &tng, &rng, &mut scratch);
         let (scalar, gref): (f32, &[f32]) =
             if matches!(cfg.references[ref_idx], ReferenceKind::MeanScalar) {
                 let (s, _) = selector.pool[ref_idx].worker_scalar(&g).unwrap();
@@ -333,10 +336,15 @@ fn leader_loop(
         if t % cfg.record_every == 0 || t + 1 == cfg.rounds {
             let loss = if cfg.eval_loss { obj.loss(&w) } else { f64::NAN };
             let s = tp.stats();
+            // On a transport runtime the information axis *is* measured
+            // wire traffic, so the two columns coincide.
+            let wire_bpe = (s.up_bytes as f64 * 8.0 / m as f64
+                + s.down_bytes as f64 * 8.0)
+                / dim as f64;
             records.push(RoundRecord {
                 round: t,
-                bits_per_elt: (s.up_bytes as f64 * 8.0 / m as f64 + s.down_bytes as f64 * 8.0)
-                    / dim as f64,
+                bits_per_elt: wire_bpe,
+                wire_bits_per_elt: wire_bpe,
                 loss,
                 subopt: loss - cfg.f_star,
                 grad_norm: math::norm2(&v_avg),
@@ -372,6 +380,8 @@ fn leader_loop(
         final_w: w,
         total_up_bits: s.up_bytes * 8,
         total_down_bits: s.down_bytes * 8,
+        total_wire_up_bytes: s.up_bytes,
+        total_wire_down_bytes: s.down_bytes,
         rounds: cfg.rounds,
         workers: m,
         dim,
@@ -508,6 +518,62 @@ mod tests {
         let par = run(&obj, &codec, "par", &cfg).unwrap();
         assert_eq!(seq.final_w, par.final_w, "sharded trajectories must be identical");
         assert!(seq.total_up_bits > 0);
+    }
+
+    #[test]
+    fn wire_totals_match_driver_mirror_including_entropy() {
+        // The acceptance pin at the channel layer: the driver's mirrored
+        // wire totals equal the transport's counted totals, for plain and
+        // entropy-coded codecs (TCP equality rides on channel ≡ TCP).
+        let obj = logreg();
+        for spec in ["ternary", "entropy:ternary", "entropy:qsgd:4", "shard:3:entropy:ternary"] {
+            let codec = crate::experiments::common::make_codec(spec).unwrap();
+            let cfg = DriverConfig {
+                rounds: 12,
+                workers: 3,
+                schedule: StepSchedule::Const(0.3),
+                references: vec![
+                    crate::tng::ReferenceKind::Zeros,
+                    crate::tng::ReferenceKind::AvgDecoded { window: 2 },
+                ],
+                record_every: 4,
+                ..Default::default()
+            };
+            let seq = crate::coordinator::driver::run(&obj, codec.as_ref(), "seq", &cfg);
+            let par = run(&obj, codec.as_ref(), "par", &cfg).unwrap();
+            assert_eq!(seq.final_w, par.final_w, "{spec}: trajectories diverged");
+            assert_eq!(
+                seq.total_wire_up_bytes, par.total_wire_up_bytes,
+                "{spec}: measured uplink bytes must match across runtimes"
+            );
+            assert_eq!(
+                seq.total_wire_down_bytes, par.total_wire_down_bytes,
+                "{spec}: measured downlink bytes must match across runtimes"
+            );
+        }
+    }
+
+    #[test]
+    fn measured_byte_scoring_matches_across_runtimes() {
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 15,
+            workers: 2,
+            schedule: StepSchedule::Const(0.3),
+            references: vec![
+                crate::tng::ReferenceKind::Zeros,
+                crate::tng::ReferenceKind::AvgDecoded { window: 1 },
+            ],
+            ref_score: crate::tng::RefScore::MeasuredBytes,
+            record_every: 5,
+            ..Default::default()
+        };
+        let codec = crate::experiments::common::make_codec("entropy:ternary").unwrap();
+        let seq = crate::coordinator::driver::run(&obj, codec.as_ref(), "seq", &cfg);
+        let par = run(&obj, codec.as_ref(), "par", &cfg).unwrap();
+        assert_eq!(seq.final_w, par.final_w, "measured scoring diverged across runtimes");
+        assert_eq!(seq.total_wire_up_bytes, par.total_wire_up_bytes);
+        assert_eq!(seq.total_wire_down_bytes, par.total_wire_down_bytes);
     }
 
     #[test]

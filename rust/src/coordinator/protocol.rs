@@ -40,6 +40,15 @@ pub enum Msg {
     Bye { worker: u16 },
 }
 
+/// Fixed frame header: `kind u8 | worker u16 | round u32 | body_len u32`.
+/// Exposed so the deterministic driver can mirror transport wire totals
+/// byte for byte (see `coordinator::driver`).
+pub const MSG_HEADER_BYTES: usize = 11;
+
+/// Bytes a [`Msg::Grad`] frame adds around the codec wire frame: the fixed
+/// header plus the 4-byte mean scalar and 1-byte reference index.
+pub const GRAD_OVERHEAD_BYTES: usize = MSG_HEADER_BYTES + 5;
+
 const K_GRAD: u8 = 1;
 const K_ANCHOR_GRAD: u8 = 2;
 const K_AGGREGATE: u8 = 3;
@@ -212,7 +221,7 @@ mod tests {
         // Hello/Bye carry no body: 11-byte fixed header, body_len 0 — the
         // shutdown handshake costs exactly 11 bytes per worker per run.
         for m in [Msg::Hello { worker: 3 }, Msg::Bye { worker: 3 }] {
-            assert_eq!(m.to_bytes().len(), 11, "{}", m.kind_name());
+            assert_eq!(m.to_bytes().len(), MSG_HEADER_BYTES, "{}", m.kind_name());
         }
     }
 
@@ -224,7 +233,7 @@ mod tests {
         let wire_len = crate::codec::wire::to_bytes(&enc).len();
         let m = Msg::Grad { worker: 0, round: 0, enc, scalar: 0.0, ref_idx: 0 };
         // header 11 + scalar 4 + ref_idx 1
-        assert_eq!(m.to_bytes().len(), wire_len + 16);
+        assert_eq!(m.to_bytes().len(), wire_len + GRAD_OVERHEAD_BYTES);
     }
 
     #[test]

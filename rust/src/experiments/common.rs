@@ -4,8 +4,8 @@
 use anyhow::{bail, Result};
 
 use crate::codec::{
-    identity::IdentityCodec, qsgd::QsgdCodec, signsgd::SignCodec, sparse::SparseCodec,
-    ternary::TernaryCodec, topk::TopKCodec, Codec,
+    entropy::EntropyCodec, identity::IdentityCodec, qsgd::QsgdCodec, signsgd::SignCodec,
+    sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec, Codec,
 };
 use crate::config::Settings;
 use crate::coordinator::metrics::Trace;
@@ -19,8 +19,11 @@ use crate::util::csv::CsvWriter;
 
 /// Build a codec from a spec string:
 /// `tg` | `ternary`, `qg` | `qsgd:<levels>`, `sg` | `sparse:<ratio>`,
-/// `sign`, `topk:<k>`, `fp32`, and the sharded wrapper
-/// `shard:<shards>:<inner spec>` (e.g. `shard:4:ternary`, `shard:8:qsgd:4`).
+/// `sign`, `topk:<k>`, `fp32`, the sharded wrapper
+/// `shard:<shards>:<inner spec>` (e.g. `shard:4:ternary`, `shard:8:qsgd:4`),
+/// and the entropy-coding wrapper `entropy:<inner spec>` (e.g.
+/// `entropy:ternary`, `entropy:qsgd:4`, `entropy:shard:4:ternary`), whose
+/// wire frames are measured adaptive range-coder streams.
 pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
     let (name, arg) = match spec.split_once(':') {
         Some((n, a)) => (n, Some(a)),
@@ -36,6 +39,12 @@ pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
                 bail!("shard count must be >= 1 in '{spec}'");
             }
             Box::new(crate::codec::sharded::ShardedCodec::new(make_codec(inner)?, shards))
+        }
+        "entropy" => {
+            let Some(inner) = arg else {
+                bail!("entropy spec is entropy:<inner codec>, got '{spec}'");
+            };
+            Box::new(EntropyCodec::new(make_codec(inner)?))
         }
         "tg" | "ternary" => Box::new(TernaryCodec),
         "cternary" => {
@@ -70,8 +79,8 @@ pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
 /// `(n, workers)`, and the per-worker RNG streams split from `seed` — which
 /// is what makes a TCP run byte-identical to the deterministic driver.
 /// Keys (all `key=value`): `n dim csk cth seed lambda codec tng ref_window
-/// workers rounds batch eta estimator anchor_every memory record_every eval
-/// opt opt_iters`.
+/// ref_score workers rounds batch eta estimator anchor_every memory
+/// record_every eval opt opt_iters`.
 pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConfig, String)> {
     let n = s.usize_or("n", 1024)?;
     let dim = s.usize_or("dim", 128)?;
@@ -93,6 +102,11 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
     let codec = make_codec(&s.str_or("codec", "ternary"))?;
     let use_tng = s.bool_or("tng", true)?;
     let anchor = s.usize_or("anchor_every", 64)?;
+    let ref_score = match s.str_or("ref_score", "cnz").as_str() {
+        "cnz" => crate::tng::RefScore::CnzRatio,
+        "bytes" => crate::tng::RefScore::MeasuredBytes,
+        other => bail!("ref_score must be 'cnz' or 'bytes', got '{other}'"),
+    };
     let cfg = DriverConfig {
         seed: s.u64_or("seed", 0)?,
         workers: s.usize_or("workers", 4)?,
@@ -116,6 +130,7 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
         } else {
             vec![ReferenceKind::Zeros]
         },
+        ref_score,
         record_every: s.usize_or("record_every", 10)?,
         f_star,
         eval_loss: s.bool_or("eval", true)?,
@@ -207,6 +222,7 @@ pub fn clone_cfg(c: &DriverConfig) -> DriverConfig {
         lbfgs_memory: c.lbfgs_memory,
         mode: c.mode,
         references: c.references.clone(),
+        ref_score: c.ref_score,
         broadcast_bits_per_elt: c.broadcast_bits_per_elt,
         record_every: c.record_every,
         f_star: c.f_star,
@@ -225,13 +241,16 @@ pub fn open_csv(opts: &Settings, figure: &str) -> Result<CsvWriter> {
     )
 }
 
-/// Human summary line used by every figure harness.
+/// Human summary line used by every figure harness. `wire/elt` is the
+/// measured frame traffic (real bytes, as bits/element); `bits/elt` is the
+/// information-cost model — under `entropy:<inner>` codecs the two converge.
 pub fn summarize(trace: &Trace) -> String {
     format!(
-        "{:<28} rounds={:<6} bits/elt={:<10.1} final_subopt={:<12.4e} cnz={:.3}",
+        "{:<28} rounds={:<6} bits/elt={:<10.1} wire/elt={:<10.1} final_subopt={:<12.4e} cnz={:.3}",
         trace.label,
         trace.rounds,
         trace.final_bits_per_elt(),
+        trace.final_wire_bits_per_elt(),
         trace.final_subopt(),
         trace.records.last().map(|r| r.cnz).unwrap_or(f64::NAN),
     )
@@ -252,10 +271,33 @@ mod tests {
         assert_eq!(make_codec("fp32").unwrap().name(), "fp32");
         assert_eq!(make_codec("shard:4:ternary").unwrap().name(), "shard4-ternary");
         assert_eq!(make_codec("shard:2:qsgd:8").unwrap().name(), "shard2-qsgd8");
+        assert_eq!(make_codec("entropy:ternary").unwrap().name(), "entropy-ternary");
+        assert_eq!(make_codec("entropy:qsgd:4").unwrap().name(), "entropy-qsgd4");
+        assert_eq!(
+            make_codec("entropy:shard:4:ternary").unwrap().name(),
+            "entropy-shard4-ternary"
+        );
+        assert_eq!(
+            make_codec("shard:2:entropy:ternary").unwrap().name(),
+            "shard2-entropy-ternary"
+        );
         assert!(make_codec("nope").is_err());
         assert!(make_codec("qsgd:abc").is_err());
         assert!(make_codec("shard:0:ternary").is_err());
         assert!(make_codec("shard:ternary").is_err());
+        assert!(make_codec("entropy").is_err());
+    }
+
+    #[test]
+    fn cluster_setup_parses_ref_score() {
+        let s = Settings::from_args(&["n=32", "dim=8", "ref_score=bytes"]).unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        assert_eq!(cfg.ref_score, crate::tng::RefScore::MeasuredBytes);
+        let s = Settings::from_args(&["n=32", "dim=8"]).unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        assert_eq!(cfg.ref_score, crate::tng::RefScore::CnzRatio);
+        let s = Settings::from_args(&["n=32", "dim=8", "ref_score=wat"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
     }
 
     #[test]

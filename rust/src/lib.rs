@@ -16,6 +16,29 @@
 //!   executes them from the Rust hot path (no Python at runtime). Gated
 //!   behind the `xla` cargo feature: the offline build has no `xla` crate,
 //!   so the default build is the pure-Rust L3 stack.
+//!
+//! # Quickstart
+//!
+//! Run Algorithm 1 end to end on a small objective — four workers,
+//! ternary-compressed gradients, exact bit accounting:
+//!
+//! ```
+//! use tng::codec::ternary::TernaryCodec;
+//! use tng::coordinator::{driver, DriverConfig};
+//! use tng::objectives::quadratic::Quadratic;
+//! use tng::util::Rng;
+//!
+//! let mut rng = Rng::new(1);
+//! let obj = Quadratic::conditioned(8, 10.0, 0.1, &mut rng);
+//! let cfg = DriverConfig { rounds: 20, workers: 2, ..Default::default() };
+//! let trace = driver::run(&obj, &TernaryCodec, "demo", &cfg);
+//! assert_eq!(trace.rounds, 20);
+//! assert!(trace.total_wire_bytes() > 0); // measured frame bytes, not a model
+//! ```
+//!
+//! The same protocol runs as OS threads (`coordinator::parallel::run`) or
+//! as real processes over TCP (`tng leader` / `tng worker`), all
+//! byte-identical; see README.md for the repository map.
 
 pub mod cli;
 pub mod codec;

@@ -10,10 +10,35 @@
 //!   the reference from a pool minimizing the ratio, charging
 //!   `ceil(log2(pool))` bits to signal the winner (§3.1: "The additional
 //!   communication cost for this is to indicate which g̃ is used").
+//!
+//! Two scoring modes ([`RefScore`]): the fast `C_nz`-ratio estimator above,
+//! and [`CnzSelector::select_by_bytes`], which scores every candidate by the
+//! **measured wire size** of the actual normalize→encode of `g` against it
+//! — the code length the paper claims normalization minimizes, measured on
+//! real frames (exact with an `entropy:<inner>` codec, where the frame *is*
+//! the compressed stream).
 
+use crate::codec::{wire, Codec, CodecScratch};
 use crate::util::math::{self, RunningStats};
+use crate::util::Rng;
 
+use super::normalizer::Tng;
 use super::reference::{ReferenceManager, RoundCtx};
+
+/// How the per-round reference search scores its candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RefScore {
+    /// The fast estimator: instantaneous `‖g − g̃‖²/‖g‖²` (no encoding).
+    #[default]
+    CnzRatio,
+    /// Measured bytes: encode `g` against every candidate and compare the
+    /// resulting wire-frame sizes ([`CnzSelector::select_by_bytes`]).
+    /// Only discriminates under content-sensitive wires (`entropy:<inner>`,
+    /// sparse): a fixed-size frame like plain ternary's scores every
+    /// candidate identically, so the search degenerates to the first pool
+    /// entry (see EXPERIMENTS.md §Entropy).
+    MeasuredBytes,
+}
 
 /// ‖g − g̃‖² / ‖g‖² (defined as 1.0 when g = 0, the trivial bound).
 pub fn cnz_ratio(g: &[f32], gref: &[f32]) -> f64 {
@@ -90,6 +115,59 @@ impl CnzSelector {
         (best.0, best.1, self.signal_bits())
     }
 
+    /// Pick the reference minimizing the **measured** wire size of the
+    /// normalized encode of `g` — the code length the search claims to
+    /// minimize, on actual frames. Returns (pool index, winning frame size
+    /// in bytes, signalling bits).
+    ///
+    /// Every candidate is encoded with a *clone* of the caller's RNG, so
+    /// the true stream advances exactly as in the fast mode and the
+    /// winner's subsequent real encode is reproducible across the driver,
+    /// channel, and TCP runtimes. Ties break toward the lower pool index
+    /// (deterministic). `scratch` is reused for the trial encodes; its
+    /// contents are scratch afterwards — the caller re-encodes the winner,
+    /// a deliberate P+1-encodes trade-off that keeps RNG advancement
+    /// identical across scoring modes instead of buffering each improving
+    /// candidate's message.
+    ///
+    /// A `MeanScalar` pool member is scored against its resting reference
+    /// (zeros), exactly as [`CnzSelector::select`] scores it.
+    pub fn select_by_bytes<C: Codec>(
+        &self,
+        g: &[f32],
+        tng: &Tng<C>,
+        rng: &Rng,
+        scratch: &mut CodecScratch,
+    ) -> (usize, f64, usize) {
+        let mut best = (0usize, f64::INFINITY);
+        for (i, m) in self.pool.iter().enumerate() {
+            let mut trial_rng = rng.clone();
+            tng.encode_into(g, m.current(), &mut trial_rng, scratch);
+            let bytes = wire::frame_len(&scratch.enc) as f64;
+            if bytes < best.1 {
+                best = (i, bytes);
+            }
+        }
+        (best.0, best.1, self.signal_bits())
+    }
+
+    /// Dispatch on the configured scoring mode — the single entry point the
+    /// deterministic driver and the transport worker loop both use, so the
+    /// runtimes cannot drift apart on how the search is scored.
+    pub fn select_scored<C: Codec>(
+        &self,
+        score: RefScore,
+        g: &[f32],
+        tng: &Tng<C>,
+        rng: &Rng,
+        scratch: &mut CodecScratch,
+    ) -> (usize, f64, usize) {
+        match score {
+            RefScore::CnzRatio => self.select(g),
+            RefScore::MeasuredBytes => self.select_by_bytes(g, tng, rng, scratch),
+        }
+    }
+
     pub fn current(&self, idx: usize) -> &[f32] {
         self.pool[idx].current()
     }
@@ -164,6 +242,37 @@ mod tests {
         // g close to zero-vector scale: zeros wins.
         let (idx, _, _) = sel.select(&[0.01, -0.02]);
         assert_eq!(idx, 0);
+    }
+
+    #[test]
+    fn select_by_bytes_prefers_reference_that_shrinks_the_stream() {
+        use crate::codec::entropy::EntropyCodec;
+        use crate::codec::ternary::TernaryCodec;
+        let dim = 512;
+        let mut rng = Rng::new(3);
+        let g: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+        let zeros = ReferenceManager::new(ReferenceKind::Zeros, dim);
+        let mut avg = ReferenceManager::new(ReferenceKind::AvgDecoded { window: 1 }, dim);
+        let w = vec![0.0f32; dim];
+        avg.end_round(&RoundCtx {
+            round: 0,
+            decoded_avg: &g,
+            w_prev: &w,
+            w_next: &w,
+            eta: 0.1,
+            full_grad: None,
+        });
+        let sel = CnzSelector::new(vec![zeros, avg]);
+        let tng = Tng::new(EntropyCodec::new(TernaryCodec));
+        let mut scratch = CodecScratch::new();
+        let (idx, bytes, bits) = sel.select_by_bytes(&g, &tng, &Rng::new(9), &mut scratch);
+        assert_eq!(idx, 1, "the trajectory-close reference must win on measured bytes");
+        assert!(bytes > 0.0);
+        assert_eq!(bits, 1);
+        // Deterministic: same pool, gradient, and RNG give the same answer,
+        // and the caller's stream was never advanced (clone-only trials).
+        let (idx2, bytes2, _) = sel.select_by_bytes(&g, &tng, &Rng::new(9), &mut scratch);
+        assert_eq!((idx, bytes), (idx2, bytes2));
     }
 
     #[test]

@@ -2,12 +2,29 @@
 //!
 //! * [`normalizer`] — compress `g − g̃` (or `g ./ g̃`) instead of `g` (Eq. 2/3)
 //! * [`reference`] — the §3.1 pool of trajectory-based reference vectors
-//! * [`cnz`] — Proposition 4's C_nz measurement and per-round reference search
+//! * [`cnz`] — Proposition 4's C_nz measurement and per-round reference
+//!   search, scored by the fast ratio estimator or by measured wire bytes
+//!   ([`RefScore`])
+//!
+//! The wrapper is codec-agnostic; the one-line mechanism:
+//!
+//! ```
+//! use tng::codec::ternary::TernaryCodec;
+//! use tng::tng::Tng;
+//! use tng::util::Rng;
+//!
+//! let tng = Tng::new(TernaryCodec);
+//! let (g, gref) = ([0.9f32, -1.1], [1.0f32, -1.0]); // g̃ tracks g
+//! let mut rng = Rng::new(0);
+//! let e = tng.encode(&g, &gref, &mut rng); // Q[g − g̃]: tiny dynamic range
+//! let v = tng.decode(&e, &gref);           // g̃ + decoded residual
+//! assert_eq!(v.len(), 2);
+//! ```
 
 pub mod cnz;
 pub mod normalizer;
 pub mod reference;
 
-pub use cnz::{cnz_ratio, CnzEstimator, CnzSelector};
+pub use cnz::{cnz_ratio, CnzEstimator, CnzSelector, RefScore};
 pub use normalizer::{Normalization, Tng};
 pub use reference::{ReferenceKind, ReferenceManager, RoundCtx};

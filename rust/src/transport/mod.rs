@@ -18,7 +18,18 @@
 //! TCP length prefix (4 bytes/frame, recoverable from the message counts)
 //! and the `Hello` join frame are transport overhead, tracked separately by
 //! the TCP backend (`tcp::TcpLeader::ctrl_bytes`) so the data-plane totals
-//! stay comparable across backends.
+//! stay comparable across backends. These counted frame bytes are also what
+//! `Trace::total_wire_up_bytes`/`total_wire_down_bytes` report — the
+//! measured-bytes axis the deterministic driver mirrors.
+//!
+//! ```
+//! use tng::transport::{channel_pair, LeaderTransport, WorkerTransport};
+//!
+//! let (mut leader, mut workers) = channel_pair(1, None);
+//! workers[0].send(vec![1, 2, 3]).unwrap();
+//! assert_eq!(leader.recv().unwrap(), vec![1, 2, 3]);
+//! assert_eq!(leader.stats().up_bytes, 3); // every data-plane byte counted
+//! ```
 
 pub mod channel;
 pub mod frame;

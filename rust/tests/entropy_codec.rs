@@ -1,0 +1,269 @@
+//! Property suite for the entropy-coded wire format (`entropy:<inner>`).
+//!
+//! Pins, in `transport_framing.rs` style:
+//!   * byte-exact wire round-trips for every payload family under the
+//!     entropy envelope (codec-produced and hand-built, nested and sharded);
+//!   * deterministic rejection of every truncated frame prefix, forged
+//!     length headers, appended garbage, forged dims, and unknown inner
+//!     tags — and no panics under byte-flip fuzzing;
+//!   * statistical transparency (the envelope never changes decode);
+//!   * the headline measurement: on trajectory-normalized streams the
+//!     **measured** stream is within slack of the old `bits_compressed`
+//!     adaptive-coder estimate (and well under the dense packed wire).
+
+use tng::codec::entropy::{self, EntropyCodec};
+use tng::codec::qsgd::QsgdCodec;
+use tng::codec::ternary::TernaryCodec;
+use tng::codec::{wire, Codec, Encoded, Payload};
+use tng::coordinator::protocol::Msg;
+use tng::experiments::common::make_codec;
+use tng::tng::Tng;
+use tng::util::{math, Rng};
+
+fn arb_vec(rng: &mut Rng) -> Vec<f32> {
+    let d = 1 + rng.below(500);
+    let style = rng.below(4);
+    (0..d)
+        .map(|_| match style {
+            0 => rng.gauss_f32(),
+            1 => rng.gauss_f32() * 1e4,
+            2 => rng.gauss_f32() * 1e-6,
+            _ => {
+                if rng.bernoulli(0.1) {
+                    rng.gauss_f32() * 100.0
+                } else {
+                    0.0
+                }
+            }
+        })
+        .collect()
+}
+
+fn roundtrip_byte_exact(e: &Encoded, what: &str) {
+    let bytes = wire::to_bytes(e);
+    assert_eq!(bytes.len(), wire::frame_len(e), "{what}: frame_len must be exact");
+    let back = wire::from_bytes(&bytes).unwrap_or_else(|err| panic!("{what}: {err}"));
+    assert_eq!(&back, e, "{what}");
+    assert_eq!(wire::to_bytes(&back), bytes, "{what}: reserialization must be byte-exact");
+}
+
+#[test]
+fn entropy_specs_roundtrip_byte_exact_for_every_payload_family() {
+    let specs = [
+        "entropy:ternary",
+        "entropy:cternary:16",
+        "entropy:qsgd:4",
+        "entropy:qsgd:1",
+        "entropy:sparse:0.25",
+        "entropy:fp32",
+        "entropy:sign",
+        "entropy:topk:8",
+        "entropy:shard:4:ternary",
+        "entropy:shard:3:qsgd:4",
+        "shard:2:entropy:ternary",
+        "entropy:entropy:ternary",
+    ];
+    let mut rng = Rng::new(0xE17);
+    for spec in specs {
+        let codec = make_codec(spec).unwrap();
+        for case in 0..12 {
+            let v = arb_vec(&mut rng);
+            let e = codec.encode(&v, &mut rng);
+            assert_eq!(e.dim, v.len());
+            roundtrip_byte_exact(&e, &format!("{spec} case {case}"));
+        }
+        // Edge dims, including the smallest.
+        for d in [1usize, 2, 3, 4, 5, 7, 8, 9] {
+            let v: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+            roundtrip_byte_exact(&codec.encode(&v, &mut rng), &format!("{spec} d={d}"));
+        }
+    }
+}
+
+#[test]
+fn hand_built_payloads_roundtrip_under_the_envelope() {
+    let variants = vec![
+        Encoded { dim: 5, payload: Payload::Ternary { scale: 1.5, codes: vec![1, 0, -1, 0, 1] } },
+        Encoded {
+            dim: 5,
+            payload: Payload::TernaryChunked {
+                chunk: 2,
+                scales: vec![0.5, 2.0, 8.0],
+                codes: vec![1, -1, 0, 0, 1],
+            },
+        },
+        Encoded { dim: 3, payload: Payload::Quantized { norm: 4.0, levels: 8, q: vec![-8, 0, 3] } },
+        Encoded { dim: 7, payload: Payload::Sparse { pairs: vec![(0, 1.0), (6, -2.5)] } },
+        Encoded { dim: 7, payload: Payload::Sparse { pairs: vec![] } },
+        Encoded { dim: 2, payload: Payload::Dense { values: vec![f32::MIN_POSITIVE, -0.0] } },
+        Encoded { dim: 1, payload: Payload::Ternary { scale: 0.0, codes: vec![0] } },
+    ];
+    for v in &variants {
+        roundtrip_byte_exact(&entropy::wrap(v.clone()), "wrapped variant");
+    }
+    let sharded = Encoded {
+        dim: variants.iter().map(|e| e.dim).sum(),
+        payload: Payload::Sharded { parts: variants },
+    };
+    roundtrip_byte_exact(&entropy::wrap(sharded.clone()), "wrapped sharded");
+    roundtrip_byte_exact(&entropy::wrap(entropy::wrap(sharded)), "doubly wrapped");
+}
+
+#[test]
+fn every_truncated_prefix_is_rejected() {
+    let mut rng = Rng::new(0xC07);
+    let v: Vec<f32> = (0..200).map(|_| rng.gauss_f32()).collect();
+    for spec in ["entropy:ternary", "entropy:shard:3:qsgd:4"] {
+        let codec = make_codec(spec).unwrap();
+        let bytes = wire::to_bytes(&codec.encode(&v, &mut rng));
+        for cut in 0..bytes.len() {
+            assert!(
+                wire::from_bytes(&bytes[..cut]).is_err(),
+                "{spec}: prefix of {cut}/{} bytes must be rejected",
+                bytes.len()
+            );
+        }
+        assert!(wire::from_bytes(&bytes).is_ok());
+    }
+}
+
+#[test]
+fn forged_headers_and_garbage_are_rejected() {
+    let mut rng = Rng::new(0xF0);
+    let v: Vec<f32> = (0..100).map(|_| rng.gauss_f32()).collect();
+    let e = EntropyCodec::new(TernaryCodec).encode(&v, &mut rng);
+    let bytes = wire::to_bytes(&e);
+    // Frame layout: tag (1) + dim (4) + u32 stream length (4) + stream.
+    let len = u32::from_le_bytes(bytes[5..9].try_into().unwrap());
+    assert_eq!(len as usize, bytes.len() - 9, "length prefix location");
+
+    // Length prefix overstating the stream.
+    let mut forged = bytes.clone();
+    forged[5..9].copy_from_slice(&(len + 1).to_le_bytes());
+    assert!(wire::from_bytes(&forged).is_err());
+
+    // Length prefix understating the stream (leftover trailing bytes and a
+    // short stream both violate exact consumption).
+    let mut forged = bytes.clone();
+    forged[5..9].copy_from_slice(&(len - 1).to_le_bytes());
+    assert!(wire::from_bytes(&forged).is_err());
+
+    // Appended garbage after a valid frame.
+    let mut padded = bytes.clone();
+    padded.extend_from_slice(&[0xBE, 0xEF]);
+    assert!(wire::from_bytes(&padded).is_err());
+
+    // Byte-flip fuzz across the whole frame: errors are fine, panics and
+    // false "original" decodes are not (header flips that keep the frame
+    // parseable decode to a different message or fail the terminator).
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x20;
+        let _ = wire::from_bytes(&bad);
+    }
+}
+
+#[test]
+fn unknown_inner_tag_is_rejected() {
+    use tng::codec::entropy::models::Models;
+    use tng::codec::entropy::rc::RangeEncoder;
+    // Hand-roll a stream whose first symbol is the unused tag 7.
+    let mut coded = Vec::new();
+    let mut ms = Models::new();
+    let mut enc = RangeEncoder::new(&mut coded);
+    ms.put_tag(&mut enc, 7);
+    enc.encode_direct(0xA5, 8);
+    enc.finish();
+    let err = entropy::decode_frame(&coded, 4, 0).unwrap_err();
+    assert!(err.to_string().contains("unknown payload tag"), "{err}");
+}
+
+#[test]
+fn envelope_is_statistically_transparent() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..20 {
+        let v = arb_vec(&mut rng);
+        let plain = TernaryCodec;
+        let wrapped = EntropyCodec::new(TernaryCodec);
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a = plain.encode(&v, &mut r1);
+        let b = wrapped.encode(&v, &mut r2);
+        // Same RNG stream, same inner message, identical decode.
+        assert_eq!(a.decode(), b.decode());
+        assert_eq!(a.nnz(), b.nnz());
+    }
+    assert!(EntropyCodec::new(TernaryCodec).is_unbiased());
+    assert!(!EntropyCodec::new(tng::codec::signsgd::SignCodec).is_unbiased());
+}
+
+#[test]
+fn entropy_grad_messages_roundtrip_through_the_protocol() {
+    let mut rng = Rng::new(0x6AD);
+    let v: Vec<f32> = (0..300).map(|_| rng.gauss_f32()).collect();
+    let enc = EntropyCodec::new(QsgdCodec::new(4)).encode(&v, &mut rng);
+    let m = Msg::Grad { worker: 2, round: 9, enc, scalar: 0.5, ref_idx: 1 };
+    let bytes = m.to_bytes();
+    assert_eq!(Msg::from_bytes(&bytes).unwrap(), m);
+    // Truncations at the protocol layer are rejected too.
+    for cut in [0, 5, 11, bytes.len() / 2, bytes.len() - 1] {
+        assert!(Msg::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+    }
+}
+
+/// The acceptance measurement: on a trajectory-normalized stream, the
+/// measured entropy-coded bytes must come in at (or under) the adaptive-
+/// coder *estimate* the repo used to report, within slack — and far below
+/// the dense packed wire the raw codec actually shipped.
+#[test]
+fn measured_bytes_beat_the_estimate_within_slack_on_normalized_streams() {
+    let dim = 2048;
+    let mut rng = Rng::new(0xAB);
+    let g: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+    // A trajectory-close reference that matches g exactly on most
+    // coordinates (the per-worker anchor regime): the residual g − g̃ is
+    // *sparse*, so its ternary coding carries genuinely less entropy than
+    // the raw gradient's — which is what the measured bytes must show.
+    // (A merely *scaled* residual would not: ternary keep-probabilities are
+    // scale-invariant, so only sparsity shrinks the trit stream.)
+    let gref: Vec<f32> = g
+        .iter()
+        .map(|&x| if rng.bernoulli(0.05) { x + 1.0 } else { x })
+        .collect();
+
+    let tng_entropy = Tng::new(EntropyCodec::new(TernaryCodec));
+    let mut enc_rng = Rng::new(0xCD);
+    let e = tng_entropy.encode(&g, &gref, &mut enc_rng);
+    let Payload::Entropy { inner, coded } = &e.payload else {
+        panic!("entropy codec must emit an entropy payload")
+    };
+
+    let measured_bits = 8 * coded.len();
+    let estimate_bits = inner.bits_compressed();
+    let dense_bits = inner.bits_dense();
+    assert!(
+        measured_bits <= estimate_bits + estimate_bits / 4 + 1024,
+        "measured {measured_bits} bits must be within slack of the \
+         adaptive-coder estimate {estimate_bits}"
+    );
+    assert!(
+        measured_bits < dense_bits,
+        "measured {measured_bits} must beat dense packed coding {dense_bits}"
+    );
+    // And the normalized stream must be cheaper than the raw one — the
+    // paper's entropy argument on real bytes.
+    let zeros = vec![0.0f32; dim];
+    let mut raw_rng = Rng::new(0xCD);
+    let raw = tng_entropy.encode(&g, &zeros, &mut raw_rng);
+    let Payload::Entropy { coded: raw_coded, .. } = &raw.payload else { unreachable!() };
+    assert!(
+        coded.len() < raw_coded.len(),
+        "normalized stream ({}) must be smaller than raw ({})",
+        coded.len(),
+        raw_coded.len()
+    );
+    // Keep the decode exact, too.
+    let decoded = tng_entropy.decode(&e, &gref);
+    assert_eq!(decoded.len(), dim);
+    assert!(math::abs_max(&decoded).is_finite());
+}

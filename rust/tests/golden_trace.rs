@@ -25,6 +25,17 @@ use tng::util::Rng;
 
 fn assert_traces_identical(seq: &Trace, par: &Trace, what: &str) {
     assert_eq!(seq.final_w, par.final_w, "{what}: final iterate diverged");
+    // Measured wire totals are mirrored by the driver frame for frame, so
+    // for transport-legal configs they must agree exactly (unlike the
+    // information-model bits_per_elt axis, which differs by design).
+    assert_eq!(
+        seq.total_wire_up_bytes, par.total_wire_up_bytes,
+        "{what}: measured uplink wire bytes diverged"
+    );
+    assert_eq!(
+        seq.total_wire_down_bytes, par.total_wire_down_bytes,
+        "{what}: measured downlink wire bytes diverged"
+    );
     assert_eq!(seq.records.len(), par.records.len(), "{what}: record counts");
     for (a, b) in seq.records.iter().zip(&par.records) {
         assert_eq!(a.round, b.round, "{what}: record rounds");
@@ -63,11 +74,18 @@ fn base_cfg(seed: u64) -> DriverConfig {
 }
 
 fn codecs() -> Vec<(&'static str, Box<dyn Codec>)> {
+    use tng::codec::entropy::EntropyCodec;
     vec![
         ("ternary", Box::new(TernaryCodec)),
         ("qsgd4", Box::new(QsgdCodec::new(4))),
         ("shard4-ternary", Box::new(ShardedCodec::new(TernaryCodec, 4).with_threads(2))),
         ("shard3-qsgd4", Box::new(ShardedCodec::new(QsgdCodec::new(4), 3).with_threads(1))),
+        ("entropy-ternary", Box::new(EntropyCodec::new(TernaryCodec))),
+        ("entropy-qsgd4", Box::new(EntropyCodec::new(QsgdCodec::new(4)))),
+        (
+            "entropy-shard2-ternary",
+            Box::new(EntropyCodec::new(ShardedCodec::new(TernaryCodec, 2).with_threads(1))),
+        ),
     ]
 }
 

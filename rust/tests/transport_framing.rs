@@ -21,9 +21,10 @@ use tng::transport::frame::{read_frame, write_frame, Reassembler};
 use tng::util::Rng;
 
 /// One encoded message per wire payload variant (Ternary, TernaryChunked,
-/// Quantized, Sparse, Dense, Sharded, nested Sharded), across a few dims
-/// including the packing edge cases.
+/// Quantized, Sparse, Dense, Sharded, nested Sharded, Entropy and
+/// entropy-in-sharded), across a few dims including the packing edge cases.
 fn every_payload_variant() -> Vec<Encoded> {
+    use tng::codec::entropy::EntropyCodec;
     let mut rng = Rng::new(77);
     let mut out = Vec::new();
     for dim in [1usize, 5, 64, 100] {
@@ -36,6 +37,9 @@ fn every_payload_variant() -> Vec<Encoded> {
         out.push(ShardedCodec::new(TernaryCodec, 3).encode(&v, &mut rng));
         // Nested: a sharded codec whose inner codec is itself sharded.
         out.push(ShardedCodec::new(ShardedCodec::new(QsgdCodec::new(4), 2), 2).encode(&v, &mut rng));
+        // Entropy-coded envelopes, plain and sharded-inside.
+        out.push(EntropyCodec::new(TernaryCodec).encode(&v, &mut rng));
+        out.push(EntropyCodec::new(ShardedCodec::new(QsgdCodec::new(4), 2)).encode(&v, &mut rng));
     }
     out
 }

@@ -94,13 +94,15 @@ fn base_cfg() -> DriverConfig {
     }
 }
 
-/// The acceptance pin: for ternary, QSGD, and sharded-ternary, the TCP run
-/// is byte-identical to the deterministic driver (iterates + records) and
-/// to the channel runtime (wire bits).
+/// The acceptance pin: for ternary, QSGD, sharded-ternary, and
+/// entropy-coded ternary, the TCP run is byte-identical to the
+/// deterministic driver (iterates + records) and to the channel runtime
+/// (wire bits) — and all three runtimes report the same *measured* wire
+/// totals (the driver mirrors the transport frames byte for byte).
 #[test]
-fn tcp_golden_trace_three_codecs() {
+fn tcp_golden_trace_across_codecs() {
     let obj = logreg();
-    for spec in ["ternary", "qsgd:4", "shard:4:ternary"] {
+    for spec in ["ternary", "qsgd:4", "shard:4:ternary", "entropy:ternary"] {
         let codec = common::make_codec(spec).unwrap();
         let cfg = base_cfg();
         let seq = driver::run(&obj, codec.as_ref(), "seq", &cfg);
@@ -112,6 +114,16 @@ fn tcp_golden_trace_three_codecs() {
             (chan.total_up_bits, chan.total_down_bits),
             (tcp.total_up_bits, tcp.total_down_bits),
             "{spec}: wire bits must be identical across transports"
+        );
+        assert_eq!(
+            (seq.total_wire_up_bytes, seq.total_wire_down_bytes),
+            (tcp.total_wire_up_bytes, tcp.total_wire_down_bytes),
+            "{spec}: driver-mirrored wire bytes must equal TCP's measured bytes"
+        );
+        assert_eq!(
+            (chan.total_wire_up_bytes, chan.total_wire_down_bytes),
+            (tcp.total_wire_up_bytes, tcp.total_wire_down_bytes),
+            "{spec}: channel and TCP measured bytes must be identical"
         );
         assert!(tcp.total_up_bits > 0 && tcp.total_down_bits > 0, "{spec}");
     }
