@@ -8,6 +8,7 @@ use std::time::Duration;
 use tng::codec::ternary::TernaryCodec;
 use tng::coordinator::{driver, parallel, DriverConfig};
 use tng::data::synthetic::{generate, SkewConfig};
+use tng::downlink::DownlinkSpec;
 use tng::objectives::logreg::LogReg;
 use tng::optim::{EstimatorKind, StepSchedule};
 use tng::tng::ReferenceKind;
@@ -86,4 +87,49 @@ fn main() {
         })
         .report();
     }
+
+    // --- Up-vs-down measured wire bytes (the PR-4 downlink subsystem) ----
+    // One driver run per downlink config on the same logreg problem: the
+    // uplink is entropy-ternary throughout, so the comparison isolates what
+    // `down=<spec>` does to the broadcast direction. Emits BENCH_PR4.json.
+    println!("\n# measured wire bytes per element per round, by direction (D=512, M=4)");
+    let up_codec = tng::experiments::common::make_codec("entropy:ternary").unwrap();
+    let mut json = String::from("{\n");
+    let configs: [(&str, Option<DownlinkSpec>); 4] = [
+        ("raw-f32-down", None),
+        ("down-ternary", Some(DownlinkSpec::new("ternary"))),
+        ("down-entropy-ternary", Some(DownlinkSpec::new("entropy:ternary"))),
+        (
+            "down-entropy-ternary-noef",
+            Some(DownlinkSpec { codec: "entropy:ternary".into(), ef: false }),
+        ),
+    ];
+    let n_configs = configs.len();
+    for (i, (label, downlink)) in configs.into_iter().enumerate() {
+        let cfg = DriverConfig {
+            workers: 4,
+            rounds: 50,
+            schedule: StepSchedule::Const(0.25),
+            eval_loss: false,
+            record_every: 50,
+            downlink,
+            ..Default::default()
+        };
+        let tr = driver::run(&obj, up_codec.as_ref(), label, &cfg);
+        let denom = (cfg.rounds * cfg.workers * tr.dim) as f64;
+        let up_bpe = tr.total_wire_up_bytes as f64 / denom;
+        let down_bpe = tr.total_wire_down_bytes as f64 / denom;
+        println!(
+            "  {label:<26} up {up_bpe:7.3} B/elt   down {down_bpe:7.3} B/elt   down/up {:5.2}x",
+            down_bpe / up_bpe
+        );
+        json.push_str(&format!(
+            "  \"{label}\": {{\"up_bytes_per_elt\": {up_bpe:.4}, \
+             \"down_bytes_per_elt\": {down_bpe:.4}}}{}\n",
+            if i + 1 < n_configs { "," } else { "" }
+        ));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_PR4.json", &json).expect("write BENCH_PR4.json");
+    println!("# wrote BENCH_PR4.json");
 }

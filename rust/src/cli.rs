@@ -53,6 +53,14 @@ RUN/LEADER/WORKER OPTIONS (the figure harnesses use their own method grid):
     codec=SPEC          ternary | qsgd:<s> | sparse:<r> | sign | topk:<k> |
                         fp32 | cternary:<chunk> | shard:<n>:<inner> |
                         entropy:<inner>   (entropy = measured-bytes wire)
+    down=SPEC           compress the leader->worker broadcast with any codec
+                        SPEC above (e.g. down=entropy:ternary); off/absent =
+                        raw f32 Aggregate frames. Every process of a cluster
+                        must agree on it.
+    down_ef=true        server-side error feedback for the downlink (damped
+                        EF21-P/DIANA tracking); down_ef=false disables
+    estimator=sgd       gradient oracle: sgd | svrg | full (deterministic
+                        shard gradients — the §Regimes TNG-winning regime)
     ref_score=cnz       reference search scoring: cnz (fast ratio) | bytes
                         (measured encoded frame size per candidate)
 

@@ -43,6 +43,7 @@ pub mod qsgd;
 pub mod sharded;
 pub mod signsgd;
 pub mod sparse;
+pub mod spec;
 pub mod ternary;
 pub mod topk;
 pub mod wire;

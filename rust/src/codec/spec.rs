@@ -1,0 +1,67 @@
+//! Codec spec strings → codec instances — the one factory every surface
+//! shares (CLI `codec=` / `down=` keys, experiment harnesses, the downlink
+//! subsystem), so uplink and downlink compressors are guaranteed to accept
+//! the same spec language.
+//!
+//! Lived in `experiments::common` until the downlink subsystem (which sits
+//! below the experiments layer) needed it too; `experiments::common`
+//! re-exports it, so either path names the same function.
+
+use anyhow::{bail, Result};
+
+use super::{
+    entropy::EntropyCodec, identity::IdentityCodec, qsgd::QsgdCodec, signsgd::SignCodec,
+    sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec, Codec,
+};
+
+/// Build a codec from a spec string:
+/// `tg` | `ternary`, `qg` | `qsgd:<levels>`, `sg` | `sparse:<ratio>`,
+/// `sign`, `topk:<k>`, `fp32`, the sharded wrapper
+/// `shard:<shards>:<inner spec>` (e.g. `shard:4:ternary`, `shard:8:qsgd:4`),
+/// and the entropy-coding wrapper `entropy:<inner spec>` (e.g.
+/// `entropy:ternary`, `entropy:qsgd:4`, `entropy:shard:4:ternary`), whose
+/// wire frames are measured adaptive range-coder streams.
+pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
+    let (name, arg) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    };
+    Ok(match name {
+        "shard" => {
+            let Some((n, inner)) = arg.and_then(|a| a.split_once(':')) else {
+                bail!("shard spec is shard:<shards>:<inner codec>, got '{spec}'");
+            };
+            let shards: usize = n.parse()?;
+            if shards == 0 {
+                bail!("shard count must be >= 1 in '{spec}'");
+            }
+            Box::new(super::sharded::ShardedCodec::new(make_codec(inner)?, shards))
+        }
+        "entropy" => {
+            let Some(inner) = arg else {
+                bail!("entropy spec is entropy:<inner codec>, got '{spec}'");
+            };
+            Box::new(EntropyCodec::new(make_codec(inner)?))
+        }
+        "tg" | "ternary" => Box::new(TernaryCodec),
+        "cternary" => {
+            let chunk: usize = arg.unwrap_or("4096").parse()?;
+            Box::new(super::chunked::ChunkedTernaryCodec::new(chunk))
+        }
+        "qg" | "qsgd" => {
+            let levels: u32 = arg.unwrap_or("4").parse()?;
+            Box::new(QsgdCodec::new(levels))
+        }
+        "sg" | "sparse" => {
+            let ratio: f64 = arg.unwrap_or("0.25").parse()?;
+            Box::new(SparseCodec::new(ratio))
+        }
+        "sign" => Box::new(SignCodec),
+        "topk" => {
+            let k: usize = arg.unwrap_or("32").parse()?;
+            Box::new(TopKCodec::new(k))
+        }
+        "fp32" | "identity" => Box::new(IdentityCodec),
+        other => bail!("unknown codec spec '{other}'"),
+    })
+}

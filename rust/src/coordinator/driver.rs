@@ -11,8 +11,10 @@
 //!   1. every worker m draws g_t^m (SGD or SVRG estimator over its shard);
 //!   2. picks the reference g̃ (fixed strategy or C_nz-searched pool),
 //!      encodes Q[g_t^m − g̃] and "transmits" it (bits accounted exactly);
-//!   3. the leader decodes, averages, optionally applies the stochastic
-//!      L-BFGS preconditioner (Figures 3–4), and steps w;
+//!   3. the leader decodes, averages, optionally compresses the broadcast
+//!      (`crate::downlink` — every replica then steps on the reconstruction
+//!      v̂, keeping all runtimes digest-identical), optionally applies the
+//!      stochastic L-BFGS preconditioner (Figures 3–4), and steps w;
 //!   4. reference managers advance from the shared decoded trajectory, and
 //!      any scheduled reference/anchor broadcast is charged.
 
@@ -20,7 +22,8 @@ use std::time::Instant;
 
 use crate::codec::{wire, Codec, CodecScratch};
 use crate::coordinator::metrics::{RoundRecord, Trace};
-use crate::coordinator::protocol::MSG_HEADER_BYTES;
+use crate::coordinator::protocol::{CAGG_OVERHEAD_BYTES, MSG_HEADER_BYTES};
+use crate::downlink::{DownlinkCompressor, DownlinkSpec};
 use crate::objectives::Objective;
 use crate::optim::{EstimatorKind, GradEstimator, Lbfgs, StepSchedule};
 use crate::tng::{
@@ -66,6 +69,14 @@ pub struct DriverConfig {
     /// the reference vector with a full gradient"); one fp32 broadcast is
     /// charged.
     pub warm_start_reference: bool,
+    /// Downlink compression (`None` = raw f32 `Aggregate` broadcasts).
+    /// When set, the leader broadcasts `Msg::CompressedAggregate` frames
+    /// and **every** replica — leader included — steps on the reconstruction
+    /// v̂ (see `crate::downlink`), so all runtimes stay `param_digest`-
+    /// identical. The spec's codec string must parse
+    /// (`parallel::validate` / `cluster_setup` check it; this deterministic
+    /// driver panics on an invalid spec).
+    pub downlink: Option<DownlinkSpec>,
 }
 
 impl Default for DriverConfig {
@@ -87,6 +98,7 @@ impl Default for DriverConfig {
             eval_loss: true,
             w0: None,
             warm_start_reference: false,
+            downlink: None,
         }
     }
 }
@@ -129,6 +141,14 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
     let mut selectors: Vec<CnzSelector> = (0..m).map(|_| make_selector()).collect();
     let mut lbfgs = cfg.lbfgs_memory.map(Lbfgs::new);
     let mut cnz_est = CnzEstimator::new();
+    // Downlink compressor: the leader's EF + reference state, drawing from
+    // the dedicated RNG stream every transport leader also uses. The spec
+    // is validated by `cluster_setup` / `parallel::validate`; a hand-built
+    // config with a bad spec is a programmer error.
+    let mut downlink = cfg
+        .downlink
+        .as_ref()
+        .map(|spec| DownlinkCompressor::new(spec, dim, cfg.seed).expect("downlink spec"));
 
     // --- leader state ----------------------------------------------------
     let mut w = cfg.w0.clone().unwrap_or_else(|| vec![0.0f32; dim]);
@@ -259,22 +279,36 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             math::axpy(1.0 / m as f32, decoded, &mut v_avg);
         }
 
+        // ---- leader: compress the downlink broadcast (optional) ----------
+        // With downlink compression every replica — this leader included —
+        // steps on the reconstruction v̂, never on the exact aggregate: that
+        // is what keeps the driver lock-step with transport workers that
+        // only ever see the compressed frame.
+        let v_step: &[f32] = if let Some(dl) = downlink.as_mut() {
+            let (enc, vhat) = dl.compress(&v_avg);
+            // The CompressedAggregate frame each transport worker receives.
+            wire_down += m as u64 * (CAGG_OVERHEAD_BYTES + wire::frame_len(enc)) as u64;
+            vhat
+        } else {
+            // The raw Aggregate broadcast every transport worker receives.
+            wire_down += m as u64 * agg_frame;
+            &v_avg
+        };
+
         // ---- leader: precondition + step --------------------------------
         w_prev.copy_from_slice(&w);
         if let Some(l) = lbfgs.as_mut() {
-            l.observe(&w, &v_avg);
-            let dir = l.direction(&v_avg);
+            l.observe(&w, v_step);
+            let dir = l.direction(v_step);
             math::axpy(-eta, &dir, &mut w);
         } else {
-            math::axpy(-eta, &v_avg, &mut w);
+            math::axpy(-eta, v_step, &mut w);
         }
-        // The Aggregate broadcast every transport worker receives.
-        wire_down += m as u64 * agg_frame;
 
         // ---- advance shared reference state ------------------------------
         let ctx = RoundCtx {
             round: t,
-            decoded_avg: &v_avg,
+            decoded_avg: v_step,
             w_prev: &w_prev,
             w_next: &w,
             eta,
@@ -299,9 +333,10 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
                 wire_bits_per_elt: (wire_up as f64 * 8.0 / m as f64
                     + wire_down as f64 * 8.0)
                     / dim as f64,
+                down_bpe: wire_down as f64 * 8.0 / dim as f64,
                 loss,
                 subopt: loss - cfg.f_star,
-                grad_norm: math::norm2(&v_avg),
+                grad_norm: math::norm2(v_step),
                 cnz: cnz_est.value(),
                 eta,
                 w0: w[0],
@@ -533,6 +568,73 @@ mod tests {
         let agg_frame = 11 + 8 + 4 * dim;
         assert_eq!(tr.total_wire_up_bytes, rounds * m * grad_frame + m * 11);
         assert_eq!(tr.total_wire_down_bytes, rounds * m * agg_frame + m * 11);
+    }
+
+    #[test]
+    fn downlink_ledger_contract_three_workers() {
+        // Pins the two-ledger broadcast contract documented in
+        // `coordinator::metrics`: bits_down charges each logical broadcast
+        // ONCE (2 SVRG anchor-μ broadcasts at 32 bits/elt), while
+        // wire_down charges the per-worker frames the leader actually
+        // sends (M AnchorMu frames per sync + M Aggregate frames per round
+        // + M Stop frames).
+        let obj = logreg(); // dim = 32, n = 128
+        let cfg = DriverConfig {
+            workers: 3,
+            rounds: 10,
+            estimator: EstimatorKind::Svrg { anchor_every: 5 },
+            ..Default::default()
+        };
+        let tr = run(&obj, &IdentityCodec, "ledger", &cfg);
+        let (dim, m, rounds, syncs) = (32u64, 3u64, 10u64, 2u64);
+        // Information ledger: broadcast charged once per sync.
+        assert_eq!(tr.total_down_bits, syncs * 32 * dim);
+        // Measured ledger: per-worker frames. AnchorMu/AnchorGrad frame =
+        // 11 header + 4 count + 4·dim; Aggregate = 11 + 8 + 4·dim;
+        // Stop/Bye = 11.
+        let anchor_frame = 11 + 4 + 4 * dim;
+        let agg_frame = 11 + 8 + 4 * dim;
+        assert_eq!(
+            tr.total_wire_down_bytes,
+            syncs * m * anchor_frame + rounds * m * agg_frame + m * 11
+        );
+        // Uplink for contrast: charged per worker in BOTH ledgers (each
+        // worker genuinely transmits its own message).
+        assert_eq!(
+            tr.total_up_bits,
+            syncs * m * 32 * dim + rounds * m * 32 * dim
+        );
+        let grad_frame = 16 + 5 + 4 * dim; // identity wire frame = 5 + 4·dim
+        assert_eq!(
+            tr.total_wire_up_bytes,
+            syncs * m * anchor_frame + rounds * m * grad_frame + m * 11
+        );
+    }
+
+    #[test]
+    fn downlink_wire_mirror_matches_frame_arithmetic() {
+        // With down=ternary the driver must mirror the exact
+        // CompressedAggregate frames a transport leader sends: 15 bytes of
+        // overhead + the ternary wire frame (9 + ceil(dim/4)).
+        let obj = logreg(); // dim = 32
+        let cfg = DriverConfig {
+            rounds: 10,
+            downlink: Some(crate::downlink::DownlinkSpec::new("ternary")),
+            ..Default::default()
+        }; // M = 4
+        let tr = run(&obj, &IdentityCodec, "wire-down", &cfg);
+        let (dim, m, rounds) = (32u64, 4u64, 10u64);
+        let cagg_frame = 15 + 9 + dim.div_ceil(4);
+        assert_eq!(tr.total_wire_down_bytes, rounds * m * cagg_frame + m * 11);
+        // Uplink unchanged by downlink compression.
+        let grad_frame = 16 + 5 + 4 * dim;
+        assert_eq!(tr.total_wire_up_bytes, rounds * m * grad_frame + m * 11);
+        // down_bpe is the cumulative downlink share on every record.
+        let last = tr.records.last().unwrap();
+        assert!(
+            (last.down_bpe - (rounds * m * cagg_frame) as f64 * 8.0 / dim as f64).abs()
+                < 1e-9
+        );
     }
 
     #[test]

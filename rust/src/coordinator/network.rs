@@ -14,35 +14,80 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+/// Cost model for one leader⇄worker link. Real clusters are **asymmetric**
+/// — cloud egress, wireless, and oversubscribed ToR uplinks routinely give
+/// the leader→worker (downlink) direction a fraction of the worker→leader
+/// bandwidth or vice versa — so the two directions are modeled separately.
+/// [`LinkModel::symmetric`] recovers the old single-bandwidth form.
 #[derive(Debug, Clone, Copy)]
 pub struct LinkModel {
     /// One-way latency per message (seconds).
     pub latency_s: f64,
-    /// Bandwidth (bytes/second).
-    pub bandwidth_bps: f64,
+    /// Worker → leader (uplink) bandwidth (bytes/second).
+    pub up_bandwidth_bps: f64,
+    /// Leader → worker (downlink) bandwidth (bytes/second).
+    pub down_bandwidth_bps: f64,
 }
 
 impl Default for LinkModel {
     fn default() -> Self {
-        // 100 µs, 10 Gbit/s — a datacenter-ish default.
-        LinkModel { latency_s: 100e-6, bandwidth_bps: 10e9 / 8.0 }
+        // 100 µs, 10 Gbit/s both ways — a datacenter-ish default.
+        LinkModel::symmetric(100e-6, 10e9 / 8.0)
     }
 }
 
 impl LinkModel {
-    /// Modeled transfer time for one message of `bytes`.
-    pub fn transfer_time(&self, bytes: usize) -> f64 {
-        self.latency_s + bytes as f64 / self.bandwidth_bps
+    /// Equal bandwidth both directions.
+    pub fn symmetric(latency_s: f64, bandwidth_bps: f64) -> Self {
+        LinkModel {
+            latency_s,
+            up_bandwidth_bps: bandwidth_bps,
+            down_bandwidth_bps: bandwidth_bps,
+        }
     }
 
-    /// Modeled time for a synchronous fan-in of M messages, serialized at
-    /// the leader NIC (the congestion effect centralized PS suffers): each
-    /// of the M messages pays its own per-message latency on top of the
-    /// shared bandwidth term. (The seed charged one latency regardless of
-    /// M, which made fan-in of M tiny messages as cheap as one.)
+    /// Distinct uplink / downlink bandwidths (bytes/second each).
+    pub fn asymmetric(latency_s: f64, up_bps: f64, down_bps: f64) -> Self {
+        LinkModel { latency_s, up_bandwidth_bps: up_bps, down_bandwidth_bps: down_bps }
+    }
+
+    /// Modeled **uplink** transfer time for one message of `bytes` (kept
+    /// under its historical name; see [`LinkModel::downlink_time`] for the
+    /// other direction).
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.up_bandwidth_bps
+    }
+
+    /// Modeled **downlink** transfer time for one message of `bytes`.
+    pub fn downlink_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.down_bandwidth_bps
+    }
+
+    /// Modeled time for a synchronous fan-in of M uplink messages,
+    /// serialized at the leader NIC (the congestion effect centralized PS
+    /// suffers): each of the M messages pays its own per-message latency on
+    /// top of the shared bandwidth term. (The seed charged one latency
+    /// regardless of M, which made fan-in of M tiny messages as cheap as
+    /// one.)
     pub fn fan_in_time(&self, sizes: &[usize]) -> f64 {
         let total: usize = sizes.iter().sum();
-        sizes.len() as f64 * self.latency_s + total as f64 / self.bandwidth_bps
+        sizes.len() as f64 * self.latency_s + total as f64 / self.up_bandwidth_bps
+    }
+
+    /// Modeled time for broadcasting one `bytes`-sized frame to each of
+    /// `workers` workers: a star leader serializes M downlink frames at its
+    /// NIC, mirroring [`LinkModel::fan_in_time`]'s congestion convention.
+    pub fn broadcast_time(&self, workers: usize, bytes: usize) -> f64 {
+        workers as f64 * self.latency_s
+            + (workers * bytes) as f64 / self.down_bandwidth_bps
+    }
+
+    /// Modeled synchronization time of one full round: fan-in of the
+    /// workers' uplink frames, then broadcast of one downlink frame to all
+    /// of them — the quantity the fig4 sensitivity sweep reports, and where
+    /// downlink compression pays off on asymmetric links.
+    pub fn round_time(&self, up_sizes: &[usize], down_bytes: usize) -> f64 {
+        self.fan_in_time(up_sizes) + self.broadcast_time(up_sizes.len(), down_bytes)
     }
 }
 
@@ -140,7 +185,7 @@ mod tests {
 
     #[test]
     fn link_model_times() {
-        let m = LinkModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let m = LinkModel::symmetric(1e-3, 1e6);
         assert!((m.transfer_time(1000) - 2e-3).abs() < 1e-12);
         // Two messages: 2 latency terms + summed transfer at the NIC.
         assert!((m.fan_in_time(&[500, 500]) - 3e-3).abs() < 1e-12);
@@ -171,6 +216,44 @@ mod tests {
             (m.fan_in_time(&[256; 4]) - one - 3.0 * m.latency_s).abs() < 1e-12,
             "penalty must be exactly (M-1) latencies"
         );
+    }
+
+    #[test]
+    fn asymmetric_link_monotone_in_each_direction() {
+        // 10 Gbit/s up, 1 Gbit/s down — the shape real clusters have.
+        let m = LinkModel::asymmetric(100e-6, 10e9 / 8.0, 1e9 / 8.0);
+        // Directions are priced independently: the same frame is 10x slower
+        // (net of latency) on the narrow downlink.
+        let up = m.transfer_time(1_000_000) - m.latency_s;
+        let down = m.downlink_time(1_000_000) - m.latency_s;
+        assert!((down / up - 10.0).abs() < 1e-9, "down/up = {}", down / up);
+
+        // broadcast_time strictly increases in workers and in frame size.
+        let mut prev = 0.0;
+        for k in 1..=8 {
+            let t = m.broadcast_time(k, 4096);
+            assert!(t > prev, "broadcast must grow with M: {t} !> {prev} at M={k}");
+            prev = t;
+        }
+        assert!(m.broadcast_time(4, 8192) > m.broadcast_time(4, 4096));
+
+        // round_time strictly decreases as downlink bandwidth grows (all
+        // else fixed) — the monotonicity that makes downlink compression a
+        // wall-clock win, not just a byte win.
+        let ups = vec![2048usize; 4];
+        let mut prev = f64::INFINITY;
+        for down_gbps in [0.5, 1.0, 2.0, 4.0, 8.0] {
+            let lk = LinkModel::asymmetric(100e-6, 10e9 / 8.0, down_gbps * 1e9 / 8.0);
+            let t = lk.round_time(&ups, 1_000_000);
+            assert!(t < prev, "round_time must shrink with down bandwidth");
+            prev = t;
+        }
+        // ...and decreases in downlink frame size at fixed bandwidth: a
+        // compressed broadcast is strictly cheaper.
+        assert!(m.round_time(&ups, 100_000) < m.round_time(&ups, 1_000_000));
+        // Symmetric model agrees with itself across directions.
+        let s = LinkModel::symmetric(1e-3, 1e6);
+        assert_eq!(s.transfer_time(500), s.downlink_time(500));
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::codec::{Codec, CodecScratch};
 use crate::coordinator::driver::DriverConfig;
 use crate::coordinator::metrics::{RoundRecord, Trace};
 use crate::coordinator::protocol::Msg;
+use crate::downlink::{DownlinkCompressor, DownlinkDecoder};
 use crate::objectives::Objective;
 use crate::optim::{GradEstimator, Lbfgs};
 use crate::tng::{CnzSelector, ReferenceKind, ReferenceManager, RoundCtx, Tng};
@@ -98,7 +99,46 @@ pub fn validate(cfg: &DriverConfig) -> Result<()> {
     if cfg.workers == 0 || cfg.workers > u16::MAX as usize {
         bail!("worker count {} out of range", cfg.workers);
     }
+    if let Some(dl) = &cfg.downlink {
+        // Parse-check here so a bad `down=` spec surfaces as a clean error
+        // on every entry point (the deterministic driver trusts the config
+        // and would panic instead).
+        crate::codec::spec::make_codec(&dl.codec)
+            .map_err(|e| anyhow::anyhow!("invalid down= codec spec '{}': {e}", dl.codec))?;
+    }
     Ok(())
+}
+
+/// The leader/worker round-application step shared by both downlink modes:
+/// precondition, step `w`, and advance the reference pool from the applied
+/// aggregate `v` — identical arithmetic on every replica.
+#[allow(clippy::too_many_arguments)]
+fn apply_aggregate(
+    t: usize,
+    v: &[f32],
+    eta: f32,
+    w: &mut Vec<f32>,
+    w_prev: &mut Vec<f32>,
+    lbfgs: &mut Option<Lbfgs>,
+    selector: &mut CnzSelector,
+) {
+    w_prev.copy_from_slice(w);
+    if let Some(l) = lbfgs.as_mut() {
+        l.observe(w.as_slice(), v);
+        let dir = l.direction(v);
+        math::axpy(-eta, &dir, w);
+    } else {
+        math::axpy(-eta, v, w);
+    }
+    selector.end_round(&RoundCtx {
+        round: t,
+        decoded_avg: v,
+        w_prev: w_prev.as_slice(),
+        w_next: w.as_slice(),
+        eta,
+        full_grad: None,
+    });
+    let _ = selector.take_broadcast_bits();
 }
 
 /// Worker body: compute → normalize → encode → send; then apply the
@@ -123,6 +163,8 @@ fn worker_loop(
     let mut w_prev = vec![0.0f32; dim];
     let mut scratch = CodecScratch::new();
     scratch.warm(dim);
+    // Downlink replica state: present iff the config compresses broadcasts.
+    let mut dl_dec = cfg.downlink.as_ref().map(|dl| DownlinkDecoder::new(dim, dl.ef));
 
     for t in 0..cfg.rounds {
         // SVRG anchor synchronization.
@@ -163,26 +205,28 @@ fn worker_loop(
             ref_idx as u8,
         ))?;
 
-        // Apply the round's aggregate to local replicas.
+        // Apply the round's aggregate (raw or compressed — whichever the
+        // shared config promises; receiving the other kind is a config
+        // mismatch) to the local replicas.
         match Msg::from_bytes(&tp.recv()?)? {
             Msg::Aggregate { v, eta, .. } => {
-                w_prev.copy_from_slice(&w);
-                if let Some(l) = lbfgs.as_mut() {
-                    l.observe(&w, &v);
-                    let dir = l.direction(&v);
-                    math::axpy(-eta, &dir, &mut w);
-                } else {
-                    math::axpy(-eta, &v, &mut w);
+                if dl_dec.is_some() {
+                    bail!(
+                        "worker {id}: got a raw Aggregate but down= compression \
+                         is configured — config mismatch"
+                    );
                 }
-                selector.end_round(&RoundCtx {
-                    round: t,
-                    decoded_avg: &v,
-                    w_prev: &w_prev,
-                    w_next: &w,
-                    eta,
-                    full_grad: None,
-                });
-                let _ = selector.take_broadcast_bits();
+                apply_aggregate(t, &v, eta, &mut w, &mut w_prev, &mut lbfgs, &mut selector);
+            }
+            Msg::CompressedAggregate { enc, eta, .. } => {
+                let Some(dec) = dl_dec.as_mut() else {
+                    bail!(
+                        "worker {id}: got a CompressedAggregate but no down= \
+                         codec is configured — config mismatch"
+                    );
+                };
+                let vhat = dec.apply(&enc)?;
+                apply_aggregate(t, vhat, eta, &mut w, &mut w_prev, &mut lbfgs, &mut selector);
             }
             Msg::Stop { round } => {
                 // The leader only ever sends Stop after its full round loop,
@@ -228,6 +272,12 @@ fn leader_loop(
     let mut w_prev = vec![0.0f32; dim];
     let mut scratch = CodecScratch::new();
     scratch.warm(dim);
+    // Downlink compressor: EF + reference state on the leader, identical
+    // stream to the deterministic driver's (see `crate::downlink`).
+    let mut downlink = match &cfg.downlink {
+        Some(spec) => Some(DownlinkCompressor::new(spec, dim, cfg.seed)?),
+        None => None,
+    };
     let total_n: usize = shard_sizes.iter().sum();
     let svrg = matches!(cfg.estimator, crate::optim::EstimatorKind::Svrg { .. });
     // anchor_due is a pure function of (estimator kind, round); one probe
@@ -313,25 +363,21 @@ fn leader_loop(
             math::axpy(1.0 / m as f32, &scratch.decoded, &mut v_avg);
         }
 
-        // Step + broadcast.
-        w_prev.copy_from_slice(&w);
-        if let Some(l) = lbfgs.as_mut() {
-            l.observe(&w, &v_avg);
-            let dir = l.direction(&v_avg);
-            math::axpy(-eta, &dir, &mut w);
+        // Broadcast (compressed or raw), then apply the identical update
+        // every worker applies. With downlink compression the leader steps
+        // on the reconstruction v̂ — never its exact aggregate — so its
+        // replica matches the workers' bit for bit.
+        if let Some(dl) = downlink.as_mut() {
+            let (enc, vhat) = dl.compress(&v_avg);
+            let frame = Msg::compressed_aggregate_frame(t as u32, eta, enc);
+            v_avg.copy_from_slice(vhat);
+            tp.broadcast(&frame)?;
         } else {
-            math::axpy(-eta, &v_avg, &mut w);
+            tp.broadcast(
+                &Msg::Aggregate { round: t as u32, v: v_avg.clone(), eta }.to_bytes(),
+            )?;
         }
-        tp.broadcast(&Msg::Aggregate { round: t as u32, v: v_avg.clone(), eta }.to_bytes())?;
-        selector.end_round(&RoundCtx {
-            round: t,
-            decoded_avg: &v_avg,
-            w_prev: &w_prev,
-            w_next: &w,
-            eta,
-            full_grad: None,
-        });
-        let _ = selector.take_broadcast_bits();
+        apply_aggregate(t, &v_avg, eta, &mut w, &mut w_prev, &mut lbfgs, &mut selector);
 
         if t % cfg.record_every == 0 || t + 1 == cfg.rounds {
             let loss = if cfg.eval_loss { obj.loss(&w) } else { f64::NAN };
@@ -345,6 +391,7 @@ fn leader_loop(
                 round: t,
                 bits_per_elt: wire_bpe,
                 wire_bits_per_elt: wire_bpe,
+                down_bpe: s.down_bytes as f64 * 8.0 / dim as f64,
                 loss,
                 subopt: loss - cfg.f_star,
                 grad_norm: math::norm2(&v_avg),

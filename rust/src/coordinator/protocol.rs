@@ -25,6 +25,13 @@ pub enum Msg {
     /// Leader -> workers: decoded aggregate v_t (workers update their own
     /// replica of w and the reference state deterministically from it).
     Aggregate { round: u32, v: Vec<f32>, eta: f32 },
+    /// Leader -> workers: **compressed** aggregate broadcast (the downlink
+    /// subsystem, `crate::downlink`): the codec wire frame of
+    /// `Q[v_t + e_t − g̃↓]`; workers reconstruct v̂_t against their replica
+    /// of the shared downlink reference. Parsing reuses `codec::wire`, so
+    /// the PR-3 decompression-bomb guards (dim cap, part-count cap, nested
+    /// stream length bounds, strict consumption) apply unchanged.
+    CompressedAggregate { round: u32, enc: Encoded, eta: f32 },
     /// Leader -> workers: global SVRG anchor gradient μ.
     AnchorMu { round: u32, mu: Vec<f32> },
     /// Leader -> workers: shut down after this round.
@@ -49,6 +56,10 @@ pub const MSG_HEADER_BYTES: usize = 11;
 /// header plus the 4-byte mean scalar and 1-byte reference index.
 pub const GRAD_OVERHEAD_BYTES: usize = MSG_HEADER_BYTES + 5;
 
+/// Bytes a [`Msg::CompressedAggregate`] frame adds around the codec wire
+/// frame: the fixed header plus the 4-byte step size.
+pub const CAGG_OVERHEAD_BYTES: usize = MSG_HEADER_BYTES + 4;
+
 const K_GRAD: u8 = 1;
 const K_ANCHOR_GRAD: u8 = 2;
 const K_AGGREGATE: u8 = 3;
@@ -56,6 +67,7 @@ const K_ANCHOR_MU: u8 = 4;
 const K_STOP: u8 = 5;
 const K_HELLO: u8 = 6;
 const K_BYE: u8 = 7;
+const K_CAGG: u8 = 8;
 
 fn write_f32s(out: &mut Vec<u8>, xs: &[f32]) {
     for &x in xs {
@@ -80,6 +92,7 @@ impl Msg {
             Msg::Grad { .. } => "grad",
             Msg::AnchorGrad { .. } => "anchor_grad",
             Msg::Aggregate { .. } => "aggregate",
+            Msg::CompressedAggregate { .. } => "compressed_aggregate",
             Msg::AnchorMu { .. } => "anchor_mu",
             Msg::Stop { .. } => "stop",
             Msg::Hello { .. } => "hello",
@@ -115,13 +128,39 @@ impl Msg {
         out
     }
 
+    /// Serialize a compressed-aggregate broadcast straight from a borrowed
+    /// [`Encoded`] — the leader hot path frames the downlink payload from
+    /// the compressor's scratch arena without cloning it into an owned
+    /// [`Msg::CompressedAggregate`] first. Byte-identical to
+    /// `Msg::CompressedAggregate { .. }.to_bytes()`.
+    pub fn compressed_aggregate_frame(round: u32, eta: f32, enc: &Encoded) -> Vec<u8> {
+        // Exact capacity: 11-byte frame header + 4-byte eta + wire frame.
+        let mut out = Vec::with_capacity(CAGG_OVERHEAD_BYTES + wire::frame_len(enc));
+        out.write_u8(K_CAGG).unwrap();
+        out.write_u16::<LE>(0).unwrap(); // broadcasts carry no worker id
+        out.write_u32::<LE>(round).unwrap();
+        // u32 body length, patched once the body is written.
+        let len_pos = out.len();
+        out.write_u32::<LE>(0).unwrap();
+        out.write_f32::<LE>(eta).unwrap();
+        wire::write_into(enc, &mut out);
+        let body_len = (out.len() - len_pos - 4) as u32;
+        out[len_pos..len_pos + 4].copy_from_slice(&body_len.to_le_bytes());
+        out
+    }
+
     pub fn to_bytes(&self) -> Vec<u8> {
         if let Msg::Grad { worker, round, enc, scalar, ref_idx } = self {
             return Msg::grad_frame(*worker, *round, enc, *scalar, *ref_idx);
         }
+        if let Msg::CompressedAggregate { round, enc, eta } = self {
+            return Msg::compressed_aggregate_frame(*round, *eta, enc);
+        }
         let mut out = Vec::new();
         let (kind, worker, round) = match self {
-            Msg::Grad { .. } => unreachable!("handled above"),
+            Msg::Grad { .. } | Msg::CompressedAggregate { .. } => {
+                unreachable!("handled above")
+            }
             Msg::AnchorGrad { worker, round, .. } => (K_ANCHOR_GRAD, *worker, *round),
             Msg::Aggregate { round, .. } => (K_AGGREGATE, 0, *round),
             Msg::AnchorMu { round, .. } => (K_ANCHOR_MU, 0, *round),
@@ -134,7 +173,9 @@ impl Msg {
         out.write_u32::<LE>(round).unwrap();
         let mut body = Vec::new();
         match self {
-            Msg::Grad { .. } => unreachable!("handled above"),
+            Msg::Grad { .. } | Msg::CompressedAggregate { .. } => {
+                unreachable!("handled above")
+            }
             Msg::AnchorGrad { grad, .. } => {
                 body.write_u32::<LE>(grad.len() as u32).unwrap();
                 write_f32s(&mut body, grad);
@@ -179,6 +220,11 @@ impl Msg {
                 let n = buf.read_u32::<LE>()? as usize;
                 Msg::Aggregate { round, v: read_f32s(&mut buf, n)?, eta }
             }
+            K_CAGG => {
+                let eta = buf.read_f32::<LE>()?;
+                let enc = wire::from_bytes(buf)?;
+                Msg::CompressedAggregate { round, enc, eta }
+            }
             K_ANCHOR_MU => {
                 let n = buf.read_u32::<LE>()? as usize;
                 Msg::AnchorMu { round, mu: read_f32s(&mut buf, n)? }
@@ -207,7 +253,8 @@ mod tests {
         let mut rng = Rng::new(1);
         let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
         let enc = TernaryCodec.encode(&v, &mut rng);
-        roundtrip(&Msg::Grad { worker: 3, round: 17, enc, scalar: 0.25, ref_idx: 2 });
+        roundtrip(&Msg::Grad { worker: 3, round: 17, enc: enc.clone(), scalar: 0.25, ref_idx: 2 });
+        roundtrip(&Msg::CompressedAggregate { round: 8, enc, eta: 0.05 });
         roundtrip(&Msg::AnchorGrad { worker: 1, round: 0, grad: v.clone() });
         roundtrip(&Msg::Aggregate { round: 5, v: v.clone(), eta: 0.1 });
         roundtrip(&Msg::AnchorMu { round: 9, mu: v });
@@ -258,6 +305,44 @@ mod tests {
         // And the parser accepts it as the equivalent owned message.
         let back = Msg::from_bytes(&expect).unwrap();
         assert_eq!(back, Msg::Grad { worker: 2, round: 9, enc, scalar: 1.25, ref_idx: 3 });
+    }
+
+    #[test]
+    fn compressed_aggregate_frame_layout_pinned_byte_by_byte() {
+        // Same hand-built-frame discipline as the Grad pin: kind u8 |
+        // worker u16 (0: broadcast) | round u32 | body_len u32 | eta f32 |
+        // wire frame.
+        let mut rng = Rng::new(8);
+        let v: Vec<f32> = (0..50).map(|_| rng.gauss_f32()).collect();
+        let enc = TernaryCodec.encode(&v, &mut rng);
+        let wire_bytes = wire::to_bytes(&enc);
+        let mut expect = vec![8u8]; // K_CAGG
+        expect.extend_from_slice(&0u16.to_le_bytes());
+        expect.extend_from_slice(&21u32.to_le_bytes());
+        expect.extend_from_slice(&((4 + wire_bytes.len()) as u32).to_le_bytes());
+        expect.extend_from_slice(&0.125f32.to_le_bytes());
+        expect.extend_from_slice(&wire_bytes);
+        assert_eq!(Msg::compressed_aggregate_frame(21, 0.125, &enc), expect);
+        assert_eq!(expect.len(), CAGG_OVERHEAD_BYTES + wire_bytes.len());
+        let back = Msg::from_bytes(&expect).unwrap();
+        assert_eq!(back, Msg::CompressedAggregate { round: 21, enc, eta: 0.125 });
+    }
+
+    #[test]
+    fn compressed_aggregate_rejects_forged_payload() {
+        // A truncated inner wire frame must error (strict consumption),
+        // never panic or over-allocate.
+        let mut rng = Rng::new(9);
+        let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
+        let enc = TernaryCodec.encode(&v, &mut rng);
+        let good = Msg::compressed_aggregate_frame(1, 0.1, &enc);
+        for cut in 1..6 {
+            let mut bad = good[..good.len() - cut].to_vec();
+            // Re-patch the outer body length so only the inner frame is short.
+            let body_len = (bad.len() - MSG_HEADER_BYTES) as u32;
+            bad[7..11].copy_from_slice(&body_len.to_le_bytes());
+            assert!(Msg::from_bytes(&bad).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

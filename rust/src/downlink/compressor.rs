@@ -1,0 +1,235 @@
+//! Leader-side downlink compression: TNG-normalize the aggregate against
+//! the shared tracking reference, compress with the configured codec, and
+//! advance the damped error-feedback state (see the module docs of
+//! [`super`] for the recursion, the damping rationale, and the determinism
+//! contract).
+
+use anyhow::{Context, Result};
+
+use crate::codec::{Codec, CodecScratch, Encoded};
+use crate::tng::Tng;
+use crate::util::Rng;
+
+use super::{downlink_rng, DownlinkDecoder, DownlinkSpec};
+
+/// The leader's downlink state machine. One instance per run; every call to
+/// [`DownlinkCompressor::compress`] consumes one round's aggregate and
+/// produces the wire message plus the reconstruction v̂ the leader must
+/// apply to its own replica (identical to what every worker reconstructs).
+///
+/// The leader/worker bit-identity is structural, not merely tested: the
+/// compressor owns a [`DownlinkDecoder`] — the very type every worker runs
+/// — and reconstructs v̂ by feeding it the encoded payload, so there is one
+/// implementation of the reconstruction arithmetic in the crate.
+///
+/// All buffers are allocated once at construction and reused: steady-state
+/// `compress` calls perform zero heap allocation (enforced by
+/// `rust/tests/alloc.rs`).
+pub struct DownlinkCompressor {
+    tng: Tng<Box<dyn Codec>>,
+    rng: Rng,
+    /// The worker-side state machine, run verbatim on the leader.
+    decoder: DownlinkDecoder,
+    scratch: CodecScratch,
+}
+
+impl DownlinkCompressor {
+    /// Build from a spec (parses the codec string) for dimension `dim`,
+    /// seeding the dedicated leader RNG stream from the run seed.
+    pub fn new(spec: &DownlinkSpec, dim: usize, seed: u64) -> Result<Self> {
+        let codec = crate::codec::spec::make_codec(&spec.codec)
+            .with_context(|| format!("invalid down= codec spec '{}'", spec.codec))?;
+        let mut scratch = CodecScratch::new();
+        scratch.warm(dim);
+        Ok(DownlinkCompressor {
+            tng: Tng::new(codec),
+            rng: downlink_rng(seed),
+            decoder: DownlinkDecoder::new(dim, spec.ef),
+            scratch,
+        })
+    }
+
+    /// Compress one round's aggregate `v`. Returns the encoded broadcast
+    /// body (frame it with `Msg::compressed_aggregate_frame`) and the
+    /// reconstruction v̂ — the vector the leader must step with so its
+    /// replica matches every worker's bit for bit.
+    ///
+    /// Per the EF recursion: encodes `Q[v − h]`, then runs the worker-side
+    /// [`DownlinkDecoder::apply`] on the payload (v̂ = h + decode(·),
+    /// h += α·decode(·); h frozen at zero with EF off, which degrades to
+    /// memoryless quantization of `v`).
+    pub fn compress(&mut self, v: &[f32]) -> (&Encoded, &[f32]) {
+        assert_eq!(v.len(), self.decoder.reference().len(), "aggregate dim mismatch");
+        // Q[v − h] into the reusable arena (subtractive TNG normalization
+        // against the tracking reference)...
+        self.tng.encode_into(v, self.decoder.reference(), &mut self.rng, &mut self.scratch);
+        // ...then exactly what every worker runs on the received payload:
+        // the leader reconstructs through the wire message, never through
+        // its exact aggregate. The codec preserves the input dimension, so
+        // the decoder's dim check cannot fire here.
+        let vhat = self.decoder.apply(&self.scratch.enc).expect("codec preserves dim");
+        (&self.scratch.enc, vhat)
+    }
+
+    /// The current shared EF reference h (diagnostic).
+    pub fn reference(&self) -> &[f32] {
+        self.decoder.reference()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::downlink::EF_DAMPING;
+    use crate::util::math;
+
+    fn randv(seed: u64, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.gauss_f32()).collect()
+    }
+
+    #[test]
+    fn identity_codec_round0_is_exact_and_reference_damps() {
+        let spec = DownlinkSpec::new("fp32");
+        let mut dl = DownlinkCompressor::new(&spec, 64, 1).unwrap();
+        // Round 0 (zero reference): v̂ = (v − 0) + 0 = v bit for bit.
+        let v = randv(10, 64);
+        let (_, vhat) = dl.compress(&v);
+        assert_eq!(vhat, &v[..], "round 0 must be exact");
+        // h after one round = α·v exactly (identity codec: q = v − h).
+        for (h, &x) in dl.reference().iter().zip(&v) {
+            assert!((h - EF_DAMPING * x).abs() < 1e-6);
+        }
+        // Repeating the same v: the gap ‖v − h‖ contracts by (1 − α) per
+        // round — after k more rounds h = (1 − (1−α)^{k+1})·v.
+        for _ in 0..4 {
+            let _ = dl.compress(&v);
+        }
+        let shrink = (1.0 - EF_DAMPING).powi(5); // ≈ 0.237
+        for (h, &x) in dl.reference().iter().zip(&v) {
+            assert!(
+                (h - (1.0 - shrink) * x).abs() < 1e-4 * (1.0 + x.abs()),
+                "h={h} x={x}"
+            );
+        }
+        // And the reconstruction stays near-exact throughout (only f32
+        // roundoff of (v − h) + h).
+        let (_, vhat) = dl.compress(&v);
+        for (a, b) in vhat.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn reconstruction_matches_worker_decoder_exactly() {
+        // The invariant everything rides on: the leader's v̂ equals what a
+        // worker reconstructs from the wire payload alone, bit for bit,
+        // round after round — EF state included.
+        for ef in [true, false] {
+            let spec = DownlinkSpec { codec: "ternary".into(), ef };
+            let mut dl = DownlinkCompressor::new(&spec, 48, 9).unwrap();
+            let mut dec = DownlinkDecoder::new(48, ef);
+            for round in 0..12u64 {
+                let v = randv(100 + round, 48);
+                let (enc, vhat) = dl.compress(&v);
+                let leader: Vec<u32> = vhat.iter().map(|x| x.to_bits()).collect();
+                let worker: Vec<u32> =
+                    dec.apply(enc).unwrap().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(
+                    leader, worker,
+                    "ef={ef} round {round}: leader and worker reconstructions diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn damped_tracking_converges_on_constant_aggregate_ternary() {
+        // The EF mechanism at work: for a constant aggregate, the tracking
+        // reference h absorbs v (E[q] = v − h contracts by (1−α) per round
+        // in expectation), so the encoded residual — and with it the
+        // entropy-coded frame — shrinks toward zero. Undamped tracking
+        // (α = 1) would recycle the full ternary quantization error and
+        // blow up instead; this is the regression test for that choice.
+        let spec = DownlinkSpec::new("ternary");
+        let mut dl = DownlinkCompressor::new(&spec, 48, 2).unwrap();
+        let v = randv(300, 48);
+        let init_gap = math::abs_max(&v) as f64;
+        for _ in 0..200 {
+            let _ = dl.compress(&v);
+        }
+        let gap: Vec<f32> =
+            v.iter().zip(dl.reference()).map(|(&x, &h)| x - h).collect();
+        assert!(
+            (math::abs_max(&gap) as f64) < 0.05 * init_gap,
+            "tracking gap {} must collapse from {}",
+            math::abs_max(&gap),
+            init_gap
+        );
+    }
+
+    #[test]
+    fn damped_tracking_absorbs_biased_topk_drops() {
+        // With a biased top-k codec the EF reference still converges to a
+        // constant aggregate: dropped coordinates grow in v − h until they
+        // win the selection (the classic error-feedback guarantee).
+        let spec = DownlinkSpec::new("topk:2");
+        let mut dl = DownlinkCompressor::new(&spec, 8, 4).unwrap();
+        let v = [1.0f32, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3];
+        let mut last = vec![0.0f32; 8];
+        for _ in 0..60 {
+            let (_, vhat) = dl.compress(&v);
+            last.copy_from_slice(vhat);
+        }
+        for (i, (&a, &b)) in last.iter().zip(&v).enumerate() {
+            assert!((a - b).abs() < 0.05, "coord {i}: v̂={a} must reach {b}");
+        }
+    }
+
+    #[test]
+    fn ef_off_is_memoryless() {
+        let spec = DownlinkSpec { codec: "ternary".into(), ef: false };
+        let mut dl = DownlinkCompressor::new(&spec, 16, 5).unwrap();
+        let v = randv(77, 16);
+        let (enc, vhat) = dl.compress(&v);
+        // v̂ is the plain decode (reference stays pinned at zero)...
+        assert_eq!(vhat, &enc.decode()[..]);
+        assert_eq!(dl.reference(), &[0.0; 16]);
+        // ...and the codes are a direct ternary coding of v itself.
+        let (_, vhat2) = dl.compress(&v);
+        assert_eq!(vhat2.len(), 16);
+        assert_eq!(dl.reference(), &[0.0; 16]);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let spec = DownlinkSpec::new("entropy:ternary");
+        let mut a = DownlinkCompressor::new(&spec, 40, 11).unwrap();
+        let mut b = DownlinkCompressor::new(&spec, 40, 11).unwrap();
+        for round in 0..6u64 {
+            let v = randv(200 + round, 40);
+            let (ea, va) = a.compress(&v);
+            let (ea, va) = (ea.clone(), va.to_vec());
+            let (eb, vb) = b.compress(&v);
+            assert_eq!(&ea, eb, "round {round}: frames must be identical");
+            assert_eq!(va, vb, "round {round}: reconstructions must be identical");
+        }
+        // A different seed draws a different stream.
+        let mut c = DownlinkCompressor::new(&spec, 40, 12).unwrap();
+        let v = randv(200, 40);
+        let (_, vc) = c.compress(&v);
+        let vc = vc.to_vec();
+        let mut a2 = DownlinkCompressor::new(&spec, 40, 11).unwrap();
+        let (_, va2) = a2.compress(&v);
+        assert_ne!(va2.to_vec(), vc, "different seeds must differ");
+    }
+
+    #[test]
+    fn bad_spec_is_an_error_not_a_panic() {
+        // (`unwrap_err` needs `DownlinkCompressor: Debug`; match instead.)
+        let Err(err) = DownlinkCompressor::new(&DownlinkSpec::new("nope"), 4, 0) else {
+            panic!("bad spec must not build");
+        };
+        assert!(err.to_string().contains("down="), "{err}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Worker-side downlink reconstruction: decode the broadcast residual, add
+//! the shared EF reference, advance it by the damped update — arithmetic
+//! that must match [`super::DownlinkCompressor`]'s own reconstruction
+//! **bit for bit** (the compressor reconstructs through the identical wire
+//! payload, so the two ends literally run the same operations in the same
+//! order).
+//!
+//! The decoder needs no codec and no RNG: every `Encoded` payload decodes
+//! through `Encoded::decode_into` regardless of which codec produced it,
+//! and the downlink normalization is fixed to the subtractive form.
+
+use anyhow::{bail, Result};
+
+use crate::codec::Encoded;
+
+use super::EF_DAMPING;
+
+/// One worker's replica of the downlink state: the shared EF reference h
+/// and the reconstruction buffers. Allocation-free after construction.
+pub struct DownlinkDecoder {
+    ef: bool,
+    /// Shared EF reference h (zeros forever when `ef` is off).
+    reference: Vec<f32>,
+    /// Decoded residual q for the current frame.
+    q: Vec<f32>,
+    vhat: Vec<f32>,
+}
+
+impl DownlinkDecoder {
+    /// `ef` must mirror the cluster-wide `down_ef` setting (it is part of
+    /// the shared config contract, like `rounds=` or `codec=`).
+    pub fn new(dim: usize, ef: bool) -> Self {
+        DownlinkDecoder {
+            ef,
+            reference: vec![0.0; dim],
+            q: vec![0.0; dim],
+            vhat: vec![0.0; dim],
+        }
+    }
+
+    /// Reconstruct v̂ = h + decode(enc) from one `CompressedAggregate`
+    /// payload and advance the reference (h += α·decode(enc) under EF).
+    /// The returned slice is the vector to apply to the local replica this
+    /// round.
+    ///
+    /// `enc` is remotely controlled: a frame whose dimension disagrees with
+    /// the configured model is a config mismatch surfaced as an error, never
+    /// an out-of-bounds panic (the wire parser has already bounded the
+    /// allocation).
+    pub fn apply(&mut self, enc: &Encoded) -> Result<&[f32]> {
+        if enc.dim != self.reference.len() {
+            bail!(
+                "compressed aggregate has dim {} but this worker's model has dim {} \
+                 — config mismatch",
+                enc.dim,
+                self.reference.len()
+            );
+        }
+        enc.decode_into(&mut self.q);
+        for (o, (&h, &qi)) in self.vhat.iter_mut().zip(self.reference.iter().zip(&self.q)) {
+            *o = h + qi;
+        }
+        if self.ef {
+            for (h, &qi) in self.reference.iter_mut().zip(&self.q) {
+                *h += EF_DAMPING * qi;
+            }
+        }
+        Ok(&self.vhat)
+    }
+
+    /// The current shared reference h (diagnostic).
+    pub fn reference(&self) -> &[f32] {
+        &self.reference
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Payload;
+
+    fn dense(values: Vec<f32>) -> Encoded {
+        let dim = values.len();
+        Encoded { dim, payload: Payload::Dense { values } }
+    }
+
+    #[test]
+    fn tracks_damped_reference_across_rounds() {
+        let mut dec = DownlinkDecoder::new(3, true);
+        let enc = dense(vec![1.0, 2.0, -1.0]);
+        assert_eq!(dec.apply(&enc).unwrap(), &[1.0, 2.0, -1.0]);
+        assert_eq!(dec.reference(), &[0.25, 0.5, -0.25], "h = α·q after round 0");
+        // Second identical residual lands on the damped reference.
+        assert_eq!(dec.apply(&enc).unwrap(), &[1.25, 2.5, -1.25]);
+        assert_eq!(dec.reference(), &[0.5, 1.0, -0.5]);
+    }
+
+    #[test]
+    fn ef_off_never_moves_the_reference() {
+        let mut dec = DownlinkDecoder::new(2, false);
+        let enc = dense(vec![3.0, -4.0]);
+        assert_eq!(dec.apply(&enc).unwrap(), &[3.0, -4.0]);
+        assert_eq!(dec.apply(&enc).unwrap(), &[3.0, -4.0]);
+        assert_eq!(dec.reference(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn dim_mismatch_is_an_error() {
+        let mut dec = DownlinkDecoder::new(4, true);
+        let enc = dense(vec![0.0; 3]);
+        let err = dec.apply(&enc).unwrap_err();
+        assert!(err.to_string().contains("config mismatch"), "{err}");
+        // State must be untouched by the rejected frame.
+        assert_eq!(dec.reference(), &[0.0; 4]);
+    }
+}

@@ -1,0 +1,143 @@
+//! Bidirectional compression: the **downlink** (leader → worker) subsystem.
+//!
+//! PR 3 made the uplink's cost *measured* bytes, but the broadcast still
+//! shipped the aggregated step as raw f32s (`Msg::Aggregate`) — half the
+//! wire was uncompressed. This module closes the loop on the paper's
+//! shared-reference design by compressing the broadcast the same way the
+//! uplink compresses gradients:
+//!
+//! * the leader normalizes the aggregated step `v_t` against a **shared
+//!   downlink reference** `h_t` — server-side error-feedback state in the
+//!   EF21-P sense (Gruntkowska et al. 2022), replicated by every worker at
+//!   zero extra communication exactly like the §3.1 uplink references;
+//! * the residual is compressed with **any codec spec** the uplink accepts
+//!   (`down=ternary`, `down=entropy:qsgd:4`, `down=shard:4:ternary`, …);
+//! * workers reconstruct the iterate **purely from compressed broadcasts**
+//!   (`Msg::CompressedAggregate`), and the leader applies the identical
+//!   reconstruction v̂_t to its own replica — so driver, channel, and TCP
+//!   runtimes stay lock-step and `param_digest`-identical (pinned by
+//!   `golden_trace` / `transport_tcp` / `rust/tests/downlink.rs`).
+//!
+//! # The EF recursion (damped tracking)
+//!
+//! With reference `h_t` (zeros at t = 0), damping `α =` [`EF_DAMPING`] and
+//! any codec `Q`:
+//!
+//! ```text
+//! c_t     = Q[v_t − h_t]                    (what crosses the wire)
+//! q_t     = decode(c_t)
+//! v̂_t     = h_t + q_t                       (every replica, incl. leader)
+//! h_{t+1} = h_t + α·q_t                     (the error-feedback state)
+//! ```
+//!
+//! For unbiased `Q`, `E[q_t] = v_t − h_t`, so `E[v_t − h_{t+1}] =
+//! (1−α)·E[v_t − h_t] (+ trajectory drift)`: the reference absorbs both
+//! the trajectory *and* past compression errors, which is what makes
+//! aggressive downlink codecs safe (Deep Gradient Compression's residual
+//! accumulation, in tracking form). With `ef = false` the reference stays
+//! pinned at zero and the broadcast degrades to memoryless quantization of
+//! the raw aggregate.
+//!
+//! **Why damped (α < 1) instead of EF21-P's α = 1:** the α = 1 recursion
+//! `h_{t+1} = v̂_t` is only stable for *contractive* compressors (top-k) —
+//! its error-recycle factor is the compressor's relative error, which for
+//! an expanding unbiased quantizer like ternary exceeds 1 and diverges
+//! geometrically (numerically confirmed; a ternary code's worst-coordinate
+//! error is on the order of its scale). Damping by `α = 1/4` is the
+//! DIANA-style fix (Mishchenko et al. 2019): the recycle factor becomes
+//! `α·(relative error)`, stable for every codec this crate ships, while
+//! the mean gap still contracts geometrically. The regression test
+//! `damped_tracking_converges_on_constant_aggregate_ternary` pins this.
+//!
+//! # Determinism contract
+//!
+//! Stochastic downlink codecs draw from a dedicated leader RNG stream,
+//! [`downlink_rng`] (`Rng::new(seed).split(0)` — stream 0 is reserved for
+//! the leader; worker `m` draws from stream `1 + m`). The deterministic
+//! driver and every transport leader construct the identical stream, encode
+//! the identical targets, and therefore emit identical frames; workers
+//! never need the RNG because they only decode. The downlink normalization
+//! is always the subtractive form (Eq. 2), and leader and workers advance
+//! `h` with the same f32 operations in the same order — so all replicas
+//! agree bit for bit.
+
+pub mod compressor;
+pub mod decoder;
+
+pub use compressor::DownlinkCompressor;
+pub use decoder::DownlinkDecoder;
+
+use crate::util::Rng;
+
+/// The EF tracking damping α (see the module docs): 1/4 keeps the
+/// error-recycle factor of every shipped codec below 1 (ternary's relative
+/// error ≈ its scale) while the reference gap still contracts by 3/4 per
+/// round in expectation. Exactly representable in f32, so the damped
+/// update is the same bit pattern on every replica.
+pub const EF_DAMPING: f32 = 0.25;
+
+/// Downlink configuration carried inside `DriverConfig`: which codec
+/// compresses the broadcast, and whether the error-feedback reference
+/// tracks it.
+///
+/// `codec` is any spec string [`crate::codec::spec::make_codec`] accepts
+/// (the CLI surfaces it as `down=<spec>`, with `down_ef=true|false`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DownlinkSpec {
+    /// Codec spec for the broadcast residual (e.g. `"entropy:ternary"`).
+    pub codec: String,
+    /// Keep the EF tracking reference (default on: biased codecs like
+    /// `topk` *require* it, and it shrinks entropy-coded residuals as the
+    /// trajectory settles; off = memoryless quantization of the raw
+    /// aggregate).
+    pub ef: bool,
+}
+
+impl DownlinkSpec {
+    /// Spec with error feedback on — the default the CLI builds.
+    pub fn new(codec: impl Into<String>) -> Self {
+        DownlinkSpec { codec: codec.into(), ef: true }
+    }
+}
+
+/// The leader's dedicated downlink RNG stream (see the module docs'
+/// determinism contract): stream 0 of the run seed, which no worker uses.
+pub fn downlink_rng(seed: u64) -> Rng {
+    Rng::new(seed).split(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downlink_stream_is_disjoint_from_worker_streams() {
+        let seed = 7;
+        // Worker streams as the driver and `parallel::worker_loop` split
+        // them: stream 1 + id. None may collide with the leader's stream 0.
+        for id in 0..8u64 {
+            let mut dl = downlink_rng(seed);
+            let mut wk = Rng::new(seed).split(1 + id);
+            assert_ne!(
+                (dl.next_u64(), dl.next_u64()),
+                (wk.next_u64(), wk.next_u64()),
+                "worker {id} stream collided with the downlink stream"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_default_has_ef_on() {
+        let s = DownlinkSpec::new("ternary");
+        assert!(s.ef);
+        assert_eq!(s.codec, "ternary");
+    }
+
+    #[test]
+    fn damping_is_exact_in_f32() {
+        // A power of two: h += α·q multiplies mantissas exactly, so the
+        // replicas' f32 agreement does not hinge on rounding luck.
+        assert_eq!(EF_DAMPING, 0.25);
+        assert_eq!(EF_DAMPING.to_bits() & 0x007F_FFFF, 0, "mantissa must be zero");
+    }
+}

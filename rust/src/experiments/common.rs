@@ -1,12 +1,9 @@
 //! Shared experiment plumbing: codec factory, the paper's method matrix
 //! (QG/TG/SG × raw/TN-), and CSV emission.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::codec::{
-    entropy::EntropyCodec, identity::IdentityCodec, qsgd::QsgdCodec, signsgd::SignCodec,
-    sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec, Codec,
-};
+use crate::codec::Codec;
 use crate::config::Settings;
 use crate::coordinator::metrics::Trace;
 use crate::coordinator::{driver, DriverConfig};
@@ -17,57 +14,10 @@ use crate::optim::{EstimatorKind, StepSchedule};
 use crate::tng::ReferenceKind;
 use crate::util::csv::CsvWriter;
 
-/// Build a codec from a spec string:
-/// `tg` | `ternary`, `qg` | `qsgd:<levels>`, `sg` | `sparse:<ratio>`,
-/// `sign`, `topk:<k>`, `fp32`, the sharded wrapper
-/// `shard:<shards>:<inner spec>` (e.g. `shard:4:ternary`, `shard:8:qsgd:4`),
-/// and the entropy-coding wrapper `entropy:<inner spec>` (e.g.
-/// `entropy:ternary`, `entropy:qsgd:4`, `entropy:shard:4:ternary`), whose
-/// wire frames are measured adaptive range-coder streams.
-pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
-    let (name, arg) = match spec.split_once(':') {
-        Some((n, a)) => (n, Some(a)),
-        None => (spec, None),
-    };
-    Ok(match name {
-        "shard" => {
-            let Some((n, inner)) = arg.and_then(|a| a.split_once(':')) else {
-                bail!("shard spec is shard:<shards>:<inner codec>, got '{spec}'");
-            };
-            let shards: usize = n.parse()?;
-            if shards == 0 {
-                bail!("shard count must be >= 1 in '{spec}'");
-            }
-            Box::new(crate::codec::sharded::ShardedCodec::new(make_codec(inner)?, shards))
-        }
-        "entropy" => {
-            let Some(inner) = arg else {
-                bail!("entropy spec is entropy:<inner codec>, got '{spec}'");
-            };
-            Box::new(EntropyCodec::new(make_codec(inner)?))
-        }
-        "tg" | "ternary" => Box::new(TernaryCodec),
-        "cternary" => {
-            let chunk: usize = arg.unwrap_or("4096").parse()?;
-            Box::new(crate::codec::chunked::ChunkedTernaryCodec::new(chunk))
-        }
-        "qg" | "qsgd" => {
-            let levels: u32 = arg.unwrap_or("4").parse()?;
-            Box::new(QsgdCodec::new(levels))
-        }
-        "sg" | "sparse" => {
-            let ratio: f64 = arg.unwrap_or("0.25").parse()?;
-            Box::new(SparseCodec::new(ratio))
-        }
-        "sign" => Box::new(SignCodec),
-        "topk" => {
-            let k: usize = arg.unwrap_or("32").parse()?;
-            Box::new(TopKCodec::new(k))
-        }
-        "fp32" | "identity" => Box::new(IdentityCodec),
-        other => bail!("unknown codec spec '{other}'"),
-    })
-}
+/// The codec spec factory — canonical home is [`crate::codec::spec`]
+/// (re-exported here because every experiment call site and test imported
+/// it from this module first).
+pub use crate::codec::spec::make_codec;
 
 /// Build the shared (objective, codec, config, label) for one cluster run —
 /// the single source of truth behind the `tng leader` / `tng worker` TCP
@@ -80,7 +30,12 @@ pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
 /// is what makes a TCP run byte-identical to the deterministic driver.
 /// Keys (all `key=value`): `n dim csk cth seed lambda codec tng ref_window
 /// ref_score workers rounds batch eta estimator anchor_every memory
-/// record_every eval opt opt_iters`.
+/// record_every eval opt opt_iters down down_ef`.
+///
+/// `down=<codec spec>` turns on downlink compression (the broadcast crosses
+/// the wire as a `CompressedAggregate` frame of that codec — any
+/// [`make_codec`] spec, e.g. `down=entropy:ternary`); `down_ef=false`
+/// disables the leader's error-feedback residual (on by default).
 pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConfig, String)> {
     let n = s.usize_or("n", 1024)?;
     let dim = s.usize_or("dim", 128)?;
@@ -107,16 +62,31 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
         "bytes" => crate::tng::RefScore::MeasuredBytes,
         other => bail!("ref_score must be 'cnz' or 'bytes', got '{other}'"),
     };
+    let downlink = match s.raw("down") {
+        None | Some("") | Some("off") => None,
+        Some(spec) => {
+            // Parse-check now so a typo'd spec fails at the CLI, not rounds
+            // later inside a worker process.
+            make_codec(spec).with_context(|| format!("down={spec}"))?;
+            Some(crate::downlink::DownlinkSpec {
+                codec: spec.to_string(),
+                ef: s.bool_or("down_ef", true)?,
+            })
+        }
+    };
     let cfg = DriverConfig {
         seed: s.u64_or("seed", 0)?,
         workers: s.usize_or("workers", 4)?,
         rounds: s.usize_or("rounds", 200)?,
         batch: s.usize_or("batch", 8)?,
         schedule: StepSchedule::Const(s.f32_or("eta", 0.3)?),
-        estimator: if s.str_or("estimator", "sgd") == "svrg" {
-            EstimatorKind::Svrg { anchor_every: anchor }
-        } else {
-            EstimatorKind::Sgd
+        estimator: match s.str_or("estimator", "sgd").as_str() {
+            "sgd" => EstimatorKind::Sgd,
+            "svrg" => EstimatorKind::Svrg { anchor_every: anchor },
+            // The deterministic-gradient regime (EXPERIMENTS.md §Regimes):
+            // each worker's message is its exact shard gradient.
+            "full" => EstimatorKind::FullBatch,
+            other => bail!("estimator must be 'sgd', 'svrg', or 'full', got '{other}'"),
         },
         lbfgs_memory: match s.usize_or("memory", 0)? {
             0 => None,
@@ -137,12 +107,21 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
         // Warm starts are driver-only (parallel::validate rejects them);
         // the cluster pool leans on the per-round C_nz search instead.
         warm_start_reference: false,
+        downlink,
         ..Default::default()
     };
     let label = format!(
-        "{}{}@M{}",
+        "{}{}{}@M{}",
         if use_tng { "TN-" } else { "" },
         codec.name(),
+        match &cfg.downlink {
+            Some(dl) => format!(
+                "+down:{}{}",
+                dl.codec,
+                if dl.ef { "" } else { "(no-ef)" }
+            ),
+            None => String::new(),
+        },
         cfg.workers
     );
     Ok((obj, codec, cfg, label))
@@ -229,6 +208,7 @@ pub fn clone_cfg(c: &DriverConfig) -> DriverConfig {
         eval_loss: c.eval_loss,
         w0: c.w0.clone(),
         warm_start_reference: c.warm_start_reference,
+        downlink: c.downlink.clone(),
     }
 }
 
@@ -286,6 +266,42 @@ mod tests {
         assert!(make_codec("shard:0:ternary").is_err());
         assert!(make_codec("shard:ternary").is_err());
         assert!(make_codec("entropy").is_err());
+    }
+
+    #[test]
+    fn cluster_setup_parses_estimator() {
+        let s = Settings::from_args(&["n=32", "dim=8", "estimator=full"]).unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        assert_eq!(cfg.estimator, EstimatorKind::FullBatch);
+        let s = Settings::from_args(&["n=32", "dim=8", "estimator=svrg"]).unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        assert!(matches!(cfg.estimator, EstimatorKind::Svrg { .. }));
+        let s = Settings::from_args(&["n=32", "dim=8", "estimator=wat"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
+    }
+
+    #[test]
+    fn cluster_setup_parses_downlink_keys() {
+        let s = Settings::from_args(&["n=32", "dim=8", "down=entropy:ternary"]).unwrap();
+        let (_, _, cfg, label) = cluster_setup(&s).unwrap();
+        let dl = cfg.downlink.expect("down= must configure the downlink");
+        assert_eq!(dl.codec, "entropy:ternary");
+        assert!(dl.ef, "EF defaults on");
+        assert!(label.contains("+down:entropy:ternary"), "{label}");
+        // EF off is visible in the label (distinct runs must not collide).
+        let s = Settings::from_args(&["n=32", "dim=8", "down=ternary", "down_ef=false"])
+            .unwrap();
+        let (_, _, cfg, label) = cluster_setup(&s).unwrap();
+        assert!(!cfg.downlink.unwrap().ef);
+        assert!(label.contains("(no-ef)"), "{label}");
+        // off / absent → no downlink compression.
+        let s = Settings::from_args(&["n=32", "dim=8", "down=off"]).unwrap();
+        assert!(cluster_setup(&s).unwrap().2.downlink.is_none());
+        let s = Settings::from_args(&["n=32", "dim=8"]).unwrap();
+        assert!(cluster_setup(&s).unwrap().2.downlink.is_none());
+        // A typo'd spec fails at setup, not mid-run.
+        let s = Settings::from_args(&["n=32", "dim=8", "down=wat"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
     }
 
     #[test]

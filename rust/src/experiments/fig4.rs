@@ -5,10 +5,17 @@
 //! Methods: TG vs TN-TG under the stochastic quasi-Newton optimizer. The
 //! paper's observations to reproduce: vertically, more servers yield a
 //! better reference; horizontally, memory helps then saturates.
+//!
+//! The sweep additionally reports a modeled per-round synchronization time
+//! under an **asymmetric** link (`up_gbps=` / `down_gbps=`, defaults
+//! 10 / 1 — see [`LinkModel::asymmetric`]): fan-in of the measured uplink
+//! frames plus broadcast of the measured downlink frame, which is where
+//! the server-count sensitivity meets real bandwidth.
 
 use anyhow::Result;
 
 use crate::config::Settings;
+use crate::coordinator::network::LinkModel;
 use crate::coordinator::DriverConfig;
 use crate::data::synthetic::{generate, SkewConfig};
 use crate::experiments::common::{open_csv, paper_methods, run_method, summarize};
@@ -26,6 +33,10 @@ pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
     let c_sk = settings.f32_or("csk", 0.25)?;
     let servers: Vec<usize> = if quick { vec![4, 8] } else { vec![4, 8, 12] };
     let memories: Vec<usize> = if quick { vec![2, 4] } else { vec![2, 4, 6] };
+    // Asymmetric link for the modeled sync-time column (Gbit/s each way).
+    let up_gbps = settings.f64_or("up_gbps", 10.0)?;
+    let down_gbps = settings.f64_or("down_gbps", 1.0)?;
+    let link = LinkModel::asymmetric(100e-6, up_gbps * 1e9 / 8.0, down_gbps * 1e9 / 8.0);
 
     let ds = generate(&SkewConfig { n, dim, c_sk, c_th: 0.6, seed });
     let obj = LogReg::new(ds, lambda);
@@ -51,6 +62,18 @@ pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
                 let label = format!("i{i}j{j}-M{m}-K{k}-{}", method.label);
                 let tr = run_method(&obj, &method, &base, &label)?;
                 println!("{}", summarize(&tr));
+                // Modeled sync time per round from the measured wire bytes:
+                // mean uplink frame per worker fans in, mean per-worker
+                // downlink frame broadcasts out.
+                let up_frame =
+                    (tr.total_wire_up_bytes as f64 / (rounds * m) as f64) as usize;
+                let down_frame =
+                    (tr.total_wire_down_bytes as f64 / (rounds * m) as f64) as usize;
+                let sync_us = link.round_time(&vec![up_frame; m], down_frame) * 1e6;
+                println!(
+                    "    modeled sync {sync_us:.1} us/round \
+                     (up {up_gbps} Gbps x {up_frame} B, down {down_gbps} Gbps x {down_frame} B/worker)"
+                );
                 tr.write_csv(&mut csv)?;
                 summary.push((label, tr.final_subopt()));
             }

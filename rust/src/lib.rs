@@ -45,6 +45,7 @@ pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod downlink;
 pub mod experiments;
 pub mod objectives;
 pub mod optim;

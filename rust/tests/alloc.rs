@@ -90,4 +90,26 @@ fn steady_state_rounds_allocate_nothing() {
         0,
         "TNG normalize+encode+decode must not allocate in the steady state"
     );
+
+    // The downlink compressor: normalize-against-reference + encode +
+    // decode-back + EF advance, all through its internal arena. (Framing
+    // the message costs the one unavoidable per-broadcast allocation, as on
+    // the uplink; `compress` itself must be allocation-free.)
+    use tng::downlink::{DownlinkCompressor, DownlinkSpec};
+    for spec in ["ternary", "entropy:ternary"] {
+        let mut dl =
+            DownlinkCompressor::new(&DownlinkSpec::new(spec), d, 7).expect("spec");
+        for _ in 0..4 {
+            let _ = dl.compress(&v);
+        }
+        let before = alloc_count();
+        for _ in 0..25 {
+            std::hint::black_box(dl.compress(&v));
+        }
+        assert_eq!(
+            alloc_count() - before,
+            0,
+            "downlink {spec}: compress must not allocate in the steady state"
+        );
+    }
 }

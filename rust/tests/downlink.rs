@@ -1,0 +1,157 @@
+//! Downlink-subsystem integration tests: the EF-tolerance property on the
+//! quadratic (the compressed-downlink iterate must track the uncompressed
+//! run), and the PR's acceptance pin on the fig2-style logreg benchmark —
+//! with `down=entropy:ternary` the measured downlink bytes collapse below
+//! half the raw f32 `Aggregate` baseline while the final loss stays within
+//! 5% of the uncompressed-downlink run, identically across runtimes.
+
+use tng::codec::identity::IdentityCodec;
+use tng::codec::ternary::TernaryCodec;
+use tng::coordinator::{driver, parallel, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::downlink::DownlinkSpec;
+use tng::objectives::logreg::LogReg;
+use tng::objectives::quadratic::Quadratic;
+use tng::optim::{EstimatorKind, StepSchedule};
+use tng::util::Rng;
+
+/// Property: across seeds, EF damped tracking keeps the ternary-compressed
+/// downlink within tolerance of the uncompressed run on a noise-free
+/// quadratic — the full-precision run is asserted below 1e-7 suboptimality,
+/// and the compressed run must land in the same basin (within 1e-6 of
+/// optimal), not on a noise floor orders of magnitude higher.
+#[test]
+fn ef_keeps_compressed_downlink_within_tolerance_on_quadratic() {
+    for seed in [3u64, 4, 5] {
+        let mut rng = Rng::new(seed);
+        // σ = 0 + FullBatch: the only stochasticity left is the downlink
+        // quantizer, so the comparison isolates the subsystem under test.
+        let q = Quadratic::conditioned(24, 20.0, 0.0, &mut rng);
+        let eta = 0.5 / q.smoothness();
+        let mk = |downlink| DriverConfig {
+            seed,
+            workers: 2,
+            rounds: 400,
+            estimator: EstimatorKind::FullBatch,
+            schedule: StepSchedule::Const(eta),
+            f_star: 0.0,
+            record_every: 400,
+            downlink,
+            ..Default::default()
+        };
+        let raw = driver::run(&q, &IdentityCodec, "raw", &mk(None));
+        let dl = driver::run(
+            &q,
+            &IdentityCodec,
+            "down-ternary",
+            &mk(Some(DownlinkSpec::new("ternary"))),
+        );
+        assert!(
+            raw.final_subopt() < 1e-7,
+            "seed {seed}: baseline GD must converge, got {}",
+            raw.final_subopt()
+        );
+        assert!(
+            dl.final_subopt() < 1e-6,
+            "seed {seed}: EF-tracked ternary downlink must stay within \
+             tolerance of the uncompressed run, got {} (raw {})",
+            dl.final_subopt(),
+            raw.final_subopt()
+        );
+        // And it genuinely compressed: the broadcast total is far below the
+        // raw-f32 mirror of the same config.
+        assert!(dl.total_wire_down_bytes * 2 < raw.total_wire_down_bytes);
+    }
+}
+
+/// Determinism: the downlink RNG stream and EF state are part of the seeded
+/// state machine, so identical configs reproduce identical digests — and
+/// the channel runtime agrees with the driver.
+#[test]
+fn compressed_downlink_is_deterministic_and_runtime_identical() {
+    let ds = generate(&SkewConfig { n: 128, dim: 32, seed: 1, ..Default::default() });
+    let obj = LogReg::new(ds, 0.05);
+    let cfg = DriverConfig {
+        seed: 9,
+        workers: 3,
+        rounds: 40,
+        schedule: StepSchedule::Const(0.3),
+        record_every: 10,
+        downlink: Some(DownlinkSpec::new("entropy:ternary")),
+        ..Default::default()
+    };
+    let a = driver::run(&obj, &TernaryCodec, "a", &cfg);
+    let b = driver::run(&obj, &TernaryCodec, "b", &cfg);
+    assert_eq!(a.param_digest(), b.param_digest());
+    assert_eq!(a.total_wire_down_bytes, b.total_wire_down_bytes);
+    let chan = parallel::run(&obj, &TernaryCodec, "chan", &cfg).unwrap();
+    assert_eq!(a.param_digest(), chan.param_digest(), "driver vs channel digest");
+    assert_eq!(a.total_wire_up_bytes, chan.total_wire_up_bytes);
+    assert_eq!(a.total_wire_down_bytes, chan.total_wire_down_bytes);
+    // down_bpe is the downlink share of the ledger, on every record.
+    for r in &chan.records {
+        assert!(r.down_bpe > 0.0 && r.down_bpe < r.wire_bits_per_elt);
+    }
+}
+
+/// The acceptance pin (fig2 logreg benchmark, deterministic-gradient
+/// regime): `down=entropy:ternary` must (a) cut measured downlink bytes per
+/// round below 50% of the raw f32 Aggregate frame and (b) keep the final
+/// loss within 5% of the uncompressed-downlink run.
+#[test]
+fn acceptance_entropy_ternary_downlink_on_fig2_logreg() {
+    let ds = generate(&SkewConfig { n: 512, dim: 128, seed: 0, ..Default::default() });
+    let obj = LogReg::new(ds, 0.01);
+    let mk = |downlink| DriverConfig {
+        seed: 0,
+        workers: 4,
+        rounds: 300,
+        estimator: EstimatorKind::FullBatch,
+        schedule: StepSchedule::Const(0.3),
+        record_every: 300,
+        downlink,
+        ..Default::default()
+    };
+    let raw = driver::run(&obj, &TernaryCodec, "raw-down", &mk(None));
+    let dl = driver::run(
+        &obj,
+        &TernaryCodec,
+        "entropy-down",
+        &mk(Some(DownlinkSpec::new("entropy:ternary"))),
+    );
+
+    // (a) measured downlink bytes per round < 50% of the raw baseline.
+    assert!(
+        dl.total_wire_down_bytes * 2 < raw.total_wire_down_bytes,
+        "downlink bytes: compressed {} vs raw {}",
+        dl.total_wire_down_bytes,
+        raw.total_wire_down_bytes
+    );
+    // The uplink is untouched (fixed-size ternary frames).
+    assert_eq!(dl.total_wire_up_bytes, raw.total_wire_up_bytes);
+
+    // (b) final loss within 5% of the uncompressed-downlink run.
+    let (a, b) = (dl.final_loss(), raw.final_loss());
+    assert!(a.is_finite() && b.is_finite());
+    assert!(
+        (a - b).abs() <= 0.05 * b.abs(),
+        "final loss drifted: compressed {a} vs raw {b}"
+    );
+}
+
+/// `validate` front-stops a bad `down=` spec on every transport entry
+/// point, and mixed configs surface as config-mismatch errors instead of
+/// deadlocks or panics.
+#[test]
+fn bad_downlink_spec_rejected_by_validate() {
+    let ds = generate(&SkewConfig { n: 64, dim: 8, seed: 2, ..Default::default() });
+    let obj = LogReg::new(ds, 0.05);
+    let cfg = DriverConfig {
+        workers: 2,
+        rounds: 2,
+        downlink: Some(DownlinkSpec::new("definitely-not-a-codec")),
+        ..Default::default()
+    };
+    let err = parallel::run(&obj, &TernaryCodec, "x", &cfg).unwrap_err();
+    assert!(err.to_string().contains("down="), "{err}");
+}

@@ -129,6 +129,48 @@ fn tcp_golden_trace_across_codecs() {
     }
 }
 
+/// Bidirectional compression over real sockets: with `down:ternary` and
+/// `down:entropy:qsgd:4` the broadcast is a CompressedAggregate frame, and
+/// driver, channel, and TCP must agree on the iterate (param_digest) and on
+/// both measured wire totals byte for byte. Kept to two specs × 12 rounds
+/// so the serial TCP CI job's budget is unchanged.
+#[test]
+fn tcp_downlink_compressed_matches_driver_and_channel() {
+    use tng::downlink::DownlinkSpec;
+    let obj = logreg();
+    for down_spec in ["ternary", "entropy:qsgd:4"] {
+        let codec = common::make_codec("ternary").unwrap();
+        let mut cfg = base_cfg();
+        cfg.rounds = 12;
+        cfg.workers = 3;
+        cfg.downlink = Some(DownlinkSpec::new(down_spec));
+        let seq = driver::run(&obj, codec.as_ref(), "seq", &cfg);
+        let chan = parallel::run(&obj, codec.as_ref(), "chan", &cfg).unwrap();
+        let tcp = run_tcp(&obj, codec.as_ref(), &cfg);
+        assert_traces_identical(&seq, &tcp, &format!("down/{down_spec}: driver-vs-tcp"));
+        assert_traces_identical(&chan, &tcp, &format!("down/{down_spec}: chan-vs-tcp"));
+        assert_eq!(
+            (seq.total_wire_up_bytes, seq.total_wire_down_bytes),
+            (tcp.total_wire_up_bytes, tcp.total_wire_down_bytes),
+            "down/{down_spec}: driver-mirrored wire bytes must equal TCP's"
+        );
+        assert_eq!(
+            (chan.total_wire_up_bytes, chan.total_wire_down_bytes),
+            (tcp.total_wire_up_bytes, tcp.total_wire_down_bytes),
+            "down/{down_spec}: channel and TCP measured bytes must be identical"
+        );
+        // The whole point: the compressed broadcast is far below the raw
+        // f32 Aggregate frame (19 + 4·dim bytes per worker per round).
+        let raw_down = (cfg.rounds * cfg.workers) as u64 * (19 + 4 * 24)
+            + cfg.workers as u64 * 11;
+        assert!(
+            tcp.total_wire_down_bytes < raw_down,
+            "down/{down_spec}: {} !< {raw_down}",
+            tcp.total_wire_down_bytes
+        );
+    }
+}
+
 /// SVRG's anchor fan-in/out crosses the sockets too; it must match the
 /// driver's trajectory like everything else.
 #[test]
