@@ -132,4 +132,48 @@ fn main() {
     json.push_str("}\n");
     std::fs::write("BENCH_PR4.json", &json).expect("write BENCH_PR4.json");
     println!("# wrote BENCH_PR4.json");
+
+    // --- Hierarchical aggregation: root-link bytes (the PR-5 tree) -------
+    // Same fig2 logreg workload, ternary uplink, M=8: the root's per-round
+    // uplink fan-in is M Grad frames on the flat star vs `groups` partial
+    // frames on the two-level tree — the ~g/M shrink the topology buys.
+    // Emits BENCH_PR5.json.
+    println!("\n# root-link bytes per element per round, flat vs tree (D=512, M=8)");
+    let mut json = String::from("{\n");
+    let tree_configs: [(&str, usize); 3] = [("flat", 1), ("groups-2", 2), ("groups-4", 4)];
+    let mut flat_root_bpe = 0.0f64;
+    let n_configs = tree_configs.len();
+    for (i, (label, groups)) in tree_configs.into_iter().enumerate() {
+        let cfg = DriverConfig {
+            workers: 8,
+            rounds: 50,
+            schedule: StepSchedule::Const(0.25),
+            eval_loss: false,
+            record_every: 50,
+            topology: (groups >= 2)
+                .then(|| tng::link::TreeTopology::new(groups, "ternary")),
+            ..Default::default()
+        };
+        let tr = driver::run(&obj, &TernaryCodec, label, &cfg);
+        // Root fan-in per element per round (bytes entering the root NIC).
+        let root_bpe =
+            tr.root_fan_in_bytes() as f64 / (cfg.rounds * tr.dim) as f64;
+        if groups == 1 {
+            flat_root_bpe = root_bpe;
+        }
+        let ratio = if flat_root_bpe > 0.0 { root_bpe / flat_root_bpe } else { 1.0 };
+        println!(
+            "  {label:<10} root {root_bpe:8.4} B/elt/round   vs flat {ratio:5.2}x   \
+             (partial bytes {})",
+            tr.total_wire_partial_bytes
+        );
+        json.push_str(&format!(
+            "  \"{label}\": {{\"root_bytes_per_elt_round\": {root_bpe:.4}, \
+             \"vs_flat\": {ratio:.4}}}{}\n",
+            if i + 1 < n_configs { "," } else { "" }
+        ));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_PR5.json", &json).expect("write BENCH_PR5.json");
+    println!("# wrote BENCH_PR5.json");
 }

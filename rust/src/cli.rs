@@ -59,6 +59,14 @@ RUN/LEADER/WORKER OPTIONS (the figure harnesses use their own method grid):
                         must agree on it.
     down_ef=true        server-side error feedback for the downlink (damped
                         EF21-P/DIANA tracking); down_ef=false disables
+    groups=1            hierarchical two-level aggregation: partition the
+                        workers into N groups whose partial aggregates are
+                        re-encoded up per-group compressed links (groups=1 =
+                        flat star). Every process of a cluster must agree.
+    up=SPEC             codec for the group->root tier links (defaults to
+                        the codec= spec); any SPEC above
+    up_ef=true          per-group error feedback on the tier links;
+                        up_ef=false disables
     estimator=sgd       gradient oracle: sgd | svrg | full (deterministic
                         shard gradients — the §Regimes TNG-winning regime)
     ref_score=cnz       reference search scoring: cnz (fast ratio) | bytes

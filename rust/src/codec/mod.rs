@@ -447,6 +447,23 @@ impl Codec for Box<dyn Codec> {
     }
 }
 
+/// Borrowed codecs forward the trait too, so runtime components (the
+/// coordinator loops, `link::LinkSender`) can build a `Tng<&dyn Codec>`
+/// over a codec they do not own without an adapter type per call site.
+impl Codec for &dyn Codec {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+        (**self).encode_into(v, rng, out)
+    }
+
+    fn is_unbiased(&self) -> bool {
+        (**self).is_unbiased()
+    }
+}
+
 /// Per-worker scratch arena: every buffer the encode→wire→decode hot path
 /// needs, allocated once and reused so steady-state rounds are
 /// allocation-free. One worker (or one leader slot) owns one arena.

@@ -7,12 +7,52 @@
 //! below the experiments layer) needed it too; `experiments::common`
 //! re-exports it, so either path names the same function.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::{
     entropy::EntropyCodec, identity::IdentityCodec, qsgd::QsgdCodec, signsgd::SignCodec,
     sparse::SparseCodec, ternary::TernaryCodec, topk::TopKCodec, Codec,
 };
+
+/// One direction of a compressed link: which codec spec compresses the
+/// residual, and whether the damped error-feedback reference tracks it
+/// (see `crate::link` for the recursion).
+///
+/// This is the one spec type every link direction shares — the downlink
+/// broadcast (`down=` / `down_ef=`, re-exported as
+/// `crate::downlink::DownlinkSpec`), the hierarchical group→root tier
+/// (`up=` / `up_ef=`), and any future direction — so all surfaces parse
+/// specs with the same [`make_codec`] grammar and report one error type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinkSpec {
+    /// Codec spec for the link residual (e.g. `"entropy:ternary"`); any
+    /// string [`make_codec`] accepts.
+    pub codec: String,
+    /// Keep the EF tracking reference (default on: biased codecs like
+    /// `topk` *require* it, and it shrinks entropy-coded residuals as the
+    /// trajectory settles; off = memoryless quantization of the raw
+    /// target).
+    pub ef: bool,
+}
+
+impl LinkSpec {
+    /// Spec with error feedback on — the default the CLI builds.
+    pub fn new(codec: impl Into<String>) -> Self {
+        LinkSpec { codec: codec.into(), ef: true }
+    }
+
+    /// Parse-check the codec string through the shared [`make_codec`]
+    /// grammar. `key` names the CLI surface (`down`, `up`, …) so the error
+    /// reads like the flag the user typed. Every entry point — CLI setup,
+    /// `parallel::validate`, the link constructors — funnels through this
+    /// one check, which is what keeps uplink/downlink/tier specs on a
+    /// single parser and a single error type.
+    pub fn validate(&self, key: &str) -> Result<()> {
+        make_codec(&self.codec)
+            .map(|_| ())
+            .map_err(|e| anyhow!("invalid {key}= codec spec '{}': {e}", self.codec))
+    }
+}
 
 /// Build a codec from a spec string:
 /// `tg` | `ternary`, `qg` | `qsgd:<levels>`, `sg` | `sparse:<ratio>`,
@@ -64,4 +104,22 @@ pub fn make_codec(spec: &str) -> Result<Box<dyn Codec>> {
         "fp32" | "identity" => Box::new(IdentityCodec),
         other => bail!("unknown codec spec '{other}'"),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_spec_defaults_ef_on_and_validates_by_key() {
+        let s = LinkSpec::new("entropy:ternary");
+        assert!(s.ef);
+        s.validate("down").unwrap();
+        s.validate("up").unwrap();
+        let bad = LinkSpec::new("nope");
+        let err = bad.validate("up").unwrap_err();
+        assert!(err.to_string().contains("up= codec spec 'nope'"), "{err}");
+        let err = bad.validate("down").unwrap_err();
+        assert!(err.to_string().contains("down="), "{err}");
+    }
 }

@@ -20,15 +20,16 @@
 
 use std::time::Instant;
 
-use crate::codec::{wire, Codec, CodecScratch};
+use crate::codec::{wire, Codec};
 use crate::coordinator::metrics::{RoundRecord, Trace};
 use crate::coordinator::protocol::{CAGG_OVERHEAD_BYTES, MSG_HEADER_BYTES};
 use crate::downlink::{DownlinkCompressor, DownlinkSpec};
+use crate::link::{LinkSender, TreeAggregator, TreeTopology};
 use crate::objectives::Objective;
 use crate::optim::{EstimatorKind, GradEstimator, Lbfgs, StepSchedule};
 use crate::tng::{
     CnzEstimator, CnzSelector, Normalization, RefScore, ReferenceKind, ReferenceManager,
-    RoundCtx, Tng,
+    RoundCtx,
 };
 use crate::util::math;
 use crate::util::Rng;
@@ -77,6 +78,16 @@ pub struct DriverConfig {
     /// (`parallel::validate` / `cluster_setup` check it; this deterministic
     /// driver panics on an invalid spec).
     pub downlink: Option<DownlinkSpec>,
+    /// Hierarchical two-level aggregation (`None` = flat star). With
+    /// `Some(t)`, the M workers are partitioned into `t.groups` contiguous
+    /// groups and each group's partial aggregate is re-encoded up a
+    /// per-group compressed link to the root (`crate::link::tree`). Purely
+    /// a leader-side fold: worker state machines are untouched (they apply
+    /// whatever aggregate is broadcast), so every runtime stays
+    /// digest-identical, and flat configs are byte-for-byte unchanged.
+    /// `cluster_setup` normalizes `groups=1` to `None`; this deterministic
+    /// driver panics on an invalid topology (validated upstream).
+    pub topology: Option<TreeTopology>,
 }
 
 impl Default for DriverConfig {
@@ -99,6 +110,7 @@ impl Default for DriverConfig {
             w0: None,
             warm_start_reference: false,
             downlink: None,
+            topology: None,
         }
     }
 }
@@ -125,7 +137,6 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
     // identically from the shared decoded trajectory, but `WorkerAnchor`
     // holds worker-specific state (§3.1's delayed gradient, realized as a
     // periodic per-worker anchor transmission).
-    let tng = Tng::with_mode(PassthroughCodec(codec), cfg.mode);
     let make_selector = || {
         CnzSelector::new(
             cfg.references
@@ -149,6 +160,13 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         .downlink
         .as_ref()
         .map(|spec| DownlinkCompressor::new(spec, dim, cfg.seed).expect("downlink spec"));
+    // Group tier of the two-level tree: the same aggregator type every
+    // transport leader runs, so the group-up frames — and with them the
+    // per-hop ledger — are identical across runtimes by construction.
+    let mut tree = cfg
+        .topology
+        .as_ref()
+        .map(|t| TreeAggregator::new(t, m, dim, cfg.seed).expect("topology spec"));
 
     // --- leader state ----------------------------------------------------
     let mut w = cfg.w0.clone().unwrap_or_else(|| vec![0.0f32; dim]);
@@ -166,6 +184,8 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
     let anchor_frame = hdr + 4 + 4 * dim as u64; // AnchorGrad / AnchorMu
     let mut wire_up: u64 = 0;
     let mut wire_down: u64 = 0;
+    // Per-hop ledger of the tree's group→root hop (0 on flat stars).
+    let mut wire_partial: u64 = 0;
     let mut records = Vec::new();
 
     let mut g = vec![0.0f32; dim];
@@ -173,13 +193,12 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
     let mut full_grad_buf = vec![0.0f32; dim];
     let mut mean_ref = vec![0.0f32; dim];
     let mut w_prev = vec![0.0f32; dim];
-    // One scratch arena per worker: encode/decode buffers are allocated in
-    // the first rounds and reused, so the steady-state loop is
-    // allocation-free (see codec::CodecScratch).
-    let mut scratches: Vec<CodecScratch> = (0..m).map(|_| CodecScratch::new()).collect();
-    for s in scratches.iter_mut() {
-        s.warm(dim);
-    }
+    // One uplink link sender per worker (streaming form): the normalizer
+    // plus the scratch arena whose buffers are allocated in the first
+    // rounds and reused, so the steady-state loop is allocation-free (see
+    // codec::CodecScratch / link::LinkSender).
+    let mut links: Vec<LinkSender<&dyn Codec>> =
+        (0..m).map(|_| LinkSender::streaming(codec, cfg.mode, dim)).collect();
 
     if cfg.warm_start_reference {
         obj.full_grad(&w, &mut full_grad_buf);
@@ -227,6 +246,9 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
 
         // ---- workers: estimate, normalize, encode, transmit -------------
         v_avg.fill(0.0);
+        if let Some(tr) = tree.as_mut() {
+            tr.begin_round();
+        }
         for wk in 0..m {
             estimators[wk].grad(obj, &shards[wk], &w, &mut rngs[wk], &mut g);
             let selector = &mut selectors[wk];
@@ -248,13 +270,18 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
                 bits_up += (bpe * dim) as u64;
                 // Driver-only: an anchor-style frame at `bpe`-bit precision.
                 wire_up += hdr + 4 + ((bpe * dim) as u64).div_ceil(8);
-                math::axpy(1.0 / m as f32, &g, &mut v_avg);
+                match tree.as_mut() {
+                    Some(tr) => tr.accumulate(wk, &g),
+                    None => math::axpy(1.0 / m as f32, &g, &mut v_avg),
+                }
                 continue;
             }
 
-            // Reference selection (pool search costs signalling bits).
+            // Reference selection (pool search costs signalling bits) —
+            // through the worker's link, the same entry point the
+            // transport worker loop uses.
             let (ref_idx, _score, sig_bits) =
-                selector.select_scored(cfg.ref_score, &g, &tng, &rngs[wk], &mut scratches[wk]);
+                links[wk].select_scored(selector, cfg.ref_score, &g, &rngs[wk]);
             let kind_is_mean =
                 matches!(cfg.references[ref_idx], ReferenceKind::MeanScalar);
             let (gref, scalar_bits): (&[f32], usize) = if kind_is_mean {
@@ -266,17 +293,25 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             };
             cnz_est.observe(&g, gref);
 
-            let scratch = &mut scratches[wk];
-            tng.encode_into(&g, gref, &mut rngs[wk], scratch);
-            bits_up += (scratch.enc.bits() + sig_bits + scalar_bits) as u64;
+            links[wk].encode_against(&g, gref, &mut rngs[wk]);
+            bits_up += (links[wk].encoded().bits() + sig_bits + scalar_bits) as u64;
             // The exact Grad frame a transport worker would send.
             wire_up += (crate::coordinator::protocol::GRAD_OVERHEAD_BYTES
-                + wire::frame_len(&scratch.enc)) as u64;
+                + wire::frame_len(links[wk].encoded())) as u64;
 
-            // Leader decodes and accumulates (same arena, no allocation).
-            let CodecScratch { enc, decoded, .. } = scratch;
-            tng.decode_into(enc, gref, decoded);
-            math::axpy(1.0 / m as f32, decoded, &mut v_avg);
+            // Leader decodes and accumulates (same arena, no allocation):
+            // straight into the round aggregate on a flat star, or into
+            // the worker's group partial on a tree.
+            let decoded = links[wk].decode_own(gref);
+            match tree.as_mut() {
+                Some(tr) => tr.accumulate(wk, decoded),
+                None => math::axpy(1.0 / m as f32, decoded, &mut v_avg),
+            }
+        }
+
+        // ---- group tier: re-encode each partial up its compressed link --
+        if let Some(tr) = tree.as_mut() {
+            wire_partial += tr.finish_round(&mut v_avg);
         }
 
         // ---- leader: compress the downlink broadcast (optional) ----------
@@ -327,6 +362,9 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         // ---- record ------------------------------------------------------
         if t % cfg.record_every == 0 || t + 1 == cfg.rounds {
             let loss = if cfg.eval_loss { obj.loss(&w) } else { f64::NAN };
+            // Root fan-in under the configured topology: the group-up hop
+            // of a tree, or every leaf frame of the flat star.
+            let root_in = if tree.is_some() { wire_partial } else { wire_up };
             records.push(RoundRecord {
                 round: t,
                 bits_per_elt: (bits_up as f64 / m as f64 + bits_down as f64) / dim as f64,
@@ -334,6 +372,7 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
                     + wire_down as f64 * 8.0)
                     / dim as f64,
                 down_bpe: wire_down as f64 * 8.0 / dim as f64,
+                topo_bpe: root_in as f64 * 8.0 / dim as f64,
                 loss,
                 subopt: loss - cfg.f_star,
                 grad_norm: math::norm2(v_step),
@@ -357,27 +396,11 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         total_down_bits: bits_down,
         total_wire_up_bytes: wire_up,
         total_wire_down_bytes: wire_down,
+        total_wire_partial_bytes: wire_partial,
         rounds: cfg.rounds,
         workers: m,
         dim,
         wall: t_start.elapsed(),
-    }
-}
-
-/// Adapter: `Tng<C>` owns its codec by value; the driver borrows one.
-struct PassthroughCodec<'a>(&'a dyn Codec);
-
-impl<'a> Codec for PassthroughCodec<'a> {
-    fn name(&self) -> String {
-        self.0.name()
-    }
-
-    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut crate::codec::Encoded) {
-        self.0.encode_into(v, rng, out)
-    }
-
-    fn is_unbiased(&self) -> bool {
-        self.0.is_unbiased()
     }
 }
 
@@ -635,6 +658,61 @@ mod tests {
             (last.down_bpe - (rounds * m * cagg_frame) as f64 * 8.0 / dim as f64).abs()
                 < 1e-9
         );
+    }
+
+    #[test]
+    fn tree_partial_ledger_matches_frame_arithmetic() {
+        // groups=2 over M=4 on dim 32 with ternary group links: the
+        // group-up hop must charge exactly 2 PartialAggregate frames per
+        // round (11-byte header + ternary wire frame 9 + ceil(dim/4)),
+        // while the leaf-up and root-down ledgers stay exactly the flat
+        // star's (the tree is a separate hop, not a re-pricing).
+        let obj = logreg(); // dim = 32
+        let mk = |topology| DriverConfig { rounds: 10, topology, ..Default::default() }; // M = 4
+        let flat = run(&obj, &IdentityCodec, "flat", &mk(None));
+        let tree = run(
+            &obj,
+            &IdentityCodec,
+            "tree",
+            &mk(Some(crate::link::TreeTopology::new(2, "ternary"))),
+        );
+        let (dim, rounds, groups) = (32u64, 10u64, 2u64);
+        let pagg_frame = 11 + 9 + dim.div_ceil(4);
+        assert_eq!(tree.total_wire_partial_bytes, rounds * groups * pagg_frame);
+        assert_eq!(flat.total_wire_partial_bytes, 0);
+        assert_eq!(tree.total_wire_up_bytes, flat.total_wire_up_bytes);
+        assert_eq!(tree.total_wire_down_bytes, flat.total_wire_down_bytes);
+        // The topo column follows the root's fan-in in each topology.
+        assert_eq!(tree.root_fan_in_bytes(), tree.total_wire_partial_bytes);
+        assert_eq!(flat.root_fan_in_bytes(), flat.total_wire_up_bytes);
+        let last = tree.records.last().unwrap();
+        assert!(
+            (last.topo_bpe - (rounds * groups * pagg_frame) as f64 * 8.0 / dim as f64).abs()
+                < 1e-9
+        );
+        // And the tree run still optimizes (the extra quantization is a
+        // modeling change, not a correctness break).
+        assert!(tree.final_loss().is_finite());
+    }
+
+    #[test]
+    fn tree_fold_is_deterministic_and_differs_from_flat() {
+        let obj = logreg();
+        let mk = |topology| DriverConfig {
+            rounds: 30,
+            topology,
+            schedule: StepSchedule::Const(0.3),
+            ..Default::default()
+        };
+        let two_groups = || Some(crate::link::TreeTopology::new(2, "ternary"));
+        let a = run(&obj, &TernaryCodec, "a", &mk(two_groups()));
+        let b = run(&obj, &TernaryCodec, "b", &mk(two_groups()));
+        assert_eq!(a.final_w, b.final_w, "tree runs must be seed-deterministic");
+        assert_eq!(a.total_wire_partial_bytes, b.total_wire_partial_bytes);
+        // The group hop quantizes the partials, so the trajectory is a
+        // different (still convergent) one than the flat star's.
+        let flat = run(&obj, &TernaryCodec, "flat", &mk(None));
+        assert_ne!(a.final_w, flat.final_w);
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //! A unit test in `coordinator::driver`
 //! (`downlink_ledger_contract_three_workers`) pins both numbers for a
 //! 3-worker run so neither convention can drift silently.
+//!
+//! With hierarchical aggregation (`crate::link::tree`) a third, separate
+//! **per-hop** ledger appears: [`Trace::total_wire_partial_bytes`] counts
+//! the group→root `PartialAggregate` frames (the root's tree fan-in),
+//! surfaced per round as [`RoundRecord::topo_bpe`]. It is deliberately
+//! disjoint from the leaf-up/root-down ledgers above, so flat-star totals
+//! are untouched by the topology machinery.
 
 use std::time::Duration;
 
@@ -53,6 +60,16 @@ pub struct RoundRecord {
     /// well below the raw-f32 `Aggregate` baseline while
     /// `wire_bits_per_elt − down_bpe` (the uplink share) is unchanged.
     pub down_bpe: f64,
+    /// Cumulative **root fan-in** wire bits/element under the configured
+    /// topology — the uplink traffic that transits the root's own NIC.
+    /// Flat star: every worker `Grad`/`AnchorGrad` frame (all M arrive at
+    /// the root), i.e. `total up bytes · 8 / dim`. Two-level tree
+    /// (`groups=g`, `crate::link::tree`): the g per-round
+    /// `Msg::PartialAggregate` frames of the group→root hop — the leaf
+    /// frames terminate at group leaders and never reach the root. This is
+    /// the column where hierarchical aggregation shows its ~g/M root-link
+    /// shrink at matched worker count.
+    pub topo_bpe: f64,
     /// Full objective F(w_t) (NaN when eval disabled).
     pub loss: f64,
     /// F(w_t) − F(w*) when f_star is known (NaN otherwise).
@@ -80,6 +97,13 @@ pub struct Trace {
     pub total_wire_up_bytes: u64,
     /// Measured wire bytes of all leader→worker protocol frames.
     pub total_wire_down_bytes: u64,
+    /// Measured wire bytes of the **group→root hop** of a two-level tree
+    /// (`Msg::PartialAggregate` frames, counted by the
+    /// `link::tree::TreeAggregator` identically in every runtime). 0 for
+    /// flat-star runs. This is a separate per-hop ledger: it is *not*
+    /// included in [`Trace::total_wire_up_bytes`] (the leaf hop), so flat
+    /// configs are byte-for-byte unchanged by the topology machinery.
+    pub total_wire_partial_bytes: u64,
     pub rounds: usize,
     pub workers: usize,
     pub dim: usize,
@@ -114,6 +138,25 @@ impl Trace {
     /// the shutdown handshake.
     pub fn final_down_bits_per_elt(&self) -> f64 {
         self.total_wire_down_bytes as f64 * 8.0 / self.dim as f64
+    }
+
+    /// Measured wire bytes of the root's uplink fan-in under the
+    /// configured topology: the `PartialAggregate` frames of a two-level
+    /// tree, or — flat star — every worker frame (all M arrive at the
+    /// root). The quantity hierarchical aggregation shrinks by ~g/M.
+    pub fn root_fan_in_bytes(&self) -> u64 {
+        if self.total_wire_partial_bytes > 0 {
+            self.total_wire_partial_bytes
+        } else {
+            self.total_wire_up_bytes
+        }
+    }
+
+    /// Final cumulative root fan-in in wire bits/element (the
+    /// [`RoundRecord::topo_bpe`] axis at end of run, plus the shutdown
+    /// handshake on flat stars).
+    pub fn final_topo_bits_per_elt(&self) -> f64 {
+        self.root_fan_in_bytes() as f64 * 8.0 / self.dim as f64
     }
 
     pub fn final_loss(&self) -> f64 {
@@ -160,6 +203,7 @@ impl Trace {
                 &r.bits_per_elt,
                 &r.wire_bits_per_elt,
                 &r.down_bpe,
+                &r.topo_bpe,
                 &r.loss,
                 &r.subopt,
                 &r.grad_norm,
@@ -172,9 +216,9 @@ impl Trace {
         Ok(())
     }
 
-    pub const CSV_HEADER: [&'static str; 12] = [
-        "label", "round", "bits_per_elt", "wire_bpe", "down_bpe", "loss", "subopt",
-        "grad_norm", "cnz", "eta", "w0", "w1",
+    pub const CSV_HEADER: [&'static str; 13] = [
+        "label", "round", "bits_per_elt", "wire_bpe", "down_bpe", "topo_bpe", "loss",
+        "subopt", "grad_norm", "cnz", "eta", "w0", "w1",
     ];
 }
 
@@ -188,6 +232,7 @@ mod tests {
             bits_per_elt: bits,
             wire_bits_per_elt: bits + 1.0,
             down_bpe: bits / 2.0,
+            topo_bpe: bits / 4.0,
             loss: sub + 1.0,
             subopt: sub,
             grad_norm: 1.0,
@@ -207,6 +252,7 @@ mod tests {
             total_down_bits: 512,
             total_wire_up_bytes: 1024,
             total_wire_down_bytes: 128,
+            total_wire_partial_bytes: 0,
             rounds: 3,
             workers: 4,
             dim: 128,
@@ -229,6 +275,19 @@ mod tests {
         assert!((t.final_wire_bits_per_elt() - 24.0).abs() < 1e-12);
         // Downlink share alone: 128·8 / 128 = 8 bits/elt.
         assert!((t.final_down_bits_per_elt() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn root_fan_in_follows_topology() {
+        // Flat star: the root's fan-in is the whole leaf-up ledger.
+        let flat = trace();
+        assert_eq!(flat.root_fan_in_bytes(), 1024);
+        assert!((flat.final_topo_bits_per_elt() - 1024.0 * 8.0 / 128.0).abs() < 1e-12);
+        // Tree: the per-hop partial ledger takes over.
+        let mut tree = trace();
+        tree.total_wire_partial_bytes = 256;
+        assert_eq!(tree.root_fan_in_bytes(), 256);
+        assert!((tree.final_topo_bits_per_elt() - 16.0).abs() < 1e-12);
     }
 
     #[test]

@@ -89,6 +89,28 @@ impl LinkModel {
     pub fn round_time(&self, up_sizes: &[usize], down_bytes: usize) -> f64 {
         self.fan_in_time(up_sizes) + self.broadcast_time(up_sizes.len(), down_bytes)
     }
+
+    /// Modeled synchronization time of one **hierarchical (two-level)**
+    /// round (`crate::link::tree`): the worker groups fan in to their
+    /// group leaders *in parallel* — the slowest group gates the tier
+    /// (max over group fan-ins) — then the g partial-aggregate frames fan
+    /// in to the root, then the root broadcast fans out to all `workers`.
+    /// This is where grouping buys wall-clock: the root's serialized
+    /// fan-in shrinks from M frames to g, at the price of one extra tier
+    /// of latency.
+    pub fn tree_round_time(
+        &self,
+        group_fan_ins: &[Vec<usize>],
+        root_fan_in: &[usize],
+        workers: usize,
+        down_bytes: usize,
+    ) -> f64 {
+        let tier1 = group_fan_ins
+            .iter()
+            .map(|sizes| self.fan_in_time(sizes))
+            .fold(0.0, f64::max);
+        tier1 + self.fan_in_time(root_fan_in) + self.broadcast_time(workers, down_bytes)
+    }
 }
 
 /// Byte counters shared by all endpoints of one simulated fabric.
@@ -254,6 +276,40 @@ mod tests {
         // Symmetric model agrees with itself across directions.
         let s = LinkModel::symmetric(1e-3, 1e6);
         assert_eq!(s.transfer_time(500), s.downlink_time(500));
+    }
+
+    #[test]
+    fn tree_round_time_beats_flat_fan_in_at_scale_and_is_monotone() {
+        let m = LinkModel::symmetric(1e-3, 1e6);
+        // 12 workers in 3 groups of 4, equal 256-B leaf and partial frames:
+        // tree = max-group (4 frames) + root (3 frames) + broadcast,
+        // flat = 12-frame fan-in + broadcast. 7 serialized frames < 12.
+        let leaf = 256usize;
+        let groups: Vec<Vec<usize>> = (0..3).map(|_| vec![leaf; 4]).collect();
+        let tree = m.tree_round_time(&groups, &[leaf; 3], 12, 4096);
+        let flat = m.round_time(&vec![leaf; 12], 4096);
+        assert!(tree < flat, "tree {tree} must beat flat {flat} at M=12, g=3");
+        // Exact decomposition: slowest group + root fan-in + broadcast.
+        let want = m.fan_in_time(&[leaf; 4]) + m.fan_in_time(&[leaf; 3])
+            + m.broadcast_time(12, 4096);
+        assert!((tree - want).abs() < 1e-15);
+        // Monotone in the partial-frame size (compressing the group link
+        // is a wall-clock win)...
+        assert!(
+            m.tree_round_time(&groups, &[128; 3], 12, 4096) < tree,
+            "smaller partials must be faster"
+        );
+        // ...and gated by the slowest group: growing one group's frames
+        // past the max raises the bound, growing a fast group's does not.
+        let mut skew = groups.clone();
+        skew[0] = vec![4 * leaf; 4];
+        assert!(m.tree_round_time(&skew, &[leaf; 3], 12, 4096) > tree);
+        let balanced_small: Vec<Vec<usize>> =
+            (0..3).map(|k| vec![if k == 0 { leaf } else { leaf / 2 }; 4]).collect();
+        assert!(
+            (m.tree_round_time(&balanced_small, &[leaf; 3], 12, 4096) - tree).abs() < 1e-15,
+            "a faster non-critical group must not change the bound"
+        );
     }
 
     #[test]

@@ -22,11 +22,15 @@
 //! with `Bye` before closing its uplink, and the leader drains all Byes
 //! before taking its final byte snapshot — totals are never racy.
 //!
-//! Hot-path notes: every worker owns a `CodecScratch` arena, so the
+//! Hot-path notes: every worker owns a streaming `link::LinkSender` (the
+//! normalizer plus its `CodecScratch` arena), so the
 //! normalize→encode→frame path performs no steady-state allocation beyond
 //! the channel frame itself, and a `ShardedCodec` additionally fans each
 //! message's shards out over OS threads *inside* the worker — that is where
 //! per-round compression scales past one core (see DESIGN.md §Sharding).
+//! With `cfg.topology` set, the leader additionally hosts the group tier
+//! of the two-level tree (`link::tree::TreeAggregator`) — a leader-side
+//! fold change only, invisible to worker state machines.
 //!
 //! Scope note: the `SvrgAnchor` *reference* strategy needs a full-gradient
 //! broadcast that only the deterministic driver implements; this runtime
@@ -37,14 +41,15 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::codec::{Codec, CodecScratch};
+use crate::codec::Codec;
 use crate::coordinator::driver::DriverConfig;
 use crate::coordinator::metrics::{RoundRecord, Trace};
 use crate::coordinator::protocol::Msg;
 use crate::downlink::{DownlinkCompressor, DownlinkDecoder};
+use crate::link::{LinkSender, TreeAggregator};
 use crate::objectives::Objective;
 use crate::optim::{GradEstimator, Lbfgs};
-use crate::tng::{CnzSelector, ReferenceKind, ReferenceManager, RoundCtx, Tng};
+use crate::tng::{CnzSelector, ReferenceKind, ReferenceManager, RoundCtx};
 use crate::transport::{channel_pair, LeaderTransport, WorkerTransport};
 use crate::util::math;
 use crate::util::Rng;
@@ -60,20 +65,6 @@ fn make_selector(cfg: &DriverConfig, dim: usize) -> CnzSelector {
             })
             .collect(),
     )
-}
-
-struct BorrowedCodec<'a>(&'a dyn Codec);
-
-impl<'a> Codec for BorrowedCodec<'a> {
-    fn name(&self) -> String {
-        self.0.name()
-    }
-    fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut crate::codec::Encoded) {
-        self.0.encode_into(v, rng, out)
-    }
-    fn is_unbiased(&self) -> bool {
-        self.0.is_unbiased()
-    }
 }
 
 /// Reject configurations only the deterministic driver can honor — shared
@@ -102,9 +93,18 @@ pub fn validate(cfg: &DriverConfig) -> Result<()> {
     if let Some(dl) = &cfg.downlink {
         // Parse-check here so a bad `down=` spec surfaces as a clean error
         // on every entry point (the deterministic driver trusts the config
-        // and would panic instead).
-        crate::codec::spec::make_codec(&dl.codec)
-            .map_err(|e| anyhow::anyhow!("invalid down= codec spec '{}': {e}", dl.codec))?;
+        // and would panic instead). One parser, one error type: the shared
+        // `codec::spec::LinkSpec::validate`.
+        dl.validate("down")?;
+    }
+    if let Some(t) = &cfg.topology {
+        if t.groups < 2 {
+            bail!("topology groups must be >= 2 (groups=1 is the flat star: use None)");
+        }
+        if t.groups > cfg.workers {
+            bail!("groups={} exceeds workers={}", t.groups, cfg.workers);
+        }
+        t.up.validate("up")?;
     }
     Ok(())
 }
@@ -154,15 +154,16 @@ fn worker_loop(
     let dim = obj.dim();
     let mut rng = Rng::new(cfg.seed).split(1 + id as u64);
     let mut est = GradEstimator::new(cfg.estimator, cfg.batch, dim);
-    let tng = Tng::with_mode(BorrowedCodec(codec), cfg.mode);
+    // The worker's uplink sender (streaming link): normalizer + arena; the
+    // reference comes from the selector pool, randomness from this
+    // worker's stream.
+    let mut uplink = LinkSender::streaming(codec, cfg.mode, dim);
     let mut selector = make_selector(cfg, dim);
     let mut lbfgs = cfg.lbfgs_memory.map(Lbfgs::new);
     let mut w = cfg.w0.clone().unwrap_or_else(|| vec![0.0f32; dim]);
     let mut g = vec![0.0f32; dim];
     let mut mean_ref = vec![0.0f32; dim];
     let mut w_prev = vec![0.0f32; dim];
-    let mut scratch = CodecScratch::new();
-    scratch.warm(dim);
     // Downlink replica state: present iff the config compresses broadcasts.
     let mut dl_dec = cfg.downlink.as_ref().map(|dl| DownlinkDecoder::new(dim, dl.ef));
 
@@ -184,7 +185,7 @@ fn worker_loop(
         // Shared scoring dispatch (same entry point as the driver, so the
         // runtimes cannot diverge on how the search is scored).
         let (ref_idx, _score, _sig) =
-            selector.select_scored(cfg.ref_score, &g, &tng, &rng, &mut scratch);
+            uplink.select_scored(&selector, cfg.ref_score, &g, &rng);
         let (scalar, gref): (f32, &[f32]) =
             if matches!(cfg.references[ref_idx], ReferenceKind::MeanScalar) {
                 let (s, _) = selector.pool[ref_idx].worker_scalar(&g).unwrap();
@@ -193,14 +194,14 @@ fn worker_loop(
             } else {
                 (0.0, selector.current(ref_idx))
             };
-        // Normalize + compress into the reusable arena (a ShardedCodec
-        // fans the shards out over threads here), then frame the message
-        // straight from the borrowed Encoded.
-        tng.encode_into(&g, gref, &mut rng, &mut scratch);
+        // Normalize + compress into the link's reusable arena (a
+        // ShardedCodec fans the shards out over threads here), then frame
+        // the message straight from the borrowed Encoded.
+        uplink.encode_against(&g, gref, &mut rng);
         tp.send(Msg::grad_frame(
             id as u16,
             t as u32,
-            &scratch.enc,
+            uplink.encoded(),
             scalar,
             ref_idx as u8,
         ))?;
@@ -262,7 +263,9 @@ fn leader_loop(
     let t_start = Instant::now();
     let dim = obj.dim();
     let m = cfg.workers;
-    let tng = Tng::with_mode(BorrowedCodec(codec), cfg.mode);
+    // The leader's end of the worker uplinks (streaming link): decodes
+    // every received payload against the shared reference pool.
+    let mut uplink = LinkSender::streaming(codec, cfg.mode, dim);
     let mut selector = make_selector(cfg, dim);
     let mut lbfgs = cfg.lbfgs_memory.map(Lbfgs::new);
     let mut cnz = crate::tng::CnzEstimator::new();
@@ -270,14 +273,20 @@ fn leader_loop(
     let mut records = Vec::new();
     let mut mean_ref = vec![0.0f32; dim];
     let mut w_prev = vec![0.0f32; dim];
-    let mut scratch = CodecScratch::new();
-    scratch.warm(dim);
     // Downlink compressor: EF + reference state on the leader, identical
     // stream to the deterministic driver's (see `crate::downlink`).
     let mut downlink = match &cfg.downlink {
         Some(spec) => Some(DownlinkCompressor::new(spec, dim, cfg.seed)?),
         None => None,
     };
+    // Group tier of the two-level tree — the same aggregator the
+    // deterministic driver runs, so the group-up frames and the per-hop
+    // ledger are identical across runtimes by construction.
+    let mut tree = match &cfg.topology {
+        Some(t) => Some(TreeAggregator::new(t, m, dim, cfg.seed)?),
+        None => None,
+    };
+    let mut partial_wire: u64 = 0;
     let total_n: usize = shard_sizes.iter().sum();
     let svrg = matches!(cfg.estimator, crate::optim::EstimatorKind::Svrg { .. });
     // anchor_due is a pure function of (estimator kind, round); one probe
@@ -339,7 +348,10 @@ fn leader_loop(
         }
         let eta = cfg.schedule.step(t);
         let mut v_avg = vec![0.0f32; dim];
-        for slot in slots.into_iter() {
+        if let Some(tr) = tree.as_mut() {
+            tr.begin_round();
+        }
+        for (wk, slot) in slots.into_iter().enumerate() {
             let Some(Msg::Grad { enc, scalar, ref_idx, .. }) = slot else { unreachable!() };
             // ref_idx is remotely controlled: a worker whose tng= config
             // disagrees with the leader's pool must be an error, not an
@@ -358,9 +370,18 @@ fn leader_loop(
                 } else {
                     selector.current(ref_idx as usize)
                 };
-            tng.decode_into(&enc, gref, &mut scratch.decoded);
-            cnz.observe(&scratch.decoded, gref); // decoded-side estimate (diagnostic)
-            math::axpy(1.0 / m as f32, &scratch.decoded, &mut v_avg);
+            let decoded = uplink.decode_against(&enc, gref);
+            cnz.observe(decoded, gref); // decoded-side estimate (diagnostic)
+            match tree.as_mut() {
+                Some(tr) => tr.accumulate(wk, decoded),
+                None => math::axpy(1.0 / m as f32, decoded, &mut v_avg),
+            }
+        }
+
+        // Group tier: re-encode each group's partial up its compressed
+        // link; the root's aggregate is the sum of the reconstructions.
+        if let Some(tr) = tree.as_mut() {
+            partial_wire += tr.finish_round(&mut v_avg);
         }
 
         // Broadcast (compressed or raw), then apply the identical update
@@ -387,11 +408,14 @@ fn leader_loop(
             let wire_bpe = (s.up_bytes as f64 * 8.0 / m as f64
                 + s.down_bytes as f64 * 8.0)
                 / dim as f64;
+            // Root fan-in under the configured topology (per-hop ledger).
+            let root_in = if tree.is_some() { partial_wire } else { s.up_bytes };
             records.push(RoundRecord {
                 round: t,
                 bits_per_elt: wire_bpe,
                 wire_bits_per_elt: wire_bpe,
                 down_bpe: s.down_bytes as f64 * 8.0 / dim as f64,
+                topo_bpe: root_in as f64 * 8.0 / dim as f64,
                 loss,
                 subopt: loss - cfg.f_star,
                 grad_norm: math::norm2(&v_avg),
@@ -429,6 +453,7 @@ fn leader_loop(
         total_down_bits: s.down_bytes * 8,
         total_wire_up_bytes: s.up_bytes,
         total_wire_down_bytes: s.down_bytes,
+        total_wire_partial_bytes: partial_wire,
         rounds: cfg.rounds,
         workers: m,
         dim,
@@ -621,6 +646,60 @@ mod tests {
         assert_eq!(seq.final_w, par.final_w, "measured scoring diverged across runtimes");
         assert_eq!(seq.total_wire_up_bytes, par.total_wire_up_bytes);
         assert_eq!(seq.total_wire_down_bytes, par.total_wire_down_bytes);
+    }
+
+    #[test]
+    fn tree_threaded_matches_driver_with_partial_ledger() {
+        // Hierarchical fold: driver and threaded runtime must agree on the
+        // trajectory AND on all three per-hop ledgers (leaf-up, group-up,
+        // root-down), groups=2 over 4 workers.
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 20,
+            workers: 4,
+            schedule: StepSchedule::Const(0.3),
+            references: vec![crate::tng::ReferenceKind::AvgDecoded { window: 2 }],
+            topology: Some(crate::link::TreeTopology::new(2, "ternary")),
+            record_every: 5,
+            ..Default::default()
+        };
+        let seq = crate::coordinator::driver::run(&obj, &TernaryCodec, "seq", &cfg);
+        let par = run(&obj, &TernaryCodec, "par", &cfg).unwrap();
+        assert_eq!(seq.final_w, par.final_w, "tree trajectories must be identical");
+        assert_eq!(seq.param_digest(), par.param_digest());
+        assert_eq!(seq.total_wire_up_bytes, par.total_wire_up_bytes);
+        assert_eq!(seq.total_wire_down_bytes, par.total_wire_down_bytes);
+        assert_eq!(
+            seq.total_wire_partial_bytes, par.total_wire_partial_bytes,
+            "group-up ledgers must be identical"
+        );
+        assert!(par.total_wire_partial_bytes > 0);
+    }
+
+    #[test]
+    fn tree_topology_validated() {
+        let obj = logreg();
+        // groups=1 must be normalized to None upstream; the runtime
+        // rejects it rather than silently running a fake tree.
+        let cfg = DriverConfig {
+            workers: 4,
+            topology: Some(crate::link::TreeTopology::new(1, "ternary")),
+            ..Default::default()
+        };
+        assert!(run(&obj, &TernaryCodec, "x", &cfg).is_err());
+        let cfg = DriverConfig {
+            workers: 2,
+            topology: Some(crate::link::TreeTopology::new(3, "ternary")),
+            ..Default::default()
+        };
+        assert!(run(&obj, &TernaryCodec, "x", &cfg).is_err());
+        let cfg = DriverConfig {
+            workers: 4,
+            topology: Some(crate::link::TreeTopology::new(2, "wat")),
+            ..Default::default()
+        };
+        let err = run(&obj, &TernaryCodec, "x", &cfg).unwrap_err();
+        assert!(err.to_string().contains("up= codec spec"), "{err}");
     }
 
     #[test]

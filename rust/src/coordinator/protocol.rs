@@ -32,6 +32,15 @@ pub enum Msg {
     /// the PR-3 decompression-bomb guards (dim cap, part-count cap, nested
     /// stream length bounds, strict consumption) apply unchanged.
     CompressedAggregate { round: u32, enc: Encoded, eta: f32 },
+    /// Group leader -> root: the compressed **partial aggregate** of one
+    /// worker group (hierarchical two-level aggregation,
+    /// `crate::link::tree`): the codec wire frame of `Q[p_k − h_k]` for
+    /// group k's partial `p_k` and per-group EF reference `h_k`. The
+    /// `group` id rides in the fixed header's worker field. Parsing reuses
+    /// `codec::wire`, so the decompression-bomb guards (dim cap,
+    /// part-count cap, nested stream length bounds, strict consumption)
+    /// apply unchanged.
+    PartialAggregate { group: u16, round: u32, enc: Encoded },
     /// Leader -> workers: global SVRG anchor gradient μ.
     AnchorMu { round: u32, mu: Vec<f32> },
     /// Leader -> workers: shut down after this round.
@@ -60,6 +69,13 @@ pub const GRAD_OVERHEAD_BYTES: usize = MSG_HEADER_BYTES + 5;
 /// frame: the fixed header plus the 4-byte step size.
 pub const CAGG_OVERHEAD_BYTES: usize = MSG_HEADER_BYTES + 4;
 
+/// Bytes a [`Msg::PartialAggregate`] frame adds around the codec wire
+/// frame: just the fixed header (the group id rides in the worker field).
+/// The tree aggregator's per-hop ledger charges exactly
+/// `PAGG_OVERHEAD_BYTES + wire::frame_len(enc)` per group per round,
+/// pinned against [`Msg::partial_aggregate_frame`] byte for byte.
+pub const PAGG_OVERHEAD_BYTES: usize = MSG_HEADER_BYTES;
+
 const K_GRAD: u8 = 1;
 const K_ANCHOR_GRAD: u8 = 2;
 const K_AGGREGATE: u8 = 3;
@@ -68,6 +84,7 @@ const K_STOP: u8 = 5;
 const K_HELLO: u8 = 6;
 const K_BYE: u8 = 7;
 const K_CAGG: u8 = 8;
+const K_PAGG: u8 = 9;
 
 fn write_f32s(out: &mut Vec<u8>, xs: &[f32]) {
     for &x in xs {
@@ -93,6 +110,7 @@ impl Msg {
             Msg::AnchorGrad { .. } => "anchor_grad",
             Msg::Aggregate { .. } => "aggregate",
             Msg::CompressedAggregate { .. } => "compressed_aggregate",
+            Msg::PartialAggregate { .. } => "partial_aggregate",
             Msg::AnchorMu { .. } => "anchor_mu",
             Msg::Stop { .. } => "stop",
             Msg::Hello { .. } => "hello",
@@ -149,6 +167,26 @@ impl Msg {
         out
     }
 
+    /// Serialize a partial-aggregate frame straight from a borrowed
+    /// [`Encoded`] — a group leader frames the group→root payload from its
+    /// link's scratch arena without cloning it into an owned
+    /// [`Msg::PartialAggregate`] first. Byte-identical to
+    /// `Msg::PartialAggregate { .. }.to_bytes()`.
+    pub fn partial_aggregate_frame(group: u16, round: u32, enc: &Encoded) -> Vec<u8> {
+        // Exact capacity: 11-byte frame header + wire frame.
+        let mut out = Vec::with_capacity(PAGG_OVERHEAD_BYTES + wire::frame_len(enc));
+        out.write_u8(K_PAGG).unwrap();
+        out.write_u16::<LE>(group).unwrap(); // the group id rides here
+        out.write_u32::<LE>(round).unwrap();
+        // u32 body length, patched once the body is written.
+        let len_pos = out.len();
+        out.write_u32::<LE>(0).unwrap();
+        wire::write_into(enc, &mut out);
+        let body_len = (out.len() - len_pos - 4) as u32;
+        out[len_pos..len_pos + 4].copy_from_slice(&body_len.to_le_bytes());
+        out
+    }
+
     pub fn to_bytes(&self) -> Vec<u8> {
         if let Msg::Grad { worker, round, enc, scalar, ref_idx } = self {
             return Msg::grad_frame(*worker, *round, enc, *scalar, *ref_idx);
@@ -156,9 +194,12 @@ impl Msg {
         if let Msg::CompressedAggregate { round, enc, eta } = self {
             return Msg::compressed_aggregate_frame(*round, *eta, enc);
         }
+        if let Msg::PartialAggregate { group, round, enc } = self {
+            return Msg::partial_aggregate_frame(*group, *round, enc);
+        }
         let mut out = Vec::new();
         let (kind, worker, round) = match self {
-            Msg::Grad { .. } | Msg::CompressedAggregate { .. } => {
+            Msg::Grad { .. } | Msg::CompressedAggregate { .. } | Msg::PartialAggregate { .. } => {
                 unreachable!("handled above")
             }
             Msg::AnchorGrad { worker, round, .. } => (K_ANCHOR_GRAD, *worker, *round),
@@ -173,7 +214,7 @@ impl Msg {
         out.write_u32::<LE>(round).unwrap();
         let mut body = Vec::new();
         match self {
-            Msg::Grad { .. } | Msg::CompressedAggregate { .. } => {
+            Msg::Grad { .. } | Msg::CompressedAggregate { .. } | Msg::PartialAggregate { .. } => {
                 unreachable!("handled above")
             }
             Msg::AnchorGrad { grad, .. } => {
@@ -225,6 +266,10 @@ impl Msg {
                 let enc = wire::from_bytes(buf)?;
                 Msg::CompressedAggregate { round, enc, eta }
             }
+            K_PAGG => {
+                let enc = wire::from_bytes(buf)?;
+                Msg::PartialAggregate { group: worker, round, enc }
+            }
             K_ANCHOR_MU => {
                 let n = buf.read_u32::<LE>()? as usize;
                 Msg::AnchorMu { round, mu: read_f32s(&mut buf, n)? }
@@ -254,7 +299,8 @@ mod tests {
         let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
         let enc = TernaryCodec.encode(&v, &mut rng);
         roundtrip(&Msg::Grad { worker: 3, round: 17, enc: enc.clone(), scalar: 0.25, ref_idx: 2 });
-        roundtrip(&Msg::CompressedAggregate { round: 8, enc, eta: 0.05 });
+        roundtrip(&Msg::CompressedAggregate { round: 8, enc: enc.clone(), eta: 0.05 });
+        roundtrip(&Msg::PartialAggregate { group: 2, round: 8, enc });
         roundtrip(&Msg::AnchorGrad { worker: 1, round: 0, grad: v.clone() });
         roundtrip(&Msg::Aggregate { round: 5, v: v.clone(), eta: 0.1 });
         roundtrip(&Msg::AnchorMu { round: 9, mu: v });
@@ -326,6 +372,46 @@ mod tests {
         assert_eq!(expect.len(), CAGG_OVERHEAD_BYTES + wire_bytes.len());
         let back = Msg::from_bytes(&expect).unwrap();
         assert_eq!(back, Msg::CompressedAggregate { round: 21, enc, eta: 0.125 });
+    }
+
+    #[test]
+    fn partial_aggregate_frame_layout_pinned_byte_by_byte() {
+        // Hand-built-frame discipline, like the Grad/CompressedAggregate
+        // pins: kind u8 | worker u16 (group id) | round u32 | body_len u32
+        // | wire frame. The frame length must equal PAGG_OVERHEAD_BYTES +
+        // wire frame — that identity is what lets the tree aggregator's
+        // ledger count real frames without serializing them.
+        let mut rng = Rng::new(12);
+        let v: Vec<f32> = (0..40).map(|_| rng.gauss_f32()).collect();
+        let enc = TernaryCodec.encode(&v, &mut rng);
+        let wire_bytes = wire::to_bytes(&enc);
+        let mut expect = vec![9u8]; // K_PAGG
+        expect.extend_from_slice(&3u16.to_le_bytes()); // group id
+        expect.extend_from_slice(&7u32.to_le_bytes());
+        expect.extend_from_slice(&(wire_bytes.len() as u32).to_le_bytes());
+        expect.extend_from_slice(&wire_bytes);
+        assert_eq!(Msg::partial_aggregate_frame(3, 7, &enc), expect);
+        assert_eq!(expect.len(), PAGG_OVERHEAD_BYTES + wire_bytes.len());
+        assert_eq!(expect.len(), PAGG_OVERHEAD_BYTES + wire::frame_len(&enc));
+        let back = Msg::from_bytes(&expect).unwrap();
+        assert_eq!(back, Msg::PartialAggregate { group: 3, round: 7, enc });
+    }
+
+    #[test]
+    fn partial_aggregate_rejects_forged_payload() {
+        // A truncated inner wire frame must error (strict consumption),
+        // never panic or over-allocate.
+        let mut rng = Rng::new(13);
+        let v: Vec<f32> = (0..64).map(|_| rng.gauss_f32()).collect();
+        let enc = TernaryCodec.encode(&v, &mut rng);
+        let good = Msg::partial_aggregate_frame(0, 1, &enc);
+        for cut in 1..6 {
+            let mut bad = good[..good.len() - cut].to_vec();
+            // Re-patch the outer body length so only the inner frame is short.
+            let body_len = (bad.len() - MSG_HEADER_BYTES) as u32;
+            bad[7..11].copy_from_slice(&body_len.to_le_bytes());
+            assert!(Msg::from_bytes(&bad).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

@@ -1,114 +1,98 @@
-//! Bidirectional compression: the **downlink** (leader → worker) subsystem.
+//! Bidirectional compression: the **downlink** (leader → worker) direction,
+//! as a thin veneer over the unified compressed-link primitive
+//! ([`crate::link`]).
 //!
-//! PR 3 made the uplink's cost *measured* bytes, but the broadcast still
-//! shipped the aggregated step as raw f32s (`Msg::Aggregate`) — half the
-//! wire was uncompressed. This module closes the loop on the paper's
-//! shared-reference design by compressing the broadcast the same way the
-//! uplink compresses gradients:
+//! The leader normalizes the aggregated step `v_t` against a shared
+//! tracking reference `h_t` — server-side error-feedback state in the
+//! EF21-P sense — compresses the residual with **any codec spec** the
+//! uplink accepts (`down=ternary`, `down=entropy:qsgd:4`, …), and
+//! broadcasts `Msg::CompressedAggregate` frames; every replica (leader
+//! included) steps on the reconstruction v̂_t, so driver, channel, and TCP
+//! runtimes stay lock-step and `param_digest`-identical (pinned by
+//! `golden_trace` / `transport_tcp` / `rust/tests/downlink.rs`).
 //!
-//! * the leader normalizes the aggregated step `v_t` against a **shared
-//!   downlink reference** `h_t` — server-side error-feedback state in the
-//!   EF21-P sense (Gruntkowska et al. 2022), replicated by every worker at
-//!   zero extra communication exactly like the §3.1 uplink references;
-//! * the residual is compressed with **any codec spec** the uplink accepts
-//!   (`down=ternary`, `down=entropy:qsgd:4`, `down=shard:4:ternary`, …);
-//! * workers reconstruct the iterate **purely from compressed broadcasts**
-//!   (`Msg::CompressedAggregate`), and the leader applies the identical
-//!   reconstruction v̂_t to its own replica — so driver, channel, and TCP
-//!   runtimes stay lock-step and `param_digest`-identical (pinned by
-//!   `golden_trace` / `transport_tcp` / `rust/tests/downlink.rs`).
-//!
-//! # The EF recursion (damped tracking)
-//!
-//! With reference `h_t` (zeros at t = 0), damping `α =` [`EF_DAMPING`] and
-//! any codec `Q`:
-//!
-//! ```text
-//! c_t     = Q[v_t − h_t]                    (what crosses the wire)
-//! q_t     = decode(c_t)
-//! v̂_t     = h_t + q_t                       (every replica, incl. leader)
-//! h_{t+1} = h_t + α·q_t                     (the error-feedback state)
-//! ```
-//!
-//! For unbiased `Q`, `E[q_t] = v_t − h_t`, so `E[v_t − h_{t+1}] =
-//! (1−α)·E[v_t − h_t] (+ trajectory drift)`: the reference absorbs both
-//! the trajectory *and* past compression errors, which is what makes
-//! aggressive downlink codecs safe (Deep Gradient Compression's residual
-//! accumulation, in tracking form). With `ef = false` the reference stays
-//! pinned at zero and the broadcast degrades to memoryless quantization of
-//! the raw aggregate.
-//!
-//! **Why damped (α < 1) instead of EF21-P's α = 1:** the α = 1 recursion
-//! `h_{t+1} = v̂_t` is only stable for *contractive* compressors (top-k) —
-//! its error-recycle factor is the compressor's relative error, which for
-//! an expanding unbiased quantizer like ternary exceeds 1 and diverges
-//! geometrically (numerically confirmed; a ternary code's worst-coordinate
-//! error is on the order of its scale). Damping by `α = 1/4` is the
-//! DIANA-style fix (Mishchenko et al. 2019): the recycle factor becomes
-//! `α·(relative error)`, stable for every codec this crate ships, while
-//! the mean gap still contracts geometrically. The regression test
-//! `damped_tracking_converges_on_constant_aggregate_ternary` pins this.
-//!
-//! # Determinism contract
-//!
-//! Stochastic downlink codecs draw from a dedicated leader RNG stream,
-//! [`downlink_rng`] (`Rng::new(seed).split(0)` — stream 0 is reserved for
-//! the leader; worker `m` draws from stream `1 + m`). The deterministic
-//! driver and every transport leader construct the identical stream, encode
-//! the identical targets, and therefore emit identical frames; workers
-//! never need the RNG because they only decode. The downlink normalization
-//! is always the subtractive form (Eq. 2), and leader and workers advance
-//! `h` with the same f32 operations in the same order — so all replicas
-//! agree bit for bit.
+//! The EF recursion, the damping-α rationale, and the RNG-stream map live
+//! in the [`crate::link`] module docs — this direction is one instance of
+//! that contract: the leader draws from the reserved stream 0
+//! ([`downlink_rng`]), workers decode only. [`DownlinkCompressor`] is a
+//! [`crate::link::LinkSender`] in tracked form; [`DownlinkDecoder`] *is*
+//! the receiver endpoint ([`crate::link::LinkReceiver`]); the spec type is
+//! the shared [`crate::codec::spec::LinkSpec`].
 
-pub mod compressor;
-pub mod decoder;
+use anyhow::{Context, Result};
 
-pub use compressor::DownlinkCompressor;
-pub use decoder::DownlinkDecoder;
-
+use crate::codec::{Codec, Encoded};
+use crate::link::LinkSender;
 use crate::util::Rng;
 
-/// The EF tracking damping α (see the module docs): 1/4 keeps the
-/// error-recycle factor of every shipped codec below 1 (ternary's relative
-/// error ≈ its scale) while the reference gap still contracts by 3/4 per
-/// round in expectation. Exactly representable in f32, so the damped
-/// update is the same bit pattern on every replica.
-pub const EF_DAMPING: f32 = 0.25;
+/// The downlink direction's spec — the shared link spec under its
+/// historical name (`down=<codec spec>`, `down_ef=`).
+pub use crate::codec::spec::LinkSpec as DownlinkSpec;
 
-/// Downlink configuration carried inside `DriverConfig`: which codec
-/// compresses the broadcast, and whether the error-feedback reference
-/// tracks it.
-///
-/// `codec` is any spec string [`crate::codec::spec::make_codec`] accepts
-/// (the CLI surfaces it as `down=<spec>`, with `down_ef=true|false`).
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct DownlinkSpec {
-    /// Codec spec for the broadcast residual (e.g. `"entropy:ternary"`).
-    pub codec: String,
-    /// Keep the EF tracking reference (default on: biased codecs like
-    /// `topk` *require* it, and it shrinks entropy-coded residuals as the
-    /// trajectory settles; off = memoryless quantization of the raw
-    /// aggregate).
-    pub ef: bool,
-}
+/// The worker-side downlink state machine — the receiver endpoint of the
+/// compressed link, verbatim.
+pub use crate::link::LinkReceiver as DownlinkDecoder;
 
-impl DownlinkSpec {
-    /// Spec with error feedback on — the default the CLI builds.
-    pub fn new(codec: impl Into<String>) -> Self {
-        DownlinkSpec { codec: codec.into(), ef: true }
-    }
-}
+/// The EF tracking damping α (canonical constant: [`crate::link::EF_DAMPING`]).
+pub use crate::link::EF_DAMPING;
 
-/// The leader's dedicated downlink RNG stream (see the module docs'
+/// The leader's dedicated downlink RNG stream (see the [`crate::link`]
 /// determinism contract): stream 0 of the run seed, which no worker uses.
 pub fn downlink_rng(seed: u64) -> Rng {
     Rng::new(seed).split(0)
 }
 
+/// The leader's downlink state machine: a **tracked**
+/// [`crate::link::LinkSender`] seeded with the reserved leader stream. One
+/// instance per run; every call to [`DownlinkCompressor::compress`]
+/// consumes one round's aggregate and produces the wire payload plus the
+/// reconstruction v̂ the leader must apply to its own replica (identical
+/// to what every worker's [`DownlinkDecoder`] reconstructs — the sender
+/// runs the same [`crate::link::LinkState`] arithmetic on its own
+/// payload, so the bit-identity is structural).
+///
+/// All buffers are allocated once at construction and reused: steady-state
+/// `compress` calls perform zero heap allocation (enforced by
+/// `rust/tests/alloc.rs`).
+pub struct DownlinkCompressor {
+    link: LinkSender<Box<dyn Codec>>,
+}
+
+impl DownlinkCompressor {
+    /// Build from a spec (parses the codec string through the shared
+    /// [`crate::codec::spec::make_codec`] grammar) for dimension `dim`,
+    /// seeding the dedicated leader RNG stream from the run seed.
+    pub fn new(spec: &DownlinkSpec, dim: usize, seed: u64) -> Result<Self> {
+        let codec = crate::codec::spec::make_codec(&spec.codec)
+            .with_context(|| format!("invalid down= codec spec '{}'", spec.codec))?;
+        Ok(DownlinkCompressor {
+            link: LinkSender::tracked(codec, dim, spec.ef, downlink_rng(seed)),
+        })
+    }
+
+    /// Compress one round's aggregate `v`. Returns the encoded broadcast
+    /// body (frame it with `Msg::compressed_aggregate_frame`) and the
+    /// reconstruction v̂ — see [`crate::link::LinkSender::compress`] for
+    /// the recursion.
+    pub fn compress(&mut self, v: &[f32]) -> (&Encoded, &[f32]) {
+        self.link.compress(v)
+    }
+
+    /// The current shared EF reference h (diagnostic).
+    pub fn reference(&self) -> &[f32] {
+        self.link.reference()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::math;
+
+    fn randv(seed: u64, d: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d).map(|_| rng.gauss_f32()).collect()
+    }
 
     #[test]
     fn downlink_stream_is_disjoint_from_worker_streams() {
@@ -134,10 +118,147 @@ mod tests {
     }
 
     #[test]
-    fn damping_is_exact_in_f32() {
-        // A power of two: h += α·q multiplies mantissas exactly, so the
-        // replicas' f32 agreement does not hinge on rounding luck.
-        assert_eq!(EF_DAMPING, 0.25);
-        assert_eq!(EF_DAMPING.to_bits() & 0x007F_FFFF, 0, "mantissa must be zero");
+    fn identity_codec_round0_is_exact_and_reference_damps() {
+        let spec = DownlinkSpec::new("fp32");
+        let mut dl = DownlinkCompressor::new(&spec, 64, 1).unwrap();
+        // Round 0 (zero reference): v̂ = (v − 0) + 0 = v bit for bit.
+        let v = randv(10, 64);
+        let (_, vhat) = dl.compress(&v);
+        assert_eq!(vhat, &v[..], "round 0 must be exact");
+        // h after one round = α·v exactly (identity codec: q = v − h).
+        for (h, &x) in dl.reference().iter().zip(&v) {
+            assert!((h - EF_DAMPING * x).abs() < 1e-6);
+        }
+        // Repeating the same v: the gap ‖v − h‖ contracts by (1 − α) per
+        // round — after k more rounds h = (1 − (1−α)^{k+1})·v.
+        for _ in 0..4 {
+            let _ = dl.compress(&v);
+        }
+        let shrink = (1.0 - EF_DAMPING).powi(5); // ≈ 0.237
+        for (h, &x) in dl.reference().iter().zip(&v) {
+            assert!(
+                (h - (1.0 - shrink) * x).abs() < 1e-4 * (1.0 + x.abs()),
+                "h={h} x={x}"
+            );
+        }
+        // And the reconstruction stays near-exact throughout (only f32
+        // roundoff of (v − h) + h).
+        let (_, vhat) = dl.compress(&v);
+        for (a, b) in vhat.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn reconstruction_matches_worker_decoder_exactly() {
+        // The invariant everything rides on: the leader's v̂ equals what a
+        // worker reconstructs from the wire payload alone, bit for bit,
+        // round after round — EF state included.
+        for ef in [true, false] {
+            let spec = DownlinkSpec { codec: "ternary".into(), ef };
+            let mut dl = DownlinkCompressor::new(&spec, 48, 9).unwrap();
+            let mut dec = DownlinkDecoder::new(48, ef);
+            for round in 0..12u64 {
+                let v = randv(100 + round, 48);
+                let (enc, vhat) = dl.compress(&v);
+                let leader: Vec<u32> = vhat.iter().map(|x| x.to_bits()).collect();
+                let worker: Vec<u32> =
+                    dec.apply(enc).unwrap().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(
+                    leader, worker,
+                    "ef={ef} round {round}: leader and worker reconstructions diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn damped_tracking_converges_on_constant_aggregate_ternary() {
+        // The EF mechanism at work: for a constant aggregate, the tracking
+        // reference h absorbs v (E[q] = v − h contracts by (1−α) per round
+        // in expectation), so the encoded residual — and with it the
+        // entropy-coded frame — shrinks toward zero. Undamped tracking
+        // (α = 1) would recycle the full ternary quantization error and
+        // blow up instead; this is the regression test for that choice.
+        let spec = DownlinkSpec::new("ternary");
+        let mut dl = DownlinkCompressor::new(&spec, 48, 2).unwrap();
+        let v = randv(300, 48);
+        let init_gap = math::abs_max(&v) as f64;
+        for _ in 0..200 {
+            let _ = dl.compress(&v);
+        }
+        let gap: Vec<f32> =
+            v.iter().zip(dl.reference()).map(|(&x, &h)| x - h).collect();
+        assert!(
+            (math::abs_max(&gap) as f64) < 0.05 * init_gap,
+            "tracking gap {} must collapse from {}",
+            math::abs_max(&gap),
+            init_gap
+        );
+    }
+
+    #[test]
+    fn damped_tracking_absorbs_biased_topk_drops() {
+        // With a biased top-k codec the EF reference still converges to a
+        // constant aggregate: dropped coordinates grow in v − h until they
+        // win the selection (the classic error-feedback guarantee).
+        let spec = DownlinkSpec::new("topk:2");
+        let mut dl = DownlinkCompressor::new(&spec, 8, 4).unwrap();
+        let v = [1.0f32, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3];
+        let mut last = vec![0.0f32; 8];
+        for _ in 0..60 {
+            let (_, vhat) = dl.compress(&v);
+            last.copy_from_slice(vhat);
+        }
+        for (i, (&a, &b)) in last.iter().zip(&v).enumerate() {
+            assert!((a - b).abs() < 0.05, "coord {i}: v̂={a} must reach {b}");
+        }
+    }
+
+    #[test]
+    fn ef_off_is_memoryless() {
+        let spec = DownlinkSpec { codec: "ternary".into(), ef: false };
+        let mut dl = DownlinkCompressor::new(&spec, 16, 5).unwrap();
+        let v = randv(77, 16);
+        let (enc, vhat) = dl.compress(&v);
+        // v̂ is the plain decode (reference stays pinned at zero)...
+        assert_eq!(vhat, &enc.decode()[..]);
+        assert_eq!(dl.reference(), &[0.0; 16]);
+        // ...and the codes are a direct ternary coding of v itself.
+        let (_, vhat2) = dl.compress(&v);
+        assert_eq!(vhat2.len(), 16);
+        assert_eq!(dl.reference(), &[0.0; 16]);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let spec = DownlinkSpec::new("entropy:ternary");
+        let mut a = DownlinkCompressor::new(&spec, 40, 11).unwrap();
+        let mut b = DownlinkCompressor::new(&spec, 40, 11).unwrap();
+        for round in 0..6u64 {
+            let v = randv(200 + round, 40);
+            let (ea, va) = a.compress(&v);
+            let (ea, va) = (ea.clone(), va.to_vec());
+            let (eb, vb) = b.compress(&v);
+            assert_eq!(&ea, eb, "round {round}: frames must be identical");
+            assert_eq!(va, vb, "round {round}: reconstructions must be identical");
+        }
+        // A different seed draws a different stream.
+        let mut c = DownlinkCompressor::new(&spec, 40, 12).unwrap();
+        let v = randv(200, 40);
+        let (_, vc) = c.compress(&v);
+        let vc = vc.to_vec();
+        let mut a2 = DownlinkCompressor::new(&spec, 40, 11).unwrap();
+        let (_, va2) = a2.compress(&v);
+        assert_ne!(va2.to_vec(), vc, "different seeds must differ");
+    }
+
+    #[test]
+    fn bad_spec_is_an_error_not_a_panic() {
+        // (`unwrap_err` needs `DownlinkCompressor: Debug`; match instead.)
+        let Err(err) = DownlinkCompressor::new(&DownlinkSpec::new("nope"), 4, 0) else {
+            panic!("bad spec must not build");
+        };
+        assert!(err.to_string().contains("down="), "{err}");
     }
 }

@@ -1,7 +1,7 @@
 //! Shared experiment plumbing: codec factory, the paper's method matrix
 //! (QG/TG/SG × raw/TN-), and CSV emission.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::codec::Codec;
 use crate::config::Settings;
@@ -30,12 +30,20 @@ pub use crate::codec::spec::make_codec;
 /// is what makes a TCP run byte-identical to the deterministic driver.
 /// Keys (all `key=value`): `n dim csk cth seed lambda codec tng ref_window
 /// ref_score workers rounds batch eta estimator anchor_every memory
-/// record_every eval opt opt_iters down down_ef`.
+/// record_every eval opt opt_iters down down_ef groups up up_ef`.
 ///
 /// `down=<codec spec>` turns on downlink compression (the broadcast crosses
 /// the wire as a `CompressedAggregate` frame of that codec — any
 /// [`make_codec`] spec, e.g. `down=entropy:ternary`); `down_ef=false`
 /// disables the leader's error-feedback residual (on by default).
+///
+/// `groups=<g>` turns on hierarchical two-level aggregation
+/// (`crate::link::tree`): the workers are partitioned into g groups whose
+/// partial aggregates are re-encoded up per-group compressed links.
+/// `groups=1` (the default) **is** the flat star — it normalizes to no
+/// topology at all, so a degenerate tree is bit-for-bit the flat run
+/// (pinned by `rust/tests/hierarchy.rs`). The tier's link takes `up=<codec
+/// spec>` (defaults to the `codec=` spec) and `up_ef=true|false`.
 pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConfig, String)> {
     let n = s.usize_or("n", 1024)?;
     let dim = s.usize_or("dim", 128)?;
@@ -54,7 +62,8 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
     } else {
         f64::NAN
     };
-    let codec = make_codec(&s.str_or("codec", "ternary"))?;
+    let codec_spec = s.str_or("codec", "ternary");
+    let codec = make_codec(&codec_spec)?;
     let use_tng = s.bool_or("tng", true)?;
     let anchor = s.usize_or("anchor_every", 64)?;
     let ref_score = match s.str_or("ref_score", "cnz").as_str() {
@@ -65,14 +74,34 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
     let downlink = match s.raw("down") {
         None | Some("") | Some("off") => None,
         Some(spec) => {
-            // Parse-check now so a typo'd spec fails at the CLI, not rounds
-            // later inside a worker process.
-            make_codec(spec).with_context(|| format!("down={spec}"))?;
-            Some(crate::downlink::DownlinkSpec {
+            let dl = crate::downlink::DownlinkSpec {
                 codec: spec.to_string(),
                 ef: s.bool_or("down_ef", true)?,
-            })
+            };
+            // Parse-check now (shared LinkSpec parser) so a typo'd spec
+            // fails at the CLI, not rounds later inside a worker process.
+            dl.validate("down")?;
+            Some(dl)
         }
+    };
+    // Hierarchical aggregation: groups=1 IS the flat star (no topology),
+    // so a degenerate tree cannot perturb a byte of an existing config.
+    // The tier keys are still parse-checked whenever present — a typo'd
+    // up= spec (or up_ef=) fails at setup even in a flat sweep cell, the
+    // same fail-at-the-CLI contract down= has.
+    let up = crate::link::LinkSpec {
+        codec: s.raw("up").unwrap_or(codec_spec.as_str()).to_string(),
+        ef: s.bool_or("up_ef", true)?,
+    };
+    if s.raw("up").is_some() {
+        // The default (the codec= spec) was already proven valid by
+        // make_codec above, so only an explicit up= needs the parse-check.
+        up.validate("up")?;
+    }
+    let topology = match s.usize_or("groups", 1)? {
+        0 => bail!("groups must be >= 1 (1 = flat star)"),
+        1 => None,
+        g => Some(crate::link::TreeTopology { groups: g, up }),
     };
     let cfg = DriverConfig {
         seed: s.u64_or("seed", 0)?,
@@ -108,10 +137,16 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
         // the cluster pool leans on the per-round C_nz search instead.
         warm_start_reference: false,
         downlink,
+        topology,
         ..Default::default()
     };
+    if let Some(t) = &cfg.topology {
+        if t.groups > cfg.workers {
+            bail!("groups={} exceeds workers={}", t.groups, cfg.workers);
+        }
+    }
     let label = format!(
-        "{}{}{}@M{}",
+        "{}{}{}{}@M{}",
         if use_tng { "TN-" } else { "" },
         codec.name(),
         match &cfg.downlink {
@@ -119,6 +154,15 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
                 "+down:{}{}",
                 dl.codec,
                 if dl.ef { "" } else { "(no-ef)" }
+            ),
+            None => String::new(),
+        },
+        match &cfg.topology {
+            Some(t) => format!(
+                "+tree:g{}:up:{}{}",
+                t.groups,
+                t.up.codec,
+                if t.up.ef { "" } else { "(no-ef)" }
             ),
             None => String::new(),
         },
@@ -209,6 +253,7 @@ pub fn clone_cfg(c: &DriverConfig) -> DriverConfig {
         w0: c.w0.clone(),
         warm_start_reference: c.warm_start_reference,
         downlink: c.downlink.clone(),
+        topology: c.topology.clone(),
     }
 }
 
@@ -302,6 +347,56 @@ mod tests {
         // A typo'd spec fails at setup, not mid-run.
         let s = Settings::from_args(&["n=32", "dim=8", "down=wat"]).unwrap();
         assert!(cluster_setup(&s).is_err());
+    }
+
+    #[test]
+    fn cluster_setup_parses_topology_keys() {
+        // groups=1 and absent are the flat star: no topology at all.
+        let s = Settings::from_args(&["n=32", "dim=8", "groups=1"]).unwrap();
+        assert!(cluster_setup(&s).unwrap().2.topology.is_none());
+        let s = Settings::from_args(&["n=32", "dim=8"]).unwrap();
+        assert!(cluster_setup(&s).unwrap().2.topology.is_none());
+        // groups>=2 builds the tree; up= defaults to the codec= spec.
+        let s = Settings::from_args(&["n=32", "dim=8", "groups=2", "codec=qsgd:4"]).unwrap();
+        let (_, _, cfg, label) = cluster_setup(&s).unwrap();
+        let t = cfg.topology.expect("groups=2 must configure the tree");
+        assert_eq!(t.groups, 2);
+        assert_eq!(t.up.codec, "qsgd:4");
+        assert!(t.up.ef, "tier EF defaults on");
+        assert!(label.contains("+tree:g2:up:qsgd:4"), "{label}");
+        // Explicit up= / up_ef= override.
+        let s = Settings::from_args(&[
+            "n=32",
+            "dim=8",
+            "groups=2",
+            "up=entropy:ternary",
+            "up_ef=false",
+        ])
+        .unwrap();
+        let (_, _, cfg, label) = cluster_setup(&s).unwrap();
+        let t = cfg.topology.unwrap();
+        assert_eq!(t.up.codec, "entropy:ternary");
+        assert!(!t.up.ef);
+        assert!(label.contains("(no-ef)"), "{label}");
+        // Bad values fail at setup, not mid-run.
+        let s = Settings::from_args(&["n=32", "dim=8", "groups=0"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
+        // ...including a typo'd up= in a flat (groups=1) sweep cell, which
+        // would otherwise surface only when a tree cell finally runs.
+        let s = Settings::from_args(&["n=32", "dim=8", "groups=1", "up=wat"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
+        let s = Settings::from_args(&["n=32", "dim=8", "up=wat"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
+        let s = Settings::from_args(&["n=32", "dim=8", "groups=2", "up=wat"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
+        let s = Settings::from_args(&["n=32", "dim=8", "groups=9", "workers=4"]).unwrap();
+        // (`unwrap_err` would need the whole setup tuple to be Debug.)
+        let Err(err) = cluster_setup(&s) else { panic!("groups>workers must fail") };
+        assert!(err.to_string().contains("exceeds workers"), "{err}");
+        // The tree config passes transport validation as-is.
+        let s = Settings::from_args(&["n=32", "dim=8", "groups=2", "workers=4"]).unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        crate::coordinator::parallel::validate(&cfg).unwrap();
     }
 
     #[test]

@@ -11,6 +11,12 @@
 //! 10 / 1 — see [`LinkModel::asymmetric`]): fan-in of the measured uplink
 //! frames plus broadcast of the measured downlink frame, which is where
 //! the server-count sensitivity meets real bandwidth.
+//!
+//! With `groups=<g>` (>= 2) the sweep runs hierarchical two-level
+//! aggregation (`crate::link::tree`; g is clamped to the cell's server
+//! count) and the modeled sync uses [`LinkModel::tree_round_time`] on the
+//! measured per-hop frames — max over the parallel group fan-ins, plus the
+//! root's g-frame fan-in, plus the broadcast.
 
 use anyhow::Result;
 
@@ -37,6 +43,8 @@ pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
     let up_gbps = settings.f64_or("up_gbps", 10.0)?;
     let down_gbps = settings.f64_or("down_gbps", 1.0)?;
     let link = LinkModel::asymmetric(100e-6, up_gbps * 1e9 / 8.0, down_gbps * 1e9 / 8.0);
+    // Hierarchical aggregation knob (1 = flat star).
+    let groups = settings.usize_or("groups", 1)?;
 
     let ds = generate(&SkewConfig { n, dim, c_sk, c_th: 0.6, seed });
     let obj = LogReg::new(ds, lambda);
@@ -46,20 +54,30 @@ pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
     let mut summary = Vec::new();
     for (i, &m) in servers.iter().enumerate() {
         for (j, &k) in memories.iter().enumerate() {
-            let base = DriverConfig {
-                seed,
-                workers: m,
-                rounds,
-                batch: 8,
-                schedule: StepSchedule::Const(eta),
-                lbfgs_memory: Some(k),
-                record_every: if quick { 10 } else { 20 },
-                f_star,
-                ..Default::default()
-            };
             // TG and TN-TG only (the paper's Figure-4 pair).
             for method in paper_methods().into_iter().filter(|m| m.label.ends_with("TG")) {
-                let label = format!("i{i}j{j}-M{m}-K{k}-{}", method.label);
+                // Tree topology per cell: the tier's link reuses the
+                // method's codec spec; g clamps to the cell's servers.
+                let g_eff = groups.min(m);
+                let topology = (g_eff >= 2)
+                    .then(|| crate::link::TreeTopology::new(g_eff, method.codec_spec.clone()));
+                let base = DriverConfig {
+                    seed,
+                    workers: m,
+                    rounds,
+                    batch: 8,
+                    schedule: StepSchedule::Const(eta),
+                    lbfgs_memory: Some(k),
+                    record_every: if quick { 10 } else { 20 },
+                    f_star,
+                    topology: topology.clone(),
+                    ..Default::default()
+                };
+                let label = format!(
+                    "i{i}j{j}-M{m}-K{k}{}-{}",
+                    if g_eff >= 2 { format!("-g{g_eff}") } else { String::new() },
+                    method.label
+                );
                 let tr = run_method(&obj, &method, &base, &label)?;
                 println!("{}", summarize(&tr));
                 // Modeled sync time per round from the measured wire bytes:
@@ -69,7 +87,22 @@ pub fn run(settings: &Settings) -> Result<Vec<(String, f64)>> {
                     (tr.total_wire_up_bytes as f64 / (rounds * m) as f64) as usize;
                 let down_frame =
                     (tr.total_wire_down_bytes as f64 / (rounds * m) as f64) as usize;
-                let sync_us = link.round_time(&vec![up_frame; m], down_frame) * 1e6;
+                let sync_us = if let Some(t) = &topology {
+                    // Tree: parallel group fan-ins gate tier 1, then the
+                    // root's g partial frames, then the broadcast.
+                    let partial_frame = (tr.total_wire_partial_bytes as f64
+                        / (rounds * t.groups) as f64)
+                        as usize;
+                    let fan_ins: Vec<Vec<usize>> =
+                        crate::link::tree::group_sizes(m, t.groups)
+                            .into_iter()
+                            .map(|sz| vec![up_frame; sz])
+                            .collect();
+                    let root_in = vec![partial_frame; t.groups];
+                    link.tree_round_time(&fan_ins, &root_in, m, down_frame) * 1e6
+                } else {
+                    link.round_time(&vec![up_frame; m], down_frame) * 1e6
+                };
                 println!(
                     "    modeled sync {sync_us:.1} us/round \
                      (up {up_gbps} Gbps x {up_frame} B, down {down_gbps} Gbps x {down_frame} B/worker)"
@@ -102,5 +135,22 @@ mod tests {
         assert_eq!(rows.len(), 8);
         assert!(rows.iter().all(|(_, v)| v.is_finite()));
         std::fs::remove_dir_all("/tmp/tng_fig4_test").ok();
+    }
+
+    #[test]
+    fn quick_grid_runs_hierarchically_with_groups() {
+        let s = Settings::from_args(&[
+            "quick=true",
+            "rounds=60",
+            "n=128",
+            "dim=32",
+            "groups=2",
+            "outdir=/tmp/tng_fig4_tree_test",
+        ])
+        .unwrap();
+        let rows = run(&s).unwrap();
+        assert_eq!(rows.len(), 8);
+        assert!(rows.iter().all(|(l, v)| v.is_finite() && l.contains("-g2-")));
+        std::fs::remove_dir_all("/tmp/tng_fig4_tree_test").ok();
     }
 }

@@ -47,6 +47,7 @@ pub mod coordinator;
 pub mod data;
 pub mod downlink;
 pub mod experiments;
+pub mod link;
 pub mod objectives;
 pub mod optim;
 #[cfg(feature = "xla")]

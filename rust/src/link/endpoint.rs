@@ -1,0 +1,313 @@
+//! The compressed-link endpoint pair: [`LinkSender`], [`LinkReceiver`],
+//! and the shared [`LinkState`] error-feedback arithmetic both ends run
+//! (see the module docs of [`super`] for the recursion, the damping
+//! rationale, and the determinism contract).
+//!
+//! All buffers are allocated once at construction and reused: steady-state
+//! `compress` / `encode_against` / `decode_against` calls perform zero
+//! heap allocation (enforced through the downlink veneer by
+//! `rust/tests/alloc.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::codec::{Codec, CodecScratch, Encoded};
+use crate::tng::{CnzSelector, Normalization, RefScore, Tng};
+use crate::util::Rng;
+
+use super::EF_DAMPING;
+
+/// One end's replica of a tracked link's state: the shared EF reference h
+/// and the reconstruction buffers. Allocation-free after construction.
+///
+/// This is the **single implementation** of the reconstruction arithmetic
+/// in the crate: the sender reconstructs through the identical wire
+/// payload it emits, so the two ends literally run the same operations in
+/// the same order — the leader/worker bit-identity is structural, not
+/// merely tested.
+pub struct LinkState {
+    ef: bool,
+    /// Shared EF reference h (zeros forever when `ef` is off).
+    reference: Vec<f32>,
+    /// Decoded residual q for the current frame.
+    q: Vec<f32>,
+    vhat: Vec<f32>,
+}
+
+impl LinkState {
+    /// `ef` must mirror the cluster-wide setting for this link (it is part
+    /// of the shared config contract, like `rounds=` or `codec=`).
+    pub fn new(dim: usize, ef: bool) -> Self {
+        LinkState {
+            ef,
+            reference: vec![0.0; dim],
+            q: vec![0.0; dim],
+            vhat: vec![0.0; dim],
+        }
+    }
+
+    /// Reconstruct v̂ = h + decode(enc) from one link payload and advance
+    /// the reference (h += α·decode(enc) under EF). The returned slice is
+    /// the vector to apply to the local replica this round.
+    ///
+    /// `enc` is remotely controlled: a frame whose dimension disagrees with
+    /// the configured model is a config mismatch surfaced as an error, never
+    /// an out-of-bounds panic (the wire parser has already bounded the
+    /// allocation).
+    pub fn apply(&mut self, enc: &Encoded) -> Result<&[f32]> {
+        if enc.dim != self.reference.len() {
+            bail!(
+                "compressed aggregate has dim {} but this worker's model has dim {} \
+                 — config mismatch",
+                enc.dim,
+                self.reference.len()
+            );
+        }
+        enc.decode_into(&mut self.q);
+        for (o, (&h, &qi)) in self.vhat.iter_mut().zip(self.reference.iter().zip(&self.q)) {
+            *o = h + qi;
+        }
+        if self.ef {
+            for (h, &qi) in self.reference.iter_mut().zip(&self.q) {
+                *h += EF_DAMPING * qi;
+            }
+        }
+        Ok(&self.vhat)
+    }
+
+    /// The current shared reference h (diagnostic).
+    pub fn reference(&self) -> &[f32] {
+        &self.reference
+    }
+}
+
+/// The sender endpoint of one compressed link: a normalizer over any
+/// codec, a reusable scratch arena, and — for **tracked** links — the EF
+/// state plus a dedicated RNG stream. See [`super`] for the three forms
+/// (streaming uplink, tracked downlink/tier, decode-only receiver).
+pub struct LinkSender<C: Codec> {
+    tng: Tng<C>,
+    /// Owned RNG stream (`Some` iff the link is tracked; streaming links
+    /// draw from the caller's stream per call).
+    rng: Option<Rng>,
+    state: LinkState,
+    scratch: CodecScratch,
+}
+
+impl<C: Codec> LinkSender<C> {
+    /// A **tracked** link sender: owns the damped EF reference for
+    /// dimension `dim` and the dedicated RNG stream `rng`. Normalization
+    /// is always the subtractive form (the tracking recursion is defined
+    /// on residuals).
+    pub fn tracked(codec: C, dim: usize, ef: bool, rng: Rng) -> Self {
+        let mut scratch = CodecScratch::new();
+        scratch.warm(dim);
+        LinkSender {
+            tng: Tng::new(codec),
+            rng: Some(rng),
+            state: LinkState::new(dim, ef),
+            scratch,
+        }
+    }
+
+    /// A **streaming** link sender (the uplink form): the reference lives
+    /// outside the link (e.g. the §3.1 selector pool) and randomness in
+    /// the caller's stream, so both are supplied per call.
+    pub fn streaming(codec: C, mode: Normalization, dim: usize) -> Self {
+        let mut scratch = CodecScratch::new();
+        scratch.warm(dim);
+        LinkSender {
+            tng: Tng::with_mode(codec, mode),
+            rng: None,
+            state: LinkState::new(0, false),
+            scratch,
+        }
+    }
+
+    /// Compress one round's target `v` through a tracked link. Returns the
+    /// encoded payload (frame it with the appropriate `protocol::Msg`
+    /// constructor) and the reconstruction v̂ — the vector the sender must
+    /// apply locally so its replica matches every receiver's bit for bit.
+    ///
+    /// Per the EF recursion: encodes `Q[v − h]`, then runs the receiver-side
+    /// [`LinkState::apply`] on its own payload (v̂ = h + decode(·),
+    /// h += α·decode(·); h frozen at zero with EF off, which degrades to
+    /// memoryless quantization of `v`).
+    pub fn compress(&mut self, v: &[f32]) -> (&Encoded, &[f32]) {
+        let rng = self
+            .rng
+            .as_mut()
+            .expect("compress() needs a tracked link (streaming links encode_against)");
+        assert_eq!(v.len(), self.state.reference.len(), "aggregate dim mismatch");
+        // Q[v − h] into the reusable arena (subtractive TNG normalization
+        // against the tracking reference)...
+        self.tng.encode_into(v, self.state.reference(), rng, &mut self.scratch);
+        // ...then exactly what every receiver runs on the received payload:
+        // the sender reconstructs through the wire message, never through
+        // its exact target. The codec preserves the input dimension, so
+        // the state's dim check cannot fire here.
+        let vhat = self.state.apply(&self.scratch.enc).expect("codec preserves dim");
+        (&self.scratch.enc, vhat)
+    }
+
+    /// Normalize `v` against an external reference `gref` with the
+    /// caller's RNG stream and encode into the link's arena (the uplink
+    /// hot path). The result stays borrowed in the arena — frame it via
+    /// [`LinkSender::encoded`] without cloning.
+    pub fn encode_against(&mut self, v: &[f32], gref: &[f32], rng: &mut Rng) -> &Encoded {
+        self.tng.encode_into(v, gref, rng, &mut self.scratch);
+        &self.scratch.enc
+    }
+
+    /// The last payload produced by [`LinkSender::encode_against`] /
+    /// [`LinkSender::compress`] (borrowed from the arena).
+    pub fn encoded(&self) -> &Encoded {
+        &self.scratch.enc
+    }
+
+    /// Decode a received payload against an external reference into the
+    /// link's arena (the leader-side uplink fold).
+    pub fn decode_against(&mut self, enc: &Encoded, gref: &[f32]) -> &[f32] {
+        self.tng.decode_into(enc, gref, &mut self.scratch.decoded);
+        &self.scratch.decoded
+    }
+
+    /// Decode the arena's own last-encoded payload against `gref` — the
+    /// deterministic driver's fold, which never serializes the frame.
+    pub fn decode_own(&mut self, gref: &[f32]) -> &[f32] {
+        let CodecScratch { enc, decoded, .. } = &mut self.scratch;
+        self.tng.decode_into(enc, gref, decoded);
+        decoded
+    }
+
+    /// Run the §3.1 reference-pool search through this link's normalizer
+    /// and arena — the single scoring entry point shared by the
+    /// deterministic driver and the transport worker loop (the arena's
+    /// contents are scratch afterwards; re-encode the winner).
+    pub fn select_scored(
+        &mut self,
+        selector: &CnzSelector,
+        score: RefScore,
+        g: &[f32],
+        rng: &Rng,
+    ) -> (usize, f64, usize) {
+        selector.select_scored(score, g, &self.tng, rng, &mut self.scratch)
+    }
+
+    /// The current EF reference h of a tracked link (diagnostic; empty for
+    /// streaming links).
+    pub fn reference(&self) -> &[f32] {
+        self.state.reference()
+    }
+}
+
+/// The decode-only receiver endpoint of a tracked link (the worker side
+/// of the downlink): needs no codec and no RNG — every `Encoded` payload
+/// decodes through `Encoded::decode_into` regardless of which codec
+/// produced it, and tracked links are fixed to the subtractive form.
+pub struct LinkReceiver {
+    state: LinkState,
+}
+
+impl LinkReceiver {
+    /// `ef` must mirror the sender's setting (part of the shared config
+    /// contract).
+    pub fn new(dim: usize, ef: bool) -> Self {
+        LinkReceiver { state: LinkState::new(dim, ef) }
+    }
+
+    /// Reconstruct v̂ from one payload and advance the shared reference —
+    /// see [`LinkState::apply`].
+    pub fn apply(&mut self, enc: &Encoded) -> Result<&[f32]> {
+        self.state.apply(enc)
+    }
+
+    /// The current shared reference h (diagnostic).
+    pub fn reference(&self) -> &[f32] {
+        self.state.reference()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::ternary::TernaryCodec;
+    use crate::codec::Payload;
+
+    fn dense(values: Vec<f32>) -> Encoded {
+        let dim = values.len();
+        Encoded { dim, payload: Payload::Dense { values } }
+    }
+
+    #[test]
+    fn state_tracks_damped_reference_across_rounds() {
+        let mut dec = LinkReceiver::new(3, true);
+        let enc = dense(vec![1.0, 2.0, -1.0]);
+        assert_eq!(dec.apply(&enc).unwrap(), &[1.0, 2.0, -1.0]);
+        assert_eq!(dec.reference(), &[0.25, 0.5, -0.25], "h = α·q after round 0");
+        // Second identical residual lands on the damped reference.
+        assert_eq!(dec.apply(&enc).unwrap(), &[1.25, 2.5, -1.25]);
+        assert_eq!(dec.reference(), &[0.5, 1.0, -0.5]);
+    }
+
+    #[test]
+    fn ef_off_never_moves_the_reference() {
+        let mut dec = LinkReceiver::new(2, false);
+        let enc = dense(vec![3.0, -4.0]);
+        assert_eq!(dec.apply(&enc).unwrap(), &[3.0, -4.0]);
+        assert_eq!(dec.apply(&enc).unwrap(), &[3.0, -4.0]);
+        assert_eq!(dec.reference(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn dim_mismatch_is_an_error() {
+        let mut dec = LinkReceiver::new(4, true);
+        let enc = dense(vec![0.0; 3]);
+        let err = dec.apply(&enc).unwrap_err();
+        assert!(err.to_string().contains("config mismatch"), "{err}");
+        // State must be untouched by the rejected frame.
+        assert_eq!(dec.reference(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn tracked_sender_and_receiver_agree_bit_for_bit() {
+        // The structural invariant: a tracked sender's v̂ equals what a
+        // receiver reconstructs from the wire payload alone, round after
+        // round, EF state included.
+        for ef in [true, false] {
+            let mut tx =
+                LinkSender::tracked(TernaryCodec, 48, ef, Rng::new(9).split(123));
+            let mut rx = LinkReceiver::new(48, ef);
+            let mut src = Rng::new(1);
+            for round in 0..12u64 {
+                let v: Vec<f32> = (0..48).map(|_| src.gauss_f32()).collect();
+                let (enc, vhat) = tx.compress(&v);
+                let sender: Vec<u32> = vhat.iter().map(|x| x.to_bits()).collect();
+                let receiver: Vec<u32> =
+                    rx.apply(enc).unwrap().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(sender, receiver, "ef={ef} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_sender_matches_bare_tng() {
+        // encode_against / decode_own are exactly Tng::encode_into /
+        // decode_into through the arena — the uplink refactor changes no
+        // byte and no RNG draw.
+        let mut src = Rng::new(4);
+        let g: Vec<f32> = (0..96).map(|_| src.gauss_f32()).collect();
+        let gref: Vec<f32> = g.iter().map(|x| x * 0.9).collect();
+        let mut link = LinkSender::streaming(TernaryCodec, Normalization::Subtractive, 96);
+        let tng = Tng::new(TernaryCodec);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        let enc = link.encode_against(&g, &gref, &mut r1).clone();
+        assert_eq!(enc, tng.encode(&g, &gref, &mut r2));
+        // The RNG streams advanced identically.
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        let want = tng.decode(&enc, &gref);
+        assert_eq!(link.decode_own(&gref), &want[..]);
+        assert_eq!(link.decode_against(&enc, &gref), &want[..]);
+        assert!(link.reference().is_empty(), "streaming links hold no EF state");
+    }
+}

@@ -1,0 +1,146 @@
+//! The **compressed link** subsystem: one primitive for every compressed
+//! direction of the protocol.
+//!
+//! The paper's TNG mechanism is direction-agnostic — all ends share a
+//! reference and communicate via normalized, compressed residuals — yet
+//! through PR 4 the repo implemented it twice: once for the worker→leader
+//! uplink (`tng` + the coordinator loops) and once, with its own EF state
+//! and glue, for the leader→worker downlink (`crate::downlink`). This
+//! module unifies both (EF21-P & friends treat them as instances of one
+//! compressed-link primitive) and adds the third instance that makes
+//! aggregation trees possible: the **group→root tier** of hierarchical
+//! two-level aggregation ([`tree`]).
+//!
+//! # The endpoint pair
+//!
+//! A link is a [`LinkSender`] / [`LinkReceiver`] pair. The sender owns a
+//! normalizer ([`crate::tng::Tng`] over any codec), a scratch arena, and —
+//! for *tracked* links — the damped error-feedback state plus a dedicated
+//! RNG stream. Both ends run the identical [`LinkState`] arithmetic, so
+//! their reconstructions agree bit for bit (the sender literally feeds its
+//! own wire payload through the receiver-side state machine).
+//!
+//! Three link forms, one type:
+//!
+//! * **streaming** ([`LinkSender::streaming`]) — reference and RNG are
+//!   supplied per call: the worker uplink, where the reference lives in
+//!   the §3.1 selector pool and randomness in the worker's stream;
+//! * **tracked** ([`LinkSender::tracked`]) — the link owns its EF
+//!   reference `h` and RNG stream: the leader downlink
+//!   (`crate::downlink` is now a thin veneer over this) and each group's
+//!   group→root link in a [`tree::TreeAggregator`];
+//! * **receiver** ([`LinkReceiver`]) — decode-only tracked end (the
+//!   worker side of the downlink).
+//!
+//! # The EF recursion (damped tracking)
+//!
+//! With reference `h_t` (zeros at t = 0), damping `α =` [`EF_DAMPING`] and
+//! any codec `Q`:
+//!
+//! ```text
+//! c_t     = Q[v_t − h_t]                    (what crosses the wire)
+//! q_t     = decode(c_t)
+//! v̂_t     = h_t + q_t                       (every replica of the link)
+//! h_{t+1} = h_t + α·q_t                     (the error-feedback state)
+//! ```
+//!
+//! For unbiased `Q`, `E[q_t] = v_t − h_t`, so the reference absorbs both
+//! the trajectory *and* past compression errors. **Why damped (α < 1)
+//! instead of EF21-P's α = 1:** undamped tracking `h ← v̂` is stable only
+//! for contractive compressors — for an expanding unbiased quantizer like
+//! ternary its error-recycle factor exceeds 1 and diverges geometrically.
+//! Damping by `α = 1/4` (DIANA-style) makes the recycle factor
+//! `α·(relative error)`, stable for every codec this crate ships, while
+//! the mean gap still contracts geometrically. With `ef = false` the
+//! reference stays pinned at zero and the link degrades to memoryless
+//! quantization.
+//!
+//! # Determinism contract (RNG stream map)
+//!
+//! Every stochastic encode draws from a stream both runtimes construct
+//! identically from the run seed:
+//!
+//! | stream                         | owner                                 |
+//! |--------------------------------|---------------------------------------|
+//! | `split(0)`                     | leader downlink (`downlink_rng`)      |
+//! | `split(1 + m)`                 | worker `m` (gradient sampling + uplink encode) |
+//! | `split(2^32 + k)`              | group `k`'s group→root link ([`group_up_rng`]) |
+//!
+//! Worker ids are bounded by `u16::MAX`, so the `2^32`-offset group
+//! streams can never collide with worker streams; a unit test pins the
+//! disjointness. Receivers never draw randomness (decode only).
+//!
+//! # Ledger contract
+//!
+//! Each hop of a topology is accounted separately with exact
+//! `protocol::Msg` frame bytes: leaf-up (`Grad` frames, the transport's
+//! `up_bytes`), group-up (`PartialAggregate` frames, counted by the
+//! [`tree::TreeAggregator`] into `Trace::total_wire_partial_bytes`), and
+//! root-down (broadcast frames, `down_bytes`). The deterministic driver
+//! and both transport leaders run the same aggregator, so every hop's
+//! byte totals are identical across runtimes by construction.
+
+pub mod endpoint;
+pub mod tree;
+
+pub use crate::codec::spec::LinkSpec;
+pub use endpoint::{LinkReceiver, LinkSender, LinkState};
+pub use tree::{TreeAggregator, TreeTopology};
+
+use crate::util::Rng;
+
+/// The EF tracking damping α (see the module docs): 1/4 keeps the
+/// error-recycle factor of every shipped codec below 1 (ternary's relative
+/// error ≈ its scale) while the reference gap still contracts by 3/4 per
+/// round in expectation. Exactly representable in f32, so the damped
+/// update is the same bit pattern on every replica.
+pub const EF_DAMPING: f32 = 0.25;
+
+/// Base of the group→root link RNG stream ids: group `k` draws from
+/// `split(GROUP_UP_STREAM_BASE + k)`. Offset by `2^32` so the streams are
+/// structurally disjoint from the leader's stream 0 and the worker
+/// streams `1..=u16::MAX + 1`.
+pub const GROUP_UP_STREAM_BASE: u64 = 1 << 32;
+
+/// The dedicated RNG stream of group `k`'s group→root compressed link
+/// (see the module docs' determinism contract).
+pub fn group_up_rng(seed: u64, group: usize) -> Rng {
+    Rng::new(seed).split(GROUP_UP_STREAM_BASE + group as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_streams_disjoint_from_worker_and_downlink_streams() {
+        let seed = 7;
+        for k in 0..4usize {
+            let mut gk = group_up_rng(seed, k);
+            let g = (gk.next_u64(), gk.next_u64());
+            // Leader downlink stream 0.
+            let mut dl = crate::downlink::downlink_rng(seed);
+            assert_ne!(g, (dl.next_u64(), dl.next_u64()), "group {k} vs downlink");
+            // Worker streams 1 + id.
+            for id in 0..8u64 {
+                let mut wk = Rng::new(seed).split(1 + id);
+                assert_ne!(g, (wk.next_u64(), wk.next_u64()), "group {k} vs worker {id}");
+            }
+            // Other group streams.
+            for other in 0..4usize {
+                if other != k {
+                    let mut go = group_up_rng(seed, other);
+                    assert_ne!(g, (go.next_u64(), go.next_u64()), "group {k} vs {other}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn damping_is_exact_in_f32() {
+        // A power of two: h += α·q multiplies mantissas exactly, so the
+        // replicas' f32 agreement does not hinge on rounding luck.
+        assert_eq!(EF_DAMPING, 0.25);
+        assert_eq!(EF_DAMPING.to_bits() & 0x007F_FFFF, 0, "mantissa must be zero");
+    }
+}

@@ -1,0 +1,291 @@
+//! Hierarchical (two-level) compressed aggregation: the group→root tier.
+//!
+//! At M workers a flat star's leader fan-in is M frames per round — the
+//! bottleneck no codec can fix. With `groups = g` the workers are
+//! partitioned into g contiguous groups; each **group leader** decodes its
+//! members' uplink frames, aggregates the partial, and re-normalizes /
+//! re-encodes it up its own **tracked compressed link**
+//! ([`super::LinkSender`], damped EF per group, dedicated RNG stream
+//! [`super::group_up_rng`]) to the root as a `Msg::PartialAggregate`
+//! frame. The root decodes the g partials, sums the reconstructions into
+//! the round aggregate, and its broadcast fans back down through the
+//! group leaders unchanged (one shared quantization — re-encoding per
+//! group would hand different replicas different iterates).
+//!
+//! In the shipped runtimes the group-leader stage is **co-located with
+//! the root process** (the star fabrics carry leaf frames to the leader,
+//! which hosts every group leader), so the hot path never serializes the
+//! `PartialAggregate` frames: the per-hop ledger charges their exact
+//! framed length (`PAGG_OVERHEAD_BYTES + wire::frame_len`, the identity
+//! the protocol layout test pins against
+//! `Msg::partial_aggregate_frame`) — the bytes that would cross the
+//! group→root links of a multi-host tree — into
+//! `Trace::total_wire_partial_bytes` / CSV `topo_bpe`, never into the
+//! leaf-up/root-down ledgers. The deterministic
+//! driver and both transport leaders run this same [`TreeAggregator`], so
+//! every hop's frames — and therefore `param_digest` — are identical
+//! across driver, channel, and TCP by construction.
+//!
+//! `groups = 1` is **the flat star**, not a one-group tree: config
+//! normalization (`cluster_setup`) maps it to `topology: None`, so a
+//! degenerate tree is bit-for-bit the unrefactored path (pinned by
+//! `rust/tests/hierarchy.rs`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::codec::spec::{make_codec, LinkSpec};
+use crate::codec::{wire, Codec};
+use crate::coordinator::protocol::PAGG_OVERHEAD_BYTES;
+use crate::util::math;
+
+use super::{group_up_rng, LinkSender};
+
+/// Two-level aggregation topology: `groups` worker groups (>= 2), each
+/// with a compressed group→root link of spec `up`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TreeTopology {
+    /// Number of worker groups (the root's tree fan-in).
+    pub groups: usize,
+    /// The group→root link: codec spec + EF flag (`up=` / `up_ef=`).
+    pub up: LinkSpec,
+}
+
+impl TreeTopology {
+    /// A tree with EF-tracked group links of codec `up_spec`.
+    pub fn new(groups: usize, up_spec: impl Into<String>) -> Self {
+        TreeTopology { groups, up: LinkSpec::new(up_spec) }
+    }
+}
+
+/// Balanced contiguous group sizes: the first `workers % groups` groups
+/// take one extra worker (the `data::shard_indices` convention).
+pub fn group_sizes(workers: usize, groups: usize) -> Vec<usize> {
+    assert!(groups > 0);
+    let base = workers / groups;
+    let extra = workers % groups;
+    (0..groups).map(|k| base + usize::from(k < extra)).collect()
+}
+
+/// Contiguous assignment: `assignment(m, g)[w]` is worker w's group.
+pub fn assignment(workers: usize, groups: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(workers);
+    for (k, len) in group_sizes(workers, groups).into_iter().enumerate() {
+        for _ in 0..len {
+            out.push(k);
+        }
+    }
+    out
+}
+
+/// The leader-side state machine of the group tier: one tracked
+/// [`LinkSender`] per group, the per-group partial buffers, and the
+/// group-up wire ledger. One instance per run; both the deterministic
+/// driver and the transport leader loop drive it with the identical call
+/// sequence, which is what keeps every runtime's frames byte-identical.
+pub struct TreeAggregator {
+    /// Worker → group (contiguous blocks).
+    assign: Vec<usize>,
+    /// 1/M — the same fold scale the flat star applies per contribution.
+    inv_m: f32,
+    links: Vec<LinkSender<Box<dyn Codec>>>,
+    partials: Vec<Vec<f32>>,
+    /// Cumulative `Msg::PartialAggregate` frame bytes (the root's tree
+    /// fan-in — the per-hop ledger `Trace::total_wire_partial_bytes`).
+    wire_bytes: u64,
+}
+
+impl TreeAggregator {
+    /// Build the group tier for one run. Validates the topology bounds and
+    /// parses the `up=` spec once per group link; group k's stochastic
+    /// encodes draw from [`super::group_up_rng`]`(seed, k)`.
+    pub fn new(spec: &TreeTopology, workers: usize, dim: usize, seed: u64) -> Result<Self> {
+        let g = spec.groups;
+        if g < 2 {
+            bail!("tree topology needs groups >= 2 (groups=1 is the flat star)");
+        }
+        if g > workers {
+            bail!("groups={g} exceeds workers={workers}");
+        }
+        let links = (0..g)
+            .map(|k| {
+                let codec = make_codec(&spec.up.codec)
+                    .with_context(|| format!("invalid up= codec spec '{}'", spec.up.codec))?;
+                Ok(LinkSender::tracked(codec, dim, spec.up.ef, group_up_rng(seed, k)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TreeAggregator {
+            assign: assignment(workers, g),
+            inv_m: 1.0 / workers as f32,
+            links,
+            partials: (0..g).map(|_| vec![0.0f32; dim]).collect(),
+            wire_bytes: 0,
+        })
+    }
+
+    pub fn groups(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Zero the partial buffers for a new round.
+    pub fn begin_round(&mut self) {
+        for p in self.partials.iter_mut() {
+            p.fill(0.0);
+        }
+    }
+
+    /// Fold worker `worker`'s decoded contribution into its group's
+    /// partial — the same `+= contribution / M` the flat star applies
+    /// directly to the round aggregate.
+    pub fn accumulate(&mut self, worker: usize, contribution: &[f32]) {
+        math::axpy(self.inv_m, contribution, &mut self.partials[self.assign[worker]]);
+    }
+
+    /// Close the round: push every group's partial through its compressed
+    /// link (in group order — determinism), sum the reconstructions into
+    /// `v_avg`, and charge the exact `Msg::PartialAggregate` frame bytes
+    /// to the group-up ledger. Returns this round's group-up bytes.
+    pub fn finish_round(&mut self, v_avg: &mut [f32]) -> u64 {
+        let TreeAggregator { links, partials, .. } = self;
+        let mut bytes = 0u64;
+        for (link, partial) in links.iter_mut().zip(partials.iter()) {
+            let (enc, vhat) = link.compress(partial);
+            // Exactly `Msg::partial_aggregate_frame(..).len()` — pinned by
+            // a protocol test so the ledger counts real frames.
+            bytes += (PAGG_OVERHEAD_BYTES + wire::frame_len(enc)) as u64;
+            for (o, &x) in v_avg.iter_mut().zip(vhat) {
+                *o += x;
+            }
+        }
+        self.wire_bytes += bytes;
+        bytes
+    }
+
+    /// Cumulative group-up wire bytes across the run.
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.wire_bytes
+    }
+
+    /// One frame's worth of payload from group `k`'s link arena, framed —
+    /// test/diagnostic surface for pinning the ledger against real frames.
+    pub fn frame(&self, k: usize, round: u32) -> Vec<u8> {
+        crate::coordinator::protocol::Msg::partial_aggregate_frame(
+            k as u16,
+            round,
+            self.links[k].encoded(),
+        )
+    }
+
+    /// Group `k`'s current EF reference (diagnostic).
+    pub fn reference(&self, k: usize) -> &[f32] {
+        self.links[k].reference()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn assignment_is_contiguous_balanced_and_total() {
+        for (m, g) in [(4, 2), (5, 2), (7, 3), (8, 8), (9, 4), (16, 5)] {
+            let sizes = group_sizes(m, g);
+            assert_eq!(sizes.len(), g);
+            assert_eq!(sizes.iter().sum::<usize>(), m, "m={m} g={g}");
+            let (lo, hi) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(hi - lo <= 1, "m={m} g={g}: sizes {sizes:?} must be balanced");
+            let a = assignment(m, g);
+            assert_eq!(a.len(), m);
+            // Contiguous and non-decreasing.
+            assert!(a.windows(2).all(|w| w[0] <= w[1] && w[1] - w[0] <= 1));
+            assert_eq!(a[0], 0);
+            assert_eq!(*a.last().unwrap(), g - 1);
+        }
+        // groups == workers → singleton groups.
+        assert_eq!(assignment(3, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn new_rejects_degenerate_and_oversized_trees() {
+        let spec = TreeTopology::new(1, "ternary");
+        assert!(TreeAggregator::new(&spec, 4, 8, 0).is_err());
+        let spec = TreeTopology::new(5, "ternary");
+        assert!(TreeAggregator::new(&spec, 4, 8, 0).is_err());
+        // (`unwrap_err` needs `TreeAggregator: Debug`; match instead.)
+        let spec = TreeTopology::new(2, "nope");
+        let Err(err) = TreeAggregator::new(&spec, 4, 8, 0) else {
+            panic!("bad up= spec must not build");
+        };
+        assert!(err.to_string().contains("up= codec spec"), "{err}");
+    }
+
+    #[test]
+    fn fold_is_deterministic_and_ledger_counts_real_frames() {
+        let spec = TreeTopology::new(2, "ternary");
+        let mut src = Rng::new(3);
+        let contribs: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..16).map(|_| src.gauss_f32()).collect()).collect();
+        let run = |rounds: usize| {
+            let mut tr = TreeAggregator::new(&spec, 4, 16, 11).unwrap();
+            let mut v = vec![0.0f32; 16];
+            for _ in 0..rounds {
+                tr.begin_round();
+                v.fill(0.0);
+                for (w, c) in contribs.iter().enumerate() {
+                    tr.accumulate(w, c);
+                }
+                tr.finish_round(&mut v);
+            }
+            (v, tr.total_wire_bytes())
+        };
+        let (va, ba) = run(3);
+        let (vb, bb) = run(3);
+        assert_eq!(va, vb, "tree fold must be deterministic");
+        assert_eq!(ba, bb);
+        // The ledger equals the real framed bytes, frame for frame.
+        let mut tr = TreeAggregator::new(&spec, 4, 16, 11).unwrap();
+        tr.begin_round();
+        let mut v = vec![0.0f32; 16];
+        for (w, c) in contribs.iter().enumerate() {
+            tr.accumulate(w, c);
+        }
+        let round_bytes = tr.finish_round(&mut v);
+        // After finish_round, link 1's arena holds group 1's payload.
+        let f1 = tr.frame(1, 0).len() as u64;
+        // Ternary frames of equal dim have equal length, so round bytes are
+        // exactly groups × framed length.
+        assert_eq!(round_bytes, 2 * f1);
+    }
+
+    #[test]
+    fn ef_tracking_shrinks_repeated_partials() {
+        // The group link is a tracked link: a constant partial is absorbed
+        // by the per-group EF reference exactly like the downlink's.
+        let spec = TreeTopology::new(2, "ternary");
+        let mut tr = TreeAggregator::new(&spec, 2, 32, 5).unwrap();
+        let mut src = Rng::new(8);
+        let c: Vec<f32> = (0..32).map(|_| src.gauss_f32()).collect();
+        let mut v = vec![0.0f32; 32];
+        for _ in 0..200 {
+            tr.begin_round();
+            v.fill(0.0);
+            tr.accumulate(0, &c);
+            tr.accumulate(1, &c);
+            tr.finish_round(&mut v);
+        }
+        // Worker 0 and 1 are singleton groups here; each group's reference
+        // must converge to its partial c/2.
+        for k in 0..2 {
+            for (h, &x) in tr.reference(k).iter().zip(&c) {
+                assert!(
+                    (h - x / 2.0).abs() < 0.1 * (1.0 + x.abs()),
+                    "group {k}: h={h} target={}",
+                    x / 2.0
+                );
+            }
+        }
+    }
+}

@@ -34,9 +34,10 @@ pub enum RefScore {
     /// Measured bytes: encode `g` against every candidate and compare the
     /// resulting wire-frame sizes ([`CnzSelector::select_by_bytes`]).
     /// Only discriminates under content-sensitive wires (`entropy:<inner>`,
-    /// sparse): a fixed-size frame like plain ternary's scores every
-    /// candidate identically, so the search degenerates to the first pool
-    /// entry (see EXPERIMENTS.md §Entropy).
+    /// sparse): when a fixed-size frame like plain ternary's scores every
+    /// candidate identically, the search detects the all-equal sheet and
+    /// falls back to the `C_nz` ratio instead of silently picking pool
+    /// entry 0 (see EXPERIMENTS.md §Entropy).
     MeasuredBytes,
 }
 
@@ -130,6 +131,16 @@ impl CnzSelector {
     /// identical across scoring modes instead of buffering each improving
     /// candidate's message.
     ///
+    /// **Degeneracy fallback:** a fixed-size wire (plain ternary, QSGD —
+    /// anything whose frame length depends only on `dim`) scores every
+    /// candidate identically, so "minimize measured bytes" carries no
+    /// information. Instead of silently picking pool entry 0, an all-equal
+    /// score sheet falls back to the `C_nz` ratio ([`CnzSelector::select`];
+    /// the returned score is then the winning ratio, not a byte count).
+    /// The fallback is a pure function of the trial frame sizes, which are
+    /// identical across the driver, channel, and TCP runtimes, so it can
+    /// never desynchronize them.
+    ///
     /// A `MeanScalar` pool member is scored against its resting reference
     /// (zeros), exactly as [`CnzSelector::select`] scores it.
     pub fn select_by_bytes<C: Codec>(
@@ -140,13 +151,22 @@ impl CnzSelector {
         scratch: &mut CodecScratch,
     ) -> (usize, f64, usize) {
         let mut best = (0usize, f64::INFINITY);
+        let mut first_bytes = None;
+        let mut all_equal = true;
         for (i, m) in self.pool.iter().enumerate() {
             let mut trial_rng = rng.clone();
             tng.encode_into(g, m.current(), &mut trial_rng, scratch);
             let bytes = wire::frame_len(&scratch.enc) as f64;
+            match first_bytes {
+                None => first_bytes = Some(bytes),
+                Some(b) => all_equal &= b == bytes,
+            }
             if bytes < best.1 {
                 best = (i, bytes);
             }
+        }
+        if all_equal && self.pool.len() > 1 {
+            return self.select(g);
         }
         (best.0, best.1, self.signal_bits())
     }
@@ -273,6 +293,42 @@ mod tests {
         // and the caller's stream was never advanced (clone-only trials).
         let (idx2, bytes2, _) = sel.select_by_bytes(&g, &tng, &Rng::new(9), &mut scratch);
         assert_eq!((idx, bytes), (idx2, bytes2));
+    }
+
+    #[test]
+    fn select_by_bytes_falls_back_to_ratio_on_fixed_size_frames() {
+        use crate::codec::ternary::TernaryCodec;
+        // Plain ternary frames depend only on dim: every candidate scores
+        // the same byte count, and the old behaviour silently picked pool
+        // entry 0. The fallback must hand the decision to the C_nz ratio,
+        // which clearly prefers the trajectory-close reference here.
+        let dim = 64;
+        let mut rng = Rng::new(5);
+        let g: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+        let zeros = ReferenceManager::new(ReferenceKind::Zeros, dim);
+        let mut avg = ReferenceManager::new(ReferenceKind::AvgDecoded { window: 1 }, dim);
+        let w = vec![0.0f32; dim];
+        avg.end_round(&RoundCtx {
+            round: 0,
+            decoded_avg: &g,
+            w_prev: &w,
+            w_next: &w,
+            eta: 0.1,
+            full_grad: None,
+        });
+        let sel = CnzSelector::new(vec![zeros, avg]);
+        let tng = Tng::new(TernaryCodec);
+        let mut scratch = CodecScratch::new();
+        let (idx, score, bits) = sel.select_by_bytes(&g, &tng, &Rng::new(9), &mut scratch);
+        let (want_idx, want_ratio, want_bits) = sel.select(&g);
+        assert_eq!(idx, want_idx, "fallback must agree with the ratio search");
+        assert_eq!(idx, 1, "the trajectory-close reference must win");
+        assert_eq!(bits, want_bits);
+        assert!((score - want_ratio).abs() < 1e-12, "score is the ratio under fallback");
+        // Single-entry pools stay trivially at index 0 either way.
+        let lone = CnzSelector::new(vec![ReferenceManager::new(ReferenceKind::Zeros, dim)]);
+        let (idx, _, bits) = lone.select_by_bytes(&g, &tng, &Rng::new(9), &mut scratch);
+        assert_eq!((idx, bits), (0, 0));
     }
 
     #[test]

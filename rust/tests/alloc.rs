@@ -112,4 +112,32 @@ fn steady_state_rounds_allocate_nothing() {
             "downlink {spec}: compress must not allocate in the steady state"
         );
     }
+
+    // The tree aggregator's group tier: accumulate folds into the reused
+    // partial buffers and finish_round compresses through the per-group
+    // tracked link arenas — whole steady-state rounds must not allocate.
+    use tng::link::{TreeAggregator, TreeTopology};
+    let mut tree = TreeAggregator::new(&TreeTopology::new(2, "ternary"), 4, d, 7)
+        .expect("topology");
+    let mut v_avg = vec![0.0f32; d];
+    let tree_round = |tree: &mut TreeAggregator, v_avg: &mut [f32]| {
+        tree.begin_round();
+        v_avg.fill(0.0);
+        for w in 0..4 {
+            tree.accumulate(w, &v);
+        }
+        tree.finish_round(v_avg)
+    };
+    for _ in 0..4 {
+        tree_round(&mut tree, &mut v_avg);
+    }
+    let before = alloc_count();
+    for _ in 0..25 {
+        std::hint::black_box(tree_round(&mut tree, &mut v_avg));
+    }
+    assert_eq!(
+        alloc_count() - before,
+        0,
+        "tree aggregator: steady-state rounds must not allocate"
+    );
 }

@@ -1,0 +1,204 @@
+//! Hierarchical (two-level) aggregation integration tests.
+//!
+//! The two load-bearing properties of `crate::link::tree`:
+//!
+//! 1. **Degeneracy** — `groups=1` *is* the flat star: across the
+//!    golden-trace codec matrix (plain, sharded, entropy, with and
+//!    without downlink compression), a `groups=1` config is digest- and
+//!    wire-byte-identical to the same config without the key, because
+//!    config normalization maps it to no topology at all.
+//! 2. **Tree equivalence + root shrink** — for real trees (`groups>=2`)
+//!    the deterministic driver and the threaded channel runtime agree on
+//!    the trajectory and on every per-hop ledger, and the root's
+//!    per-round uplink bytes shrink by ~g/M versus the flat star at
+//!    matched worker count.
+
+use tng::codec::ternary::TernaryCodec;
+use tng::config::Settings;
+use tng::coordinator::{driver, parallel, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::experiments::common;
+use tng::link::TreeTopology;
+use tng::objectives::logreg::LogReg;
+use tng::optim::StepSchedule;
+use tng::tng::ReferenceKind;
+
+fn logreg() -> LogReg {
+    let ds = generate(&SkewConfig { n: 96, dim: 24, seed: 7, ..Default::default() });
+    LogReg::new(ds, 0.05)
+}
+
+fn base_cfg(seed: u64) -> DriverConfig {
+    DriverConfig {
+        seed,
+        rounds: 25,
+        workers: 4,
+        batch: 4,
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 2 }],
+        record_every: 5,
+        ..Default::default()
+    }
+}
+
+/// Property: `groups=1` through the whole settings surface is bit-for-bit
+/// the flat star — identical config, digest, and wire totals — over the
+/// golden-trace matrix of codec/downlink specs.
+#[test]
+fn groups_one_is_identical_to_flat_star_across_matrix() {
+    let matrix: [&[&str]; 4] = [
+        &["codec=ternary"],
+        &["codec=shard:2:qsgd:4"],
+        &["codec=entropy:ternary", "ref_score=bytes"],
+        &["codec=ternary", "down=entropy:ternary"],
+    ];
+    for extra in matrix {
+        let shared = ["n=64", "dim=16", "workers=3", "rounds=12", "record_every=4"];
+        let flat_args: Vec<&str> = shared.iter().chain(extra.iter()).copied().collect();
+        let mut tree_args = flat_args.clone();
+        tree_args.push("groups=1");
+        let sf = Settings::from_args(&flat_args).unwrap();
+        let st = Settings::from_args(&tree_args).unwrap();
+        let (obj_f, codec_f, cfg_f, label_f) = common::cluster_setup(&sf).unwrap();
+        let (obj_t, codec_t, cfg_t, label_t) = common::cluster_setup(&st).unwrap();
+        assert!(cfg_t.topology.is_none(), "{extra:?}: groups=1 must normalize away");
+        assert_eq!(label_f, label_t, "{extra:?}: labels must not diverge");
+        let a = driver::run(&obj_f, codec_f.as_ref(), &label_f, &cfg_f);
+        let b = driver::run(&obj_t, codec_t.as_ref(), &label_t, &cfg_t);
+        assert_eq!(a.param_digest(), b.param_digest(), "{extra:?}: digest");
+        assert_eq!(a.final_w, b.final_w, "{extra:?}: iterates");
+        assert_eq!(
+            (a.total_wire_up_bytes, a.total_wire_down_bytes, a.total_wire_partial_bytes),
+            (b.total_wire_up_bytes, b.total_wire_down_bytes, b.total_wire_partial_bytes),
+            "{extra:?}: wire totals"
+        );
+        assert_eq!(b.total_wire_partial_bytes, 0, "{extra:?}: no group hop on flat");
+        // And through the threaded runtime too.
+        let pa = parallel::run(&obj_f, codec_f.as_ref(), "pf", &cfg_f).unwrap();
+        let pb = parallel::run(&obj_t, codec_t.as_ref(), "pt", &cfg_t).unwrap();
+        assert_eq!(pa.param_digest(), pb.param_digest(), "{extra:?}: threaded digest");
+        assert_eq!(pa.param_digest(), a.param_digest(), "{extra:?}: driver==threaded");
+    }
+}
+
+/// Real trees across the codec matrix: driver ≡ channel on the iterate and
+/// on all three per-hop ledgers, for 2 and 3 groups, plain and entropy
+/// tier links, EF on and off, composed with downlink compression.
+#[test]
+fn tree_driver_matches_channel_across_matrix() {
+    use tng::link::LinkSpec;
+    let obj = logreg();
+    let cases: [(usize, &str, bool, Option<&str>); 4] = [
+        (2, "ternary", true, None),
+        (3, "entropy:ternary", true, None),
+        (2, "qsgd:4", false, None),
+        (2, "ternary", true, Some("entropy:ternary")),
+    ];
+    for (groups, up, ef, down) in cases {
+        let mut cfg = base_cfg(3);
+        cfg.topology = Some(TreeTopology {
+            groups,
+            up: LinkSpec { codec: up.into(), ef },
+        });
+        if let Some(d) = down {
+            cfg.downlink = Some(tng::downlink::DownlinkSpec::new(d));
+        }
+        let what = format!("g{groups}/{up}/ef={ef}/down={down:?}");
+        let seq = driver::run(&obj, &TernaryCodec, "seq", &cfg);
+        let par = parallel::run(&obj, &TernaryCodec, "par", &cfg).unwrap();
+        assert_eq!(seq.param_digest(), par.param_digest(), "{what}: digest");
+        assert_eq!(seq.final_w, par.final_w, "{what}: iterates");
+        assert_eq!(seq.total_wire_up_bytes, par.total_wire_up_bytes, "{what}: leaf-up");
+        assert_eq!(
+            seq.total_wire_down_bytes, par.total_wire_down_bytes,
+            "{what}: root-down"
+        );
+        assert_eq!(
+            seq.total_wire_partial_bytes, par.total_wire_partial_bytes,
+            "{what}: group-up"
+        );
+        assert!(seq.total_wire_partial_bytes > 0, "{what}: the tree hop must exist");
+        assert!(seq.final_loss().is_finite(), "{what}: still optimizes");
+    }
+}
+
+/// The acceptance shrink: at matched worker count, the root's per-round
+/// uplink fan-in under `groups=g` is ~g/M of the flat star's (identical
+/// per-frame codec, fewer and equally-sized frames).
+#[test]
+fn tree_root_fan_in_shrinks_by_group_ratio() {
+    let obj = logreg(); // dim = 24
+    for (m, g) in [(4usize, 2usize), (8, 2), (8, 4)] {
+        let mut flat = base_cfg(3);
+        flat.workers = m;
+        let mut tree = base_cfg(3);
+        tree.workers = m;
+        tree.topology = Some(TreeTopology::new(g, "ternary"));
+        let a = driver::run(&obj, &TernaryCodec, "flat", &flat);
+        let b = driver::run(&obj, &TernaryCodec, "tree", &tree);
+        // Per-round frame arithmetic: flat root fan-in = M Grad frames of
+        // 16 + (9 + ceil(24/4)) bytes; tree root fan-in = g PartialAggregate
+        // frames of 11 + (9 + 6) bytes. Compare the measured ledgers
+        // against the exact ratio (plus the flat star's M Bye frames).
+        let rounds = flat.rounds as u64;
+        let grad_frame = 16 + 9 + 6u64;
+        let pagg_frame = 11 + 9 + 6u64;
+        assert_eq!(
+            a.root_fan_in_bytes(),
+            rounds * m as u64 * grad_frame + m as u64 * 11,
+            "M={m}: flat root fan-in"
+        );
+        assert_eq!(
+            b.root_fan_in_bytes(),
+            rounds * g as u64 * pagg_frame,
+            "M={m} g={g}: tree root fan-in"
+        );
+        let ratio = b.root_fan_in_bytes() as f64 / a.root_fan_in_bytes() as f64;
+        let expect = g as f64 / m as f64;
+        assert!(
+            ratio < expect * 1.05 && ratio > expect * 0.6,
+            "M={m} g={g}: root shrink ratio {ratio:.3} should be ~{expect:.3}"
+        );
+    }
+}
+
+/// Exact tier links change only the f32 summation order: with fully
+/// deterministic gradients (FullBatch), an fp32 uplink, and fp32 tier
+/// links (EF off ⇒ v̂ ≡ partial, bit for bit on round 0's zero reference),
+/// the tree run must land on the flat star's trajectory up to rounding of
+/// the reassociated fold — the losses agree to tight tolerance while the
+/// per-hop ledger still records the (now large, fp32) partial frames.
+#[test]
+fn tree_with_exact_tier_links_reproduces_flat_convergence() {
+    use tng::codec::identity::IdentityCodec;
+    use tng::link::LinkSpec;
+    let obj = logreg();
+    let mk = |topology| {
+        let mut cfg = base_cfg(3);
+        cfg.estimator = tng::optim::EstimatorKind::FullBatch;
+        cfg.references = vec![ReferenceKind::Zeros];
+        // Comfortably inside the stable GD regime: the map is contractive,
+        // so the reassociation's rounding differences cannot amplify.
+        cfg.schedule = StepSchedule::Const(0.1);
+        cfg.topology = topology;
+        cfg
+    };
+    let flat = driver::run(&obj, &IdentityCodec, "flat", &mk(None));
+    let tree = driver::run(
+        &obj,
+        &IdentityCodec,
+        "tree",
+        &mk(Some(TreeTopology {
+            groups: 2,
+            up: LinkSpec { codec: "fp32".into(), ef: false },
+        })),
+    );
+    let (a, b) = (flat.final_loss(), tree.final_loss());
+    assert!(
+        (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+        "exact tier links must preserve convergence: flat {a} vs tree {b}"
+    );
+    // fp32 partial frames: 11 header + identity wire frame (5 + 4·dim).
+    let rounds = 25u64;
+    assert_eq!(tree.total_wire_partial_bytes, rounds * 2 * (11 + 5 + 4 * 24));
+}

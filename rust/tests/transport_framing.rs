@@ -88,7 +88,8 @@ fn every_msg_kind_survives_chunks_1_through_7() {
     let enc = ShardedCodec::new(TernaryCodec, 4).encode(&v, &mut rng);
     let msgs = vec![
         Msg::Grad { worker: 3, round: 17, enc: enc.clone(), scalar: 0.25, ref_idx: 1 },
-        Msg::CompressedAggregate { round: 6, enc, eta: 0.2 },
+        Msg::CompressedAggregate { round: 6, enc: enc.clone(), eta: 0.2 },
+        Msg::PartialAggregate { group: 1, round: 6, enc },
         Msg::AnchorGrad { worker: 1, round: 4, grad: v.clone() },
         Msg::Aggregate { round: 5, v: v.clone(), eta: 0.1 },
         Msg::AnchorMu { round: 9, mu: v },

@@ -171,6 +171,51 @@ fn tcp_downlink_compressed_matches_driver_and_channel() {
     }
 }
 
+/// Hierarchical two-level aggregation over real sockets: 4 workers in 2
+/// groups, each group's partial re-encoded up a tracked compressed link.
+/// Driver, channel, and TCP must agree on the iterate (param_digest) and
+/// on every per-hop ledger — leaf-up, group-up (`PartialAggregate`
+/// frames), and root-down — byte for byte; and the root's tree fan-in
+/// must be ~g/M of the flat star's at matched worker count. One tree spec
+/// × 12 rounds keeps the serial CI job's budget unchanged.
+#[test]
+fn tcp_hierarchical_two_groups_matches_driver_and_channel() {
+    use tng::link::TreeTopology;
+    let obj = logreg();
+    let codec = common::make_codec("ternary").unwrap();
+    let mut cfg = base_cfg();
+    cfg.rounds = 12;
+    cfg.workers = 4;
+    cfg.topology = Some(TreeTopology::new(2, "ternary"));
+    let seq = driver::run(&obj, codec.as_ref(), "seq", &cfg);
+    let chan = parallel::run(&obj, codec.as_ref(), "chan", &cfg).unwrap();
+    let tcp = run_tcp(&obj, codec.as_ref(), &cfg);
+    assert_traces_identical(&seq, &tcp, "tree: driver-vs-tcp");
+    assert_traces_identical(&chan, &tcp, "tree: chan-vs-tcp");
+    assert_eq!(
+        (seq.total_wire_up_bytes, seq.total_wire_down_bytes, seq.total_wire_partial_bytes),
+        (tcp.total_wire_up_bytes, tcp.total_wire_down_bytes, tcp.total_wire_partial_bytes),
+        "tree: driver-mirrored per-hop bytes must equal TCP's"
+    );
+    assert_eq!(
+        (chan.total_wire_up_bytes, chan.total_wire_down_bytes, chan.total_wire_partial_bytes),
+        (tcp.total_wire_up_bytes, tcp.total_wire_down_bytes, tcp.total_wire_partial_bytes),
+        "tree: channel and TCP per-hop bytes must be identical"
+    );
+    assert!(tcp.total_wire_partial_bytes > 0, "the group-up hop must be measured");
+    // Root-link shrink vs the flat star of the same config: 2 partial
+    // frames per round instead of 4 grad frames.
+    let mut flat_cfg = base_cfg();
+    flat_cfg.rounds = 12;
+    flat_cfg.workers = 4;
+    let flat = driver::run(&obj, codec.as_ref(), "flat", &flat_cfg);
+    let ratio = tcp.root_fan_in_bytes() as f64 / flat.root_fan_in_bytes() as f64;
+    assert!(
+        ratio < 0.55,
+        "groups=2 over M=4 must roughly halve the root fan-in, got {ratio:.3}"
+    );
+}
+
 /// SVRG's anchor fan-in/out crosses the sockets too; it must match the
 /// driver's trajectory like everything else.
 #[test]
