@@ -176,4 +176,67 @@ fn main() {
     json.push_str("}\n");
     std::fs::write("BENCH_PR5.json", &json).expect("write BENCH_PR5.json");
     println!("# wrote BENCH_PR5.json");
+
+    // --- Quorum rounds: k-of-M fan-in (the PR-6 event-driven leader) -----
+    // Same logreg workload, ternary uplink, M=4, scripted stragglers so the
+    // runs stay deterministic. Quorum must NOT change the wire bytes (late
+    // frames still ship and still count); the win is modeled sync time —
+    // `LinkModel::quorum_round_time` gates the fan-in on the k fastest
+    // uplinks — at the cost of damped one-round-late folds, all visible in
+    // the late/skipped ledger. Emits BENCH_PR6.json.
+    println!("\n# quorum rounds: modeled sync time + straggler ledger (D=512, M=4)");
+    let model = tng::coordinator::network::LinkModel::symmetric(2e-3, 1e6);
+    let mut json = String::from("{\n");
+    let q_configs: [(&str, Option<usize>, Vec<usize>); 3] = [
+        ("full-barrier", None, vec![]),
+        ("quorum-3", Some(3), vec![3]),
+        ("quorum-2", Some(2), vec![2, 3]),
+    ];
+    let mut full_ms = 0.0f64;
+    let n_configs = q_configs.len();
+    for (i, (label, quorum, late)) in q_configs.into_iter().enumerate() {
+        let cfg = DriverConfig {
+            workers: 4,
+            rounds: 50,
+            schedule: StepSchedule::Const(0.25),
+            eval_loss: false,
+            record_every: 50,
+            quorum,
+            straggler_schedule: (!late.is_empty())
+                .then(|| tng::coordinator::StragglerSchedule::every_round(late)),
+            ..Default::default()
+        };
+        let tr = driver::run(&obj, &TernaryCodec, label, &cfg);
+        let denom = (cfg.rounds * cfg.workers * tr.dim) as f64;
+        let up_bpe = tr.total_wire_up_bytes as f64 / denom;
+        let frames = (cfg.rounds * cfg.workers) as u64;
+        let up_frame = (tr.total_wire_up_bytes / frames) as usize;
+        let down_frame = (tr.total_wire_down_bytes / frames) as usize;
+        let sizes = vec![up_frame; cfg.workers];
+        let ms = 1e3
+            * match quorum {
+                Some(k) => model.quorum_round_time(&sizes, k, down_frame),
+                None => model.round_time(&sizes, down_frame),
+            };
+        if quorum.is_none() {
+            full_ms = ms;
+        }
+        let ratio = if full_ms > 0.0 { ms / full_ms } else { 1.0 };
+        println!(
+            "  {label:<13} up {up_bpe:6.3} B/elt   late {:4}  skipped {:2}   \
+             modeled {ms:7.3} ms/round   vs full {ratio:4.2}x",
+            tr.total_late_frames, tr.total_skipped_frames
+        );
+        json.push_str(&format!(
+            "  \"{label}\": {{\"up_bytes_per_elt\": {up_bpe:.4}, \
+             \"late\": {}, \"skipped\": {}, \"modeled_ms_per_round\": {ms:.4}, \
+             \"vs_full\": {ratio:.4}}}{}\n",
+            tr.total_late_frames,
+            tr.total_skipped_frames,
+            if i + 1 < n_configs { "," } else { "" }
+        ));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_PR6.json", &json).expect("write BENCH_PR6.json");
+    println!("# wrote BENCH_PR6.json");
 }

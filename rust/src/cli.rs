@@ -67,6 +67,15 @@ RUN/LEADER/WORKER OPTIONS (the figure harnesses use their own method grid):
                         the codec= spec); any SPEC above
     up_ef=true          per-group error feedback on the tier links;
                         up_ef=false disables
+    quorum=0            quorum aggregation: close each round's gather after
+                        K of the M gradient frames (0 = full barrier); a
+                        frame missing the quorum folds damped into the next
+                        round — never silently dropped. Every process of a
+                        cluster must agree.
+    late=ID,ID,...      scripted stragglers (requires quorum=): these
+                        workers' frames are classified late deterministically
+                        so driver/channel/TCP runs stay digest-identical
+    late_period=1       apply late= on rounds with t % late_period == 0
     estimator=sgd       gradient oracle: sgd | svrg | full (deterministic
                         shard gradients — the §Regimes TNG-winning regime)
     ref_score=cnz       reference search scoring: cnz (fast ratio) | bytes

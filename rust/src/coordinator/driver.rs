@@ -24,7 +24,7 @@ use crate::codec::{wire, Codec};
 use crate::coordinator::metrics::{RoundRecord, Trace};
 use crate::coordinator::protocol::{CAGG_OVERHEAD_BYTES, MSG_HEADER_BYTES};
 use crate::downlink::{DownlinkCompressor, DownlinkSpec};
-use crate::link::{LinkSender, TreeAggregator, TreeTopology};
+use crate::link::{late_fold_scale, LinkSender, TreeAggregator, TreeTopology};
 use crate::objectives::Objective;
 use crate::optim::{EstimatorKind, GradEstimator, Lbfgs, StepSchedule};
 use crate::tng::{
@@ -33,6 +33,34 @@ use crate::tng::{
 };
 use crate::util::math;
 use crate::util::Rng;
+
+/// Scripted arrival-order schedule for quorum rounds: the deterministic
+/// mirror of "worker w's gradient frame misses round t's quorum". On a
+/// transport runtime the leader *classifies* the named frames as late and
+/// buffers them for the next round's damped fold — the workers themselves
+/// are untouched and still send every round — so the same schedule
+/// produces the same fold order, and therefore the same `param_digest`,
+/// on driver, channel, and TCP (pinned by `rust/tests/transport_tcp.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StragglerSchedule {
+    /// Worker ids whose round-t gradient frame misses round t's quorum.
+    pub late: Vec<usize>,
+    /// The lateness applies on rounds with `t % period == 0` (1 = every
+    /// round). Must be ≥ 1 (`parallel::validate` / `cluster_setup` check).
+    pub period: usize,
+}
+
+impl StragglerSchedule {
+    /// The named workers are late every round.
+    pub fn every_round(late: Vec<usize>) -> Self {
+        StragglerSchedule { late, period: 1 }
+    }
+
+    /// Is `worker`'s round-`round` frame scripted to miss the quorum?
+    pub fn is_late(&self, worker: usize, round: usize) -> bool {
+        self.period > 0 && round % self.period == 0 && self.late.contains(&worker)
+    }
+}
 
 /// Wrapper so raw codecs and TNG share one driver: raw = TNG with the
 /// `Zeros` reference (g − 0 = g), the paper's trivial C_nz = 1 case.
@@ -88,6 +116,20 @@ pub struct DriverConfig {
     /// `cluster_setup` normalizes `groups=1` to `None`; this deterministic
     /// driver panics on an invalid topology (validated upstream).
     pub topology: Option<TreeTopology>,
+    /// Quorum aggregation (`None` = full barrier). With `Some(k)` the
+    /// leader aggregates a round once K of the M gradient frames have
+    /// arrived; a frame that misses the quorum is decoded against its own
+    /// round's reference state and folded — damped by
+    /// `link::late_fold_scale(M)` — into the *next* round's aggregate, so
+    /// nothing is silently dropped (frames ≥ 2 rounds stale are dropped
+    /// and counted as skipped). Without a [`StragglerSchedule`] the driver
+    /// mirrors the arrival race deterministically as "workers `k..M` are
+    /// late every round" (transport runtimes race for real and will not
+    /// digest-match the driver); with a schedule all three runtimes agree.
+    pub quorum: Option<usize>,
+    /// Scripted lateness for deterministic quorum runs (requires
+    /// `quorum`); see [`StragglerSchedule`].
+    pub straggler_schedule: Option<StragglerSchedule>,
 }
 
 impl Default for DriverConfig {
@@ -111,6 +153,8 @@ impl Default for DriverConfig {
             warm_start_reference: false,
             downlink: None,
             topology: None,
+            quorum: None,
+            straggler_schedule: None,
         }
     }
 }
@@ -167,6 +211,30 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         .topology
         .as_ref()
         .map(|t| TreeAggregator::new(t, m, dim, cfg.seed).expect("topology spec"));
+
+    // Quorum mirror: which worker's round-t frame misses round t's quorum.
+    // Scripted schedules replay exactly on the transport leaders; without a
+    // schedule the driver stands in for the arrival race with the implicit
+    // "workers k..M are late every round" (deterministic here, racy there).
+    let late_at = |worker: usize, round: usize| -> bool {
+        match (&cfg.straggler_schedule, cfg.quorum) {
+            (Some(s), _) => s.is_late(worker, round),
+            (None, Some(k)) => worker >= k,
+            (None, None) => false,
+        }
+    };
+    let quorum_on = cfg.quorum.is_some() || cfg.straggler_schedule.is_some();
+    assert!(
+        !(quorum_on && cfg.topology.is_some()),
+        "quorum aggregation with a tree topology is not supported"
+    );
+    // A late frame's decoded contribution, held for one round: decoded at
+    // its own round (identical reference-pool state to the one the worker
+    // encoded against), folded damped into the next round's aggregate.
+    let mut pending: Vec<Option<Vec<f32>>> = (0..m).map(|_| None).collect();
+    let mut pending_next: Vec<Option<Vec<f32>>> = (0..m).map(|_| None).collect();
+    let mut late_total: u64 = 0;
+    let mut skipped_total: u64 = 0;
 
     // --- leader state ----------------------------------------------------
     let mut w = cfg.w0.clone().unwrap_or_else(|| vec![0.0f32; dim]);
@@ -270,9 +338,13 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
                 bits_up += (bpe * dim) as u64;
                 // Driver-only: an anchor-style frame at `bpe`-bit precision.
                 wire_up += hdr + 4 + ((bpe * dim) as u64).div_ceil(8);
-                match tree.as_mut() {
-                    Some(tr) => tr.accumulate(wk, &g),
-                    None => math::axpy(1.0 / m as f32, &g, &mut v_avg),
+                if late_at(wk, t) {
+                    pending_next[wk] = Some(g.clone());
+                } else {
+                    match tree.as_mut() {
+                        Some(tr) => tr.accumulate(wk, &g),
+                        None => math::axpy(1.0 / m as f32, &g, &mut v_avg),
+                    }
                 }
                 continue;
             }
@@ -303,9 +375,15 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             // straight into the round aggregate on a flat star, or into
             // the worker's group partial on a tree.
             let decoded = links[wk].decode_own(gref);
-            match tree.as_mut() {
-                Some(tr) => tr.accumulate(wk, decoded),
-                None => math::axpy(1.0 / m as f32, decoded, &mut v_avg),
+            if late_at(wk, t) {
+                // The frame crossed the wire this round (its bytes are
+                // charged above); its contribution lands next round, damped.
+                pending_next[wk] = Some(decoded.to_vec());
+            } else {
+                match tree.as_mut() {
+                    Some(tr) => tr.accumulate(wk, decoded),
+                    None => math::axpy(1.0 / m as f32, decoded, &mut v_avg),
+                }
             }
         }
 
@@ -313,6 +391,18 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         if let Some(tr) = tree.as_mut() {
             wire_partial += tr.finish_round(&mut v_avg);
         }
+
+        // ---- fold the previous round's late frames (quorum mode) ---------
+        // After the on-time 1/M contributions, in worker-id order, at the
+        // damped weight — the exact fold order the transport leaders apply,
+        // which is what keeps quorum runs digest-identical across runtimes.
+        for slot in pending.iter_mut() {
+            if let Some(d) = slot.take() {
+                math::axpy(late_fold_scale(m), &d, &mut v_avg);
+                late_total += 1;
+            }
+        }
+        std::mem::swap(&mut pending, &mut pending_next);
 
         // ---- leader: compress the downlink broadcast (optional) ----------
         // With downlink compression every replica — this leader included —
@@ -380,9 +470,17 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
                 eta,
                 w0: w[0],
                 w1: if dim > 1 { w[1] } else { 0.0 },
+                late: late_total,
+                skipped: skipped_total,
             });
         }
     }
+
+    // Late frames still buffered when the run ends never fold into any
+    // aggregate: count them skipped, exactly as the transport leaders count
+    // frames drained after Stop.
+    skipped_total += pending.iter().filter(|p| p.is_some()).count() as u64;
+    skipped_total += pending_next.iter().filter(|p| p.is_some()).count() as u64;
 
     // Shutdown handshake mirror: Stop to each worker, one Bye back each.
     wire_down += m as u64 * hdr;
@@ -397,6 +495,8 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         total_wire_up_bytes: wire_up,
         total_wire_down_bytes: wire_down,
         total_wire_partial_bytes: wire_partial,
+        total_late_frames: late_total,
+        total_skipped_frames: skipped_total,
         rounds: cfg.rounds,
         workers: m,
         dim,
@@ -781,5 +881,128 @@ mod tests {
         // must have moved from the start
         let last = tr.records.last().unwrap();
         assert!((last.w0 - -4.0).abs() > 1e-3 || (last.w1 - -4.0).abs() > 1e-3);
+    }
+
+    #[test]
+    fn quorum_scripted_pins_counters_and_fold_semantics() {
+        // Worker 3 of 4 misses every round's quorum of 3: its round-t
+        // frame folds damped into round t+1, so 10 rounds yield 9 folds
+        // and exactly one frame (round 9's) still buffered at shutdown.
+        let obj = logreg();
+        let mk = |quorum, schedule| DriverConfig {
+            rounds: 10,
+            quorum,
+            straggler_schedule: schedule,
+            ..Default::default()
+        }; // M = 4
+        let full = run(&obj, &TernaryCodec, "full", &mk(None, None));
+        let q = run(
+            &obj,
+            &TernaryCodec,
+            "q3",
+            &mk(Some(3), Some(StragglerSchedule::every_round(vec![3]))),
+        );
+        assert_eq!(q.total_late_frames, 9);
+        assert_eq!(q.total_skipped_frames, 1);
+        assert_eq!(full.total_late_frames, 0);
+        assert_eq!(full.total_skipped_frames, 0);
+        // Every frame still crosses the wire: the byte ledgers are those
+        // of the full-barrier run, bit for bit.
+        assert_eq!(q.total_wire_up_bytes, full.total_wire_up_bytes);
+        assert_eq!(q.total_wire_down_bytes, full.total_wire_down_bytes);
+        assert_eq!(q.total_up_bits, full.total_up_bits);
+        // The damped one-round-stale fold is a different trajectory than
+        // the barrier's — late frames are folded, not dropped, and not
+        // pretended on-time.
+        assert_ne!(q.param_digest(), full.param_digest());
+        // Seed-determinism of the quorum trajectory itself.
+        let q2 = run(
+            &obj,
+            &TernaryCodec,
+            "q3b",
+            &mk(Some(3), Some(StragglerSchedule::every_round(vec![3]))),
+        );
+        assert_eq!(q.param_digest(), q2.param_digest());
+        // Cumulative counters surface on the per-round records.
+        let last = q.records.last().unwrap();
+        assert_eq!(last.late, 9);
+        assert_eq!(last.skipped, 0); // skips are only known at shutdown
+    }
+
+    #[test]
+    fn quorum_implicit_mirror_matches_equivalent_schedule() {
+        // Without a schedule, `quorum=k` mirrors the race as "workers
+        // k..M late every round" — exactly the scripted schedule
+        // late=[k..M], period=1.
+        let obj = logreg();
+        let mk = |schedule| DriverConfig {
+            rounds: 12,
+            quorum: Some(3),
+            straggler_schedule: schedule,
+            ..Default::default()
+        };
+        let implicit = run(&obj, &TernaryCodec, "imp", &mk(None));
+        let scripted = run(
+            &obj,
+            &TernaryCodec,
+            "scr",
+            &mk(Some(StragglerSchedule::every_round(vec![3]))),
+        );
+        assert_eq!(implicit.param_digest(), scripted.param_digest());
+        assert_eq!(implicit.total_late_frames, scripted.total_late_frames);
+        assert_eq!(implicit.total_skipped_frames, scripted.total_skipped_frames);
+    }
+
+    #[test]
+    fn quorum_periodic_schedule_only_delays_matching_rounds() {
+        // period=3 with late=[1]: worker 1 is late at rounds 0, 3, 6, 9 —
+        // 4 late rounds over 12; every fold lands (the last late round, 9,
+        // folds into round 10), so nothing is skipped.
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 12,
+            quorum: Some(3),
+            straggler_schedule: Some(StragglerSchedule { late: vec![1], period: 3 }),
+            ..Default::default()
+        };
+        let tr = run(&obj, &TernaryCodec, "p3", &cfg);
+        assert_eq!(tr.total_late_frames, 4);
+        assert_eq!(tr.total_skipped_frames, 0);
+        assert!(tr.final_loss().is_finite());
+    }
+
+    #[test]
+    fn quorum_with_anchor_reference_defers_late_anchor_rounds_too() {
+        // WorkerAnchor mixes anchor-maintenance frames into the stream;
+        // the late path must hold those exactly like gradient frames and
+        // the run must stay deterministic and finite.
+        let obj = logreg();
+        let mk = || DriverConfig {
+            rounds: 20,
+            estimator: EstimatorKind::FullBatch,
+            references: vec![ReferenceKind::WorkerAnchor { update_every: 8, anchor_bits: 16 }],
+            quorum: Some(3),
+            straggler_schedule: Some(StragglerSchedule::every_round(vec![2])),
+            ..Default::default()
+        };
+        let a = run(&obj, &TernaryCodec, "a", &mk());
+        let b = run(&obj, &TernaryCodec, "b", &mk());
+        assert_eq!(a.param_digest(), b.param_digest());
+        assert_eq!(a.total_late_frames, 19);
+        assert_eq!(a.total_skipped_frames, 1);
+        assert!(a.final_loss().is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "tree topology")]
+    fn quorum_rejects_tree_topology() {
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 2,
+            quorum: Some(3),
+            topology: Some(crate::link::TreeTopology::new(2, "ternary")),
+            ..Default::default()
+        };
+        run(&obj, &TernaryCodec, "bad", &cfg);
     }
 }

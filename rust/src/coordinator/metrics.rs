@@ -82,6 +82,15 @@ pub struct RoundRecord {
     /// Parameter snapshot (first 2 coords) — Figure 1 plots trajectories.
     pub w0: f32,
     pub w1: f32,
+    /// Cumulative gradient frames that missed their round's quorum and were
+    /// folded — damped, one round late — into the next aggregate (see
+    /// `link::late_fold_scale`). Always 0 without `quorum=`.
+    pub late: u64,
+    /// Cumulative gradient frames that arrived ≥ 2 rounds stale (or after
+    /// the final round) and were dropped from the fold. Their bytes are
+    /// still on the wire ledger — they crossed the wire — but their
+    /// information never reaches the iterate.
+    pub skipped: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -104,6 +113,12 @@ pub struct Trace {
     /// included in [`Trace::total_wire_up_bytes`] (the leaf hop), so flat
     /// configs are byte-for-byte unchanged by the topology machinery.
     pub total_wire_partial_bytes: u64,
+    /// Total late-folded gradient frames over the run (quorum mode; see
+    /// [`RoundRecord::late`]). 0 without `quorum=`.
+    pub total_late_frames: u64,
+    /// Total gradient frames dropped as ≥ 2 rounds stale or post-run (see
+    /// [`RoundRecord::skipped`]). 0 without `quorum=`.
+    pub total_skipped_frames: u64,
     pub rounds: usize,
     pub workers: usize,
     pub dim: usize,
@@ -211,14 +226,16 @@ impl Trace {
                 &r.eta,
                 &r.w0,
                 &r.w1,
+                &r.late,
+                &r.skipped,
             ])?;
         }
         Ok(())
     }
 
-    pub const CSV_HEADER: [&'static str; 13] = [
+    pub const CSV_HEADER: [&'static str; 15] = [
         "label", "round", "bits_per_elt", "wire_bpe", "down_bpe", "topo_bpe", "loss",
-        "subopt", "grad_norm", "cnz", "eta", "w0", "w1",
+        "subopt", "grad_norm", "cnz", "eta", "w0", "w1", "late", "skipped",
     ];
 }
 
@@ -240,6 +257,8 @@ mod tests {
             eta: 0.1,
             w0: 0.0,
             w1: 0.0,
+            late: 0,
+            skipped: 0,
         }
     }
 
@@ -253,6 +272,8 @@ mod tests {
             total_wire_up_bytes: 1024,
             total_wire_down_bytes: 128,
             total_wire_partial_bytes: 0,
+            total_late_frames: 0,
+            total_skipped_frames: 0,
             rounds: 3,
             workers: 4,
             dim: 128,

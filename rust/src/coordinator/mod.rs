@@ -40,5 +40,5 @@ pub mod network;
 pub mod parallel;
 pub mod protocol;
 
-pub use driver::{run, DriverConfig};
+pub use driver::{run, DriverConfig, StragglerSchedule};
 pub use metrics::{RoundRecord, Trace};

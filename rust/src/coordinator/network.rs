@@ -90,6 +90,28 @@ impl LinkModel {
         self.fan_in_time(up_sizes) + self.broadcast_time(up_sizes.len(), down_bytes)
     }
 
+    /// Modeled time for a **quorum** fan-in: the leader aggregates once the
+    /// first `k` of the uplink messages have landed, so the round is gated
+    /// by the k fastest transfers — modeled as k per-message latency terms
+    /// plus the k *smallest* frames through the shared NIC (the optimistic
+    /// bound: the quickest frames are the smallest ones). `k >= sizes.len()`
+    /// degenerates to the full [`LinkModel::fan_in_time`].
+    pub fn quorum_fan_in_time(&self, sizes: &[usize], k: usize) -> f64 {
+        let k = k.min(sizes.len());
+        let mut sorted = sizes.to_vec();
+        sorted.sort_unstable();
+        let total: usize = sorted[..k].iter().sum();
+        k as f64 * self.latency_s + total as f64 / self.up_bandwidth_bps
+    }
+
+    /// Modeled synchronization time of one quorum round: the k-of-M fan-in,
+    /// then the usual broadcast to **all** M workers (stragglers still
+    /// receive the aggregate — that is what keeps them in lock step).
+    pub fn quorum_round_time(&self, up_sizes: &[usize], k: usize, down_bytes: usize) -> f64 {
+        self.quorum_fan_in_time(up_sizes, k)
+            + self.broadcast_time(up_sizes.len(), down_bytes)
+    }
+
     /// Modeled synchronization time of one **hierarchical (two-level)**
     /// round (`crate::link::tree`): the worker groups fan in to their
     /// group leaders *in parallel* — the slowest group gates the tier
@@ -310,6 +332,30 @@ mod tests {
             (m.tree_round_time(&balanced_small, &[leaf; 3], 12, 4096) - tree).abs() < 1e-15,
             "a faster non-critical group must not change the bound"
         );
+    }
+
+    #[test]
+    fn quorum_fan_in_degenerates_and_is_monotone_in_k() {
+        let m = LinkModel::symmetric(1e-3, 1e6);
+        let sizes = [400usize, 100, 300, 200];
+        // k = M (or beyond) is exactly the full fan-in.
+        assert!((m.quorum_fan_in_time(&sizes, 4) - m.fan_in_time(&sizes)).abs() < 1e-15);
+        assert!((m.quorum_fan_in_time(&sizes, 9) - m.fan_in_time(&sizes)).abs() < 1e-15);
+        // Strictly increasing in k: each extra required frame adds its
+        // latency and its bytes.
+        let mut prev = 0.0;
+        for k in 1..=4 {
+            let t = m.quorum_fan_in_time(&sizes, k);
+            assert!(t > prev, "quorum fan-in must grow with k: {t} !> {prev} at k={k}");
+            prev = t;
+        }
+        // The k smallest frames gate the round: k=2 charges 100+200 bytes.
+        let want = 2.0 * 1e-3 + 300.0 / 1e6;
+        assert!((m.quorum_fan_in_time(&sizes, 2) - want).abs() < 1e-15);
+        // And the round model still broadcasts to all M workers.
+        let round = m.quorum_round_time(&sizes, 2, 1000);
+        assert!((round - (want + m.broadcast_time(4, 1000))).abs() < 1e-15);
+        assert!(round < m.round_time(&sizes, 1000), "quorum must beat the barrier");
     }
 
     #[test]

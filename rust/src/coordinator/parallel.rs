@@ -22,6 +22,19 @@
 //! with `Bye` before closing its uplink, and the leader drains all Byes
 //! before taking its final byte snapshot — totals are never racy.
 //!
+//! **Quorum rounds** (`cfg.quorum = Some(k)`): the leader closes a round's
+//! gather once K of the M gradient frames have arrived instead of waiting
+//! for the full barrier. A frame that misses its round's quorum is *not*
+//! dropped: it is held one round, decoded against a snapshot of the
+//! reference pool from its own round, and folded into the next round's
+//! aggregate damped by `link::late_fold_scale(M)`; frames two or more
+//! rounds stale are dropped and counted (`Trace::total_skipped_frames`).
+//! With a scripted [`StragglerSchedule`] the classification is
+//! deterministic — the named workers' frames are treated as late whenever
+//! they arrive — so driver, channel, and TCP stay `param_digest`-identical;
+//! without one, arrival order decides and only the counters and ledgers
+//! are reproducible. Worker state machines are untouched either way.
+//!
 //! Hot-path notes: every worker owns a streaming `link::LinkSender` (the
 //! normalizer plus its `CodecScratch` arena), so the
 //! normalize→encode→frame path performs no steady-state allocation beyond
@@ -42,11 +55,11 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::codec::Codec;
-use crate::coordinator::driver::DriverConfig;
+use crate::coordinator::driver::{DriverConfig, StragglerSchedule};
 use crate::coordinator::metrics::{RoundRecord, Trace};
 use crate::coordinator::protocol::Msg;
 use crate::downlink::{DownlinkCompressor, DownlinkDecoder};
-use crate::link::{LinkSender, TreeAggregator};
+use crate::link::{late_fold_scale, LinkSender, TreeAggregator};
 use crate::objectives::Objective;
 use crate::optim::{GradEstimator, Lbfgs};
 use crate::tng::{CnzSelector, ReferenceKind, ReferenceManager, RoundCtx};
@@ -105,6 +118,118 @@ pub fn validate(cfg: &DriverConfig) -> Result<()> {
             bail!("groups={} exceeds workers={}", t.groups, cfg.workers);
         }
         t.up.validate("up")?;
+    }
+    if let Some(k) = cfg.quorum {
+        if k == 0 || k > cfg.workers {
+            bail!("quorum={k} out of range 1..={}", cfg.workers);
+        }
+        if cfg.topology.is_some() {
+            // A group partial is only correct once every member of the
+            // group contributed; partial-group semantics are a different
+            // algorithm, not a smaller quorum.
+            bail!("quorum aggregation with a tree topology is not supported");
+        }
+        if matches!(cfg.estimator, crate::optim::EstimatorKind::Svrg { .. }) {
+            // The SVRG anchor synchronization is a hard barrier whose
+            // AnchorGrad frames would interleave with late Grad frames.
+            bail!("quorum with the SVRG estimator requires the deterministic driver");
+        }
+    }
+    if let Some(s) = &cfg.straggler_schedule {
+        let Some(k) = cfg.quorum else {
+            bail!("a straggler schedule requires quorum= (late= requires quorum=)");
+        };
+        if s.period == 0 {
+            bail!("straggler schedule period must be >= 1");
+        }
+        let mut seen = vec![false; cfg.workers];
+        for &w in &s.late {
+            if w >= cfg.workers {
+                bail!("scripted-late worker {w} out of range for {} workers", cfg.workers);
+            }
+            if seen[w] {
+                bail!("scripted-late worker {w} listed twice");
+            }
+            seen[w] = true;
+        }
+        if cfg.workers - s.late.len() < k {
+            bail!(
+                "{} scripted-late workers leave fewer than quorum={k} of {} on time",
+                s.late.len(),
+                cfg.workers
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Quorum-mode gather at round `t`: receive until the round can close.
+/// Scripted mode waits for every on-time round-`t` frame *plus* every
+/// scripted-late round-`t-1` frame (so the fold set — and the digest — is
+/// deterministic); real mode closes as soon as `k` round-`t` frames are in
+/// (racy by design). Classification is by the frame's round tag: round-`t`
+/// on-time → `slots`, round-`t` scripted-late → `fold_next` (folded next
+/// round), round-`t-1` → `fold_now` (folded this round); anything two or
+/// more rounds stale is past its fold window — dropped and counted.
+#[allow(clippy::too_many_arguments)]
+fn gather_quorum(
+    tp: &mut dyn LeaderTransport,
+    deadline: Option<Instant>,
+    t: usize,
+    m: usize,
+    schedule: Option<&StragglerSchedule>,
+    quorum: Option<usize>,
+    slots: &mut [Option<Msg>],
+    fold_now: &mut [Option<Msg>],
+    fold_next: &mut [Option<Msg>],
+    skipped: &mut u64,
+) -> Result<()> {
+    let complete = |slots: &[Option<Msg>], fold_now: &[Option<Msg>]| -> bool {
+        match (schedule, quorum) {
+            (Some(s), _) => {
+                (0..m).all(|w| s.is_late(w, t) || slots[w].is_some())
+                    && (t == 0
+                        || (0..m).all(|w| !s.is_late(w, t - 1) || fold_now[w].is_some()))
+            }
+            (None, Some(k)) => slots.iter().filter(|s| s.is_some()).count() >= k,
+            (None, None) => unreachable!("gather_quorum requires a quorum config"),
+        }
+    };
+    while !complete(slots, fold_now) {
+        let msg = Msg::from_bytes(&tp.recv_deadline(deadline)?)?;
+        let Msg::Grad { worker, round, .. } = &msg else {
+            bail!("leader: expected Grad, got {}", msg.kind_name());
+        };
+        let (w, r) = (*worker as usize, *round as usize);
+        if w >= m {
+            bail!("gradient from unknown worker {w} (m = {m})");
+        }
+        if r > t {
+            bail!("gradient for future round {r} during round {t} — protocol violation");
+        }
+        if r == t {
+            let scripted_late = schedule.is_some_and(|s| s.is_late(w, t));
+            let dst = if scripted_late { &mut fold_next[w] } else { &mut slots[w] };
+            if dst.is_some() {
+                bail!("duplicate gradient from worker {w} at round {r}");
+            }
+            *dst = Some(msg);
+        } else if r + 1 == t {
+            if let Some(s) = schedule {
+                if !s.is_late(w, t - 1) {
+                    bail!(
+                        "worker {w}'s round-{r} frame arrived during round {t} but \
+                         the schedule scripts it on time — protocol violation"
+                    );
+                }
+            }
+            if fold_now[w].is_some() {
+                bail!("duplicate late gradient from worker {w} for round {r}");
+            }
+            fold_now[w] = Some(msg);
+        } else {
+            *skipped += 1;
+        }
     }
     Ok(())
 }
@@ -292,16 +417,25 @@ fn leader_loop(
     // anchor_due is a pure function of (estimator kind, round); one probe
     // serves every round instead of churning dim-sized buffers per round.
     let est_probe = GradEstimator::new(cfg.estimator, cfg.batch, dim);
+    // Quorum hold-over state: a frame classified late at round t is held
+    // here and folded into round t+1's aggregate, decoded against the
+    // reference pool snapshot of its own round (`late_refs`).
+    let quorum_on = cfg.quorum.is_some() || cfg.straggler_schedule.is_some();
+    let mut fold_next: Vec<Option<Msg>> = (0..m).map(|_| None).collect();
+    let mut late_refs: Vec<Vec<f32>> = Vec::new();
+    let mut late_total: u64 = 0;
+    let mut skipped_total: u64 = 0;
 
     for t in 0..cfg.rounds {
         // SVRG anchor fan-in/out.
         if svrg && est_probe.anchor_due(t) && total_n > 0 {
             // Buffer and fold in worker-id order: float addition is not
             // associative, and the deterministic driver folds 0..M.
+            let deadline = tp.gather_deadline();
             let mut anchors: Vec<Option<Vec<f32>>> = (0..m).map(|_| None).collect();
             let mut seen = 0usize;
             while seen < m {
-                match Msg::from_bytes(&tp.recv()?)? {
+                match Msg::from_bytes(&tp.recv_deadline(deadline)?)? {
                     Msg::AnchorGrad { worker, grad, .. } => {
                         let idx = worker as usize;
                         if idx >= m {
@@ -327,23 +461,55 @@ fn leader_loop(
             tp.broadcast(&Msg::AnchorMu { round: t as u32, mu }.to_bytes())?;
         }
 
-        // Gather M gradient frames; fold in worker-id order (determinism).
+        // Gather gradient frames; fold in worker-id order (determinism).
+        // One deadline bounds the whole gather — a straggling worker can
+        // consume the full budget but never resets it per frame.
+        let deadline = tp.gather_deadline();
         let mut slots: Vec<Option<Msg>> = (0..m).map(|_| None).collect();
-        let mut seen = 0usize;
-        while seen < m {
-            let msg = Msg::from_bytes(&tp.recv()?)?;
-            if let Msg::Grad { worker, .. } = &msg {
-                let idx = *worker as usize;
-                if idx >= m {
-                    bail!("gradient from unknown worker {idx} (m = {m})");
+        // Rotate the quorum hold-over state: frames classified late at
+        // t-1 fold into this round, decoded against the pool snapshot of
+        // their own round; this round's pool state becomes the snapshot
+        // the *next* round's fold will decode against.
+        let (mut fold_now, fold_refs): (Vec<Option<Msg>>, Vec<Vec<f32>>) = if quorum_on {
+            let snap: Vec<Vec<f32>> = (0..cfg.references.len())
+                .map(|i| selector.current(i).to_vec())
+                .collect();
+            let prev = std::mem::replace(&mut late_refs, snap);
+            let now = std::mem::replace(&mut fold_next, (0..m).map(|_| None).collect());
+            (now, prev)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        if quorum_on {
+            gather_quorum(
+                tp,
+                deadline,
+                t,
+                m,
+                cfg.straggler_schedule.as_ref(),
+                cfg.quorum,
+                &mut slots,
+                &mut fold_now,
+                &mut fold_next,
+                &mut skipped_total,
+            )?;
+        } else {
+            let mut seen = 0usize;
+            while seen < m {
+                let msg = Msg::from_bytes(&tp.recv_deadline(deadline)?)?;
+                if let Msg::Grad { worker, .. } = &msg {
+                    let idx = *worker as usize;
+                    if idx >= m {
+                        bail!("gradient from unknown worker {idx} (m = {m})");
+                    }
+                    if slots[idx].is_some() {
+                        bail!("duplicate gradient from worker {idx}");
+                    }
+                    slots[idx] = Some(msg);
+                    seen += 1;
+                } else {
+                    bail!("leader: expected Grad, got {}", msg.kind_name());
                 }
-                if slots[idx].is_some() {
-                    bail!("duplicate gradient from worker {idx}");
-                }
-                slots[idx] = Some(msg);
-                seen += 1;
-            } else {
-                bail!("leader: expected Grad, got {}", msg.kind_name());
             }
         }
         let eta = cfg.schedule.step(t);
@@ -352,7 +518,9 @@ fn leader_loop(
             tr.begin_round();
         }
         for (wk, slot) in slots.into_iter().enumerate() {
-            let Some(Msg::Grad { enc, scalar, ref_idx, .. }) = slot else { unreachable!() };
+            // Quorum mode leaves the slots of late/unarrived workers empty;
+            // the full barrier fills every one.
+            let Some(Msg::Grad { enc, scalar, ref_idx, .. }) = slot else { continue };
             // ref_idx is remotely controlled: a worker whose tng= config
             // disagrees with the leader's pool must be an error, not an
             // out-of-bounds panic.
@@ -382,6 +550,35 @@ fn leader_loop(
         // link; the root's aggregate is the sum of the reconstructions.
         if let Some(tr) = tree.as_mut() {
             partial_wire += tr.finish_round(&mut v_avg);
+        }
+
+        // Fold the previous round's late frames after the on-time 1/M
+        // contributions, in worker-id order, at the damped weight — the
+        // identical order and scale the deterministic driver applies, which
+        // is what keeps scripted quorum runs digest-identical.
+        for slot in fold_now {
+            let Some(Msg::Grad { enc, scalar, ref_idx, .. }) = slot else { continue };
+            if ref_idx as usize >= cfg.references.len() {
+                bail!(
+                    "late gradient references pool index {ref_idx} but the leader \
+                     has {} references — config mismatch",
+                    cfg.references.len()
+                );
+            }
+            let gref: &[f32] =
+                if matches!(cfg.references[ref_idx as usize], ReferenceKind::MeanScalar) {
+                    mean_ref.fill(scalar);
+                    &mean_ref
+                } else {
+                    let Some(snap) = fold_refs.get(ref_idx as usize) else {
+                        bail!("late gradient with no reference snapshot — protocol violation");
+                    };
+                    snap.as_slice()
+                };
+            let decoded = uplink.decode_against(&enc, gref);
+            cnz.observe(decoded, gref);
+            math::axpy(late_fold_scale(m), decoded, &mut v_avg);
+            late_total += 1;
         }
 
         // Broadcast (compressed or raw), then apply the identical update
@@ -423,16 +620,19 @@ fn leader_loop(
                 eta,
                 w0: w[0],
                 w1: if dim > 1 { w[1] } else { 0.0 },
+                late: late_total,
+                skipped: skipped_total,
             });
         }
     }
     // Shutdown handshake: Stop out, one Bye back per worker. Only after the
     // last Bye is the byte snapshot final (no frame is in flight).
     tp.broadcast(&Msg::Stop { round: cfg.rounds as u32 }.to_bytes())?;
+    let deadline = tp.gather_deadline();
     let mut byes = vec![false; m];
     let mut seen = 0usize;
     while seen < m {
-        match Msg::from_bytes(&tp.recv()?)? {
+        match Msg::from_bytes(&tp.recv_deadline(deadline)?)? {
             Msg::Bye { worker } => {
                 let idx = worker as usize;
                 if idx >= m || byes[idx] {
@@ -441,9 +641,17 @@ fn leader_loop(
                 byes[idx] = true;
                 seen += 1;
             }
+            Msg::Grad { .. } if quorum_on => {
+                // A final-round straggler frame racing the shutdown: there
+                // is no round left to fold it into — drained and counted,
+                // never silently lost in the transport.
+                skipped_total += 1;
+            }
             other => bail!("leader: expected Bye, got {}", other.kind_name()),
         }
     }
+    // Frames still held for a fold that will never happen are skipped too.
+    skipped_total += fold_next.iter().filter(|f| f.is_some()).count() as u64;
     let s = tp.stats();
     Ok(Trace {
         label: label.to_string(),
@@ -454,6 +662,8 @@ fn leader_loop(
         total_wire_up_bytes: s.up_bytes,
         total_wire_down_bytes: s.down_bytes,
         total_wire_partial_bytes: partial_wire,
+        total_late_frames: late_total,
+        total_skipped_frames: skipped_total,
         rounds: cfg.rounds,
         workers: m,
         dim,
@@ -746,6 +956,118 @@ mod tests {
         assert_eq!(a.total_down_bits, b.total_down_bits);
         // Byes: one 11-byte frame per worker is part of the uplink total.
         assert!(a.total_up_bits >= 3 * 11 * 8);
+    }
+
+    #[test]
+    fn quorum_scripted_channel_matches_driver() {
+        // The PR's acceptance pin at the channel layer: a scripted quorum
+        // run (k=3 of 4, worker 3 late every round) must be
+        // digest-identical to the deterministic driver mirror, with
+        // identical byte ledgers (every frame still crosses the wire) and
+        // identical late/skipped counters — the late frame is folded, not
+        // dropped.
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 10,
+            workers: 4,
+            schedule: StepSchedule::Const(0.3),
+            references: vec![
+                crate::tng::ReferenceKind::Zeros,
+                crate::tng::ReferenceKind::AvgDecoded { window: 2 },
+            ],
+            quorum: Some(3),
+            straggler_schedule: Some(StragglerSchedule::every_round(vec![3])),
+            record_every: 5,
+            ..Default::default()
+        };
+        let seq = crate::coordinator::driver::run(&obj, &TernaryCodec, "seq", &cfg);
+        let par = run(&obj, &TernaryCodec, "par", &cfg).unwrap();
+        assert_eq!(seq.final_w, par.final_w, "quorum trajectories diverged");
+        assert_eq!(seq.param_digest(), par.param_digest());
+        assert_eq!(seq.total_wire_up_bytes, par.total_wire_up_bytes);
+        assert_eq!(seq.total_wire_down_bytes, par.total_wire_down_bytes);
+        assert_eq!(par.total_late_frames, 9, "9 of 10 late frames fold");
+        assert_eq!(par.total_skipped_frames, 1, "the final round's has no next round");
+        assert_eq!(seq.total_late_frames, par.total_late_frames);
+        assert_eq!(seq.total_skipped_frames, par.total_skipped_frames);
+    }
+
+    #[test]
+    fn quorum_real_mode_channel_accounts_every_frame() {
+        // Without a schedule arrival order decides who is late (racy), but
+        // the accounting must still be airtight: each round exactly k
+        // frames aggregate on time and exactly M-k are carried, so over R
+        // rounds late + skipped == R·(M-k), and every frame's bytes are
+        // still counted.
+        let obj = logreg();
+        let cfg = DriverConfig {
+            rounds: 10,
+            workers: 4,
+            schedule: StepSchedule::Const(0.3),
+            quorum: Some(3),
+            record_every: 5,
+            ..Default::default()
+        };
+        let q = run(&obj, &TernaryCodec, "q", &cfg).unwrap();
+        assert!(q.final_loss().is_finite());
+        assert_eq!(q.total_late_frames + q.total_skipped_frames, 10);
+        let full = run(
+            &obj,
+            &TernaryCodec,
+            "full",
+            &DriverConfig { quorum: None, ..cfg },
+        )
+        .unwrap();
+        assert_eq!(q.total_wire_up_bytes, full.total_wire_up_bytes);
+        assert_eq!(q.total_wire_down_bytes, full.total_wire_down_bytes);
+    }
+
+    #[test]
+    fn quorum_validation_gates() {
+        let obj = logreg();
+        let mk = |quorum, schedule| DriverConfig {
+            workers: 4,
+            quorum,
+            straggler_schedule: schedule,
+            ..Default::default()
+        };
+        let msg = |cfg: &DriverConfig| validate(cfg).unwrap_err().to_string();
+        // k out of range.
+        assert!(msg(&mk(Some(0), None)).contains("out of range"));
+        assert!(msg(&mk(Some(5), None)).contains("out of range"));
+        // A schedule requires quorum.
+        assert!(msg(&mk(None, Some(StragglerSchedule::every_round(vec![1]))))
+            .contains("requires quorum"));
+        // Too many scripted-late workers for the quorum.
+        assert!(msg(&mk(Some(3), Some(StragglerSchedule::every_round(vec![1, 2]))))
+            .contains("fewer than quorum"));
+        // Bad late ids and period.
+        assert!(msg(&mk(Some(3), Some(StragglerSchedule::every_round(vec![7]))))
+            .contains("out of range"));
+        assert!(msg(&mk(Some(3), Some(StragglerSchedule::every_round(vec![1, 1]))))
+            .contains("twice"));
+        assert!(msg(&mk(Some(3), Some(StragglerSchedule { late: vec![1], period: 0 })))
+            .contains("period"));
+        // Quorum composes with neither trees nor the SVRG barrier.
+        let cfg = DriverConfig {
+            topology: Some(crate::link::TreeTopology::new(2, "ternary")),
+            ..mk(Some(3), None)
+        };
+        assert!(msg(&cfg).contains("tree topology"));
+        let cfg = DriverConfig {
+            estimator: crate::optim::EstimatorKind::Svrg { anchor_every: 5 },
+            ..mk(Some(3), None)
+        };
+        assert!(msg(&cfg).contains("SVRG"));
+        // A legal quorum config passes, and still runs end to end.
+        let cfg = DriverConfig {
+            rounds: 4,
+            schedule: StepSchedule::Const(0.3),
+            eval_loss: false,
+            ..mk(Some(3), Some(StragglerSchedule::every_round(vec![0])))
+        };
+        assert!(validate(&cfg).is_ok());
+        assert!(run(&obj, &TernaryCodec, "ok", &cfg).is_ok());
     }
 
     #[test]

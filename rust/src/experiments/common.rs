@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 use crate::codec::Codec;
 use crate::config::Settings;
 use crate::coordinator::metrics::Trace;
-use crate::coordinator::{driver, DriverConfig};
+use crate::coordinator::{driver, DriverConfig, StragglerSchedule};
 use crate::data::synthetic::{generate, SkewConfig};
 use crate::objectives::logreg::LogReg;
 use crate::objectives::Objective;
@@ -30,7 +30,8 @@ pub use crate::codec::spec::make_codec;
 /// is what makes a TCP run byte-identical to the deterministic driver.
 /// Keys (all `key=value`): `n dim csk cth seed lambda codec tng ref_window
 /// ref_score workers rounds batch eta estimator anchor_every memory
-/// record_every eval opt opt_iters down down_ef groups up up_ef`.
+/// record_every eval opt opt_iters down down_ef groups up up_ef quorum late
+/// late_period`.
 ///
 /// `down=<codec spec>` turns on downlink compression (the broadcast crosses
 /// the wire as a `CompressedAggregate` frame of that codec — any
@@ -44,6 +45,14 @@ pub use crate::codec::spec::make_codec;
 /// topology at all, so a degenerate tree is bit-for-bit the flat run
 /// (pinned by `rust/tests/hierarchy.rs`). The tier's link takes `up=<codec
 /// spec>` (defaults to the `codec=` spec) and `up_ef=true|false`.
+///
+/// `quorum=<k>` (0 or absent = full barrier) closes each round's gather
+/// once K of the M gradient frames arrived; frames that miss the quorum
+/// fold damped into the next round (`link::late_fold_scale`).
+/// `late=<id,id,...>` scripts which workers miss the quorum (requires
+/// `quorum=`; the deterministic mirror that keeps driver/channel/TCP
+/// digest-identical), on rounds `t % late_period == 0` (`late_period=1`
+/// default = every round).
 pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConfig, String)> {
     let n = s.usize_or("n", 1024)?;
     let dim = s.usize_or("dim", 128)?;
@@ -103,6 +112,28 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
         1 => None,
         g => Some(crate::link::TreeTopology { groups: g, up }),
     };
+    // Quorum aggregation: quorum=0 / absent is the full barrier.
+    let quorum = match s.usize_or("quorum", 0)? {
+        0 => None,
+        k => Some(k),
+    };
+    let straggler_schedule = match s.raw("late") {
+        None | Some("") => None,
+        Some(list) => {
+            if quorum.is_none() {
+                bail!("late= requires quorum=");
+            }
+            let mut late = Vec::new();
+            for tok in list.split(',') {
+                let tok = tok.trim();
+                match tok.parse::<usize>() {
+                    Ok(w) => late.push(w),
+                    Err(_) => bail!("late= entries must be worker ids, got '{tok}'"),
+                }
+            }
+            Some(StragglerSchedule { late, period: s.usize_or("late_period", 1)? })
+        }
+    };
     let cfg = DriverConfig {
         seed: s.u64_or("seed", 0)?,
         workers: s.usize_or("workers", 4)?,
@@ -138,6 +169,8 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
         warm_start_reference: false,
         downlink,
         topology,
+        quorum,
+        straggler_schedule,
         ..Default::default()
     };
     if let Some(t) = &cfg.topology {
@@ -145,8 +178,42 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
             bail!("groups={} exceeds workers={}", t.groups, cfg.workers);
         }
     }
+    // Fail-at-the-CLI for quorum configs too (the same contract down= and
+    // up= have): every gate here is also enforced by `parallel::validate`,
+    // but the deterministic driver has no validate step and would panic.
+    if let Some(k) = cfg.quorum {
+        if k > cfg.workers {
+            bail!("quorum={k} exceeds workers={}", cfg.workers);
+        }
+        if cfg.topology.is_some() {
+            bail!("quorum= with groups>=2 is not supported");
+        }
+    }
+    if let Some(sched) = &cfg.straggler_schedule {
+        if sched.period == 0 {
+            bail!("late_period must be >= 1");
+        }
+        let k = cfg.quorum.unwrap(); // late= without quorum= bailed above
+        let mut seen = vec![false; cfg.workers];
+        for &w in &sched.late {
+            if w >= cfg.workers {
+                bail!("late={w} out of range for workers={}", cfg.workers);
+            }
+            if seen[w] {
+                bail!("late={w} listed twice");
+            }
+            seen[w] = true;
+        }
+        if cfg.workers - sched.late.len() < k {
+            bail!(
+                "late= scripts {} stragglers, leaving fewer than quorum={k} of {} on time",
+                sched.late.len(),
+                cfg.workers
+            );
+        }
+    }
     let label = format!(
-        "{}{}{}{}@M{}",
+        "{}{}{}{}{}@M{}",
         if use_tng { "TN-" } else { "" },
         codec.name(),
         match &cfg.downlink {
@@ -164,6 +231,10 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
                 t.up.codec,
                 if t.up.ef { "" } else { "(no-ef)" }
             ),
+            None => String::new(),
+        },
+        match cfg.quorum {
+            Some(k) => format!("+q{k}"),
             None => String::new(),
         },
         cfg.workers
@@ -254,6 +325,8 @@ pub fn clone_cfg(c: &DriverConfig) -> DriverConfig {
         warm_start_reference: c.warm_start_reference,
         downlink: c.downlink.clone(),
         topology: c.topology.clone(),
+        quorum: c.quorum,
+        straggler_schedule: c.straggler_schedule.clone(),
     }
 }
 
@@ -397,6 +470,56 @@ mod tests {
         let s = Settings::from_args(&["n=32", "dim=8", "groups=2", "workers=4"]).unwrap();
         let (_, _, cfg, _) = cluster_setup(&s).unwrap();
         crate::coordinator::parallel::validate(&cfg).unwrap();
+    }
+
+    #[test]
+    fn cluster_setup_parses_quorum_keys() {
+        // quorum=0 and absent are the full barrier.
+        let s = Settings::from_args(&["n=32", "dim=8", "quorum=0"]).unwrap();
+        assert!(cluster_setup(&s).unwrap().2.quorum.is_none());
+        let s = Settings::from_args(&["n=32", "dim=8"]).unwrap();
+        let (_, _, cfg, label) = cluster_setup(&s).unwrap();
+        assert!(cfg.quorum.is_none() && cfg.straggler_schedule.is_none());
+        assert!(!label.contains("+q"), "{label}");
+        // quorum + scripted stragglers, visible in the label.
+        let s = Settings::from_args(&[
+            "n=32",
+            "dim=8",
+            "workers=4",
+            "quorum=3",
+            "late=3",
+            "late_period=2",
+        ])
+        .unwrap();
+        let (_, _, cfg, label) = cluster_setup(&s).unwrap();
+        assert_eq!(cfg.quorum, Some(3));
+        let sched = cfg.straggler_schedule.unwrap();
+        assert_eq!(sched.late, vec![3]);
+        assert_eq!(sched.period, 2);
+        assert!(label.contains("+q3"), "{label}");
+        // Multi-id late lists parse.
+        let s = Settings::from_args(&["n=32", "dim=8", "workers=6", "quorum=4", "late=4,5"])
+            .unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        assert_eq!(cfg.straggler_schedule.unwrap().late, vec![4, 5]);
+        // The quorum config passes transport validation as-is.
+        let s = Settings::from_args(&["n=32", "dim=8", "workers=4", "quorum=3", "late=3"])
+            .unwrap();
+        crate::coordinator::parallel::validate(&cluster_setup(&s).unwrap().2).unwrap();
+        // Bad values fail at setup, not mid-run.
+        for bad in [
+            vec!["n=32", "dim=8", "late=1"],                           // late without quorum
+            vec!["n=32", "dim=8", "workers=4", "quorum=5"],            // k > M
+            vec!["n=32", "dim=8", "workers=4", "quorum=3", "late=9"],  // id out of range
+            vec!["n=32", "dim=8", "workers=4", "quorum=3", "late=1,1"], // duplicate id
+            vec!["n=32", "dim=8", "workers=4", "quorum=3", "late=1,2"], // too many late
+            vec!["n=32", "dim=8", "workers=4", "quorum=3", "late=x"],  // unparseable
+            vec!["n=32", "dim=8", "workers=4", "quorum=3", "late=1", "late_period=0"],
+            vec!["n=32", "dim=8", "workers=4", "quorum=2", "groups=2"], // quorum + tree
+        ] {
+            let s = Settings::from_args(&bad).unwrap();
+            assert!(cluster_setup(&s).is_err(), "{bad:?} must fail at setup");
+        }
     }
 
     #[test]

@@ -55,6 +55,20 @@
 //! reference stays pinned at zero and the link degrades to memoryless
 //! quantization.
 //!
+//! # Late-frame folding (quorum rounds)
+//!
+//! Under `quorum=<k>` aggregation (`coordinator`), a gradient frame that
+//! misses its round's quorum is **not dropped**: the leader decodes it
+//! against a snapshot of the reference pool from its own round (so the
+//! arithmetic is the one the worker encoded against) and folds it into the
+//! *next* round's aggregate at weight [`late_fold_scale`] `= α/M` — the
+//! same damping [`EF_DAMPING`] that keeps the tracked EF recursion stable
+//! also bounds the staleness error a one-round-old gradient injects
+//! (momentum-corrected accumulation in the sense of Deep Gradient
+//! Compression; EF21-P-style folding through the link state rather than
+//! discarding). On-time frames keep their exact `1/M` weight, so a
+//! quorum-free run is bit-for-bit unchanged.
+//!
 //! # Determinism contract (RNG stream map)
 //!
 //! Every stochastic encode draws from a stream both runtimes construct
@@ -96,6 +110,17 @@ use crate::util::Rng;
 /// update is the same bit pattern on every replica.
 pub const EF_DAMPING: f32 = 0.25;
 
+/// Fold weight of a one-round-late gradient frame under quorum
+/// aggregation: the EF damping over the worker count, `α/M` (see the
+/// module docs). Both factors are powers of two for every practical `M`
+/// of interest only when `M` is one — so unlike [`EF_DAMPING`] this scale
+/// is *not* guaranteed exact in f32; what keeps the runtimes
+/// digest-identical is that all of them (driver, channel, TCP) apply the
+/// identical f32 product in the identical fold order.
+pub fn late_fold_scale(workers: usize) -> f32 {
+    EF_DAMPING / workers as f32
+}
+
 /// Base of the group→root link RNG stream ids: group `k` draws from
 /// `split(GROUP_UP_STREAM_BASE + k)`. Offset by `2^32` so the streams are
 /// structurally disjoint from the leader's stream 0 and the worker
@@ -133,6 +158,18 @@ mod tests {
                     assert_ne!(g, (go.next_u64(), go.next_u64()), "group {k} vs {other}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn late_fold_scale_is_damped_average_weight() {
+        assert_eq!(late_fold_scale(1), EF_DAMPING);
+        assert_eq!(late_fold_scale(4), EF_DAMPING / 4.0);
+        // Strictly below the on-time weight 1/M for every M: a late frame
+        // never outweighs an on-time one.
+        for m in 1..=64usize {
+            assert!(late_fold_scale(m) < 1.0 / m as f32 + f32::EPSILON);
+            assert!(late_fold_scale(m) > 0.0);
         }
     }
 

@@ -5,7 +5,7 @@
 //! several behind the same synchronization loop.
 
 use std::sync::mpsc::RecvTimeoutError;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -41,21 +41,35 @@ impl LeaderTransport for ChannelLeader {
         self.fabric.down.len()
     }
 
-    fn recv(&mut self) -> Result<Vec<u8>> {
-        match self.timeout {
+    fn gather_deadline(&self) -> Option<Instant> {
+        self.timeout.map(|d| Instant::now() + d)
+    }
+
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Result<Vec<u8>> {
+        match deadline {
             None => self.fabric.leader_rx.recv().map_err(|_| anyhow!("all workers hung up")),
-            Some(d) => match self.fabric.leader_rx.recv_timeout(d) {
-                Ok(f) => Ok(f),
-                Err(RecvTimeoutError::Timeout) => {
-                    bail!("straggler timeout: no uplink frame within {d:?}")
+            Some(dl) => {
+                let left = dl.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    bail!("straggler timeout: gather deadline passed with frames missing");
                 }
-                Err(RecvTimeoutError::Disconnected) => bail!("all workers hung up"),
-            },
+                match self.fabric.leader_rx.recv_timeout(left) {
+                    Ok(f) => Ok(f),
+                    Err(RecvTimeoutError::Timeout) => {
+                        bail!("straggler timeout: no uplink frame within {left:?}")
+                    }
+                    Err(RecvTimeoutError::Disconnected) => bail!("all workers hung up"),
+                }
+            }
         }
     }
 
     fn send_to(&mut self, worker: usize, frame: &[u8]) -> Result<()> {
-        self.fabric.down[worker].send(frame.to_vec())
+        let m = self.fabric.down.len();
+        let Some(down) = self.fabric.down.get(worker) else {
+            bail!("send_to worker {worker} out of range 0..{m}");
+        };
+        down.send(frame.to_vec())
     }
 
     fn stats(&self) -> NetSnapshot {
@@ -112,5 +126,26 @@ mod tests {
         drop(workers);
         assert!(leader.recv().is_err());
         assert!(leader.send_to(0, &[1]).is_err());
+    }
+
+    #[test]
+    fn send_to_out_of_range_errors_cleanly() {
+        let (mut leader, _workers) = channel_pair(2, None);
+        let err = leader.send_to(2, &[1]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn recv_deadline_bounds_a_whole_gather() {
+        // One shared deadline across multiple recv calls: after the first
+        // frame drains the budget-free path, the *same* deadline (already
+        // expired) must fail immediately instead of granting a fresh window.
+        let (mut leader, mut workers) = channel_pair(1, Some(Duration::from_secs(30)));
+        workers[0].send(vec![1]).unwrap();
+        let deadline = Some(Instant::now() + Duration::from_millis(40));
+        assert_eq!(leader.recv_deadline(deadline).unwrap(), vec![1]);
+        std::thread::sleep(Duration::from_millis(50));
+        let err = leader.recv_deadline(deadline).unwrap_err();
+        assert!(err.to_string().contains("straggler"), "{err}");
     }
 }

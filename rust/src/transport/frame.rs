@@ -6,10 +6,10 @@
 //! overhead, not message content: byte accounting counts the framed bytes
 //! only, so channel and TCP backends report identical wire totals.
 //!
-//! [`Reassembler`] is the single reassembly state machine: the socket
-//! reader threads feed it whatever `read()` returns — arbitrarily torn
+//! [`Reassembler`] is the single reassembly state machine: the leader's
+//! poll loop feeds it whatever `read()` returns — arbitrarily torn
 //! chunks, frames split mid-header, several frames coalesced into one
-//! segment — and pop complete frames. It is deliberately I/O-free so the
+//! segment — and pops complete frames. It is deliberately I/O-free so the
 //! torn-read property suite (`rust/tests/transport_framing.rs`) can drive
 //! it byte by byte; [`read_frame`] is the blocking adapter the TCP backend
 //! uses on a real stream.

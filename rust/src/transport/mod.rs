@@ -5,8 +5,9 @@
 //!
 //! * [`channel`] — the in-process mpsc star fabric (M worker threads), the
 //!   original counted-byte simulator;
-//! * [`tcp`] — real sockets on `std::net`, blocking I/O with one reader
-//!   thread per connection, for N genuine OS processes on a host.
+//! * [`tcp`] — real sockets on `std::net`, a single readiness-driven poll
+//!   loop on the leader (no reader threads, no fan-in queue — see [`poll`]),
+//!   for N genuine OS processes on a host.
 //!
 //! Both carry the exact same `coordinator::protocol::Msg` frames and count
 //! the exact same data-plane bytes, so a TCP run is byte-identical — in
@@ -33,11 +34,14 @@
 
 pub mod channel;
 pub mod frame;
+pub mod poll;
 pub mod tcp;
 
 pub use channel::{channel_pair, ChannelLeader, ChannelWorker};
 pub use frame::{read_frame, write_frame, Reassembler, MAX_FRAME_BYTES};
 pub use tcp::{TcpLeader, TcpLeaderBuilder, TcpWorker};
+
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -61,10 +65,33 @@ pub struct NetSnapshot {
 pub trait LeaderTransport {
     fn workers(&self) -> usize;
 
-    /// Receive the next uplink frame from any worker. Implementations with
-    /// a straggler timeout must return an `Err` mentioning "straggler" when
-    /// no frame arrives in time, rather than blocking forever.
-    fn recv(&mut self) -> Result<Vec<u8>>;
+    /// The absolute deadline one *gather phase* (a full round of expected
+    /// frames) may run until, per this transport's straggler policy.
+    /// `None` = wait forever. The protocol loop computes this **once per
+    /// gather** and passes it to every [`recv_deadline`] of that phase, so
+    /// the budget bounds the whole fan-in — a worker trickling frames
+    /// cannot reset the clock per frame.
+    ///
+    /// [`recv_deadline`]: LeaderTransport::recv_deadline
+    fn gather_deadline(&self) -> Option<Instant> {
+        None
+    }
+
+    /// Receive the next uplink frame from any worker, waiting at most until
+    /// `deadline` (`None` = block until a frame or a transport error).
+    /// Implementations must return an `Err` mentioning "straggler" when the
+    /// deadline passes with no frame, rather than blocking forever.
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Result<Vec<u8>>;
+
+    /// Receive the next uplink frame under a fresh single-frame deadline.
+    /// Gather loops should prefer `gather_deadline()` + [`recv_deadline`]
+    /// so one budget covers the whole phase.
+    ///
+    /// [`recv_deadline`]: LeaderTransport::recv_deadline
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let deadline = self.gather_deadline();
+        self.recv_deadline(deadline)
+    }
 
     /// Send one frame to worker `worker`.
     fn send_to(&mut self, worker: usize, frame: &[u8]) -> Result<()>;

@@ -1,0 +1,164 @@
+//! Readiness gate for the event-driven TCP leader: a thin, std-only
+//! wrapper over `poll(2)`.
+//!
+//! The leader keeps its sockets **blocking** and uses readiness purely as a
+//! gate: a socket is only `read()` after the kernel reported it readable,
+//! so the read returns immediately (data or EOF) and the leader never
+//! parks on one connection while another has frames waiting. Writes are
+//! untouched — they stay blocking with an OS write timeout, which sidesteps
+//! the partial-write bookkeeping nonblocking writes would need.
+//!
+//! No external crates: std already links libc on unix, so the one symbol
+//! this needs (`poll`) is declared directly. On non-unix targets the gate
+//! degrades to a short sleep that reports every descriptor ready; the TCP
+//! leader compensates there with short OS read timeouts (see
+//! `super::tcp`), trading a little CPU for portability.
+
+use std::io;
+use std::time::Duration;
+
+/// One descriptor's readiness report from [`wait_readable`].
+pub const READ_EVENTS: i16 = POLLIN | POLLERR | POLLHUP | POLLNVAL;
+
+const POLLIN: i16 = 0x001;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+#[cfg(unix)]
+mod sys {
+    use super::*;
+    use std::os::unix::io::RawFd;
+
+    /// `struct pollfd` — layout fixed by POSIX.
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    // nfds_t is `unsigned long` on Linux, `unsigned int` elsewhere.
+    #[cfg(target_os = "linux")]
+    type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: std::os::raw::c_int) -> i32;
+    }
+
+    /// Block until at least one of `fds` is readable (or has an error/hangup
+    /// pending — both mean "read now", the read will report the condition),
+    /// or `timeout` elapses. Returns the *indices into `fds`* that are
+    /// ready; an empty vec means the wait timed out or was interrupted by a
+    /// signal — the caller's deadline loop handles both the same way.
+    pub fn wait_readable(fds: &[RawFd], timeout: Option<Duration>) -> io::Result<Vec<usize>> {
+        let mut pfds: Vec<PollFd> = fds
+            .iter()
+            .map(|&fd| PollFd { fd, events: POLLIN, revents: 0 })
+            .collect();
+        // Round up to whole milliseconds so a sub-ms remaining deadline
+        // still sleeps instead of spinning poll(timeout=0) until it passes.
+        let ms: std::os::raw::c_int = match timeout {
+            None => -1,
+            Some(d) => d
+                .as_millis()
+                .saturating_add(u128::from(d.subsec_nanos() % 1_000_000 != 0))
+                .min(i32::MAX as u128) as std::os::raw::c_int,
+        };
+        let rc = unsafe { poll(pfds.as_mut_ptr(), pfds.len() as NfdsT, ms) };
+        if rc < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(Vec::new()); // caller re-checks its deadline
+            }
+            return Err(e);
+        }
+        Ok(pfds
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.revents & READ_EVENTS != 0)
+            .map(|(i, _)| i)
+            .collect())
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use super::*;
+
+    /// Portability fallback without a real readiness syscall: sleep briefly,
+    /// then claim everything is ready. Correct only because the TCP leader
+    /// puts short OS read timeouts on its sockets on these targets, so a
+    /// false "ready" costs one timed-out read, never a hang.
+    pub fn wait_readable(
+        fds: &[std::os::raw::c_int],
+        timeout: Option<Duration>,
+    ) -> io::Result<Vec<usize>> {
+        let nap = Duration::from_millis(2);
+        std::thread::sleep(timeout.map_or(nap, |t| t.min(nap)));
+        Ok((0..fds.len()).collect())
+    }
+}
+
+pub use sys::wait_readable;
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn times_out_when_nothing_readable() {
+        let (_a, b) = pair();
+        let t0 = Instant::now();
+        let ready =
+            wait_readable(&[b.as_raw_fd()], Some(Duration::from_millis(30))).unwrap();
+        assert!(ready.is_empty(), "no data was written, nothing can be ready");
+        assert!(t0.elapsed() >= Duration::from_millis(25), "must actually wait");
+    }
+
+    #[test]
+    fn reports_only_the_readable_socket() {
+        let (mut a1, b1) = pair();
+        let (_a2, b2) = pair();
+        a1.write_all(b"x").unwrap();
+        a1.flush().unwrap();
+        let ready = wait_readable(
+            &[b1.as_raw_fd(), b2.as_raw_fd()],
+            Some(Duration::from_secs(5)),
+        )
+        .unwrap();
+        assert_eq!(ready, vec![0], "only the written-to socket is readable");
+    }
+
+    #[test]
+    fn closed_peer_reports_ready_for_eof() {
+        let (a, b) = pair();
+        drop(a);
+        let ready =
+            wait_readable(&[b.as_raw_fd()], Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(ready, vec![0], "EOF must surface as readability");
+    }
+
+    #[test]
+    fn zero_timeout_returns_immediately() {
+        let (_a, b) = pair();
+        let t0 = Instant::now();
+        let ready = wait_readable(&[b.as_raw_fd()], Some(Duration::ZERO)).unwrap();
+        assert!(ready.is_empty());
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

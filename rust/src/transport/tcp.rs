@@ -5,24 +5,31 @@
 //! exactly one [`Msg::Hello`] join frame per connection to learn which
 //! worker owns it (connection order is nondeterministic; worker ids come
 //! from the worker's own CLI, so the fold order — and therefore the math —
-//! is identical to the channel and driver runtimes). One reader thread per
-//! connection reassembles length-prefixed frames (`super::frame`) and
-//! pushes them onto a single fan-in queue; partial reads, coalesced frames,
-//! and forged/oversized length headers are handled there, never in the
-//! protocol loop.
+//! is identical to the channel and driver runtimes).
 //!
-//! Straggler policy: the leader's fan-in `recv` applies a configurable
-//! timeout (an `Err` naming the wait, instead of a silent hang); the accept
-//! phase applies the same deadline to slow joiners, and workers apply it to
-//! their downlink reads. Shutdown: `Stop` → each worker acks `Bye` and
-//! closes; the leader drains all Byes before reporting final byte totals,
-//! so those totals are deterministic and byte-identical to a channel run.
+//! The leader is a single readiness-driven loop: `poll(2)` (see
+//! [`super::poll`]) reports which connections have bytes pending, each gets
+//! one bounded `read()` into its own I/O-free [`Reassembler`], and complete
+//! frames queue for the protocol loop. No reader threads, no fan-in mpsc —
+//! leader thread count is O(1) in M, and per-worker frame order is
+//! preserved structurally (one reassembler per connection). Partial reads,
+//! coalesced frames, and forged/oversized length headers are handled in the
+//! reassembler, never in the protocol loop.
+//!
+//! Straggler policy: the leader exposes one *gather* deadline
+//! ([`LeaderTransport::gather_deadline`]) that the protocol loop threads
+//! through every `recv_deadline` of a phase, so the timeout bounds the
+//! whole M- (or K-)frame fan-in — a worker trickling frames cannot reset
+//! the clock per frame. The accept phase runs under the same deadline
+//! (poll-gated, no sleep loops), and workers apply it to their downlink
+//! reads. Shutdown: `Stop` → each worker acks `Bye` and closes; the leader
+//! drains all Byes before reporting final byte totals, so those totals are
+//! deterministic and byte-identical to a channel run.
 
-use std::io::Write as _;
+use std::collections::VecDeque;
+use std::io::{Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -31,10 +38,33 @@ use crate::coordinator::network::NetStats;
 use crate::coordinator::protocol::Msg;
 
 use super::frame::{read_frame, write_frame, Reassembler};
+use super::poll::wait_readable;
 use super::{LeaderTransport, NetSnapshot, WorkerTransport};
 
 /// Default deadline for joins, straggler waits, and worker downlink reads.
 pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+#[cfg(unix)]
+fn sock_fd(s: &TcpStream) -> std::os::raw::c_int {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn sock_fd(_s: &TcpStream) -> std::os::raw::c_int {
+    0 // the non-unix poll fallback never dereferences descriptors
+}
+
+#[cfg(unix)]
+fn listener_fd(l: &TcpListener) -> std::os::raw::c_int {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn listener_fd(_l: &TcpListener) -> std::os::raw::c_int {
+    0
+}
 
 /// Bound listener waiting for its workers: split from [`TcpLeader`] so the
 /// caller can learn the OS-assigned port (`addr=127.0.0.1:0`) and announce
@@ -64,34 +94,39 @@ impl TcpLeaderBuilder {
     }
 
     /// Accept exactly `workers` connections, each introduced by a
-    /// [`Msg::Hello`] carrying its worker id, and start one reader thread
-    /// per connection. A malformed join (bad frame, id out of range,
-    /// duplicate id) aborts the accept: this runtime trusts its cluster and
-    /// prefers failing loudly over running with a hole in the fold order.
+    /// [`Msg::Hello`] carrying its worker id. A malformed join (bad frame,
+    /// id out of range, duplicate id) aborts the accept: this runtime
+    /// trusts its cluster and prefers failing loudly over running with a
+    /// hole in the fold order. The wait for the next connection is
+    /// poll-gated on the listener with the remaining join deadline — no
+    /// sleep loops.
     pub fn accept(self, workers: usize) -> Result<TcpLeader> {
         if workers == 0 || workers > u16::MAX as usize {
             bail!("worker count {workers} out of range");
         }
         let deadline = self.timeout.map(|d| Instant::now() + d);
         self.listener.set_nonblocking(true)?;
-        let stats = Arc::new(NetStats::default());
-        let (tx, rx) = channel::<Result<Vec<u8>>>();
-        let mut conns: Vec<Option<TcpStream>> = (0..workers).map(|_| None).collect();
+        let mut conns: Vec<Option<Conn>> = (0..workers).map(|_| None).collect();
         let mut ctrl_bytes = 0u64;
         let mut joined = 0usize;
         while joined < workers {
             let (mut stream, peer) = match self.listener.accept() {
                 Ok(ok) => ok,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if let Some(dl) = deadline {
-                        if Instant::now() > dl {
-                            bail!(
-                                "accept timeout: {joined}/{workers} workers joined within {:?}",
-                                self.timeout.unwrap()
-                            );
+                    let wait = match deadline {
+                        None => None,
+                        Some(dl) => {
+                            let left = dl.saturating_duration_since(Instant::now());
+                            if left.is_zero() {
+                                bail!(
+                                    "accept timeout: {joined}/{workers} workers joined within {:?}",
+                                    self.timeout.unwrap()
+                                );
+                            }
+                            Some(left)
                         }
-                    }
-                    std::thread::sleep(Duration::from_millis(5));
+                    };
+                    wait_readable(&[listener_fd(&self.listener)], wait)?;
                     continue;
                 }
                 Err(e) => return Err(e.into()),
@@ -113,7 +148,7 @@ impl TcpLeaderBuilder {
             };
             stream.set_read_timeout(hello_timeout)?;
             // The join frame; any bytes the worker sent right behind it stay
-            // buffered in this reassembler, which the reader thread inherits.
+            // buffered in this reassembler, which the poll loop inherits.
             let mut re = Reassembler::new();
             let hello = read_frame(&mut stream, &mut re)
                 .with_context(|| format!("{peer}: reading Hello"))?
@@ -131,59 +166,51 @@ impl TcpLeaderBuilder {
             if conns[id].is_some() {
                 bail!("{peer}: duplicate Hello for worker {id}");
             }
-            // Stragglers are caught at the fan-in queue, not per socket —
-            // but writes keep the deadline: a joined-then-wedged worker
-            // whose buffers fill must fail the leader's send, not hang it.
-            stream.set_read_timeout(None)?;
+            // Sockets stay *blocking*; readiness is the gate, never the
+            // read itself. The read timeout is insurance only: on unix a
+            // spurious-readable read can park at most one straggler window;
+            // on the non-unix fallback (which reports everything readable)
+            // it must be short, since timed-out reads are the idle path.
+            #[cfg(unix)]
+            stream.set_read_timeout(self.timeout)?;
+            #[cfg(not(unix))]
+            stream.set_read_timeout(Some(Duration::from_millis(10)))?;
+            // Writes keep the deadline: a joined-then-wedged worker whose
+            // buffers fill must fail the leader's send, not hang it.
             stream.set_write_timeout(self.timeout)?;
-            conns[id] = Some(stream.try_clone()?);
-            let tx = tx.clone();
-            let stats = stats.clone();
-            std::thread::spawn(move || reader_loop(id, stream, re, tx, stats));
+            conns[id] = Some(Conn { sock: stream, re, open: true });
             joined += 1;
         }
         let conns = conns.into_iter().map(|c| c.expect("all joined")).collect();
-        Ok(TcpLeader { conns, rx, stats, timeout: self.timeout, ctrl_bytes })
+        Ok(TcpLeader {
+            conns,
+            ready: VecDeque::new(),
+            stats: NetStats::default(),
+            timeout: self.timeout,
+            ctrl_bytes,
+        })
     }
 }
 
-/// Per-connection reader: reassemble frames, count them, fan them in. The
-/// thread is detached — it exits on clean EOF (worker sent Bye and closed),
-/// on error (reported through the queue), or when the leader drops the
-/// queue receiver.
-fn reader_loop(
-    worker: usize,
-    mut sock: TcpStream,
-    mut re: Reassembler,
-    tx: Sender<Result<Vec<u8>>>,
-    stats: Arc<NetStats>,
-) {
-    loop {
-        match read_frame(&mut sock, &mut re) {
-            Ok(Some(frame)) => {
-                stats.up_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
-                stats.up_msgs.fetch_add(1, Ordering::Relaxed);
-                if tx.send(Ok(frame)).is_err() {
-                    return; // leader gone
-                }
-            }
-            Ok(None) => return, // clean EOF at a frame boundary
-            Err(e) => {
-                let _ = tx.send(Err(anyhow!("worker {worker} uplink: {e}")));
-                return;
-            }
-        }
-    }
+/// One accepted worker connection: its blocking socket, its private
+/// reassembly state, and whether the peer has cleanly closed.
+#[derive(Debug)]
+struct Conn {
+    sock: TcpStream,
+    re: Reassembler,
+    open: bool,
 }
 
-/// Leader's transport over M accepted connections.
+/// Leader's transport over M accepted connections — one poll loop, zero
+/// auxiliary threads.
 #[derive(Debug)]
 pub struct TcpLeader {
-    /// Write halves, indexed by worker id.
-    conns: Vec<TcpStream>,
-    /// Fan-in of reassembled uplink frames from all reader threads.
-    rx: Receiver<Result<Vec<u8>>>,
-    stats: Arc<NetStats>,
+    /// Connections indexed by worker id.
+    conns: Vec<Conn>,
+    /// Complete frames reassembled but not yet handed to the protocol loop
+    /// (one poll wakeup can complete several frames across connections).
+    ready: VecDeque<Vec<u8>>,
+    stats: NetStats,
     timeout: Option<Duration>,
     ctrl_bytes: u64,
 }
@@ -195,6 +222,45 @@ impl TcpLeader {
     pub fn ctrl_bytes(&self) -> u64 {
         self.ctrl_bytes
     }
+
+    /// One readable connection's turn: a single bounded read, then drain
+    /// every frame it completed into the ready queue.
+    fn service_conn(&mut self, i: usize) -> Result<()> {
+        let TcpLeader { conns, ready, stats, .. } = self;
+        let conn = &mut conns[i];
+        let mut chunk = [0u8; 16 * 1024];
+        let n = match conn.sock.read(&mut chunk) {
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                return Ok(()); // spurious readiness: no data after all
+            }
+            Err(e) => return Err(anyhow!("worker {i} uplink: {e}")),
+        };
+        if n == 0 {
+            let pending = conn.re.pending_bytes();
+            if pending > 0 {
+                bail!("worker {i} uplink: stream closed mid-frame with {pending} buffered bytes");
+            }
+            conn.open = false; // clean EOF at a frame boundary
+            return Ok(());
+        }
+        conn.re.push(&chunk[..n]);
+        while let Some(frame) =
+            conn.re.next_frame().with_context(|| format!("worker {i} uplink"))?
+        {
+            stats.up_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+            stats.up_msgs.fetch_add(1, Ordering::Relaxed);
+            ready.push_back(frame);
+        }
+        Ok(())
+    }
 }
 
 impl LeaderTransport for TcpLeader {
@@ -202,26 +268,49 @@ impl LeaderTransport for TcpLeader {
         self.conns.len()
     }
 
-    fn recv(&mut self) -> Result<Vec<u8>> {
-        match self.timeout {
-            None => match self.rx.recv() {
-                Ok(r) => r,
-                Err(_) => bail!("all uplink readers exited"),
-            },
-            Some(d) => match self.rx.recv_timeout(d) {
-                Ok(r) => r,
-                Err(RecvTimeoutError::Timeout) => {
-                    bail!("straggler timeout: no uplink frame within {d:?}")
+    fn gather_deadline(&self) -> Option<Instant> {
+        self.timeout.map(|d| Instant::now() + d)
+    }
+
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Result<Vec<u8>> {
+        loop {
+            if let Some(frame) = self.ready.pop_front() {
+                return Ok(frame);
+            }
+            let mut idx = Vec::new();
+            let mut fds = Vec::new();
+            for (i, c) in self.conns.iter().enumerate() {
+                if c.open {
+                    idx.push(i);
+                    fds.push(sock_fd(&c.sock));
                 }
-                Err(RecvTimeoutError::Disconnected) => bail!("all uplink readers exited"),
-            },
+            }
+            if fds.is_empty() {
+                bail!("all workers disconnected with no frames pending");
+            }
+            let wait = match deadline {
+                None => None,
+                Some(dl) => {
+                    let left = dl.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        bail!("straggler timeout: gather deadline passed with frames missing");
+                    }
+                    Some(left)
+                }
+            };
+            for ri in wait_readable(&fds, wait)? {
+                self.service_conn(idx[ri])?;
+            }
         }
     }
 
     fn send_to(&mut self, worker: usize, frame: &[u8]) -> Result<()> {
-        let sock = &mut self.conns[worker];
-        write_frame(sock, frame).with_context(|| format!("send to worker {worker}"))?;
-        sock.flush()?;
+        let m = self.conns.len();
+        let Some(conn) = self.conns.get_mut(worker) else {
+            bail!("send_to worker {worker} out of range 0..{m}");
+        };
+        write_frame(&mut conn.sock, frame).with_context(|| format!("send to worker {worker}"))?;
+        conn.sock.flush()?;
         self.stats.down_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
         self.stats.down_msgs.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -245,6 +334,8 @@ impl TcpWorker {
     /// not listening yet) and introduce this worker id with a `Hello`
     /// frame. Only not-yet-listening failures are retried; a permanent
     /// error (unparseable address, unroutable host) surfaces immediately.
+    /// The retry loop never sleeps past its deadline and never attempts a
+    /// connect after the deadline has expired.
     pub fn connect(addr: &str, worker: u16, timeout: Option<Duration>) -> Result<Self> {
         use std::io::ErrorKind;
         let deadline = timeout.map(|d| Instant::now() + d);
@@ -259,12 +350,28 @@ impl TcpWorker {
                             | ErrorKind::ConnectionAborted
                             | ErrorKind::TimedOut
                     );
-                    let expired =
-                        deadline.map(|dl| Instant::now() > dl).unwrap_or(false);
-                    if !transient || expired {
+                    if !transient {
                         return Err(anyhow!("connecting worker {worker} to {addr}: {e}"));
                     }
-                    std::thread::sleep(Duration::from_millis(10));
+                    match deadline {
+                        None => std::thread::sleep(Duration::from_millis(10)),
+                        Some(dl) => {
+                            let left = dl.saturating_duration_since(Instant::now());
+                            if left.is_zero() {
+                                return Err(anyhow!(
+                                    "connect timeout: worker {worker} to {addr} within {:?}: {e}",
+                                    timeout.unwrap()
+                                ));
+                            }
+                            std::thread::sleep(left.min(Duration::from_millis(10)));
+                            if Instant::now() >= dl {
+                                return Err(anyhow!(
+                                    "connect timeout: worker {worker} to {addr} within {:?}: {e}",
+                                    timeout.unwrap()
+                                ));
+                            }
+                        }
+                    }
                 }
             }
         };
@@ -386,11 +493,82 @@ mod tests {
     }
 
     #[test]
+    fn tcp_connect_retry_respects_deadline() {
+        // Grab a port the OS just released: connecting to it is refused
+        // (transient, so it retries) until the deadline — which must be
+        // honored without one extra post-deadline sleep-and-attempt.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t0 = Instant::now();
+        let err = TcpWorker::connect(&addr, 0, Some(Duration::from_millis(200))).unwrap_err();
+        let elapsed = t0.elapsed();
+        assert!(err.to_string().contains("timeout"), "{err}");
+        assert!(elapsed >= Duration::from_millis(150), "gave up too early: {elapsed:?}");
+        assert!(elapsed < Duration::from_secs(2), "overran the deadline: {elapsed:?}");
+    }
+
+    #[test]
     fn tcp_accept_times_out_without_enough_workers() {
         let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
             .unwrap()
             .with_timeout(Some(Duration::from_millis(100)));
         let err = builder.accept(1).unwrap_err();
         assert!(err.to_string().contains("accept timeout"), "{err}");
+    }
+
+    #[test]
+    fn tcp_send_to_out_of_range_errors_cleanly() {
+        let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Some(Duration::from_secs(20)));
+        let addr = builder.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let w = TcpWorker::connect(&addr, 0, Some(Duration::from_secs(20)));
+            std::thread::sleep(Duration::from_millis(200));
+            drop(w);
+        });
+        let mut leader = builder.accept(1).unwrap();
+        let err = leader.send_to(1, &[1, 2]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_gather_deadline_bounds_trickled_frames() {
+        // A worker feeding one frame per 40 ms must not extend a 150 ms
+        // gather budget: under the per-frame timeout bug each frame reset
+        // the clock and the gather never failed.
+        let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .with_timeout(Some(Duration::from_millis(150)));
+        let addr = builder.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(&addr, 0, Some(Duration::from_secs(20))).unwrap();
+            for i in 0..20u8 {
+                if w.send(vec![i]).is_err() {
+                    break; // leader gave up and closed, as expected
+                }
+                std::thread::sleep(Duration::from_millis(40));
+            }
+        });
+        let mut leader = builder.accept(1).unwrap();
+        let deadline = leader.gather_deadline();
+        let t0 = Instant::now();
+        let mut got = 0usize;
+        let err = loop {
+            match leader.recv_deadline(deadline) {
+                Ok(_) => got += 1,
+                Err(e) => break e,
+            }
+        };
+        assert!(err.to_string().contains("straggler"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "deadline was reset by trickled frames; got {got} frames"
+        );
+        drop(leader);
+        handle.join().unwrap();
     }
 }

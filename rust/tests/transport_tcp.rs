@@ -19,7 +19,7 @@ use std::time::Duration;
 use tng::codec::Codec;
 use tng::config::Settings;
 use tng::coordinator::metrics::Trace;
-use tng::coordinator::{driver, parallel, DriverConfig};
+use tng::coordinator::{driver, parallel, DriverConfig, StragglerSchedule};
 use tng::data::synthetic::{generate, SkewConfig};
 use tng::experiments::common;
 use tng::objectives::logreg::LogReg;
@@ -214,6 +214,125 @@ fn tcp_hierarchical_two_groups_matches_driver_and_channel() {
         ratio < 0.55,
         "groups=2 over M=4 must roughly halve the root fan-in, got {ratio:.3}"
     );
+}
+
+/// Quorum aggregation with a scripted straggler over real sockets: k=3 of
+/// 4 with worker 3 classified late every round. The late frame must be
+/// *folded* into the next round (damped by `link::late_fold_scale`), not
+/// dropped — pinned by the late/skipped counters — and the run must be
+/// `param_digest`-identical across driver, channel, and TCP with identical
+/// byte ledgers (every frame still crosses the wire).
+#[test]
+fn tcp_quorum_scripted_matches_driver_and_channel() {
+    let obj = logreg();
+    let codec = common::make_codec("ternary").unwrap();
+    let mut cfg = base_cfg();
+    cfg.rounds = 12;
+    cfg.quorum = Some(3);
+    cfg.straggler_schedule = Some(StragglerSchedule::every_round(vec![3]));
+    let seq = driver::run(&obj, codec.as_ref(), "seq", &cfg);
+    let chan = parallel::run(&obj, codec.as_ref(), "chan", &cfg).unwrap();
+    let tcp = run_tcp(&obj, codec.as_ref(), &cfg);
+    assert_traces_identical(&seq, &tcp, "quorum: driver-vs-tcp");
+    assert_traces_identical(&chan, &tcp, "quorum: chan-vs-tcp");
+    assert_eq!(
+        (seq.total_wire_up_bytes, seq.total_wire_down_bytes),
+        (tcp.total_wire_up_bytes, tcp.total_wire_down_bytes),
+        "quorum: driver-mirrored wire bytes must equal TCP's — late frames \
+         still cross the wire and are still counted"
+    );
+    assert_eq!(
+        (chan.total_wire_up_bytes, chan.total_wire_down_bytes),
+        (tcp.total_wire_up_bytes, tcp.total_wire_down_bytes),
+        "quorum: channel and TCP measured bytes must be identical"
+    );
+    // Folded, not dropped: 11 of worker 3's 12 frames fold into the next
+    // round; only the final round's has no next round and is skipped.
+    assert_eq!(tcp.total_late_frames, 11, "late frames must fold");
+    assert_eq!(tcp.total_skipped_frames, 1, "only the final frame is skipped");
+    assert_eq!(
+        (seq.total_late_frames, seq.total_skipped_frames),
+        (tcp.total_late_frames, tcp.total_skipped_frames)
+    );
+    assert_eq!(
+        (chan.total_late_frames, chan.total_skipped_frames),
+        (tcp.total_late_frames, tcp.total_skipped_frames)
+    );
+    for (a, b) in seq.records.iter().zip(&tcp.records) {
+        assert_eq!((a.late, a.skipped), (b.late, b.skipped), "round {}", a.round);
+    }
+    // The damped one-round-stale fold is a genuinely different (still
+    // deterministic) trajectory than the full barrier's.
+    let full = driver::run(
+        &obj,
+        codec.as_ref(),
+        "full",
+        &DriverConfig { quorum: None, straggler_schedule: None, ..common::clone_cfg(&cfg) },
+    );
+    assert_ne!(full.param_digest(), tcp.param_digest());
+}
+
+/// `Threads:` from /proc/self/status (linux); `None` elsewhere.
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:").and_then(|v| v.trim().parse().ok()))
+}
+
+/// 128 workers over localhost sockets: the readiness-driven leader must
+/// serve all of them from its single protocol thread — the process grows
+/// by the 128 in-process worker threads and nothing more (the old
+/// design added one reader thread per accepted connection on top) — and
+/// the run must still match the deterministic driver bit for bit.
+#[test]
+fn tcp_128_worker_smoke() {
+    const M: usize = 128;
+    let ds = generate(&SkewConfig { n: 512, dim: 8, seed: 11, ..Default::default() });
+    let obj = LogReg::new(ds, 0.05);
+    let cfg = DriverConfig {
+        seed: 5,
+        rounds: 3,
+        workers: M,
+        batch: 1,
+        schedule: StepSchedule::Const(0.1),
+        references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 1 }],
+        record_every: 3,
+        eval_loss: false,
+        ..Default::default()
+    };
+    let codec = common::make_codec("ternary").unwrap();
+    let before = thread_count();
+    let builder = TcpLeaderBuilder::bind("127.0.0.1:0")
+        .unwrap()
+        .with_timeout(Some(NET_TIMEOUT));
+    let addr = builder.local_addr().unwrap().to_string();
+    let tcp = std::thread::scope(|scope| {
+        for id in 0..M {
+            let addr = addr.clone();
+            let (obj, cfg, codec) = (&obj, &cfg, codec.as_ref());
+            scope.spawn(move || {
+                let mut tp = TcpWorker::connect(&addr, id as u16, Some(NET_TIMEOUT)).unwrap();
+                parallel::run_worker(id, obj, codec, cfg, &mut tp).unwrap();
+            });
+        }
+        let mut leader = builder.accept(M).unwrap();
+        // All 128 connections are accepted: the only threads this process
+        // gained are the 128 in-process workers themselves (plus scheduler
+        // noise). A reader-thread-per-connection leader would sit at ~2M.
+        if let (Some(b), Some(d)) = (before, thread_count()) {
+            assert!(
+                d.saturating_sub(b) <= M + 12,
+                "leader I/O must stay O(1) in M: {b} -> {d} threads for M={M}"
+            );
+        }
+        parallel::run_leader(&obj, codec.as_ref(), "tcp128", &cfg, &mut leader).unwrap()
+    });
+    assert_eq!(tcp.workers, M);
+    let seq = driver::run(&obj, codec.as_ref(), "seq", &cfg);
+    assert_eq!(seq.param_digest(), tcp.param_digest(), "128-worker digest");
+    assert_eq!(seq.total_wire_up_bytes, tcp.total_wire_up_bytes);
+    assert_eq!(seq.total_wire_down_bytes, tcp.total_wire_down_bytes);
 }
 
 /// SVRG's anchor fan-in/out crosses the sockets too; it must match the

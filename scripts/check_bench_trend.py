@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Sanity-check the committed BENCH_PR*.json benchmark series.
+
+`cargo bench --bench bench_coordinator` rewrites these files on the build
+machine; this script (stdlib only, wired into CI) checks that whatever is
+committed still tells the story each PR's subsystem claims:
+
+* BENCH_PR4 — downlink compression: a compressed broadcast must be far
+  below the raw-f32 baseline, and entropy coding must not blow up vs the
+  packed ternary wire.
+* BENCH_PR5 — hierarchical aggregation: the tree's root fan-in must shrink
+  vs the flat star, roughly ~g/M.
+* BENCH_PR6 — quorum rounds: the uplink byte ledger must be *identical* to
+  the full barrier (late frames still ship and still count), the modeled
+  round time must shrink monotonically as k drops, and every frame that
+  missed its barrier must show up in the late/skipped ledger.
+
+Exit status 0 = all invariants hold; 1 = a regression (or malformed file),
+with one line per failure.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+FAILURES = []
+
+
+def check(cond, msg):
+    if cond:
+        print(f"  ok: {msg}")
+    else:
+        FAILURES.append(msg)
+        print(f"  FAIL: {msg}")
+
+
+def load(root, name, configs):
+    path = root / name
+    if not path.is_file():
+        FAILURES.append(f"{name}: missing (run `cargo bench --bench bench_coordinator`)")
+        print(f"  FAIL: {name} missing")
+        return None
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        FAILURES.append(f"{name}: invalid JSON: {e}")
+        print(f"  FAIL: {name} invalid JSON")
+        return None
+    missing = [c for c in configs if c not in data]
+    check(not missing, f"{name} has all configs {configs}" if not missing
+          else f"{name}: missing configs {missing}")
+    return None if missing else data
+
+
+def main():
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parent.parent
+
+    print("BENCH_PR4.json (downlink compression)")
+    pr4 = load(root, "BENCH_PR4.json",
+               ["raw-f32-down", "down-ternary", "down-entropy-ternary",
+                "down-entropy-ternary-noef"])
+    if pr4:
+        raw = pr4["raw-f32-down"]["down_bytes_per_elt"]
+        tern = pr4["down-ternary"]["down_bytes_per_elt"]
+        ent = pr4["down-entropy-ternary"]["down_bytes_per_elt"]
+        check(raw > 3.9, f"raw f32 downlink ~4 B/elt (got {raw})")
+        check(tern < 0.5 * raw, f"ternary downlink < 50% of raw ({tern} vs {raw})")
+        check(ent < 1.2 * tern, f"entropy downlink not worse than packed ternary "
+                                f"+20% ({ent} vs {tern})")
+        ups = [v["up_bytes_per_elt"] for v in pr4.values()]
+        check(max(ups) < 1.02 * min(ups),
+              f"uplink ledger unaffected by downlink config (spread {min(ups)}..{max(ups)})")
+
+    print("BENCH_PR5.json (hierarchical aggregation)")
+    pr5 = load(root, "BENCH_PR5.json", ["flat", "groups-2", "groups-4"])
+    if pr5:
+        check(abs(pr5["flat"]["vs_flat"] - 1.0) < 1e-9, "flat is its own baseline")
+        g2, g4 = pr5["groups-2"]["vs_flat"], pr5["groups-4"]["vs_flat"]
+        check(g2 < 0.5, f"groups=2 root fan-in < 50% of flat (got {g2})")
+        check(g4 < 0.75, f"groups=4 root fan-in < 75% of flat (got {g4})")
+        check(g2 < g4, f"fewer groups, smaller root fan-in ({g2} < {g4})")
+
+    print("BENCH_PR6.json (quorum rounds)")
+    pr6 = load(root, "BENCH_PR6.json", ["full-barrier", "quorum-3", "quorum-2"])
+    if pr6:
+        ups = {k: v["up_bytes_per_elt"] for k, v in pr6.items()}
+        check(max(ups.values()) - min(ups.values()) < 1e-6,
+              f"quorum leaves the uplink byte ledger untouched ({ups})")
+        full = pr6["full-barrier"]
+        check(full["late"] == 0 and full["skipped"] == 0,
+              "full barrier has an empty late/skipped ledger")
+        check(abs(full["vs_full"] - 1.0) < 1e-9, "full barrier is its own baseline")
+        q3, q2 = pr6["quorum-3"], pr6["quorum-2"]
+        check(q3["vs_full"] < 1.0, f"quorum=3 modeled round time < full ({q3['vs_full']})")
+        check(q2["vs_full"] < q3["vs_full"],
+              f"smaller quorum, faster modeled round ({q2['vs_full']} < {q3['vs_full']})")
+        for name, q in [("quorum-3", q3), ("quorum-2", q2)]:
+            check(q["late"] + q["skipped"] > 0,
+                  f"{name}: frames missing the barrier are accounted "
+                  f"(late={q['late']} skipped={q['skipped']})")
+            check(q["skipped"] <= q["late"],
+                  f"{name}: folding dominates dropping ({q['skipped']} <= {q['late']})")
+
+    if FAILURES:
+        print(f"\n{len(FAILURES)} bench-trend failure(s)")
+        return 1
+    print("\nbench trend ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
