@@ -12,6 +12,7 @@ use tng::codec::{
     sharded::ShardedCodec, signsgd::SignCodec, sparse::SparseCodec,
     ternary::TernaryCodec, topk::TopKCodec, wire, Codec, CodecScratch, Payload,
 };
+use tng::simd::{self, Backend};
 use tng::tng::Tng;
 use tng::util::alloc_counter::{alloc_count, CountingAlloc};
 use tng::util::bench::{bench, black_box};
@@ -183,6 +184,9 @@ fn main() {
             );
         }
     }
+
+    // ---- PR-7 kernel dispatch: scalar vs AVX2, unfused vs fused ---------
+    bench_kernels(&mut rng);
 }
 
 fn clone_codec(label: &str) -> Box<dyn Codec> {
@@ -191,4 +195,86 @@ fn clone_codec(label: &str) -> Box<dyn Codec> {
         "qsgd4" => Box::new(QsgdCodec::new(4)),
         other => unreachable!("unknown codec label {other}"),
     }
+}
+
+/// PR-7 kernel-dispatch benchmarks: scalar vs AVX2 per-kernel encode
+/// throughput, and the fused normalize→reduce→quantize TNG path vs the
+/// historical three-pass scalar path. Emits BENCH_PR7.json (checked by
+/// scripts/check_bench_trend.py). Backends are bit-identical, so every
+/// config measures the *same* message being produced faster.
+fn bench_kernels(rng: &mut Rng) {
+    println!("# kernel dispatch: scalar vs {} (TNG_SIMD overrides)", simd::backend_name());
+    if !simd::avx2_available() {
+        println!("# AVX2 unavailable: skipping kernel A/B and BENCH_PR7.json rewrite");
+        return;
+    }
+    let mut json = String::from("{\n");
+    let mut first = true;
+    for pow in [20u32, 24] {
+        let d = 1usize << pow;
+        let v = randv(rng, d);
+        let gref: Vec<f32> = v.iter().map(|x| x + 0.05 * (x.abs() + 0.1)).collect();
+        let bytes = 4 * d;
+
+        let mut ab = |label: &str, scalar_s: f64, simd_s: f64, simd_key: &str| {
+            let (sc, si) = (1e9 * scalar_s / d as f64, 1e9 * simd_s / d as f64);
+            println!(
+                "kernel/{label}/2^{pow}: scalar {sc:.2} ns/elt, {simd_key} {si:.2} ns/elt, \
+                 {:.2}x",
+                sc / si
+            );
+            json.push_str(&format!(
+                "{}  \"{label}-2^{pow}\": {{\"scalar_ns_per_elt\": {sc:.4}, \
+                 \"{simd_key}_ns_per_elt\": {si:.4}, \"speedup\": {:.4}}}",
+                if first { "" } else { ",\n" },
+                sc / si
+            ));
+            first = false;
+        };
+
+        for (name, codec) in [
+            ("ternary", Box::new(TernaryCodec) as Box<dyn Codec>),
+            ("qsgd4", Box::new(QsgdCodec::new(4))),
+        ] {
+            let mut times = [0.0f64; 2];
+            for (i, backend) in [Backend::Scalar, Backend::Avx2].into_iter().enumerate() {
+                simd::set_backend(backend);
+                let mut r = Rng::new(21);
+                let mut scratch = CodecScratch::new();
+                let res = bench(&format!("encode[{backend:?}]/{name}/d{d}"), BUDGET, || {
+                    codec.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+                    black_box(scratch.enc.dim)
+                });
+                res.report_throughput(bytes);
+                times[i] = res.mean.as_secs_f64();
+            }
+            ab(name, times[0], times[1], "simd");
+        }
+
+        // Fused TNG path (one pass: normalize + reduce, then quantize from
+        // the superblock draw scratch) vs the historical three-pass scalar
+        // path (normalize pass, abs-max pass, quantize pass).
+        let tng = Tng::new(TernaryCodec);
+        simd::set_backend(Backend::Scalar);
+        let mut r = Rng::new(22);
+        let mut scratch = CodecScratch::new();
+        let unfused = bench(&format!("tng_encode[Scalar,unfused]/ternary/d{d}"), BUDGET, || {
+            // The pre-kernel-layer shape of Tng::encode_into.
+            tng.normalize_into(black_box(&v), black_box(&gref), &mut scratch.normalized);
+            tng.codec.encode_into(&scratch.normalized, &mut r, &mut scratch.enc);
+            black_box(scratch.enc.dim)
+        });
+        unfused.report_throughput(bytes);
+        simd::set_backend(Backend::Avx2);
+        let mut r = Rng::new(22);
+        let fused = bench(&format!("tng_encode[Avx2,fused]/ternary/d{d}"), BUDGET, || {
+            tng.encode_into(black_box(&v), black_box(&gref), &mut r, &mut scratch);
+            black_box(scratch.enc.dim)
+        });
+        fused.report_throughput(bytes);
+        ab("tng-ternary-fused", unfused.mean.as_secs_f64(), fused.mean.as_secs_f64(), "fused");
+    }
+    json.push_str("\n}\n");
+    std::fs::write("BENCH_PR7.json", &json).expect("write BENCH_PR7.json");
+    println!("# wrote BENCH_PR7.json");
 }

@@ -7,7 +7,7 @@
 //! Unbiased per chunk by the same argument as [`super::ternary`].
 
 use super::{Codec, Encoded};
-use crate::util::math::abs_max;
+use crate::simd;
 use crate::util::Rng;
 
 #[derive(Debug, Clone)]
@@ -28,6 +28,10 @@ impl Codec for ChunkedTernaryCodec {
     }
 
     fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+        debug_assert!(
+            simd::first_non_finite(v).is_none(),
+            "non-finite gradient reached ChunkedTernaryCodec (use try_encode_into)"
+        );
         out.dim = v.len();
         let (chunk, scales, codes) = out.payload.ternary_chunked_mut();
         *chunk = self.chunk as u32;
@@ -35,16 +39,14 @@ impl Codec for ChunkedTernaryCodec {
         codes.resize(v.len(), 0);
         scales.clear();
         for (ci, block) in v.chunks(self.chunk).enumerate() {
-            let r = abs_max(block);
+            let r = simd::abs_max(block);
             scales.push(r);
             if r > 0.0 {
-                let inv_r = 1.0 / r;
                 let base = ci * self.chunk;
-                // Sign-select form (see ternary.rs — 3.3x over keep*sign).
-                for (j, &x) in block.iter().enumerate() {
-                    let keep = (rng.f32() < x.abs() * inv_r) as i8;
-                    codes[base + j] = if x < 0.0 { -keep } else { keep };
-                }
+                // Per-block kernel dispatch (see ternary.rs); the draw
+                // order is one serial draw per coordinate of each non-zero
+                // block, exactly as the pre-kernel loop consumed them.
+                simd::ternary_quantize(block, 1.0 / r, rng, &mut codes[base..base + block.len()]);
             }
         }
     }

@@ -50,8 +50,38 @@ pub mod wire;
 
 use crate::util::Rng;
 
+pub use crate::simd::Reduction;
+
 /// Number of payload bits for a f32 scalar on the wire.
 pub const F32_BITS: usize = 32;
+
+/// Errors surfaced by the checked encode path
+/// ([`Codec::try_encode_into`]). The unchecked [`Codec::encode_into`]
+/// documents finite input as a precondition (debug-asserted); the checked
+/// path turns a violation into this error instead of silently quantizing
+/// NaN/±inf into zeros.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CodecError {
+    /// A NaN or ±inf coordinate reached the encoder.
+    NonFinite {
+        /// Index of the first offending coordinate.
+        index: usize,
+        /// Its value (NaN or ±inf).
+        value: f32,
+    },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::NonFinite { index, value } => {
+                write!(f, "non-finite gradient coordinate at index {index}: {value}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 /// ceil(log2(n)): bits needed to address one of `n` alternatives
 /// (0 when there is at most one alternative).
@@ -417,6 +447,10 @@ pub trait Codec: Send + Sync {
     fn name(&self) -> String;
 
     /// Encode `v` into the caller-owned `out`, reusing its payload buffers.
+    ///
+    /// Precondition: every coordinate of `v` is finite (debug-asserted by
+    /// the concrete codecs). Use [`Codec::try_encode_into`] to surface a
+    /// violation as a [`CodecError`] in release builds.
     fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded);
 
     /// Allocating convenience wrapper around [`Codec::encode_into`].
@@ -424,6 +458,41 @@ pub trait Codec: Send + Sync {
         let mut out = Encoded::empty();
         self.encode_into(v, rng, &mut out);
         out
+    }
+
+    /// Checked encode: screens `v` for NaN/±inf and reports the first
+    /// offender instead of quantizing it (NaN fails every stochastic
+    /// threshold and would silently encode as 0, corrupting the scale while
+    /// looking like a healthy sparse message).
+    fn try_encode_into(
+        &self,
+        v: &[f32],
+        rng: &mut Rng,
+        out: &mut Encoded,
+    ) -> Result<(), CodecError> {
+        if let Some(index) = crate::simd::first_non_finite(v) {
+            return Err(CodecError::NonFinite { index, value: v[index] });
+        }
+        self.encode_into(v, rng, out);
+        Ok(())
+    }
+
+    /// The pre-quantization statistic this codec derives from the full
+    /// vector (ternary's abs-max scale, QSGD's L2 norm), if it has one.
+    /// `Some` advertises that [`Codec::encode_reduced_into`] skips that
+    /// pass, which is what lets `Tng::encode_into` fuse the reduction into
+    /// the normalization sweep (one read of the vector instead of two).
+    fn reduction(&self) -> Option<Reduction> {
+        None
+    }
+
+    /// Encode with the [`Codec::reduction`] statistic already computed by
+    /// the caller (`reduced` must equal the statistic over exactly this
+    /// `v`, bit for bit — the fused kernels guarantee that). Codecs without
+    /// a reduction ignore `reduced` and fall back to a plain encode.
+    fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
+        let _ = reduced;
+        self.encode_into(v, rng, out);
     }
 
     fn is_unbiased(&self) -> bool {
@@ -442,6 +511,23 @@ impl Codec for Box<dyn Codec> {
         (**self).encode_into(v, rng, out)
     }
 
+    fn try_encode_into(
+        &self,
+        v: &[f32],
+        rng: &mut Rng,
+        out: &mut Encoded,
+    ) -> Result<(), CodecError> {
+        (**self).try_encode_into(v, rng, out)
+    }
+
+    fn reduction(&self) -> Option<Reduction> {
+        (**self).reduction()
+    }
+
+    fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
+        (**self).encode_reduced_into(v, reduced, rng, out)
+    }
+
     fn is_unbiased(&self) -> bool {
         (**self).is_unbiased()
     }
@@ -457,6 +543,23 @@ impl Codec for &dyn Codec {
 
     fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
         (**self).encode_into(v, rng, out)
+    }
+
+    fn try_encode_into(
+        &self,
+        v: &[f32],
+        rng: &mut Rng,
+        out: &mut Encoded,
+    ) -> Result<(), CodecError> {
+        (**self).try_encode_into(v, rng, out)
+    }
+
+    fn reduction(&self) -> Option<Reduction> {
+        (**self).reduction()
+    }
+
+    fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
+        (**self).encode_reduced_into(v, reduced, rng, out)
     }
 
     fn is_unbiased(&self) -> bool {

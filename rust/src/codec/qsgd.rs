@@ -5,7 +5,8 @@
 //! construction. `s = 2^(b-1)` levels corresponds to roughly `b` bits per
 //! coordinate (plus sign) before entropy coding.
 
-use super::{Codec, Encoded};
+use super::{Codec, Encoded, Reduction};
+use crate::simd;
 use crate::util::math::norm2;
 use crate::util::Rng;
 
@@ -26,6 +27,30 @@ impl QsgdCodec {
         assert!(bits >= 2);
         QsgdCodec::new(1 << (bits - 1))
     }
+
+    /// Shared body of the plain and reduced encode paths: `norm` must be
+    /// `norm2(v) as f32` (the fused normalizer accumulates the same serial
+    /// f64 square-sum, so both paths see bit-identical norms).
+    fn encode_with_norm(&self, v: &[f32], norm: f32, rng: &mut Rng, out: &mut Encoded) {
+        debug_assert!(
+            simd::first_non_finite(v).is_none(),
+            "non-finite gradient reached QsgdCodec (use try_encode_into)"
+        );
+        out.dim = v.len();
+        let (norm_out, levels_out, q) = out.payload.quantized_mut();
+        let s = self.levels;
+        *norm_out = norm;
+        *levels_out = s;
+        q.clear();
+        q.resize(v.len(), 0);
+        if norm > 0.0 {
+            // `|x| * sf` is in [0, s] up to f32 rounding: the max-magnitude
+            // coordinate can land a few ulp above `s`, so the kernel clamps
+            // the rounded level to `s` (the pre-clamp code emitted level
+            // s + 1 there; regression-pinned in rust/tests/simd_kernels.rs).
+            simd::qsgd_quantize(v, s as f32 / norm, s, rng, q);
+        }
+    }
 }
 
 impl Codec for QsgdCodec {
@@ -34,23 +59,15 @@ impl Codec for QsgdCodec {
     }
 
     fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
-        out.dim = v.len();
-        let (norm_out, levels_out, q) = out.payload.quantized_mut();
-        let norm = norm2(v) as f32;
-        let s = self.levels;
-        *norm_out = norm;
-        *levels_out = s;
-        q.clear();
-        q.resize(v.len(), 0);
-        if norm > 0.0 {
-            let sf = s as f32 / norm;
-            for (qi, &x) in q.iter_mut().zip(v) {
-                let a = x.abs() * sf; // in [0, s]
-                let lo = a.floor();
-                let level = lo as i16 + (rng.f32() < (a - lo)) as i16;
-                *qi = if x >= 0.0 { level } else { -level };
-            }
-        }
+        self.encode_with_norm(v, norm2(v) as f32, rng, out);
+    }
+
+    fn reduction(&self) -> Option<Reduction> {
+        Some(Reduction::Norm2)
+    }
+
+    fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
+        self.encode_with_norm(v, reduced as f32, rng, out);
     }
 }
 

@@ -221,6 +221,35 @@ mod tests {
     }
 
     #[test]
+    fn sixteen_threads_sixteen_shards_bit_identical() {
+        // Scaling past 8 encoder threads: 16 shards on 16 threads (double
+        // the previous widest configuration) must still produce the exact
+        // serial message — and the kernel layer's per-thread backend
+        // detection must not perturb the per-shard RNG streams. On hosts
+        // with fewer cores the scheduler just multiplexes; determinism is
+        // thread-count-independent by construction.
+        let v = randv(19, (PARALLEL_MIN_DIM + 1043) * 2);
+        for inner in [
+            Box::new(TernaryCodec) as Box<dyn Codec>,
+            Box::new(QsgdCodec::new(16)),
+        ] {
+            let serial = ShardedCodec::new(&*inner as &dyn Codec, 16).with_threads(1);
+            let wide = ShardedCodec::new(&*inner as &dyn Codec, 16).with_threads(16);
+            let mut r1 = Rng::new(20);
+            let mut r2 = Rng::new(20);
+            let a = serial.encode(&v, &mut r1);
+            let b = wide.encode(&v, &mut r2);
+            assert_eq!(a, b, "inner={}", inner.name());
+            assert_eq!(r1.next_u64(), r2.next_u64(), "caller stream position");
+            let mut out_a = vec![0.0f32; v.len()];
+            let mut out_b = vec![0.0f32; v.len()];
+            serial.decode_into(&a, &mut out_a);
+            wide.decode_into(&b, &mut out_b);
+            assert_eq!(out_a, out_b);
+        }
+    }
+
+    #[test]
     fn parallel_decode_matches_serial() {
         let v = randv(5, 500);
         let codec = ShardedCodec::new(QsgdCodec::new(4), 5);

@@ -6,8 +6,8 @@
 //! `E[R t_d] = R * sign(v_d) * |v_d|/R = v_d`. Proposition 2 shows the
 //! magnitude-proportional probability is the variance-optimal ternary rule.
 
-use super::{Codec, Encoded};
-use crate::util::math::abs_max;
+use super::{Codec, Encoded, Reduction};
+use crate::simd;
 use crate::util::Rng;
 
 #[derive(Debug, Clone, Default)]
@@ -17,6 +17,27 @@ impl TernaryCodec {
     pub fn new() -> Self {
         TernaryCodec
     }
+
+    /// Shared body of the plain and reduced encode paths: `r` must be
+    /// `abs_max(v)` (the fused normalizer computes it in the same fold
+    /// order, so both paths see bit-identical scales).
+    fn encode_with_scale(&self, v: &[f32], r: f32, rng: &mut Rng, out: &mut Encoded) {
+        debug_assert!(
+            simd::first_non_finite(v).is_none(),
+            "non-finite gradient reached TernaryCodec (use try_encode_into)"
+        );
+        out.dim = v.len();
+        let (scale, codes) = out.payload.ternary_mut();
+        *scale = r;
+        codes.clear();
+        codes.resize(v.len(), 0);
+        if r > 0.0 {
+            // Branchless keep/sign-select quantization, dispatched to the
+            // kernel layer (AVX2 when available, the historical scalar loop
+            // otherwise — bit-identical either way; see DESIGN.md §Kernels).
+            simd::ternary_quantize(v, 1.0 / r, rng, codes);
+        }
+    }
 }
 
 impl Codec for TernaryCodec {
@@ -25,24 +46,15 @@ impl Codec for TernaryCodec {
     }
 
     fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
-        out.dim = v.len();
-        let (scale, codes) = out.payload.ternary_mut();
-        let r = abs_max(v);
-        *scale = r;
-        codes.clear();
-        codes.resize(v.len(), 0);
-        if r > 0.0 {
-            let inv_r = 1.0 / r;
-            // Unconditional store with a cmov-style sign select: the
-            // keep-decision is a random bit, so a conditional store
-            // mispredicts ~50% of the time, and an i8 multiply for the sign
-            // defeats vector codegen — this form measured 3.3x faster
-            // (8.5 -> 2.6 ns/elt, EXPERIMENTS.md §Perf).
-            for (c, &x) in codes.iter_mut().zip(v) {
-                let keep = (rng.f32() < x.abs() * inv_r) as i8;
-                *c = if x < 0.0 { -keep } else { keep };
-            }
-        }
+        self.encode_with_scale(v, simd::abs_max(v), rng, out);
+    }
+
+    fn reduction(&self) -> Option<Reduction> {
+        Some(Reduction::AbsMax)
+    }
+
+    fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
+        self.encode_with_scale(v, reduced as f32, rng, out);
     }
 }
 
@@ -50,7 +62,7 @@ impl Codec for TernaryCodec {
 mod tests {
     use super::*;
     use crate::codec::{assert_unbiased, Payload};
-    use crate::util::math::{norm2_sq, abs_max};
+    use crate::util::math::{abs_max, norm2_sq};
 
     fn randv(seed: u64, d: usize) -> Vec<f32> {
         let mut rng = Rng::new(seed);

@@ -52,6 +52,7 @@ pub mod objectives;
 pub mod optim;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod simd;
 pub mod tng;
 pub mod transport;
 pub mod util;

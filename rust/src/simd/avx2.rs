@@ -1,0 +1,282 @@
+//! AVX2 kernels, bit-exact against `scalar.rs` for finite inputs.
+//!
+//! Why bit-exactness is attainable (the dispatch contract, DESIGN.md
+//! §Kernels): every per-element operation here (`|x|`, one f32 mul/div/sub,
+//! `floor`, an ordered `<` compare, clamp) is a single correctly-rounded
+//! IEEE-754 operation, identical lane-wise and scalar; there is no FMA and
+//! no reassociated sum. The only reduction that is reassociated is `max`,
+//! which is associative and commutative on finite floats, so the lane-max +
+//! horizontal-max equals the left fold. The sequential-f64 `norm2` sum is
+//! *not* reassociable and stays scalar (run over just-written, cache-hot
+//! output). RNG draws come from `rng_lanes::fill_f32_avx2`, which produces
+//! the serial draw sequence exactly.
+//!
+//! Every kernel's quantizer takes a caller-filled `draws` slice (one draw
+//! per coordinate, serial order) rather than the `Rng` itself: that is what
+//! decouples draw *generation* (lane-strided superblocks) from draw
+//! *consumption* (32- or 16-wide quantize loops) without changing the
+//! draw-to-coordinate mapping. Tails shorter than a vector run the scalar
+//! expressions verbatim on the same draws.
+//!
+//! Safety: every fn is `#[target_feature(enable = "avx2")]`; callers
+//! (dispatch in `mod.rs`) must check `is_x86_feature_detected!("avx2")`.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+use super::NormMap;
+
+const ABS_MASK: i32 = 0x7fff_ffff;
+const EXP_MASK: i32 = 0x7f80_0000;
+
+/// max_i |v_i|: 8-lane max accumulator + horizontal max, equal to the
+/// scalar left fold for finite inputs.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn abs_max(v: &[f32]) -> f32 {
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(ABS_MASK));
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= v.len() {
+        let x = _mm256_loadu_ps(v.as_ptr().add(i));
+        acc = _mm256_max_ps(acc, _mm256_and_ps(x, absmask));
+        i += 8;
+    }
+    let mut m = hmax(acc);
+    while i < v.len() {
+        m = m.max(v[i].abs());
+        i += 1;
+    }
+    m
+}
+
+/// Horizontal max of 8 lanes.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn hmax(x: __m256) -> f32 {
+    let m128 = _mm_max_ps(_mm256_castps256_ps128(x), _mm256_extractf128_ps::<1>(x));
+    let m64 = _mm_max_ps(m128, _mm_movehl_ps(m128, m128));
+    let m32 = _mm_max_ss(m64, _mm_shuffle_ps::<0b01>(m64, m64));
+    _mm_cvtss_f32(m32)
+}
+
+/// Index of the first NaN/±inf coordinate: a lane is non-finite iff its
+/// exponent field is all ones. Blocks are screened 8 wide; a hit rescans
+/// the block scalar to report the exact first index.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn first_non_finite(v: &[f32]) -> Option<usize> {
+    let expmask = _mm256_set1_epi32(EXP_MASK);
+    let mut i = 0usize;
+    while i + 8 <= v.len() {
+        let x = _mm256_castps_si256(_mm256_loadu_ps(v.as_ptr().add(i)));
+        let bad = _mm256_cmpeq_epi32(_mm256_and_si256(x, expmask), expmask);
+        if _mm256_movemask_epi8(bad) != 0 {
+            return (i..i + 8).find(|&j| !v[j].is_finite());
+        }
+        i += 8;
+    }
+    v[i..].iter().position(|x| !x.is_finite()).map(|j| i + j)
+}
+
+/// Ternary quantize 32 coordinates per iteration; `draws[i]` is serial
+/// uniform draw `i`. `c = sign(x) * (draw < |x| * inv_r)`, packed i32 →
+/// i16 → i8 (exact: values are in {-1, 0, 1}).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn ternary_quantize(v: &[f32], inv_r: f32, draws: &[f32], codes: &mut [i8]) {
+    debug_assert!(v.len() == draws.len() && v.len() == codes.len());
+    let inv = _mm256_set1_ps(inv_r);
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(ABS_MASK));
+    let zero = _mm256_setzero_ps();
+    let one = _mm256_set1_epi32(1);
+    let regroup = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+    let n = v.len();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let mut q = [_mm256_setzero_si256(); 4];
+        for (k, qk) in q.iter_mut().enumerate() {
+            let x = _mm256_loadu_ps(v.as_ptr().add(i + 8 * k));
+            let u = _mm256_loadu_ps(draws.as_ptr().add(i + 8 * k));
+            let p = _mm256_mul_ps(_mm256_and_ps(x, absmask), inv);
+            let keep = _mm256_and_si256(
+                _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(u, p)),
+                one,
+            );
+            // x < 0 ? -keep : keep, via (keep ^ m) - m with m = (x < 0).
+            let m = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(x, zero));
+            *qk = _mm256_sub_epi32(_mm256_xor_si256(keep, m), m);
+        }
+        // packs interleave 128-bit halves; the dword permute restores
+        // source order before the 32-byte store.
+        let p01 = _mm256_packs_epi32(q[0], q[1]);
+        let p23 = _mm256_packs_epi32(q[2], q[3]);
+        let packed = _mm256_packs_epi16(p01, p23);
+        let fixed = _mm256_permutevar8x32_epi32(packed, regroup);
+        _mm256_storeu_si256(codes.as_mut_ptr().add(i) as *mut __m256i, fixed);
+        i += 32;
+    }
+    while i < n {
+        let x = v[i];
+        let keep = (draws[i] < x.abs() * inv_r) as i8;
+        codes[i] = if x < 0.0 { -keep } else { keep };
+        i += 1;
+    }
+}
+
+/// QSGD quantize 16 coordinates per iteration with the level clamped to
+/// `s` (see scalar.rs for the overflow story); `draws[i]` is serial draw
+/// `i`. Pack i32 → i16 is exact: levels are clamped to `s <= i16::MAX`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn qsgd_quantize(v: &[f32], sf: f32, s: u32, draws: &[f32], q: &mut [i16]) {
+    debug_assert!(v.len() == draws.len() && v.len() == q.len());
+    let sfv = _mm256_set1_ps(sf);
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(ABS_MASK));
+    let zero = _mm256_setzero_ps();
+    let one = _mm256_set1_epi32(1);
+    let smax = _mm256_set1_epi32(s as i32);
+    let n = v.len();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let mut lv = [_mm256_setzero_si256(); 2];
+        for (k, lk) in lv.iter_mut().enumerate() {
+            let x = _mm256_loadu_ps(v.as_ptr().add(i + 8 * k));
+            let u = _mm256_loadu_ps(draws.as_ptr().add(i + 8 * k));
+            let a = _mm256_mul_ps(_mm256_and_ps(x, absmask), sfv);
+            let lo = _mm256_floor_ps(a);
+            let frac = _mm256_sub_ps(a, lo);
+            let up = _mm256_and_si256(
+                _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(u, frac)),
+                one,
+            );
+            let level = _mm256_min_epi32(_mm256_add_epi32(_mm256_cvttps_epi32(lo), up), smax);
+            // x >= 0 ? level : -level (negate where x < 0).
+            let m = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(x, zero));
+            *lk = _mm256_sub_epi32(_mm256_xor_si256(level, m), m);
+        }
+        // packs_epi32 interleaves 128-bit halves; qword permute [0,2,1,3]
+        // restores source order.
+        let packed = _mm256_packs_epi32(lv[0], lv[1]);
+        let fixed = _mm256_permute4x64_epi64::<0b11011000>(packed);
+        _mm256_storeu_si256(q.as_mut_ptr().add(i) as *mut __m256i, fixed);
+        i += 16;
+    }
+    let s = s as i32;
+    while i < n {
+        let x = v[i];
+        let a = x.abs() * sf;
+        let lo = a.floor();
+        let up = (draws[i] < (a - lo)) as i32;
+        let level = (lo as i32 + up).min(s) as i16;
+        q[i] = if x >= 0.0 { level } else { -level };
+        i += 1;
+    }
+}
+
+/// One 8-lane application of a normalization map. `clip` lanes are
+/// `min(max(t, -clip), clip)`, which matches `f32::clamp` for every
+/// non-NaN `t` (±inf included); `eps > 0` keeps the quotient divisor away
+/// from 0/0 (asserted at dispatch).
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn norm_lane(map: NormMap, x: __m256, r: __m256) -> __m256 {
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(ABS_MASK));
+    match map {
+        NormMap::Sub => _mm256_sub_ps(x, r),
+        NormMap::Quot { eps, clip } => {
+            let t = _mm256_div_ps(x, r);
+            let c = _mm256_min_ps(_mm256_max_ps(t, _mm256_set1_ps(-clip)), _mm256_set1_ps(clip));
+            // |r| < eps: zero-reference coordinate passes the raw value.
+            let zref =
+                _mm256_cmp_ps::<_CMP_LT_OQ>(_mm256_and_ps(r, absmask), _mm256_set1_ps(eps));
+            _mm256_blendv_ps(c, x, zref)
+        }
+        NormMap::Comb { eps, clip } => {
+            let denom = _mm256_add_ps(_mm256_and_ps(r, absmask), _mm256_set1_ps(eps));
+            let t = _mm256_div_ps(_mm256_sub_ps(x, r), denom);
+            _mm256_min_ps(_mm256_max_ps(t, _mm256_set1_ps(-clip)), _mm256_set1_ps(clip))
+        }
+    }
+}
+
+/// Vectorized normalization map; tail coordinates run the scalar
+/// expressions verbatim.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn normalize(map: NormMap, g: &[f32], gref: &[f32], out: &mut [f32]) {
+    debug_assert!(g.len() == gref.len() && g.len() == out.len());
+    let n = g.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(g.as_ptr().add(i));
+        let r = _mm256_loadu_ps(gref.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), norm_lane(map, x, r));
+        i += 8;
+    }
+    if i < n {
+        super::scalar::normalize(map, &g[i..], &gref[i..], &mut out[i..]);
+    }
+}
+
+/// Fused normalize + abs-max: one pass writes the normalized vector and
+/// accumulates the 8-lane max, so `Tng::encode_into` skips the separate
+/// reduction pass over the full vector.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn normalize_abs_max(
+    map: NormMap,
+    g: &[f32],
+    gref: &[f32],
+    out: &mut [f32],
+) -> f64 {
+    debug_assert!(g.len() == gref.len() && g.len() == out.len());
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(ABS_MASK));
+    let mut acc = _mm256_setzero_ps();
+    let n = g.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(g.as_ptr().add(i));
+        let r = _mm256_loadu_ps(gref.as_ptr().add(i));
+        let t = norm_lane(map, x, r);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), t);
+        acc = _mm256_max_ps(acc, _mm256_and_ps(t, absmask));
+        i += 8;
+    }
+    let mut m = hmax(acc);
+    if i < n {
+        super::scalar::normalize(map, &g[i..], &gref[i..], &mut out[i..]);
+        for &t in &out[i..] {
+            m = m.max(t.abs());
+        }
+    }
+    m as f64
+}
+
+/// Fused normalize + L2 norm. The f64 square-sum is order-sensitive, so it
+/// runs scalar over each just-written (cache-hot) block in serial order —
+/// the map is vectorized, the reduction is the exact `util::math::norm2`
+/// fold.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn normalize_norm2(
+    map: NormMap,
+    g: &[f32],
+    gref: &[f32],
+    out: &mut [f32],
+) -> f64 {
+    debug_assert!(g.len() == gref.len() && g.len() == out.len());
+    let mut acc = 0.0f64;
+    let n = g.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(g.as_ptr().add(i));
+        let r = _mm256_loadu_ps(gref.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), norm_lane(map, x, r));
+        for &t in &out[i..i + 8] {
+            acc += t as f64 * t as f64;
+        }
+        i += 8;
+    }
+    if i < n {
+        super::scalar::normalize(map, &g[i..], &gref[i..], &mut out[i..]);
+        for &t in &out[i..] {
+            acc += t as f64 * t as f64;
+        }
+    }
+    acc.sqrt()
+}

@@ -1,0 +1,266 @@
+//! Runtime-dispatched kernels for the normalize → quantize hot path.
+//!
+//! Every kernel has a scalar reference implementation (`scalar.rs`) and, on
+//! x86-64 with AVX2, a vectorized one (`avx2.rs` + `rng_lanes.rs`). The
+//! dispatch contract (DESIGN.md §Kernels) is **bit-exactness**: both
+//! backends produce identical f32 outputs *and* consume the RNG stream
+//! identically (same draws, same order, same final state), so the choice of
+//! backend is invisible everywhere downstream — param digests, golden
+//! traces, and wire bytes do not change, and mixed backends across sharded
+//! encoder threads are harmless. The contract holds for **finite inputs**;
+//! non-finite gradients are a codec error (see `Codec::try_encode_into`)
+//! and are screened with [`first_non_finite`].
+//!
+//! Backend selection is per thread (`set_backend`), defaulting to a lazy
+//! auto-detect that honours the `TNG_SIMD` environment variable
+//! (`scalar` | `avx2` | `auto`). Thread-local state keeps parallel test
+//! runners from racing on a global switch — and because backends are
+//! bit-exact, per-thread divergence cannot change results.
+//!
+//! The stochastic quantizers draw one uniform per coordinate. The vector
+//! paths bulk-generate draws with the lane-parallel generator
+//! (`rng_lanes.rs`) into a thread-local scratch capped at
+//! `rng_lanes::SUPERBLOCK` floats (32 KiB, L1-resident), then quantize
+//! from the scratch; inputs are processed in superblock-sized chunks so the
+//! scratch never grows with the gradient dimension.
+
+mod rng_lanes;
+pub(crate) mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+use std::cell::{Cell, RefCell};
+
+use crate::util::Rng;
+
+/// Which normalization map a kernel applies (the Eq. 2/3/combined maps of
+/// `tng::normalizer::Normalization`, with the strategy fields flattened).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NormMap {
+    /// `g - gref`.
+    Sub,
+    /// `(g / gref).clamp(-clip, clip)`, passing `g` through where
+    /// `|gref| < eps`. Requires `eps > 0`.
+    Quot {
+        /// Zero-reference threshold.
+        eps: f32,
+        /// Symmetric clipping bound on the ratio.
+        clip: f32,
+    },
+    /// `((g - gref) / (|gref| + eps)).clamp(-clip, clip)`.
+    Comb {
+        /// Denominator regularizer.
+        eps: f32,
+        /// Symmetric clipping bound.
+        clip: f32,
+    },
+}
+
+/// The scalar statistic a codec needs before quantizing, so the fused
+/// normalize pass can produce it without re-reading the full vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduction {
+    /// `max_i |v_i|` (ternary scale).
+    AbsMax,
+    /// Euclidean norm, accumulated in f64 in serial order (QSGD scale).
+    Norm2,
+}
+
+/// Kernel backend identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable reference loops.
+    Scalar,
+    /// AVX2 vector kernels (x86-64 only).
+    Avx2,
+}
+
+thread_local! {
+    static BACKEND: Cell<Option<Backend>> = const { Cell::new(None) };
+    /// Uniform-draw scratch for the vector quantizers; capped at
+    /// [`rng_lanes::SUPERBLOCK`] elements by the chunked drivers below.
+    static DRAWS: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Whether the AVX2 backend can run on this host.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn detect() -> Backend {
+    match std::env::var("TNG_SIMD").as_deref() {
+        Ok("scalar") => Backend::Scalar,
+        Ok("avx2") => {
+            assert!(
+                avx2_available(),
+                "TNG_SIMD=avx2 requested but AVX2 is not available on this host"
+            );
+            Backend::Avx2
+        }
+        // "auto", unset, or anything else: use the best available.
+        _ => {
+            if avx2_available() {
+                Backend::Avx2
+            } else {
+                Backend::Scalar
+            }
+        }
+    }
+}
+
+/// The backend the current thread dispatches to (detected lazily from
+/// `TNG_SIMD` and CPU features on first use).
+pub fn backend() -> Backend {
+    BACKEND.with(|b| match b.get() {
+        Some(x) => x,
+        None => {
+            let d = detect();
+            b.set(Some(d));
+            d
+        }
+    })
+}
+
+/// Force the current thread's backend (tests and benches; panics if the
+/// requested backend cannot run here). Safe to vary across threads: the
+/// bit-exactness contract makes the choice unobservable in outputs.
+pub fn set_backend(b: Backend) {
+    if b == Backend::Avx2 {
+        assert!(avx2_available(), "AVX2 backend requested but not available");
+    }
+    BACKEND.with(|c| c.set(Some(b)));
+}
+
+/// Short name of the current thread's backend, for logs and bench labels.
+pub fn backend_name() -> &'static str {
+    match backend() {
+        Backend::Scalar => "scalar",
+        Backend::Avx2 => "avx2",
+    }
+}
+
+/// `max_i |v_i|` (0 for the empty slice).
+pub fn abs_max(v: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if backend() == Backend::Avx2 {
+        return unsafe { avx2::abs_max(v) };
+    }
+    scalar::abs_max(v)
+}
+
+/// Index of the first NaN/±inf coordinate, if any.
+pub fn first_non_finite(v: &[f32]) -> Option<usize> {
+    #[cfg(target_arch = "x86_64")]
+    if backend() == Backend::Avx2 {
+        return unsafe { avx2::first_non_finite(v) };
+    }
+    scalar::first_non_finite(v)
+}
+
+/// Fill `out` with the next `out.len()` values of `rng.f32()`, in serial
+/// draw order, leaving `rng` exactly as `out.len()` serial draws would.
+pub fn fill_uniform_f32(rng: &mut Rng, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if backend() == Backend::Avx2 {
+        return unsafe { rng_lanes::fill_f32_avx2(rng, out) };
+    }
+    rng.fill_uniform(out);
+}
+
+/// Run `body(chunk_range, draws)` over `n` coordinates in superblock-sized
+/// chunks, bulk-generating one serial uniform draw per coordinate into the
+/// thread-local scratch.
+#[cfg(target_arch = "x86_64")]
+fn with_draw_chunks(n: usize, rng: &mut Rng, mut body: impl FnMut(std::ops::Range<usize>, &[f32])) {
+    DRAWS.with(|d| {
+        let mut draws = d.borrow_mut();
+        let cap = n.min(rng_lanes::SUPERBLOCK);
+        if draws.len() < cap {
+            draws.resize(cap, 0.0);
+        }
+        let mut off = 0usize;
+        while off < n {
+            let len = (n - off).min(rng_lanes::SUPERBLOCK);
+            // Safety note: AVX2 availability is guaranteed by the caller's
+            // backend check.
+            unsafe { rng_lanes::fill_f32_avx2(rng, &mut draws[..len]) };
+            body(off..off + len, &draws[..len]);
+            off += len;
+        }
+    });
+}
+
+/// Ternary stochastic quantization: `codes[i] = sign(v[i])` with
+/// probability `|v[i]| * inv_r`, else 0; consumes one `rng.f32()` draw per
+/// coordinate in serial order.
+pub fn ternary_quantize(v: &[f32], inv_r: f32, rng: &mut Rng, codes: &mut [i8]) {
+    debug_assert_eq!(v.len(), codes.len());
+    #[cfg(target_arch = "x86_64")]
+    if backend() == Backend::Avx2 {
+        return with_draw_chunks(v.len(), rng, |r, draws| unsafe {
+            avx2::ternary_quantize(&v[r.clone()], inv_r, draws, &mut codes[r]);
+        });
+    }
+    scalar::ternary_quantize(v, inv_r, rng, codes);
+}
+
+/// QSGD stochastic quantization of `|v[i]| * sf` into signed levels clamped
+/// to `[-s, s]`; consumes one `rng.f32()` draw per coordinate in serial
+/// order.
+pub fn qsgd_quantize(v: &[f32], sf: f32, s: u32, rng: &mut Rng, q: &mut [i16]) {
+    debug_assert_eq!(v.len(), q.len());
+    #[cfg(target_arch = "x86_64")]
+    if backend() == Backend::Avx2 {
+        return with_draw_chunks(v.len(), rng, |r, draws| unsafe {
+            avx2::qsgd_quantize(&v[r.clone()], sf, s, draws, &mut q[r]);
+        });
+    }
+    scalar::qsgd_quantize(v, sf, s, rng, q);
+}
+
+/// Apply a normalization map element-wise: `out[i] = map(g[i], gref[i])`.
+pub fn normalize(map: NormMap, g: &[f32], gref: &[f32], out: &mut [f32]) {
+    debug_assert!(g.len() == gref.len() && g.len() == out.len());
+    if let NormMap::Quot { eps, .. } | NormMap::Comb { eps, .. } = map {
+        debug_assert!(eps > 0.0, "quotient/combined maps require eps > 0");
+    }
+    #[cfg(target_arch = "x86_64")]
+    if backend() == Backend::Avx2 {
+        return unsafe { avx2::normalize(map, g, gref, out) };
+    }
+    scalar::normalize(map, g, gref, out);
+}
+
+/// Fused normalize + reduce: identical writes to [`normalize`], returning
+/// the codec's pre-quantization statistic from the same pass (abs-max via
+/// the max fold; L2 norm via the serial f64 square-sum).
+pub fn normalize_reduce(
+    map: NormMap,
+    red: Reduction,
+    g: &[f32],
+    gref: &[f32],
+    out: &mut [f32],
+) -> f64 {
+    debug_assert!(g.len() == gref.len() && g.len() == out.len());
+    if let NormMap::Quot { eps, .. } | NormMap::Comb { eps, .. } = map {
+        debug_assert!(eps > 0.0, "quotient/combined maps require eps > 0");
+    }
+    #[cfg(target_arch = "x86_64")]
+    if backend() == Backend::Avx2 {
+        return unsafe {
+            match red {
+                Reduction::AbsMax => avx2::normalize_abs_max(map, g, gref, out),
+                Reduction::Norm2 => avx2::normalize_norm2(map, g, gref, out),
+            }
+        };
+    }
+    scalar::normalize_reduce(map, red, g, gref, out)
+}

@@ -1,0 +1,230 @@
+//! Lane-parallel xoshiro256** bulk generation with the *serial* draw order.
+//!
+//! The quantizer kernels consume one uniform draw per coordinate, and the
+//! dispatch contract (DESIGN.md §Kernels) requires the vectorized paths to
+//! consume *exactly* the scalar stream: draw `i` of `Rng::f32` must land on
+//! coordinate `i`, and the generator state left behind must equal the state
+//! after `n` serial draws. A straight 4-lane xoshiro where lane `j` produces
+//! draws `4t + j` would need four dependent state updates per four outputs —
+//! no faster than scalar. Instead the lanes are **strided**:
+//!
+//! * xoshiro256**'s state transition uses only XOR/shift/rotate, so it is a
+//!   linear map over GF(2) on the 256-bit state. `M^K` (advance-by-`K`) is
+//!   computed once by basis-stepping + repeated squaring and cached.
+//! * A superblock of `4K` draws places lane `j` at state `M^{jK} S`; each
+//!   vector step advances all four lanes by one serial step, so lane `j`'s
+//!   `t`-th output is serial draw `jK + t`, written to index `jK + t`.
+//! * After `K` vector steps, lane 3 holds `M^{4K} S` — the exact serial
+//!   state — which seeds the next superblock (or is written back to the
+//!   `Rng`). Tails shorter than a superblock fall back to serial draws.
+//!
+//! The output scrambler (`rotl(s1·5, 7)·9`) is *not* linear, but it only
+//! reads the state, so linearity of the transition is all the jump needs.
+//! Bit-exactness of the whole scheme (outputs *and* final state) is pinned
+//! by `rust/tests/simd_kernels.rs::rng_lane_fill_matches_serial_draws`.
+
+use std::sync::OnceLock;
+
+use crate::util::Rng;
+
+/// Serial draws generated per 64-bit lane before lanes are re-seeded.
+pub(crate) const LANE_STRIDE: usize = 2048;
+/// Draws per vectorized superblock: 4 lanes × [`LANE_STRIDE`].
+pub(crate) const SUPERBLOCK: usize = 4 * LANE_STRIDE;
+
+/// GF(2) matrix for one advance-by-`LANE_STRIDE`, stored as the images of
+/// the 256 basis states (bit `w*64 + b` of the packed state).
+type JumpTable = [[u64; 4]; 256];
+
+static JUMP: OnceLock<Box<JumpTable>> = OnceLock::new();
+
+/// One serial xoshiro256** state transition (the linear part only; no
+/// output). Must stay in lockstep with `Rng::next_u64`.
+#[inline]
+fn step_state(s: &mut [u64; 4]) {
+    let t = s[1] << 17;
+    s[2] ^= s[0];
+    s[3] ^= s[1];
+    s[1] ^= s[2];
+    s[0] ^= s[3];
+    s[2] ^= t;
+    s[3] = s[3].rotate_left(45);
+}
+
+/// `tab` applied to `s`: XOR of the basis images selected by `s`'s bits.
+fn apply(tab: &JumpTable, s: &[u64; 4]) -> [u64; 4] {
+    let mut acc = [0u64; 4];
+    for (w, &word) in s.iter().enumerate() {
+        let mut bits = word;
+        while bits != 0 {
+            let row = &tab[w * 64 + bits.trailing_zeros() as usize];
+            bits &= bits - 1;
+            acc[0] ^= row[0];
+            acc[1] ^= row[1];
+            acc[2] ^= row[2];
+            acc[3] ^= row[3];
+        }
+    }
+    acc
+}
+
+/// The advance-by-[`LANE_STRIDE`] jump matrix, built once: step each basis
+/// state to get `M`, then square `log2(LANE_STRIDE)` times.
+fn jump_table() -> &'static JumpTable {
+    JUMP.get_or_init(|| {
+        let mut tab: Box<JumpTable> = Box::new([[0u64; 4]; 256]);
+        for (i, row) in tab.iter_mut().enumerate() {
+            let mut s = [0u64; 4];
+            s[i / 64] = 1u64 << (i % 64);
+            step_state(&mut s);
+            *row = s;
+        }
+        for _ in 0..LANE_STRIDE.trailing_zeros() {
+            let mut sq: Box<JumpTable> = Box::new([[0u64; 4]; 256]);
+            for (i, row) in sq.iter_mut().enumerate() {
+                *row = apply(&tab, &tab[i]);
+            }
+            tab = sq;
+        }
+        tab
+    })
+}
+
+/// Advance a packed state by [`LANE_STRIDE`] serial steps in O(1) steps.
+pub(crate) fn jump(s: &[u64; 4]) -> [u64; 4] {
+    apply(jump_table(), s)
+}
+
+/// Fill `out` with the next `out.len()` draws of `rng.f32()`, in serial
+/// draw order, leaving `rng` exactly where `out.len()` serial draws would.
+/// Full superblocks are generated 4-lanes-wide with AVX2; the tail is
+/// serial. Safety: caller must ensure AVX2 is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn fill_f32_avx2(rng: &mut Rng, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+
+    let mut chunks = out.chunks_exact_mut(SUPERBLOCK);
+    let mut serial = rng.state();
+    for block in &mut chunks {
+        // Lane starts: S, M^K S, M^2K S, M^3K S.
+        let l0 = serial;
+        let l1 = jump(&l0);
+        let l2 = jump(&l1);
+        let l3 = jump(&l2);
+        let mut s0 = _mm256_setr_epi64x(l0[0] as i64, l1[0] as i64, l2[0] as i64, l3[0] as i64);
+        let mut s1 = _mm256_setr_epi64x(l0[1] as i64, l1[1] as i64, l2[1] as i64, l3[1] as i64);
+        let mut s2 = _mm256_setr_epi64x(l0[2] as i64, l1[2] as i64, l2[2] as i64, l3[2] as i64);
+        let mut s3 = _mm256_setr_epi64x(l0[3] as i64, l1[3] as i64, l2[3] as i64, l3[3] as i64);
+        let scale = _mm256_set1_ps(1.0 / (1u64 << 24) as f32);
+        let base = block.as_mut_ptr();
+        let mut t = 0usize;
+        while t < LANE_STRIDE {
+            // Two vector steps -> draws {t, t+1} of each lane.
+            let ra = starstar(s1);
+            step_lanes(&mut s0, &mut s1, &mut s2, &mut s3);
+            let rb = starstar(s1);
+            step_lanes(&mut s0, &mut s1, &mut s2, &mut s3);
+            // Top 24 bits of each u64, packed per lane as u32 pairs
+            // [a_j, b_j]: exactly `(u >> 40) as f32 * 2^-24` per draw
+            // (< 2^24, so the i32->f32 conversion and the power-of-two
+            // scale are both exact).
+            let packed = _mm256_or_si256(
+                _mm256_srli_epi64::<40>(ra),
+                _mm256_slli_epi64::<32>(_mm256_srli_epi64::<40>(rb)),
+            );
+            let f = _mm256_mul_ps(_mm256_cvtepi32_ps(packed), scale);
+            let lo = _mm_castps_pd(_mm256_castps256_ps128(f));
+            let hi = _mm_castps_pd(_mm256_extractf128_ps::<1>(f));
+            _mm_storel_pd(base.add(t) as *mut f64, lo);
+            _mm_storeh_pd(base.add(LANE_STRIDE + t) as *mut f64, lo);
+            _mm_storel_pd(base.add(2 * LANE_STRIDE + t) as *mut f64, hi);
+            _mm_storeh_pd(base.add(3 * LANE_STRIDE + t) as *mut f64, hi);
+            t += 2;
+        }
+        // Lane 3 has advanced LANE_STRIDE times past M^3K S: that is
+        // M^4K S, the serial state after one whole superblock.
+        serial = [
+            _mm256_extract_epi64::<3>(s0) as u64,
+            _mm256_extract_epi64::<3>(s1) as u64,
+            _mm256_extract_epi64::<3>(s2) as u64,
+            _mm256_extract_epi64::<3>(s3) as u64,
+        ];
+    }
+    rng.set_state(serial);
+    for o in chunks.into_remainder() {
+        *o = rng.f32();
+    }
+}
+
+/// xoshiro256** output scrambler on 4 u64 lanes: `rotl(s1 * 5, 7) * 9`.
+/// AVX2 has no 64-bit multiply, but ×5 and ×9 are shift-adds.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn starstar(s1: std::arch::x86_64::__m256i) -> std::arch::x86_64::__m256i {
+    use std::arch::x86_64::*;
+    let x5 = _mm256_add_epi64(s1, _mm256_slli_epi64::<2>(s1));
+    let r = _mm256_or_si256(_mm256_slli_epi64::<7>(x5), _mm256_srli_epi64::<57>(x5));
+    _mm256_add_epi64(r, _mm256_slli_epi64::<3>(r))
+}
+
+/// One xoshiro256** state transition on 4 independent u64 lanes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn step_lanes(
+    s0: &mut std::arch::x86_64::__m256i,
+    s1: &mut std::arch::x86_64::__m256i,
+    s2: &mut std::arch::x86_64::__m256i,
+    s3: &mut std::arch::x86_64::__m256i,
+) {
+    use std::arch::x86_64::*;
+    let t = _mm256_slli_epi64::<17>(*s1);
+    *s2 = _mm256_xor_si256(*s2, *s0);
+    *s3 = _mm256_xor_si256(*s3, *s1);
+    *s1 = _mm256_xor_si256(*s1, *s2);
+    *s0 = _mm256_xor_si256(*s0, *s3);
+    *s2 = _mm256_xor_si256(*s2, t);
+    *s3 = _mm256_or_si256(_mm256_slli_epi64::<45>(*s3), _mm256_srli_epi64::<19>(*s3));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jump_equals_lane_stride_serial_steps() {
+        let rng = Rng::new(42);
+        let mut serial = rng.state();
+        for _ in 0..LANE_STRIDE {
+            step_state(&mut serial);
+        }
+        assert_eq!(jump(&rng.state()), serial);
+    }
+
+    #[test]
+    fn step_state_tracks_next_u64() {
+        let mut rng = Rng::new(7);
+        let mut s = rng.state();
+        for _ in 0..100 {
+            rng.next_u64();
+            step_state(&mut s);
+            assert_eq!(s, rng.state());
+        }
+    }
+
+    #[test]
+    fn transition_is_linear_over_gf2() {
+        // The property the jump matrix relies on: step(x ^ y) = step(x) ^
+        // step(y). (The *output* scrambler is nonlinear, but it never feeds
+        // back into the state.)
+        let mut a = Rng::new(1).state();
+        let mut b = Rng::new(2).state();
+        let mut x = [a[0] ^ b[0], a[1] ^ b[1], a[2] ^ b[2], a[3] ^ b[3]];
+        step_state(&mut a);
+        step_state(&mut b);
+        step_state(&mut x);
+        assert_eq!(x, [a[0] ^ b[0], a[1] ^ b[1], a[2] ^ b[2], a[3] ^ b[3]]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Scalar reference kernels: the semantic ground truth every vectorized
+//! backend must match bit for bit (same f32 results, same RNG draws in the
+//! same order). These are the exact loops the codecs ran before the kernel
+//! layer existed, so forcing `Backend::Scalar` reproduces the historical
+//! encode byte-for-byte.
+
+use super::{NormMap, Reduction};
+use crate::util::Rng;
+
+/// max_i |v_i| (0 for the empty slice), folded left to right.
+pub(crate) fn abs_max(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Index of the first NaN/±inf coordinate, if any.
+pub(crate) fn first_non_finite(v: &[f32]) -> Option<usize> {
+    v.iter().position(|x| !x.is_finite())
+}
+
+/// Ternary stochastic rounding: `codes[i] = sign(v[i])` with probability
+/// `|v[i]| * inv_r`, else 0; one `rng.f32()` draw per coordinate.
+/// Branchless keep/sign-select form (see ternary.rs for the measurement).
+pub(crate) fn ternary_quantize(v: &[f32], inv_r: f32, rng: &mut Rng, codes: &mut [i8]) {
+    for (c, &x) in codes.iter_mut().zip(v) {
+        let keep = (rng.f32() < x.abs() * inv_r) as i8;
+        *c = if x < 0.0 { -keep } else { keep };
+    }
+}
+
+/// QSGD stochastic rounding of `|v[i]| * sf` with the level clamped to `s`:
+/// f32 rounding can push `a = |x| * sf` a few ulp above `s` for the
+/// max-magnitude coordinate, and the pre-clamp code then emitted level
+/// `s + 1`, violating the `|q| <= levels` wire invariant (regression-pinned
+/// in rust/tests/simd_kernels.rs). One `rng.f32()` draw per coordinate.
+pub(crate) fn qsgd_quantize(v: &[f32], sf: f32, s: u32, rng: &mut Rng, q: &mut [i16]) {
+    let s = s as i32;
+    for (qi, &x) in q.iter_mut().zip(v) {
+        let a = x.abs() * sf;
+        let lo = a.floor();
+        let up = (rng.f32() < (a - lo)) as i32;
+        let level = (lo as i32 + up).min(s) as i16;
+        *qi = if x >= 0.0 { level } else { -level };
+    }
+}
+
+/// The trajectory-normalization maps (normalizer.rs Eq. 2/3/combined).
+pub(crate) fn normalize(map: NormMap, g: &[f32], gref: &[f32], out: &mut [f32]) {
+    match map {
+        NormMap::Sub => {
+            for ((o, &x), &r) in out.iter_mut().zip(g).zip(gref) {
+                *o = x - r;
+            }
+        }
+        NormMap::Quot { eps, clip } => {
+            for ((o, &x), &r) in out.iter_mut().zip(g).zip(gref) {
+                *o = if r.abs() < eps {
+                    x // zero-reference coordinate: raw value
+                } else {
+                    (x / r).clamp(-clip, clip)
+                };
+            }
+        }
+        NormMap::Comb { eps, clip } => {
+            for ((o, &x), &r) in out.iter_mut().zip(g).zip(gref) {
+                *o = ((x - r) / (r.abs() + eps)).clamp(-clip, clip);
+            }
+        }
+    }
+}
+
+/// Fused normalize + reduction: identical writes to [`normalize`], plus the
+/// statistic the downstream codec needs, computed in the same fold order as
+/// the standalone reductions (`abs_max` / `util::math::norm2`).
+pub(crate) fn normalize_reduce(
+    map: NormMap,
+    red: Reduction,
+    g: &[f32],
+    gref: &[f32],
+    out: &mut [f32],
+) -> f64 {
+    normalize(map, g, gref, out);
+    match red {
+        Reduction::AbsMax => abs_max(out) as f64,
+        Reduction::Norm2 => {
+            let mut acc = 0.0f64;
+            for &t in out.iter() {
+                acc += t as f64 * t as f64;
+            }
+            acc.sqrt()
+        }
+    }
+}

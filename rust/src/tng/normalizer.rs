@@ -13,7 +13,8 @@
 //! to `±clip` and treat `|g̃_d| < eps` as a zero-reference coordinate coded
 //! subtractively-at-zero (i.e. the raw value). Tests pin this behaviour.
 
-use crate::codec::{Codec, CodecScratch, Encoded};
+use crate::codec::{Codec, CodecError, CodecScratch, Encoded};
+use crate::simd::{self, NormMap};
 use crate::util::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -42,6 +43,26 @@ impl Normalization {
             Normalization::Combined { .. } => "comb",
         }
     }
+
+    /// The kernel-layer map this mode applies (`simd::NormMap` is the same
+    /// arithmetic with the strategy fields flattened).
+    fn map(&self) -> NormMap {
+        match *self {
+            Normalization::Subtractive => NormMap::Sub,
+            Normalization::Quotient { eps, clip } => NormMap::Quot { eps, clip },
+            Normalization::Combined { eps, clip } => NormMap::Comb { eps, clip },
+        }
+    }
+}
+
+/// Set `out.len() == n` without re-zeroing when the length already matches
+/// (the steady-state case: the kernels overwrite every slot, so `resize`'s
+/// zero-fill would be a wasted pass over the vector).
+fn resize_for(out: &mut Vec<f32>, n: usize) {
+    if out.len() != n {
+        out.clear();
+        out.resize(n, 0.0);
+    }
 }
 
 /// TNG wrapper around a base codec.
@@ -66,11 +87,50 @@ impl<C: Codec> Tng<C> {
     /// Normalize + encode into the caller's scratch arena: `g − g̃` (or the
     /// quotient form) is computed in place into `scratch.normalized` and
     /// compressed into `scratch.enc` — zero allocation in the steady state.
+    ///
+    /// When the codec advertises a [`crate::codec::Reduction`] (ternary's
+    /// abs-max, QSGD's L2 norm), the normalization and the reduction run as
+    /// one fused pass (`simd::normalize_reduce`) and the codec encodes via
+    /// `encode_reduced_into` — the normalized vector is read once instead
+    /// of three times (normalize, reduce, quantize). Fused and unfused
+    /// paths are bit-identical by the kernel dispatch contract.
     pub fn encode_into(&self, g: &[f32], gref: &[f32], rng: &mut Rng, scratch: &mut CodecScratch) {
         assert_eq!(g.len(), gref.len());
         let CodecScratch { normalized, enc, .. } = scratch;
+        match self.codec.reduction() {
+            Some(red) => {
+                resize_for(normalized, g.len());
+                let reduced = simd::normalize_reduce(self.mode.map(), red, g, gref, normalized);
+                self.codec.encode_reduced_into(normalized, reduced, rng, enc);
+            }
+            None => {
+                self.normalize_into(g, gref, normalized);
+                self.codec.encode_into(normalized, rng, enc);
+            }
+        }
+    }
+
+    /// Checked variant of [`Tng::encode_into`]: screens the raw gradient
+    /// *and* the normalized vector for NaN/±inf, surfacing the first
+    /// offender as a [`CodecError`] instead of silently corrupting the
+    /// encode. Both sides matter: the quotient/combined maps *clamp* an
+    /// infinite raw coordinate to `±clip` (masking it from a post-map
+    /// check), while the subtractive map can *create* an overflow-inf from
+    /// two finite coordinates of opposite sign.
+    pub fn try_encode_into(
+        &self,
+        g: &[f32],
+        gref: &[f32],
+        rng: &mut Rng,
+        scratch: &mut CodecScratch,
+    ) -> Result<(), CodecError> {
+        assert_eq!(g.len(), gref.len());
+        if let Some(index) = simd::first_non_finite(g) {
+            return Err(CodecError::NonFinite { index, value: g[index] });
+        }
+        let CodecScratch { normalized, enc, .. } = scratch;
         self.normalize_into(g, gref, normalized);
-        self.codec.encode_into(normalized, rng, enc);
+        self.codec.try_encode_into(normalized, rng, enc)
     }
 
     /// Allocating convenience wrapper around [`Tng::encode_into`].
@@ -96,30 +156,11 @@ impl<C: Codec> Tng<C> {
     }
 
     /// The forward normalization map, into a reusable buffer (exposed for
-    /// the C_nz estimator).
+    /// the C_nz estimator). Dispatched to the kernel layer (AVX2 when
+    /// available; bit-identical scalar fallback otherwise).
     pub fn normalize_into(&self, g: &[f32], gref: &[f32], out: &mut Vec<f32>) {
-        out.clear();
-        match self.mode {
-            Normalization::Subtractive => {
-                out.extend(g.iter().zip(gref).map(|(&x, &r)| x - r));
-            }
-            Normalization::Quotient { eps, clip } => {
-                out.extend(g.iter().zip(gref).map(|(&x, &r)| {
-                    if r.abs() < eps {
-                        x // zero-reference coordinate: raw value
-                    } else {
-                        (x / r).clamp(-clip, clip)
-                    }
-                }));
-            }
-            Normalization::Combined { eps, clip } => {
-                out.extend(
-                    g.iter()
-                        .zip(gref)
-                        .map(|(&x, &r)| ((x - r) / (r.abs() + eps)).clamp(-clip, clip)),
-                );
-            }
-        }
+        resize_for(out, g.len());
+        simd::normalize(self.mode.map(), g, gref, out);
     }
 
     /// Allocating convenience wrapper around [`Tng::normalize_into`].
@@ -274,6 +315,49 @@ mod tests {
             tng.decode_into(&scratch.enc, &gref, &mut out);
             assert_eq!(out, tng.decode(&e, &gref));
         }
+    }
+
+    #[test]
+    fn fused_reduction_path_matches_manual_normalize_then_encode() {
+        // `encode_into` takes the fused normalize→reduce path for codecs
+        // with a reduction; it must be bit-identical to normalizing first
+        // and running the codec's plain encode on the result.
+        let g = randv(30, 100);
+        let gref = randv(31, 100);
+        let modes = [
+            Normalization::Subtractive,
+            Normalization::quotient(),
+            Normalization::combined(),
+        ];
+        for (mi, mode) in modes.into_iter().enumerate() {
+            let tng = Tng::with_mode(TernaryCodec, mode);
+            let mut r1 = Rng::new(40 + mi as u64);
+            let mut r2 = Rng::new(40 + mi as u64);
+            let fused = tng.encode(&g, &gref, &mut r1);
+            let manual = tng.codec.encode(&tng.normalize(&g, &gref), &mut r2);
+            assert_eq!(fused, manual, "ternary, mode {}", mode.name());
+
+            let tng = Tng::with_mode(crate::codec::qsgd::QsgdCodec::new(8), mode);
+            let mut r1 = Rng::new(50 + mi as u64);
+            let mut r2 = Rng::new(50 + mi as u64);
+            let fused = tng.encode(&g, &gref, &mut r1);
+            let manual = tng.codec.encode(&tng.normalize(&g, &gref), &mut r2);
+            assert_eq!(fused, manual, "qsgd8, mode {}", mode.name());
+        }
+    }
+
+    #[test]
+    fn try_encode_into_accepts_finite_and_matches_unchecked() {
+        let g = randv(32, 64);
+        let gref = randv(33, 64);
+        let tng = Tng::new(TernaryCodec);
+        let mut s1 = CodecScratch::new();
+        let mut s2 = CodecScratch::new();
+        let mut r1 = Rng::new(60);
+        let mut r2 = Rng::new(60);
+        tng.try_encode_into(&g, &gref, &mut r1, &mut s1).unwrap();
+        tng.encode_into(&g, &gref, &mut r2, &mut s2);
+        assert_eq!(s1.enc, s2.enc);
     }
 
     #[test]

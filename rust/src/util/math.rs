@@ -123,13 +123,22 @@ pub fn sigmoid(x: f64) -> f64 {
 }
 
 /// Online mean/variance (Welford). Used by metrics and the C_nz estimator.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct RunningStats {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// Delegates to [`RunningStats::new`]: the derived `Default` seeded
+/// `min`/`max` with 0.0, so a default-constructed tracker reported a min of
+/// 0 for all-positive series (and a max of 0 for all-negative ones).
+impl Default for RunningStats {
+    fn default() -> Self {
+        RunningStats::new()
+    }
 }
 
 impl RunningStats {
@@ -254,6 +263,26 @@ mod tests {
         assert_eq!(st.min(), 1.0);
         assert_eq!(st.max(), 16.0);
         assert_eq!(st.count(), 5);
+    }
+
+    #[test]
+    fn default_matches_new() {
+        // Regression: `derive(Default)` seeded min/max with 0.0, so a
+        // default-constructed tracker reported min=0 for an all-positive
+        // series (and max=0 for an all-negative one).
+        let mut by_default = RunningStats::default();
+        let mut by_new = RunningStats::new();
+        for x in [3.0, 7.0, 5.0] {
+            by_default.push(x);
+            by_new.push(x);
+        }
+        assert_eq!(by_default.min(), 3.0, "min must come from the data, not 0");
+        assert_eq!(by_default.min(), by_new.min());
+        assert_eq!(by_default.max(), by_new.max());
+        let mut neg = RunningStats::default();
+        neg.push(-2.0);
+        assert_eq!(neg.max(), -2.0, "max must come from the data, not 0");
+        assert_eq!(neg.min(), -2.0);
     }
 
     #[test]

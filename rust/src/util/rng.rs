@@ -50,6 +50,21 @@ impl Rng {
         Rng { s, spare_gauss: None }
     }
 
+    /// Raw xoshiro256** state, for the lane-parallel bulk generator
+    /// (`simd::rng_lanes`). The Gaussian spare is not part of the uniform
+    /// stream, so state round-trips through `state`/`set_state` compose
+    /// exactly with any number of `next_u64`/`f32` draws.
+    #[inline]
+    pub(crate) fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Overwrite the xoshiro256** state (see [`Rng::state`]).
+    #[inline]
+    pub(crate) fn set_state(&mut self, s: [u64; 4]) {
+        self.s = s;
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -1,0 +1,425 @@
+//! Scalar ↔ AVX2 kernel equivalence (the dispatch contract of DESIGN.md
+//! §Kernels) plus the regression pins for the PR's three bugfixes:
+//!
+//! * every kernel produces bit-identical outputs on both backends, for
+//!   dimensions bracketing every lane boundary (1..=65, 127/128/129, the
+//!   RNG superblock edges 8191/8192/8193, and a multi-superblock size),
+//!   on random *and* adversarial finite inputs;
+//! * the stochastic kernels consume the RNG stream identically (same
+//!   draws, same order, same state afterwards);
+//! * a full driver run is invariant under the backend switch (param digest
+//!   and wire bytes unchanged);
+//! * QSGD's level overflow, the `RunningStats` default (unit-tested in
+//!   `util::math`), and silent NaN encoding are pinned fixed.
+//!
+//! On hosts without AVX2 the cross-backend tests degrade to scalar-only
+//! self-checks (they print a notice and return early).
+
+use tng::codec::qsgd::QsgdCodec;
+use tng::codec::ternary::TernaryCodec;
+use tng::codec::{Codec, CodecError, CodecScratch, Encoded, Payload};
+use tng::simd::{self, Backend, NormMap, Reduction};
+use tng::tng::{Normalization, Tng};
+use tng::util::Rng;
+
+/// Dimensions bracketing every vector-width boundary the kernels care
+/// about: the 8/16/32-element loop widths, and the 8192-draw RNG
+/// superblock (8191/8192/8193 plus a multi-superblock size with a tail).
+fn boundary_dims() -> Vec<usize> {
+    let mut dims: Vec<usize> = (1..=65).collect();
+    dims.extend([127, 128, 129, 8191, 8192, 8193, 2 * 8192 + 37]);
+    dims
+}
+
+fn random_vec(seed: u64, dim: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..dim).map(|_| rng.gauss_f32()).collect()
+}
+
+/// Finite but nasty: signed zeros, denormal-adjacent magnitudes, huge
+/// values (sub-map overflow → ±inf in *outputs* is legal and must still be
+/// bit-identical), repeated max-magnitude ties, clip-boundary values.
+fn adversarial_vec(dim: usize) -> Vec<f32> {
+    (0..dim)
+        .map(|i| match i % 8 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => 1e-37,
+            3 => -1e37,
+            4 => 1e4,
+            5 => -5.0,
+            6 => f32::MIN_POSITIVE,
+            _ => 93.5397,
+        })
+        .collect()
+}
+
+/// A reference vector with exact zeros (quotient zero-reference path) and
+/// sign/magnitude variety.
+fn reference_vec(seed: u64, dim: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..dim)
+        .map(|i| if i % 5 == 0 { 0.0 } else { rng.gauss_f32() * 2.0 })
+        .collect()
+}
+
+fn require_avx2() -> bool {
+    if simd::avx2_available() {
+        true
+    } else {
+        eprintln!("AVX2 not available; cross-backend test degraded to scalar-only");
+        false
+    }
+}
+
+fn norm_maps() -> [NormMap; 3] {
+    [
+        NormMap::Sub,
+        NormMap::Quot { eps: 1e-6, clip: 1e4 },
+        NormMap::Comb { eps: 1e-3, clip: 1e4 },
+    ]
+}
+
+#[test]
+fn abs_max_and_screen_bit_exact_across_backends() {
+    if !require_avx2() {
+        return;
+    }
+    for dim in boundary_dims() {
+        for v in [random_vec(dim as u64, dim), adversarial_vec(dim)] {
+            simd::set_backend(Backend::Scalar);
+            let a = simd::abs_max(&v);
+            assert_eq!(simd::first_non_finite(&v), None);
+            simd::set_backend(Backend::Avx2);
+            let b = simd::abs_max(&v);
+            assert_eq!(simd::first_non_finite(&v), None);
+            assert_eq!(a.to_bits(), b.to_bits(), "abs_max dim={dim}");
+        }
+    }
+}
+
+#[test]
+fn first_non_finite_finds_the_first_offender_on_both_backends() {
+    if !require_avx2() {
+        return;
+    }
+    for dim in [1usize, 7, 8, 9, 31, 64, 65, 1000] {
+        for bad_at in [0, dim / 2, dim - 1] {
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                let mut v = random_vec(3, dim);
+                v[bad_at] = bad;
+                simd::set_backend(Backend::Scalar);
+                let a = simd::first_non_finite(&v);
+                simd::set_backend(Backend::Avx2);
+                let b = simd::first_non_finite(&v);
+                assert_eq!(a, Some(bad_at), "dim={dim} bad_at={bad_at} bad={bad}");
+                assert_eq!(a, b);
+            }
+        }
+    }
+}
+
+#[test]
+fn rng_lane_fill_matches_serial_draws() {
+    if !require_avx2() {
+        return;
+    }
+    // The lane-parallel generator must emit the exact serial f32 stream
+    // and leave the Rng in the exact serial state, across superblock
+    // boundaries and tails.
+    for n in [0usize, 1, 7, 64, 8191, 8192, 8193, 16384, 16421] {
+        let mut serial = Rng::new(97);
+        let mut lanes = serial.clone();
+        let expect: Vec<f32> = (0..n).map(|_| serial.f32()).collect();
+        let mut got = vec![0.0f32; n];
+        simd::set_backend(Backend::Avx2);
+        simd::fill_uniform_f32(&mut lanes, &mut got);
+        for (i, (e, g)) in expect.iter().zip(&got).enumerate() {
+            assert_eq!(e.to_bits(), g.to_bits(), "n={n} draw {i}");
+        }
+        for k in 0..4 {
+            assert_eq!(serial.next_u64(), lanes.next_u64(), "n={n} post-draw {k}");
+        }
+    }
+}
+
+#[test]
+fn ternary_kernel_bit_exact_and_same_rng_consumption() {
+    if !require_avx2() {
+        return;
+    }
+    for dim in boundary_dims() {
+        for (vi, v) in [random_vec(dim as u64 + 1, dim), adversarial_vec(dim)]
+            .into_iter()
+            .enumerate()
+        {
+            simd::set_backend(Backend::Scalar);
+            let r = simd::abs_max(&v);
+            if r == 0.0 {
+                continue;
+            }
+            let mut rs = Rng::new(500 + vi as u64);
+            let mut ra = rs.clone();
+            let mut cs = vec![0i8; dim];
+            let mut ca = vec![0i8; dim];
+            simd::ternary_quantize(&v, 1.0 / r, &mut rs, &mut cs);
+            simd::set_backend(Backend::Avx2);
+            simd::ternary_quantize(&v, 1.0 / r, &mut ra, &mut ca);
+            assert_eq!(cs, ca, "ternary codes dim={dim} input {vi}");
+            assert_eq!(rs.next_u64(), ra.next_u64(), "rng state dim={dim}");
+            assert_eq!(rs.next_u64(), ra.next_u64());
+        }
+    }
+}
+
+#[test]
+fn qsgd_kernel_bit_exact_and_same_rng_consumption() {
+    if !require_avx2() {
+        return;
+    }
+    for dim in boundary_dims() {
+        for (vi, v) in [random_vec(dim as u64 + 2, dim), adversarial_vec(dim)]
+            .into_iter()
+            .enumerate()
+        {
+            let norm = tng::util::math::norm2(&v) as f32;
+            if norm == 0.0 {
+                continue;
+            }
+            for s in [1u32, 4, 255] {
+                let sf = s as f32 / norm;
+                let mut rs = Rng::new(900 + vi as u64 + s as u64);
+                let mut ra = rs.clone();
+                let mut qs = vec![0i16; dim];
+                let mut qa = vec![0i16; dim];
+                simd::set_backend(Backend::Scalar);
+                simd::qsgd_quantize(&v, sf, s, &mut rs, &mut qs);
+                simd::set_backend(Backend::Avx2);
+                simd::qsgd_quantize(&v, sf, s, &mut ra, &mut qa);
+                assert_eq!(qs, qa, "qsgd levels dim={dim} s={s} input {vi}");
+                assert!(
+                    qs.iter().all(|&q| q.unsigned_abs() as u32 <= s),
+                    "level above s={s} at dim={dim}"
+                );
+                assert_eq!(rs.next_u64(), ra.next_u64(), "rng state dim={dim} s={s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn normalize_and_fused_reductions_bit_exact() {
+    if !require_avx2() {
+        return;
+    }
+    for dim in boundary_dims() {
+        for (vi, g) in [random_vec(dim as u64 + 3, dim), adversarial_vec(dim)]
+            .into_iter()
+            .enumerate()
+        {
+            let gref = reference_vec(dim as u64 + 4, dim);
+            for map in norm_maps() {
+                let mut out_s = vec![0.0f32; dim];
+                let mut out_a = vec![0.0f32; dim];
+                simd::set_backend(Backend::Scalar);
+                simd::normalize(map, &g, &gref, &mut out_s);
+                simd::set_backend(Backend::Avx2);
+                simd::normalize(map, &g, &gref, &mut out_a);
+                for i in 0..dim {
+                    assert_eq!(
+                        out_s[i].to_bits(),
+                        out_a[i].to_bits(),
+                        "normalize {map:?} dim={dim} input {vi} coord {i}"
+                    );
+                }
+                for red in [Reduction::AbsMax, Reduction::Norm2] {
+                    simd::set_backend(Backend::Scalar);
+                    let rs = simd::normalize_reduce(map, red, &g, &gref, &mut out_s);
+                    simd::set_backend(Backend::Avx2);
+                    let ra = simd::normalize_reduce(map, red, &g, &gref, &mut out_a);
+                    assert_eq!(
+                        rs.to_bits(),
+                        ra.to_bits(),
+                        "{red:?} of {map:?} dim={dim} input {vi}"
+                    );
+                    for i in 0..dim {
+                        assert_eq!(out_s[i].to_bits(), out_a[i].to_bits());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn codec_encode_bit_exact_across_backends() {
+    if !require_avx2() {
+        return;
+    }
+    // End-to-end: full codec encodes (including the fused Tng path) must
+    // produce identical messages whichever backend ran them.
+    let dims = [1usize, 33, 127, 1024, 8192 + 17];
+    for dim in dims {
+        let g = random_vec(dim as u64 + 5, dim);
+        let gref = reference_vec(dim as u64 + 6, dim);
+        let codecs: Vec<Box<dyn Codec>> =
+            vec![Box::new(TernaryCodec), Box::new(QsgdCodec::new(16))];
+        for codec in &codecs {
+            simd::set_backend(Backend::Scalar);
+            let mut r1 = Rng::new(42);
+            let a = codec.encode(&g, &mut r1);
+            simd::set_backend(Backend::Avx2);
+            let mut r2 = Rng::new(42);
+            let b = codec.encode(&g, &mut r2);
+            assert_eq!(a, b, "{} dim={dim}", codec.name());
+            assert_eq!(r1.next_u64(), r2.next_u64());
+
+            for mode in [
+                Normalization::Subtractive,
+                Normalization::quotient(),
+                Normalization::combined(),
+            ] {
+                let wrapped = Tng::with_mode(codec.as_ref() as &dyn Codec, mode);
+                simd::set_backend(Backend::Scalar);
+                let mut r1 = Rng::new(43);
+                let a = wrapped.encode(&g, &gref, &mut r1);
+                simd::set_backend(Backend::Avx2);
+                let mut r2 = Rng::new(43);
+                let b = wrapped.encode(&g, &gref, &mut r2);
+                assert_eq!(a, b, "{} dim={dim}", wrapped.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn qsgd_overflow_regression_level_clamped_to_s() {
+    // Regression for the f32 level overflow: with this exact input the
+    // max-magnitude coordinate has `a = |x| * (s/norm) = 255.00002 > s`, so
+    // `lo = floor(a) = 255 = s`, and seed 11416's first draw (6.2e-06) is
+    // below `a - lo` (1.53e-05) — the pre-clamp code emitted level 256,
+    // violating the |q| <= levels wire invariant (and overflowing i16 for
+    // s = 32767). The clamp must pin the level at exactly s.
+    let v = [93.5397f32];
+    assert_eq!(v[0].to_bits(), 0x42bb1454, "repro value drifted");
+    let backends = if simd::avx2_available() {
+        vec![Backend::Scalar, Backend::Avx2]
+    } else {
+        vec![Backend::Scalar]
+    };
+    for b in backends {
+        simd::set_backend(b);
+        let mut rng = Rng::new(11416);
+        let e = QsgdCodec::new(255).encode(&v, &mut rng);
+        let Payload::Quantized { norm, levels, q } = &e.payload else {
+            panic!("wrong payload")
+        };
+        assert_eq!(*levels, 255);
+        assert_eq!(norm.to_bits(), v[0].to_bits(), "single-coord norm is exact");
+        assert_eq!(q[0], 255, "{b:?}: level must clamp to s, not round to s+1");
+    }
+}
+
+#[test]
+fn try_encode_into_rejects_non_finite_inputs() {
+    let backends = if simd::avx2_available() {
+        vec![Backend::Scalar, Backend::Avx2]
+    } else {
+        vec![Backend::Scalar]
+    };
+    for b in backends {
+        simd::set_backend(b);
+        let mut out = Encoded::empty();
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut v = random_vec(7, 40);
+            v[17] = bad;
+            for codec in [&TernaryCodec as &dyn Codec, &QsgdCodec::new(4)] {
+                let mut rng = Rng::new(1);
+                let err = codec.try_encode_into(&v, &mut rng, &mut out).unwrap_err();
+                let CodecError::NonFinite { index, value } = err;
+                assert_eq!(index, 17, "{b:?} {}", codec.name());
+                assert_eq!(value.to_bits(), bad.to_bits());
+                // The error string is how runtimes surface it; sanity-check.
+                assert!(err.to_string().contains("index 17"), "{err}");
+            }
+        }
+        // A clean vector passes and matches the unchecked encode.
+        let v = random_vec(8, 40);
+        let mut rng1 = Rng::new(2);
+        let mut rng2 = Rng::new(2);
+        TernaryCodec.try_encode_into(&v, &mut rng1, &mut out).unwrap();
+        let unchecked = TernaryCodec.encode(&v, &mut rng2);
+        assert_eq!(out, unchecked);
+    }
+}
+
+#[test]
+fn tng_try_encode_catches_raw_and_map_created_non_finites() {
+    simd::set_backend(Backend::Scalar);
+    let tng_sub = Tng::new(TernaryCodec);
+    let mut scratch = CodecScratch::new();
+    let mut rng = Rng::new(3);
+
+    // Raw inf under the quotient map would be *clamped to clip* (finite) by
+    // the map, so the raw-side screen must catch it.
+    let g = [1.0f32, f32::INFINITY, 2.0];
+    let gref = [1.0f32, 4.0, 2.0];
+    let tng_quot = Tng::with_mode(TernaryCodec, Normalization::quotient());
+    let err = tng_quot.try_encode_into(&g, &gref, &mut rng, &mut scratch).unwrap_err();
+    assert_eq!(err, CodecError::NonFinite { index: 1, value: f32::INFINITY });
+
+    // inf - inf = NaN under the subtractive map; caught at the raw side.
+    let g = [f32::INFINITY; 2];
+    let gref = [f32::INFINITY; 2];
+    let err = tng_sub.try_encode_into(&g, &gref, &mut rng, &mut scratch).unwrap_err();
+    assert!(matches!(err, CodecError::NonFinite { index: 0, .. }));
+
+    // Two *finite* coordinates whose difference overflows f32: only the
+    // normalized-side screen can catch this one.
+    let g = [3e38f32];
+    let gref = [-3e38f32];
+    let err = tng_sub.try_encode_into(&g, &gref, &mut rng, &mut scratch).unwrap_err();
+    let CodecError::NonFinite { index, value } = err;
+    assert_eq!(index, 0);
+    assert!(value.is_infinite());
+}
+
+#[test]
+fn driver_trace_invariant_under_backend_switch() {
+    if !require_avx2() {
+        return;
+    }
+    use tng::coordinator::{driver, DriverConfig};
+    use tng::data::synthetic::{generate, SkewConfig};
+    use tng::objectives::logreg::LogReg;
+    use tng::optim::StepSchedule;
+    use tng::tng::ReferenceKind;
+
+    let ds = generate(&SkewConfig { n: 96, dim: 24, seed: 7, ..Default::default() });
+    let obj = LogReg::new(ds, 0.05);
+    let cfg = DriverConfig {
+        seed: 3,
+        rounds: 30,
+        workers: 3,
+        batch: 4,
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 2 }],
+        record_every: 5,
+        ..Default::default()
+    };
+    let codecs: Vec<Box<dyn Codec>> = vec![Box::new(TernaryCodec), Box::new(QsgdCodec::new(4))];
+    for codec in &codecs {
+        simd::set_backend(Backend::Scalar);
+        let a = driver::run(&obj, codec.as_ref(), "scalar", &cfg);
+        simd::set_backend(Backend::Avx2);
+        let b = driver::run(&obj, codec.as_ref(), "avx2", &cfg);
+        assert_eq!(a.final_w, b.final_w, "{}: final iterate", codec.name());
+        assert_eq!(a.param_digest(), b.param_digest(), "{}: digest", codec.name());
+        assert_eq!(a.total_wire_up_bytes, b.total_wire_up_bytes, "{}", codec.name());
+        assert_eq!(a.total_wire_down_bytes, b.total_wire_down_bytes, "{}", codec.name());
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{}", codec.name());
+            assert_eq!(ra.grad_norm.to_bits(), rb.grad_norm.to_bits(), "{}", codec.name());
+        }
+    }
+}

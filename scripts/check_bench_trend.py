@@ -14,6 +14,11 @@ committed still tells the story each PR's subsystem claims:
   the full barrier (late frames still ship and still count), the modeled
   round time must shrink monotonically as k drops, and every frame that
   missed its barrier must show up in the late/skipped ledger.
+* BENCH_PR7 — kernel dispatch (written by `cargo bench --bench
+  bench_codecs`): the AVX2 backend must never lose to the scalar reference
+  it is bit-identical to, and the fused normalize→reduce→quantize TNG path
+  must hold a >=4x encode-throughput win over the historical three-pass
+  scalar path at dim 2^24.
 
 Exit status 0 = all invariants hold; 1 = a regression (or malformed file),
 with one line per failure.
@@ -100,6 +105,24 @@ def main():
                   f"(late={q['late']} skipped={q['skipped']})")
             check(q["skipped"] <= q["late"],
                   f"{name}: folding dominates dropping ({q['skipped']} <= {q['late']})")
+
+    print("BENCH_PR7.json (kernel dispatch: scalar vs AVX2, fused TNG path)")
+    pr7 = load(root, "BENCH_PR7.json",
+               ["ternary-2^20", "ternary-2^24", "qsgd4-2^20", "qsgd4-2^24",
+                "tng-ternary-fused-2^20", "tng-ternary-fused-2^24"])
+    if pr7:
+        for name, cfg in pr7.items():
+            fast_key = "fused_ns_per_elt" if "fused" in name else "simd_ns_per_elt"
+            sc, fast, spd = cfg["scalar_ns_per_elt"], cfg[fast_key], cfg["speedup"]
+            check(sc > 0 and fast > 0, f"{name}: positive timings ({sc}, {fast})")
+            check(spd >= 1.0,
+                  f"{name}: vectorized path never loses to scalar (speedup {spd})")
+            check(abs(spd - sc / fast) < 0.02 * spd,
+                  f"{name}: speedup consistent with timings "
+                  f"({spd} vs {sc}/{fast}={sc / fast:.4f})")
+        fused = pr7["tng-ternary-fused-2^24"]["speedup"]
+        check(fused >= 4.0,
+              f"fused TNG encode >= 4x the three-pass scalar path at 2^24 (got {fused})")
 
     if FAILURES:
         print(f"\n{len(FAILURES)} bench-trend failure(s)")
