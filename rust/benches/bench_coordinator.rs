@@ -239,4 +239,61 @@ fn main() {
     json.push_str("}\n");
     std::fs::write("BENCH_PR6.json", &json).expect("write BENCH_PR6.json");
     println!("# wrote BENCH_PR6.json");
+
+    // --- Simulated rounds at scale (the PR-8 scenario engine) ------------
+    // Timing-only discrete-event rounds, 256 KiB frames on the default
+    // 10 Gbit/s / 100 µs links: virtual ms per round (what the simulation
+    // *predicts*), the `LinkModel` closed form it must agree with (ratio
+    // pinned near 1.0 by check_bench_trend.py), and the wall-clock cost of
+    // evaluating one simulated round — the number that makes a 10k-worker
+    // round affordable in CI. Emits BENCH_PR8.json.
+    println!("\n# simulated round times at scale, flat vs groups=64 (256 KiB frames)");
+    use tng::transport::sim::{RoundScenario, ScenarioConfig};
+    let frame = 262_144usize;
+    let link = tng::coordinator::network::LinkModel::default();
+    let mut json = String::from("{\n");
+    let sim_configs: [(&str, usize, usize); 4] = [
+        ("flat-1k", 1_000, 1),
+        ("flat-10k", 10_000, 1),
+        ("groups64-1k", 1_000, 64),
+        ("groups64-10k", 10_000, 64),
+    ];
+    let n_configs = sim_configs.len();
+    for (i, (label, workers, groups)) in sim_configs.into_iter().enumerate() {
+        let mut sc = RoundScenario::new(ScenarioConfig {
+            workers,
+            groups,
+            ..Default::default()
+        });
+        // One deterministic round gives the virtual time (every steady-state
+        // round is identical: integer clock, no faults configured).
+        let sim_ms = sc.round() as f64 / 1e6;
+        let model_s = if groups <= 1 {
+            link.round_time(&vec![frame; workers], frame)
+        } else {
+            // PR 5's contiguous balanced partition: m % g groups of lo+1.
+            let (lo, rem) = (workers / groups, workers % groups);
+            let fan_ins: Vec<Vec<usize>> = (0..groups)
+                .map(|gi| vec![frame; lo + usize::from(gi < rem)])
+                .collect();
+            link.tree_round_time(&fan_ins, &vec![frame; groups], workers, frame)
+        };
+        let model_ms = model_s * 1e3;
+        let ratio = sim_ms / model_ms;
+        let r = bench(&format!("sim-round/{label}"), BUDGET, || black_box(sc.round()));
+        let wall_us = r.mean.as_secs_f64() * 1e6;
+        println!(
+            "  {label:<13} virtual {sim_ms:9.3} ms/round   model {model_ms:9.3} ms \
+             (x{ratio:6.4})   wall {wall_us:8.1} us/round"
+        );
+        json.push_str(&format!(
+            "  \"{label}\": {{\"sim_ms_per_round\": {sim_ms:.4}, \
+             \"model_ms_per_round\": {model_ms:.4}, \"ratio\": {ratio:.6}, \
+             \"wall_us_per_round\": {wall_us:.1}}}{}\n",
+            if i + 1 < n_configs { "," } else { "" }
+        ));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_PR8.json", &json).expect("write BENCH_PR8.json");
+    println!("# wrote BENCH_PR8.json");
 }

@@ -8,6 +8,7 @@
 //! tng fig3 [...]                              Figure 3 (quasi-Newton grid)
 //! tng fig4 [...]                              Figure 4 (servers × memory)
 //! tng run  codec=ternary tng=true [...]       one custom configuration
+//! tng sim  sim_lat=0.1 sim_loss=0.01 [...]    simulated-network cluster run
 //! tng leader addr=H:P workers=N [...]         TCP leader for N processes
 //! tng worker addr=H:P id=K [...]              TCP worker process K
 //! tng info                                    artifact + platform info
@@ -35,6 +36,11 @@ COMMANDS:
     fig3    Figure 3: stochastic quasi-Newton (L-BFGS) variant of fig2
     fig4    Figure 4: sensitivity to #servers (M) and L-BFGS memory (K)
     run     One custom run (codec=, tng=, rounds=, workers=, eta=, ...)
+    sim     One cluster run over the simulated network: the same protocol
+            as leader/worker on a virtual clock (discrete-event links with
+            latency/bandwidth/jitter/loss/churn, bit-reproducible from
+            sim_seed). scenario=true runs the timing-only round engine
+            instead — 10k+ workers in milliseconds of wall time
     leader  TCP cluster leader: bind addr= (addr=127.0.0.1:0 picks a free
             port, announced as 'listening addr=...'), accept workers=N
             sockets, run the rounds, print the trace summary + param digest
@@ -81,6 +87,20 @@ RUN/LEADER/WORKER OPTIONS (the figure harnesses use their own method grid):
     ref_score=cnz       reference search scoring: cnz (fast ratio) | bytes
                         (measured encoded frame size per candidate)
 
+SIM OPTIONS (tng sim; see EXPERIMENTS.md Simulation section):
+    sim_lat=0.1         one-way per-frame link latency, ms
+    sim_gbps=10         uplink bandwidth, Gbit/s
+    sim_down_gbps=..    downlink bandwidth, Gbit/s (defaults to sim_gbps)
+    sim_jitter=0        max extra uniform per-frame delay, ms (0 = none)
+    sim_loss=0          i.i.d. uplink frame-loss probability (needs quorum=)
+    sim_seed=1          fault-stream RNG seed (independent of seed=)
+    sim_churn=W@MS,..   worker W hangs up at virtual time MS
+    sim_timeout=0       virtual straggler budget per gather, ms (0 = none)
+    sim_sync=false      full-barrier pacing (round time == the closed-form
+                        LinkModel::round_time; default pipelines departures)
+    scenario=false      timing-only engine: workers=, groups=, quorum=,
+                        rounds=, up_bytes=, down_bytes=, partial_bytes=
+
 `tng <cmd> help` prints command-specific options.";
 
 /// Parse argv (excluding argv[0]).
@@ -90,7 +110,8 @@ pub fn parse<S: AsRef<str>>(args: &[S]) -> Result<Cli> {
     };
     let command = command.as_ref().to_string();
     match command.as_str() {
-        "fig1" | "fig2" | "fig3" | "fig4" | "run" | "leader" | "worker" | "info" | "help" => {}
+        "fig1" | "fig2" | "fig3" | "fig4" | "run" | "sim" | "leader" | "worker" | "info"
+        | "help" => {}
         other => bail!("unknown command '{other}'\n\n{USAGE}"),
     }
     let rest: Vec<&str> = args[1..].iter().map(|s| s.as_ref()).collect();
@@ -121,6 +142,13 @@ mod tests {
         let c = parse(&["worker", "addr=127.0.0.1:7000", "id=2"]).unwrap();
         assert_eq!(c.command, "worker");
         assert_eq!(c.opts.usize_or("id", 99).unwrap(), 2);
+    }
+
+    #[test]
+    fn parses_sim_command() {
+        let c = parse(&["sim", "sim_lat=0.2", "sim_loss=0.01", "quorum=3"]).unwrap();
+        assert_eq!(c.command, "sim");
+        assert_eq!(c.opts.f64_or("sim_lat", 0.0).unwrap(), 0.2);
     }
 
     #[test]

@@ -501,6 +501,7 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         workers: m,
         dim,
         wall: t_start.elapsed(),
+        virtual_elapsed: None,
     }
 }
 

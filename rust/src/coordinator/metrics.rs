@@ -123,6 +123,11 @@ pub struct Trace {
     pub workers: usize,
     pub dim: usize,
     pub wall: Duration,
+    /// Elapsed **virtual** time when the run executed on a simulated-clock
+    /// transport (`transport::sim`): the modeled synchronization time of
+    /// the whole run, independent of host speed and bit-reproducible from
+    /// the scenario seed. `None` on every wall-clock runtime.
+    pub virtual_elapsed: Option<Duration>,
 }
 
 impl Trace {
@@ -278,6 +283,7 @@ mod tests {
             workers: 4,
             dim: 128,
             wall: Duration::ZERO,
+            virtual_elapsed: None,
         }
     }
 

@@ -632,7 +632,19 @@ fn leader_loop(
     let mut byes = vec![false; m];
     let mut seen = 0usize;
     while seen < m {
-        match Msg::from_bytes(&tp.recv_deadline(deadline)?)? {
+        let frame = match tp.recv_deadline(deadline) {
+            Ok(f) => f,
+            // Quorum mode tolerates partial participation by design: a
+            // worker that left mid-run (simulated churn, a dead peer) will
+            // never ack the Stop, and waiting for its Bye would turn a
+            // graceful k-of-M run into a shutdown failure. The aggregate
+            // work is already complete here, so close the ledger with the
+            // Byes that did arrive. A full-barrier run still treats a
+            // missing Bye as the error it is.
+            Err(_) if quorum_on => break,
+            Err(e) => return Err(e),
+        };
+        match Msg::from_bytes(&frame)? {
             Msg::Bye { worker } => {
                 let idx = worker as usize;
                 if idx >= m || byes[idx] {
@@ -668,6 +680,7 @@ fn leader_loop(
         workers: m,
         dim,
         wall: t_start.elapsed(),
+        virtual_elapsed: tp.virtual_elapsed(),
     })
 }
 

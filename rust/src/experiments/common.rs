@@ -31,7 +31,9 @@ pub use crate::codec::spec::make_codec;
 /// Keys (all `key=value`): `n dim csk cth seed lambda codec tng ref_window
 /// ref_score workers rounds batch eta estimator anchor_every memory
 /// record_every eval opt opt_iters down down_ef groups up up_ef quorum late
-/// late_period`.
+/// late_period`. The `tng sim` subcommand layers the network-model keys
+/// parsed by [`sim_setup`] (`sim_lat sim_gbps sim_down_gbps sim_jitter
+/// sim_loss sim_seed sim_churn sim_timeout sim_sync`) on top of this set.
 ///
 /// `down=<codec spec>` turns on downlink compression (the broadcast crosses
 /// the wire as a `CompressedAggregate` frame of that codec — any
@@ -240,6 +242,64 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
         cfg.workers
     );
     Ok((obj, codec, cfg, label))
+}
+
+/// Parse the simulated-network model for one `tng sim` run. Keys (all
+/// `key=value`, layered on top of the [`cluster_setup`] set):
+///
+/// * `sim_lat=<ms>` — one-way per-frame link latency (default `0.1`);
+/// * `sim_gbps=<gbit/s>` — uplink bandwidth (default `10`);
+/// * `sim_down_gbps=<gbit/s>` — downlink bandwidth (defaults to `sim_gbps`);
+/// * `sim_jitter=<ms>` — max uniform extra per-frame delay (default `0`;
+///   `0` draws nothing from the RNG, keeping lossless runs stream-silent);
+/// * `sim_loss=<p>` — i.i.d. uplink frame-loss probability in `[0, 1)`
+///   (default `0`; requires `quorum=` — a full barrier cannot survive loss);
+/// * `sim_seed=<u64>` — seed of the fault RNG streams (default `1`);
+/// * `sim_churn=<w@ms,...>` — worker `w` hangs up at virtual time `ms`;
+/// * `sim_timeout=<ms>` — virtual gather deadline (`0` = none, the default);
+/// * `sim_sync=true` — full-barrier round pacing, making a lossless run's
+///   virtual round time land exactly on `LinkModel::round_time` (see
+///   `DESIGN.md` §Simulation; off by default = pipelined departures).
+///
+/// Cross-field gates live in [`SimConfig::validate`] so the in-process
+/// test harnesses that build a `SimConfig` by hand hit the same wall.
+pub fn sim_setup(s: &Settings, cfg: &DriverConfig) -> Result<crate::transport::SimConfig> {
+    let gbps_to_bytes = |g: f64| (g * 1e9 / 8.0) as u64;
+    let ms_to_ns = |ms: f64| (ms * 1e6).round() as u64;
+    let up_gbps = s.f64_or("sim_gbps", 10.0)?;
+    let mut churn = Vec::new();
+    if let Some(list) = s.raw("sim_churn") {
+        for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let Some((w, at)) = tok.split_once('@') else {
+                bail!("sim_churn= entries must be worker@ms, got '{tok}'");
+            };
+            let w: usize = w
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("sim_churn= worker id must be an integer, got '{w}'"))?;
+            let at: f64 = at
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("sim_churn= departure must be ms, got '{at}'"))?;
+            churn.push((w, ms_to_ns(at)));
+        }
+    }
+    let sim = crate::transport::SimConfig {
+        latency_ns: ms_to_ns(s.f64_or("sim_lat", 0.1)?),
+        up_bytes_per_sec: gbps_to_bytes(up_gbps),
+        down_bytes_per_sec: gbps_to_bytes(s.f64_or("sim_down_gbps", up_gbps)?),
+        jitter_ns: ms_to_ns(s.f64_or("sim_jitter", 0.0)?),
+        loss: s.f64_or("sim_loss", 0.0)?,
+        seed: s.u64_or("sim_seed", 1)?,
+        churn,
+        timeout_ns: match s.f64_or("sim_timeout", 0.0)? {
+            t if t <= 0.0 => None,
+            t => Some(ms_to_ns(t)),
+        },
+        round_sync: s.bool_or("sim_sync", false)?,
+    };
+    sim.validate(cfg)?;
+    Ok(sim)
 }
 
 /// One method of the paper's matrix.
@@ -562,6 +622,70 @@ mod tests {
         let (_, _, cfg, label) = cluster_setup(&s).unwrap();
         assert_eq!(cfg.references, vec![ReferenceKind::Zeros]);
         assert!(!label.starts_with("TN-"), "{label}");
+    }
+
+    #[test]
+    fn sim_setup_parses_network_keys() {
+        let s = Settings::from_args(&[
+            "n=32",
+            "dim=8",
+            "workers=4",
+            "quorum=3",
+            "sim_lat=0.2",
+            "sim_gbps=1",
+            "sim_jitter=0.05",
+            "sim_loss=0.1",
+            "sim_seed=9",
+            "sim_churn=1@5, 2@7.5",
+            "sim_timeout=250",
+            "sim_sync=true",
+        ])
+        .unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        let sim = sim_setup(&s, &cfg).unwrap();
+        assert_eq!(sim.latency_ns, 200_000, "0.2 ms in ns");
+        assert_eq!(sim.up_bytes_per_sec, 125_000_000, "1 Gbit/s in bytes/s");
+        assert_eq!(sim.down_bytes_per_sec, 125_000_000, "defaults to sim_gbps");
+        assert_eq!(sim.jitter_ns, 50_000);
+        assert!((sim.loss - 0.1).abs() < 1e-12);
+        assert_eq!(sim.seed, 9);
+        assert_eq!(sim.churn, vec![(1, 5_000_000), (2, 7_500_000)]);
+        assert_eq!(sim.timeout_ns, Some(250_000_000));
+        assert!(sim.round_sync);
+        // Defaults: 100 µs, 10 Gbit/s symmetric, faultless, pipelined.
+        let s = Settings::from_args(&["n=32", "dim=8"]).unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        let sim = sim_setup(&s, &cfg).unwrap();
+        assert_eq!(sim.latency_ns, 100_000);
+        assert_eq!(sim.up_bytes_per_sec, 1_250_000_000);
+        assert_eq!(sim.down_bytes_per_sec, 1_250_000_000);
+        assert_eq!(sim.jitter_ns, 0);
+        assert_eq!(sim.timeout_ns, None);
+        assert!(sim.churn.is_empty() && !sim.round_sync);
+        // An asymmetric downlink is its own key.
+        let s = Settings::from_args(&["n=32", "dim=8", "sim_gbps=1", "sim_down_gbps=4"])
+            .unwrap();
+        let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+        let sim = sim_setup(&s, &cfg).unwrap();
+        assert_eq!(sim.up_bytes_per_sec, 125_000_000);
+        assert_eq!(sim.down_bytes_per_sec, 500_000_000);
+        // Bad values fail at setup, not rounds into a simulated run: loss
+        // without quorum, malformed/out-of-range churn, loss out of range,
+        // and faults combined with a scripted straggler schedule.
+        for bad in [
+            vec!["n=32", "dim=8", "sim_loss=0.1"],
+            vec!["n=32", "dim=8", "sim_churn=1-5"],
+            vec!["n=32", "dim=8", "sim_churn=x@5"],
+            vec!["n=32", "dim=8", "sim_churn=1@soon"],
+            vec!["n=32", "dim=8", "sim_churn=9@5"],
+            vec!["n=32", "dim=8", "workers=4", "quorum=3", "sim_loss=1.5"],
+            vec!["n=32", "dim=8", "workers=4", "quorum=3", "late=3", "sim_loss=0.1"],
+            vec!["n=32", "dim=8", "workers=4", "quorum=3", "late=3", "sim_churn=0@5"],
+        ] {
+            let s = Settings::from_args(&bad).unwrap();
+            let (_, _, cfg, _) = cluster_setup(&s).unwrap();
+            assert!(sim_setup(&s, &cfg).is_err(), "{bad:?} must fail at setup");
+        }
     }
 
     #[test]

@@ -41,6 +41,7 @@ fn main() -> Result<()> {
             fig4::run(&parsed.opts)?;
         }
         "run" => custom_run(&parsed.opts)?,
+        "sim" => sim_run(&parsed.opts)?,
         "leader" => tcp_leader(&parsed.opts)?,
         "worker" => tcp_worker(&parsed.opts)?,
         other => unreachable!("cli::parse admitted '{other}'"),
@@ -92,6 +93,111 @@ fn print_records(tr: &tng::coordinator::metrics::Trace) {
             r.round, r.bits_per_elt, r.subopt, r.cnz
         );
     }
+}
+
+/// `tng sim`: one cluster over the simulated network — the exact
+/// leader/worker protocol on a virtual clock (`transport::sim`), with
+/// latency/bandwidth/jitter/loss/churn from the `sim_*` keys. With
+/// `scenario=true` it runs the timing-only round engine instead, which
+/// holds no payloads and scales to 10k+ workers in milliseconds of wall
+/// time. See EXPERIMENTS.md §Simulation.
+fn sim_run(s: &Settings) -> Result<()> {
+    if s.bool_or("scenario", false)? {
+        return sim_scenario(s);
+    }
+    let mut opts = Settings::from_args(&["rounds=40", "record_every=10"])?;
+    opts.merge(s);
+    let (obj, codec, cfg, label) = common::cluster_setup(&opts)?;
+    let sim = common::sim_setup(&opts, &cfg)?;
+    let wall = std::time::Instant::now();
+    let (tr, report) = tng::transport::sim::run(&obj, codec.as_ref(), &label, &cfg, &sim)?;
+    println!("{}", common::summarize(&tr));
+    print_records(&tr);
+    println!(
+        "virtual={:.3} ms/round ({:.3} ms total)  wall={:.1?}",
+        report.virtual_ns as f64 / 1e6 / cfg.rounds.max(1) as f64,
+        report.virtual_ns as f64 / 1e6,
+        wall.elapsed(),
+    );
+    println!(
+        "late={} skipped={} lost_frames={} ledger_digest={:016x} param_digest={:016x}",
+        tr.total_late_frames,
+        tr.total_skipped_frames,
+        report.tracer.lost_frames(),
+        report.tracer.digest(),
+        tr.param_digest(),
+    );
+    Ok(())
+}
+
+/// `tng sim scenario=true`: timing-only rounds at arbitrary scale. Takes the
+/// topology keys (`workers= groups= quorum= rounds=`), explicit frame sizes
+/// (`up_bytes= partial_bytes= down_bytes=`), and the `sim_*` link/fault keys.
+fn sim_scenario(s: &Settings) -> Result<()> {
+    use tng::coordinator::DriverConfig;
+    use tng::transport::sim::{RoundScenario, ScenarioConfig};
+    let workers = s.usize_or("workers", 10_000)?;
+    let groups = s.usize_or("groups", 1)?.max(1);
+    let quorum = s.usize_or("quorum", 0)?;
+    let rounds = s.usize_or("rounds", 20)?;
+    if workers == 0 {
+        bail!("workers must be >= 1");
+    }
+    if rounds == 0 {
+        bail!("rounds must be >= 1");
+    }
+    if groups > workers {
+        bail!("groups={groups} exceeds workers={workers}");
+    }
+    if quorum > workers {
+        bail!("quorum={quorum} exceeds workers={workers}");
+    }
+    if groups > 1 && quorum > 0 {
+        bail!("quorum= with groups>=2 is not supported");
+    }
+    // Route the sim_* keys through the same parser/validator the protocol
+    // path uses (a stand-in DriverConfig carries the quorum gate for the
+    // loss-needs-quorum check; churn/timeout/sync are fabric-only and
+    // ignored here).
+    let gate = DriverConfig {
+        workers,
+        quorum: (quorum > 0).then_some(quorum),
+        ..Default::default()
+    };
+    let sim = common::sim_setup(s, &gate)?;
+    let cfg = ScenarioConfig {
+        workers,
+        groups,
+        quorum,
+        up_bytes: s.usize_or("up_bytes", 262_144)?,
+        partial_bytes: s.usize_or("partial_bytes", 262_144)?,
+        down_bytes: s.usize_or("down_bytes", 262_144)?,
+        model: sim.link_model(),
+        jitter_ns: sim.jitter_ns,
+        loss: sim.loss,
+        seed: sim.seed,
+    };
+    let wall = std::time::Instant::now();
+    let mut sc = RoundScenario::new(cfg);
+    for _ in 0..rounds {
+        sc.round();
+    }
+    println!(
+        "scenario workers={workers} groups={groups} quorum={quorum} rounds={rounds}"
+    );
+    println!(
+        "virtual={:.3} ms/round ({:.3} ms total)  starved={}  lost_frames={}",
+        sc.now() as f64 / 1e6 / rounds as f64,
+        sc.now() as f64 / 1e6,
+        sc.starved(),
+        sc.tracer().lost_frames(),
+    );
+    println!(
+        "ledger_digest={:016x}  wall={:.1?}",
+        sc.tracer().digest(),
+        wall.elapsed()
+    );
+    Ok(())
 }
 
 /// TCP cluster leader: bind, accept `workers=` connections (each worker

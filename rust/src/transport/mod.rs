@@ -7,13 +7,27 @@
 //!   original counted-byte simulator;
 //! * [`tcp`] — real sockets on `std::net`, a single readiness-driven poll
 //!   loop on the leader (no reader threads, no fan-in queue — see [`poll`]),
-//!   for N genuine OS processes on a host.
+//!   for N genuine OS processes on a host;
+//! * [`sim`] — a discrete-event network simulator on a virtual clock:
+//!   per-link latency/bandwidth/jitter models, frame loss, and worker
+//!   churn, deterministic from a single `sim_seed` (no wall time in the
+//!   data path — see the gather-deadline note below).
 //!
-//! Both carry the exact same `coordinator::protocol::Msg` frames and count
+//! All carry the exact same `coordinator::protocol::Msg` frames and count
 //! the exact same data-plane bytes, so a TCP run is byte-identical — in
 //! iterates *and* wire totals — to a channel run of the same config (pinned
-//! by `rust/tests/transport_tcp.rs`). [`frame`] holds the stream framing
-//! (length prefix + torn-read reassembly) the TCP backend is built on.
+//! by `rust/tests/transport_tcp.rs`), and a lossless sim run is
+//! `param_digest`-identical to both (`rust/tests/sim_transport.rs`).
+//! [`frame`] holds the stream framing (length prefix + torn-read
+//! reassembly) the TCP backend is built on.
+//!
+//! The `Instant` a [`LeaderTransport::gather_deadline`] returns is an
+//! *opaque token*: protocol loops only thread it back into
+//! [`LeaderTransport::recv_deadline`] of the same gather. Wall-clock
+//! backends compare it against `Instant::now()`; the sim backend keys a
+//! stored virtual deadline off its presence and never reads the wall
+//! clock — which is exactly why the protocol runs unmodified on simulated
+//! time.
 //!
 //! Accounting convention: [`NetSnapshot`] counts protocol frames only. The
 //! TCP length prefix (4 bytes/frame, recoverable from the message counts)
@@ -35,13 +49,15 @@
 pub mod channel;
 pub mod frame;
 pub mod poll;
+pub mod sim;
 pub mod tcp;
 
 pub use channel::{channel_pair, ChannelLeader, ChannelWorker};
 pub use frame::{read_frame, write_frame, Reassembler, MAX_FRAME_BYTES};
+pub use sim::{sim_pair, SimConfig, SimLeader, SimWorker};
 pub use tcp::{TcpLeader, TcpLeaderBuilder, TcpWorker};
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -105,6 +121,13 @@ pub trait LeaderTransport {
     }
 
     fn stats(&self) -> NetSnapshot;
+
+    /// Elapsed **virtual** time of the run, for backends whose clock is
+    /// simulated ([`sim`]). Wall-clock backends return `None`; the protocol
+    /// surfaces it as `Trace::virtual_elapsed` without interpreting it.
+    fn virtual_elapsed(&self) -> Option<Duration> {
+        None
+    }
 }
 
 /// One worker's side of the fabric.

@@ -96,13 +96,59 @@ mod sys {
         fds: &[std::os::raw::c_int],
         timeout: Option<Duration>,
     ) -> io::Result<Vec<usize>> {
-        let nap = Duration::from_millis(2);
-        std::thread::sleep(timeout.map_or(nap, |t| t.min(nap)));
-        Ok((0..fds.len()).collect())
+        let (nap, ready) = fallback_plan(fds.len(), timeout);
+        if !nap.is_zero() {
+            std::thread::sleep(nap);
+        }
+        Ok(ready)
+    }
+}
+
+/// Decide the non-unix fallback's sleep and readiness report. Split out
+/// (and compiled on every target) so the deadline behavior is unit-testable
+/// where CI actually runs: the sleep is clamped to the **remaining
+/// deadline** — a 500 µs budget must not nap 2 ms past it — and a
+/// zero-remaining deadline returns immediately with nothing ready, so the
+/// caller's deadline loop observes the expiry instead of oversleeping it.
+#[cfg_attr(unix, allow(dead_code))]
+fn fallback_plan(nfds: usize, timeout: Option<Duration>) -> (Duration, Vec<usize>) {
+    const NAP: Duration = Duration::from_millis(2);
+    match timeout {
+        Some(t) if t.is_zero() => (Duration::ZERO, Vec::new()),
+        Some(t) => (t.min(NAP), (0..nfds).collect()),
+        None => (NAP, (0..nfds).collect()),
     }
 }
 
 pub use sys::wait_readable;
+
+#[cfg(test)]
+mod fallback_tests {
+    use super::*;
+
+    #[test]
+    fn fallback_clamps_nap_to_the_remaining_deadline() {
+        // Plenty of budget: the full 2 ms quantum, everything "ready".
+        let (nap, ready) = fallback_plan(3, Some(Duration::from_millis(50)));
+        assert_eq!(nap, Duration::from_millis(2));
+        assert_eq!(ready, vec![0, 1, 2]);
+        // Less budget than the quantum: sleep only what remains (the old
+        // fixed 2 ms nap overshot a sub-quantum deadline by 4x here).
+        let (nap, _) = fallback_plan(3, Some(Duration::from_micros(500)));
+        assert_eq!(nap, Duration::from_micros(500));
+        // No deadline at all: the quantum paces the retry loop.
+        let (nap, ready) = fallback_plan(1, None);
+        assert_eq!(nap, Duration::from_millis(2));
+        assert_eq!(ready, vec![0]);
+    }
+
+    #[test]
+    fn fallback_zero_remaining_returns_immediately_and_empty() {
+        let (nap, ready) = fallback_plan(4, Some(Duration::ZERO));
+        assert_eq!(nap, Duration::ZERO, "an expired deadline must not sleep");
+        assert!(ready.is_empty(), "nothing may be reported ready past the deadline");
+    }
+}
 
 #[cfg(all(test, unix))]
 mod tests {

@@ -1,0 +1,202 @@
+//! Discrete-event network simulation — the repo's **fourth runtime**.
+//!
+//! The other three runtimes (deterministic driver, in-process channel
+//! threads, TCP processes) exchange real frames in real time; this backend
+//! runs the *same* `coordinator::parallel` protocol over a virtual clock:
+//! `u64` nanoseconds, a deterministic event queue, per-link
+//! latency/bandwidth/jitter models, i.i.d. uplink frame loss, and
+//! worker-departure (churn) schedules. Wall time never enters the data
+//! path, so a 10k-worker round costs milliseconds of CPU and the results
+//! are bit-reproducible from `sim_seed` alone.
+//!
+//! Two engines share one NIC convention and one fault-stream map:
+//!
+//! * [`fabric`] — [`sim_pair`] builds [`SimLeader`]/[`SimWorker`] transports
+//!   behind the ordinary `LeaderTransport`/`WorkerTransport` traits, so
+//!   quorum gathers, hierarchical trees, and the compressed downlink run
+//!   unmodified on simulated time. One OS thread per worker; determinism
+//!   comes from conservative quiescence-based scheduling (see the module
+//!   docs there).
+//! * [`scenario`] — [`RoundScenario`] evaluates round timing alone (no
+//!   payloads, no threads) and scales to 10k+ workers with zero
+//!   steady-state allocation; this is what `tng sim scenario=true`, the
+//!   benches, and CI's 10k-worker check run.
+//!
+//! # Determinism contract (fourth runtime)
+//!
+//! A lossless / zero-jitter / zero-churn [`SimConfig`] is pure plumbing:
+//! the protocol sees the same frames in a worker-id-resolvable order, so
+//! the run is `param_digest`-identical to the driver and channel backends
+//! for every transport-legal config, and the fault RNG streams are never
+//! even sampled (draws are gated on `loss > 0` / `jitter > 0`). With
+//! faults enabled, the same `sim_seed` reproduces the digest, the per-hop
+//! [`TracerReport`] ledger, and the late/skipped counters bit for bit.
+//! `rust/tests/sim_transport.rs` pins all of this.
+//!
+//! Scenario specs come from `cluster_setup` config keys (`sim_lat=`,
+//! `sim_gbps=`, `sim_loss=`, `sim_churn=`, `sim_seed=`, ... — see
+//! EXPERIMENTS.md §Simulation and `experiments::common::sim_setup`).
+
+pub mod fabric;
+pub mod scenario;
+pub mod tracer;
+
+pub use fabric::{sim_pair, SimLeader, SimWorker};
+pub use scenario::{RoundScenario, ScenarioConfig};
+pub use tracer::{EntityLedger, TracerReport};
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::codec::Codec;
+use crate::coordinator::driver::DriverConfig;
+use crate::coordinator::metrics::Trace;
+use crate::coordinator::network::LinkModel;
+use crate::coordinator::parallel;
+use crate::objectives::Objective;
+
+/// One simulated network: link model + fault injection + time policy.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// One-way per-frame latency (virtual ns).
+    pub latency_ns: u64,
+    /// Leader-ingress (worker → leader) bandwidth, bytes/second.
+    pub up_bytes_per_sec: u64,
+    /// Leader-egress (leader → worker) bandwidth, bytes/second.
+    pub down_bytes_per_sec: u64,
+    /// Uniform extra delivery delay in `[0, jitter_ns)` per frame, drawn
+    /// from the per-link `sim_rng` stream (0 = no draw at all).
+    pub jitter_ns: u64,
+    /// I.i.d. uplink frame-loss probability in `[0, 1)`. Requires a quorum
+    /// config — under a full barrier one lost gradient is a deadlock.
+    pub loss: f64,
+    /// Seed of the `sim_rng` fault streams (independent of the model seed).
+    pub seed: u64,
+    /// Churn schedule: `(worker, departure_ns)` — the worker's transport
+    /// fails with a `[sim-churn]` error for any send/receive at or past the
+    /// departure instant, exactly as a vanished host would.
+    pub churn: Vec<(usize, u64)>,
+    /// Virtual straggler budget per gather phase (`None` = wait forever).
+    pub timeout_ns: Option<u64>,
+    /// Barrier departures: clamp every worker's uplink departure to the
+    /// completion of the previous broadcast. This removes the protocol's
+    /// natural pipelining and makes a full-barrier round cost exactly
+    /// `LinkModel::round_time` — the mode the model-validation tests use.
+    pub round_sync: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            latency_ns: 100_000,                 // 100 µs
+            up_bytes_per_sec: 1_250_000_000,     // 10 Gbit/s
+            down_bytes_per_sec: 1_250_000_000,
+            jitter_ns: 0,
+            loss: 0.0,
+            seed: 1,
+            churn: Vec::new(),
+            timeout_ns: None,
+            round_sync: false,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The analytic `network.rs` model of these links — what the simulated
+    /// times are validated against.
+    pub fn link_model(&self) -> LinkModel {
+        LinkModel::asymmetric(
+            self.latency_ns as f64 * 1e-9,
+            self.up_bytes_per_sec as f64,
+            self.down_bytes_per_sec as f64,
+        )
+    }
+
+    /// Reject fault specs the protocol cannot survive or that would break
+    /// the scripted-determinism contract.
+    pub fn validate(&self, cfg: &DriverConfig) -> Result<()> {
+        if !(0.0..1.0).contains(&self.loss) {
+            bail!("sim_loss={} out of range [0, 1)", self.loss);
+        }
+        if self.loss > 0.0 && cfg.quorum.is_none() {
+            bail!("sim_loss > 0 requires quorum= (a lost frame deadlocks a full barrier)");
+        }
+        if cfg.straggler_schedule.is_some() && (self.loss > 0.0 || !self.churn.is_empty()) {
+            bail!(
+                "sim_loss/sim_churn cannot combine with a scripted straggler schedule: \
+                 the schedule's digest contract assumes every frame arrives"
+            );
+        }
+        for &(w, _) in &self.churn {
+            if w >= cfg.workers {
+                bail!("sim_churn worker {w} out of range for {} workers", cfg.workers);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// What the fabric measured beyond the ordinary [`Trace`]: the virtual
+/// clock at shutdown and the per-hop byte/time ledger.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Leader's virtual clock when the run (incl. Bye drain) completed.
+    pub virtual_ns: u64,
+    pub tracer: TracerReport,
+}
+
+impl SimReport {
+    pub fn virtual_time(&self) -> Duration {
+        Duration::from_nanos(self.virtual_ns)
+    }
+}
+
+/// Run one cluster — leader + M worker threads — over the simulated fabric,
+/// mirroring `parallel::run`'s thread layout. Returns the protocol [`Trace`]
+/// (with [`Trace::virtual_elapsed`] set) plus the fabric's [`SimReport`].
+///
+/// Error policy: the leader's error wins (it names the simulated cause —
+/// straggler deadline, deadlock, all-departed); expected casualties of the
+/// scenario itself (`[sim-churn]` departures, workers cut off by a leader
+/// that already failed) are not re-raised as run errors.
+pub fn run(
+    obj: &(dyn Objective + Sync),
+    codec: &dyn Codec,
+    label: &str,
+    cfg: &DriverConfig,
+    sim: &SimConfig,
+) -> Result<(Trace, SimReport)> {
+    parallel::validate(cfg)?;
+    sim.validate(cfg)?;
+    let (mut leader, ports) = sim_pair(cfg.workers, sim);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (id, mut tp) in ports.into_iter().enumerate() {
+            let cfg_ref = &*cfg;
+            handles.push(
+                scope.spawn(move || parallel::run_worker(id, obj, codec, cfg_ref, &mut tp)),
+            );
+        }
+        let trace = parallel::run_leader(obj, codec, label, cfg, &mut leader);
+        let report = leader.report();
+        // Dropping the leader wakes every worker still blocked on the
+        // downlink (they fail with "leader hung up" instead of hanging).
+        drop(leader);
+        let mut worker_err: Option<anyhow::Error> = None;
+        for h in handles {
+            if let Err(e) = h.join().expect("sim worker panicked") {
+                let s = e.to_string();
+                let expected = s.contains("[sim-churn]") || s.contains("leader hung up");
+                if !expected && worker_err.is_none() {
+                    worker_err = Some(e);
+                }
+            }
+        }
+        let trace = trace?;
+        if let Some(e) = worker_err {
+            return Err(e);
+        }
+        Ok((trace, report))
+    })
+}

@@ -1,0 +1,335 @@
+//! Round-synchronous scenario engine: the 10k-worker face of the simulator.
+//!
+//! The fabric in [`super::fabric`] runs the real protocol on real threads —
+//! perfect for digest-level determinism tests, but one OS thread per worker
+//! caps it at hundreds of workers. This engine is the complement: a
+//! single-threaded discrete-event evaluation of one synchronization round
+//! (tier-1 group fan-in → root fan-in → broadcast) over the *same* NIC
+//! serialization convention as the fabric and `LinkModel`, with the same
+//! per-hop tracer ledger and the same `sim_rng` fault streams. It holds no
+//! frame payloads at all — only virtual timestamps — so 10k workers cost
+//! 10k `u64`s and a steady-state round allocates nothing (pinned by
+//! `rust/tests/alloc.rs`).
+//!
+//! Lossless/zero-jitter rounds reproduce the closed forms exactly (modulo
+//! per-frame integer-nanosecond rounding):
+//! `LinkModel::round_time` (flat), `quorum_round_time` (k-of-M), and
+//! `tree_round_time` (two-level groups) — the model-validation tests in
+//! `rust/tests/sim_transport.rs` turn those formulas into checked code.
+
+use crate::coordinator::network::LinkModel;
+use crate::util::rng::Rng;
+
+use super::fabric::{tx_ns, SIM_STREAM_BASE};
+use super::tracer::TracerReport;
+
+/// One simulated topology + link + fault specification.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub workers: usize,
+    /// Number of tier-1 groups; `<= 1` means the flat star.
+    pub groups: usize,
+    /// Gather quorum `k` (`0` = full barrier). Flat topology only.
+    pub quorum: usize,
+    /// Worker → aggregator uplink frame size (bytes).
+    pub up_bytes: usize,
+    /// Group aggregator → root partial-aggregate frame size (bytes).
+    pub partial_bytes: usize,
+    /// Root → worker broadcast frame size (bytes).
+    pub down_bytes: usize,
+    pub model: LinkModel,
+    /// Uniform per-frame delivery jitter in `[0, jitter_ns)` (0 = none).
+    pub jitter_ns: u64,
+    /// I.i.d. uplink leaf-frame loss probability in `[0, 1)`.
+    pub loss: f64,
+    /// Seed of the `sim_rng` fault streams (loss coins + jitter draws).
+    pub seed: u64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            workers: 4,
+            groups: 1,
+            quorum: 0,
+            up_bytes: 262_144,
+            partial_bytes: 262_144,
+            down_bytes: 262_144,
+            model: LinkModel::default(),
+            jitter_ns: 0,
+            loss: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Reusable-arena evaluator of successive rounds under a [`ScenarioConfig`].
+pub struct RoundScenario {
+    m: usize,
+    /// Contiguous balanced partition `[start, end)` per group (PR 5's
+    /// grouping convention: the first `m % g` groups get one extra member).
+    bounds: Vec<(usize, usize)>,
+    quorum: usize,
+    up_bytes: usize,
+    partial_bytes: usize,
+    down_bytes: usize,
+    latency_ns: u64,
+    up_bps: u64,
+    down_bps: u64,
+    jitter_ns: u64,
+    loss: f64,
+    // --- virtual state ---
+    now: u64,
+    rounds: u64,
+    starved: u64,
+    // --- reused arenas (zero allocations per round after construction) ---
+    arrivals: Vec<u64>,
+    scratch: Vec<u64>,
+    group_done: Vec<u64>,
+    rng_up: Vec<Rng>,
+    rng_down: Vec<Rng>,
+    tracer: TracerReport,
+}
+
+impl RoundScenario {
+    pub fn new(cfg: ScenarioConfig) -> Self {
+        let m = cfg.workers;
+        assert!(m > 0, "scenario needs at least one worker");
+        let g = cfg.groups.max(1);
+        assert!(g <= m, "more groups ({g}) than workers ({m})");
+        assert!(cfg.quorum <= m, "quorum {} exceeds workers {m}", cfg.quorum);
+        assert!(
+            g == 1 || cfg.quorum == 0,
+            "quorum gathers are flat-topology only (got groups={g}, quorum={})",
+            cfg.quorum
+        );
+        assert!((0.0..1.0).contains(&cfg.loss), "loss must be in [0, 1)");
+        let base = Rng::new(cfg.seed);
+        let (lo, rem) = (m / g, m % g);
+        let mut bounds = Vec::with_capacity(g);
+        let mut start = 0;
+        for gi in 0..g {
+            let len = lo + usize::from(gi < rem);
+            bounds.push((start, start + len));
+            start += len;
+        }
+        RoundScenario {
+            m,
+            bounds,
+            quorum: cfg.quorum,
+            up_bytes: cfg.up_bytes,
+            partial_bytes: cfg.partial_bytes,
+            down_bytes: cfg.down_bytes,
+            latency_ns: (cfg.model.latency_s * 1e9).round() as u64,
+            up_bps: cfg.model.up_bandwidth_bps as u64,
+            down_bps: cfg.model.down_bandwidth_bps as u64,
+            jitter_ns: cfg.jitter_ns,
+            loss: cfg.loss,
+            now: 0,
+            rounds: 0,
+            starved: 0,
+            arrivals: Vec::with_capacity(m),
+            scratch: Vec::with_capacity(m),
+            group_done: vec![0; g],
+            rng_up: (0..m as u64).map(|w| base.split(SIM_STREAM_BASE + 2 * w)).collect(),
+            rng_down: (0..m as u64).map(|w| base.split(SIM_STREAM_BASE + 2 * w + 1)).collect(),
+            tracer: TracerReport::new(m),
+        }
+    }
+
+    /// Virtual clock: completion time of the last round (ns).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Quorum gathers whose surviving frames fell below `k` (loss only).
+    pub fn starved(&self) -> u64 {
+        self.starved
+    }
+
+    pub fn tracer(&self) -> &TracerReport {
+        &self.tracer
+    }
+
+    /// Advance one synchronization round; returns its virtual duration (ns).
+    ///
+    /// All members depart at the round start (the barrier convention the
+    /// fabric's `round_sync` mode realizes): tier-1 groups fan in to their
+    /// aggregators in parallel, the slowest group gates the root fan-in of
+    /// `g` partial frames, and the root serializes `M` broadcast frames.
+    pub fn round(&mut self) -> u64 {
+        let t0 = self.now;
+        let up_slot = self.latency_ns + tx_ns(self.up_bytes, self.up_bps);
+        let gather = if self.bounds.len() > 1 {
+            self.tree_gather(t0, up_slot)
+        } else {
+            self.flat_gather(t0, up_slot)
+        };
+        // Root broadcast: M egress-NIC slots, delivered to every worker.
+        let down_slot = self.latency_ns + tx_ns(self.down_bytes, self.down_bps);
+        let mut nic = gather;
+        let mut completion = gather;
+        for w in 0..self.m {
+            self.tracer.on_send(TracerReport::LEADER, self.down_bytes, gather);
+            nic += down_slot;
+            let mut deliver = nic;
+            if self.jitter_ns > 0 {
+                deliver += (self.rng_down[w].f64() * self.jitter_ns as f64) as u64;
+            }
+            self.tracer.on_recv(TracerReport::worker(w), self.down_bytes, deliver);
+            completion = completion.max(deliver);
+        }
+        self.now = completion;
+        self.rounds += 1;
+        completion - t0
+    }
+
+    /// Flat star gather: one ingress NIC, full-barrier max or k-th arrival.
+    fn flat_gather(&mut self, t0: u64, up_slot: u64) -> u64 {
+        self.arrivals.clear();
+        let mut nic = t0;
+        for w in 0..self.m {
+            self.tracer.on_send(TracerReport::worker(w), self.up_bytes, t0);
+            if self.loss > 0.0 && self.rng_up[w].f64() < self.loss {
+                self.tracer.on_loss(TracerReport::worker(w), self.up_bytes, t0);
+                continue;
+            }
+            nic += up_slot;
+            let mut deliver = nic;
+            if self.jitter_ns > 0 {
+                deliver += (self.rng_up[w].f64() * self.jitter_ns as f64) as u64;
+            }
+            self.tracer.on_recv(TracerReport::LEADER, self.up_bytes, deliver);
+            self.arrivals.push(deliver);
+        }
+        let last = self.arrivals.iter().copied().max().unwrap_or(t0);
+        if self.quorum == 0 {
+            return last;
+        }
+        if self.arrivals.len() < self.quorum {
+            // Loss starved the quorum; this round degenerates to the
+            // barrier over the survivors (and the ledger records it).
+            self.starved += 1;
+            return last;
+        }
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.arrivals);
+        self.scratch.sort_unstable();
+        self.scratch[self.quorum - 1]
+    }
+
+    /// Two-level gather: parallel group fan-ins, then `g` partials at root.
+    fn tree_gather(&mut self, t0: u64, up_slot: u64) -> u64 {
+        let mut tier1 = t0;
+        for gi in 0..self.bounds.len() {
+            let (start, end) = self.bounds[gi];
+            let mut nic = t0;
+            let mut done = t0;
+            for w in start..end {
+                self.tracer.on_send(TracerReport::worker(w), self.up_bytes, t0);
+                if self.loss > 0.0 && self.rng_up[w].f64() < self.loss {
+                    self.tracer.on_loss(TracerReport::worker(w), self.up_bytes, t0);
+                    continue;
+                }
+                nic += up_slot;
+                let mut deliver = nic;
+                if self.jitter_ns > 0 {
+                    deliver += (self.rng_up[w].f64() * self.jitter_ns as f64) as u64;
+                }
+                // The group aggregator (first member) receives the frame.
+                self.tracer.on_recv(TracerReport::worker(start), self.up_bytes, deliver);
+                done = done.max(deliver);
+            }
+            self.group_done[gi] = done;
+            tier1 = tier1.max(done);
+        }
+        // Root fan-in of the g partial aggregates, in group order. Partials
+        // are not subject to leaf loss (the faults live on the leaf links).
+        let partial_slot = self.latency_ns + tx_ns(self.partial_bytes, self.up_bps);
+        let mut nic = tier1;
+        let mut gather = tier1;
+        for gi in 0..self.bounds.len() {
+            let agg = self.bounds[gi].0;
+            self.tracer.on_send(TracerReport::worker(agg), self.partial_bytes, self.group_done[gi]);
+            nic += partial_slot;
+            let mut deliver = nic;
+            if self.jitter_ns > 0 {
+                deliver += (self.rng_up[agg].f64() * self.jitter_ns as f64) as u64;
+            }
+            self.tracer.on_recv(TracerReport::LEADER, self.partial_bytes, deliver);
+            gather = gather.max(deliver);
+        }
+        gather
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_flat_round_matches_the_closed_form() {
+        let mut s = RoundScenario::new(ScenarioConfig {
+            workers: 8,
+            ..ScenarioConfig::default()
+        });
+        let dt = s.round();
+        let model = LinkModel::default();
+        let want = model.round_time(&[262_144; 8], 262_144) * 1e9;
+        let got = dt as f64;
+        assert!((got - want).abs() / want < 1e-4, "sim {got} vs model {want}");
+        // Rounds are identical in steady state (integer clock, no faults).
+        assert_eq!(s.round(), dt);
+        assert_eq!(s.rounds(), 2);
+        assert_eq!(s.now(), 2 * dt);
+    }
+
+    #[test]
+    fn scenario_is_bit_reproducible_under_faults() {
+        let cfg = ScenarioConfig {
+            workers: 32,
+            quorum: 16,
+            jitter_ns: 50_000,
+            loss: 0.05,
+            seed: 7,
+            ..ScenarioConfig::default()
+        };
+        let mut a = RoundScenario::new(cfg.clone());
+        let mut b = RoundScenario::new(cfg);
+        for _ in 0..20 {
+            assert_eq!(a.round(), b.round());
+        }
+        assert_eq!(a.tracer().digest(), b.tracer().digest());
+        assert!(a.tracer().lost_frames() > 0, "5% loss over 640 frames");
+    }
+
+    #[test]
+    fn scenario_group_partition_is_contiguous_and_balanced() {
+        let s = RoundScenario::new(ScenarioConfig {
+            workers: 10,
+            groups: 3,
+            ..ScenarioConfig::default()
+        });
+        assert_eq!(s.bounds, vec![(0, 4), (4, 7), (7, 10)]);
+    }
+
+    #[test]
+    fn scenario_quorum_starvation_is_counted_not_fatal() {
+        let mut s = RoundScenario::new(ScenarioConfig {
+            workers: 4,
+            quorum: 4,
+            loss: 0.5,
+            seed: 3,
+            ..ScenarioConfig::default()
+        });
+        for _ in 0..50 {
+            s.round();
+        }
+        assert!(s.starved() > 0, "50% loss must starve a 4-of-4 quorum sometimes");
+        assert_eq!(s.rounds(), 50);
+    }
+}

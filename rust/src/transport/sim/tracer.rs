@@ -1,0 +1,125 @@
+//! Per-entity byte/time ledger for the simulated fabric (the mcsim-style
+//! `entity_tracer`): every simulated endpoint — the leader plus each worker
+//! — accumulates counters for the frames it sent, received, and lost, with
+//! the virtual timestamp of its last event. The report is pure data: the
+//! fabric updates the counters inline (no allocation after construction),
+//! and [`TracerReport::digest`] folds every field into one FNV-1a
+//! fingerprint so tests can pin "the whole per-hop ledger was identical"
+//! with a single `assert_eq!` — the same determinism idiom
+//! `Trace::param_digest` uses for the iterate.
+
+/// One endpoint's cumulative ledger. "Sent" is counted at transmission time
+/// (matching the wire ledger: a frame the network then loses was still
+/// paid for), "received" at virtual delivery, "lost" at the drop decision.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EntityLedger {
+    pub sent_frames: u64,
+    pub sent_bytes: u64,
+    pub recv_frames: u64,
+    pub recv_bytes: u64,
+    pub lost_frames: u64,
+    pub lost_bytes: u64,
+    /// Virtual time (ns) of this entity's most recent send/recv/loss event.
+    pub last_event_ns: u64,
+}
+
+/// The whole fabric's ledger: entity 0 is the leader, entity `1 + w` is
+/// worker `w`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TracerReport {
+    pub entities: Vec<EntityLedger>,
+}
+
+impl TracerReport {
+    /// Pre-sized ledger for a leader + `workers` workers.
+    pub fn new(workers: usize) -> Self {
+        TracerReport { entities: vec![EntityLedger::default(); workers + 1] }
+    }
+
+    pub const LEADER: usize = 0;
+
+    /// Ledger slot index of worker `w`.
+    pub fn worker(w: usize) -> usize {
+        1 + w
+    }
+
+    /// Total frames the network dropped (uplink loss injection).
+    pub fn lost_frames(&self) -> u64 {
+        self.entities.iter().map(|e| e.lost_frames).sum()
+    }
+
+    /// FNV-1a over every counter of every entity, in entity order: one
+    /// number that changes if any hop's byte/frame/time accounting changes.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut fold = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        for e in &self.entities {
+            fold(e.sent_frames);
+            fold(e.sent_bytes);
+            fold(e.recv_frames);
+            fold(e.recv_bytes);
+            fold(e.lost_frames);
+            fold(e.lost_bytes);
+            fold(e.last_event_ns);
+        }
+        h
+    }
+
+    #[inline]
+    pub(crate) fn on_send(&mut self, entity: usize, bytes: usize, now_ns: u64) {
+        let e = &mut self.entities[entity];
+        e.sent_frames += 1;
+        e.sent_bytes += bytes as u64;
+        e.last_event_ns = e.last_event_ns.max(now_ns);
+    }
+
+    #[inline]
+    pub(crate) fn on_recv(&mut self, entity: usize, bytes: usize, now_ns: u64) {
+        let e = &mut self.entities[entity];
+        e.recv_frames += 1;
+        e.recv_bytes += bytes as u64;
+        e.last_event_ns = e.last_event_ns.max(now_ns);
+    }
+
+    #[inline]
+    pub(crate) fn on_loss(&mut self, entity: usize, bytes: usize, now_ns: u64) {
+        let e = &mut self.entities[entity];
+        e.lost_frames += 1;
+        e.lost_bytes += bytes as u64;
+        e.last_event_ns = e.last_event_ns.max(now_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_is_stable_and_separates() {
+        let mut a = TracerReport::new(2);
+        a.on_send(TracerReport::worker(0), 100, 5);
+        a.on_recv(TracerReport::LEADER, 100, 9);
+        let mut b = TracerReport::new(2);
+        b.on_send(TracerReport::worker(0), 100, 5);
+        b.on_recv(TracerReport::LEADER, 100, 9);
+        assert_eq!(a.digest(), b.digest());
+        // Any counter divergence — here a loss event — must move the digest.
+        b.on_loss(TracerReport::worker(1), 1, 9);
+        assert_ne!(a.digest(), b.digest());
+        assert_eq!(b.lost_frames(), 1);
+    }
+
+    #[test]
+    fn last_event_time_is_monotone() {
+        let mut t = TracerReport::new(1);
+        t.on_send(TracerReport::worker(0), 10, 50);
+        t.on_send(TracerReport::worker(0), 10, 30); // out-of-order call
+        assert_eq!(t.entities[TracerReport::worker(0)].last_event_ns, 50);
+        assert_eq!(t.entities[TracerReport::worker(0)].sent_bytes, 20);
+    }
+}

@@ -140,4 +140,43 @@ fn steady_state_rounds_allocate_nothing() {
         0,
         "tree aggregator: steady-state rounds must not allocate"
     );
+
+    // The 10k-worker simulation scenario engine: arrivals/scratch/tracer are
+    // all arenas sized at construction, so a steady-state round — quorum
+    // sort, jitter draws, loss coins, ledger updates included — must not
+    // touch the heap. This is what makes `tng sim scenario=true` at 10k
+    // workers cost milliseconds, not allocator churn.
+    use tng::transport::sim::{RoundScenario, ScenarioConfig};
+    let scenarios = [
+        (
+            "sim-flat-quorum-10k",
+            ScenarioConfig {
+                workers: 10_000,
+                quorum: 6_000,
+                jitter_ns: 20_000,
+                loss: 0.01,
+                seed: 11,
+                ..Default::default()
+            },
+        ),
+        (
+            "sim-groups64-10k",
+            ScenarioConfig { workers: 10_000, groups: 64, ..Default::default() },
+        ),
+    ];
+    for (name, cfg) in scenarios {
+        let mut sc = RoundScenario::new(cfg);
+        for _ in 0..4 {
+            sc.round();
+        }
+        let before = alloc_count();
+        for _ in 0..25 {
+            std::hint::black_box(sc.round());
+        }
+        assert_eq!(
+            alloc_count() - before,
+            0,
+            "{name}: steady-state simulated rounds must not allocate"
+        );
+    }
 }

@@ -1,0 +1,358 @@
+//! Simulated-network transport integration tests (the PR-8 fourth runtime).
+//!
+//! Three layers of guarantee, mirroring DESIGN.md §Simulation:
+//!
+//! 1. **Determinism** — a lossless sim run is `param_digest`- and
+//!    wire-ledger-identical to the deterministic driver and the channel
+//!    runtime across the codec/downlink/groups matrix, and a scripted
+//!    quorum run reproduces the PR-6 fold contract exactly.
+//! 2. **Fault injection** — seeded loss/jitter/churn runs are
+//!    bit-reproducible from `sim_seed` alone (digest, per-hop ledger,
+//!    late/skipped counters, virtual clock), degrade gracefully under a
+//!    quorum, and fail fast — never hang — under a full barrier.
+//! 3. **Model validation** — `round_sync` virtual round times land on the
+//!    `LinkModel` closed forms (`round_time`, `quorum_round_time`), and the
+//!    scenario engine reproduces all three closed forms at 10k workers in
+//!    milliseconds of wall time.
+
+use tng::codec::ternary::TernaryCodec;
+use tng::coordinator::network::LinkModel;
+use tng::coordinator::{driver, parallel, DriverConfig, StragglerSchedule};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::experiments::common::make_codec;
+use tng::link::TreeTopology;
+use tng::objectives::logreg::LogReg;
+use tng::optim::StepSchedule;
+use tng::tng::ReferenceKind;
+use tng::transport::sim::{self, RoundScenario, ScenarioConfig, SimConfig, TracerReport};
+
+fn logreg() -> LogReg {
+    let ds = generate(&SkewConfig { n: 64, dim: 16, seed: 2, ..Default::default() });
+    LogReg::new(ds, 0.05)
+}
+
+fn base_cfg() -> DriverConfig {
+    DriverConfig {
+        rounds: 12,
+        workers: 4,
+        batch: 4,
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 2 }],
+        record_every: 4,
+        ..Default::default()
+    }
+}
+
+/// A faultless `SimConfig` is pure plumbing: across the codec / downlink /
+/// topology matrix, the simulated run lands on the identical parameter
+/// digest, iterate, and per-hop wire ledgers as the deterministic driver
+/// and the threaded channel runtime — the fourth-runtime determinism
+/// contract.
+#[test]
+fn lossless_sim_matches_driver_and_channel_across_matrix() {
+    let obj = logreg();
+    let cases: [(&str, Option<&str>, usize); 3] = [
+        ("ternary", None, 1),
+        ("entropy:ternary", Some("entropy:ternary"), 1),
+        ("ternary", None, 2),
+    ];
+    for (spec, down, groups) in cases {
+        let codec = make_codec(spec).unwrap();
+        let mut cfg = base_cfg();
+        if let Some(d) = down {
+            cfg.downlink = Some(tng::downlink::DownlinkSpec::new(d));
+        }
+        if groups >= 2 {
+            cfg.topology = Some(TreeTopology::new(groups, spec));
+        }
+        let what = format!("{spec}/down={down:?}/g{groups}");
+        let seq = driver::run(&obj, codec.as_ref(), "seq", &cfg);
+        let par = parallel::run(&obj, codec.as_ref(), "par", &cfg).unwrap();
+        let (simulated, report) =
+            sim::run(&obj, codec.as_ref(), "sim", &cfg, &SimConfig::default()).unwrap();
+        assert_eq!(seq.param_digest(), par.param_digest(), "{what}: driver==channel");
+        assert_eq!(seq.param_digest(), simulated.param_digest(), "{what}: driver==sim");
+        assert_eq!(seq.final_w, simulated.final_w, "{what}: iterates");
+        assert_eq!(
+            (seq.total_wire_up_bytes, seq.total_wire_down_bytes, seq.total_wire_partial_bytes),
+            (
+                simulated.total_wire_up_bytes,
+                simulated.total_wire_down_bytes,
+                simulated.total_wire_partial_bytes
+            ),
+            "{what}: wire ledgers"
+        );
+        // No faults configured: the per-hop tracer must account every frame
+        // lossless, and the run must report its virtual clock.
+        assert_eq!(report.tracer.lost_frames(), 0, "{what}: lossless");
+        assert!(report.virtual_ns > 0, "{what}: time must pass");
+        assert_eq!(
+            simulated.virtual_elapsed,
+            Some(report.virtual_time()),
+            "{what}: trace carries the virtual clock"
+        );
+        assert_eq!(
+            par.virtual_elapsed, None,
+            "{what}: wall-clock backends report no virtual time"
+        );
+    }
+}
+
+/// The PR-6 scripted-quorum fold contract holds on simulated time: same
+/// digest, same wire ledger, and the exact late/skipped accounting of the
+/// deterministic driver (worker 3 late on every round: 9 folds + 1 frame
+/// skipped at shutdown over 10 rounds).
+#[test]
+fn scripted_quorum_sim_matches_the_driver_fold_contract() {
+    let obj = logreg();
+    let cfg = DriverConfig {
+        rounds: 10,
+        workers: 4,
+        quorum: Some(3),
+        straggler_schedule: Some(StragglerSchedule::every_round(vec![3])),
+        schedule: StepSchedule::Const(0.3),
+        references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 2 }],
+        record_every: 5,
+        ..Default::default()
+    };
+    let seq = driver::run(&obj, &TernaryCodec, "seq", &cfg);
+    let (simulated, _report) =
+        sim::run(&obj, &TernaryCodec, "sim", &cfg, &SimConfig::default()).unwrap();
+    assert_eq!(seq.param_digest(), simulated.param_digest());
+    assert_eq!(seq.final_w, simulated.final_w);
+    assert_eq!(simulated.total_late_frames, 9, "9 folded late frames");
+    assert_eq!(simulated.total_skipped_frames, 1, "round 9's late frame has no fold round");
+    // Late frames still ship and still count: the uplink ledger is the
+    // full-barrier one.
+    assert_eq!(seq.total_wire_up_bytes, simulated.total_wire_up_bytes);
+    assert_eq!(seq.total_wire_down_bytes, simulated.total_wire_down_bytes);
+}
+
+/// Seeded loss + jitter under a real (unscripted) quorum: whatever the
+/// outcome, two runs of the same `sim_seed` are bit-identical — digest,
+/// virtual clock, per-hop ledger, fault counters — and the faults demonstrably
+/// fire (frames lost, virtual time strictly above the lossless run's).
+#[test]
+fn seeded_faults_are_bit_reproducible() {
+    let obj = logreg();
+    let cfg = DriverConfig {
+        rounds: 12,
+        workers: 8,
+        quorum: Some(4),
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros],
+        record_every: 4,
+        ..Default::default()
+    };
+    let faulty = SimConfig { loss: 0.1, jitter_ns: 50_000, seed: 7, ..Default::default() };
+    let run = || sim::run(&obj, &TernaryCodec, "sim", &cfg, &faulty);
+    match (run(), run()) {
+        (Ok((tr_a, rep_a)), Ok((tr_b, rep_b))) => {
+            assert_eq!(tr_a.param_digest(), tr_b.param_digest(), "digest");
+            assert_eq!(tr_a.final_w, tr_b.final_w, "iterates");
+            assert_eq!(rep_a.virtual_ns, rep_b.virtual_ns, "virtual clock");
+            assert_eq!(rep_a.tracer.digest(), rep_b.tracer.digest(), "per-hop ledger");
+            assert_eq!(
+                (tr_a.total_late_frames, tr_a.total_skipped_frames),
+                (tr_b.total_late_frames, tr_b.total_skipped_frames),
+                "fault counters"
+            );
+            assert!(rep_a.tracer.lost_frames() > 0, "10% loss over ~100 frames must fire");
+            let (_, lossless) =
+                sim::run(&obj, &TernaryCodec, "sim", &cfg, &SimConfig::default()).unwrap();
+            assert!(
+                rep_a.virtual_ns > lossless.virtual_ns,
+                "jitter must cost virtual time: {} !> {}",
+                rep_a.virtual_ns,
+                lossless.virtual_ns
+            );
+        }
+        // A seed whose loss pattern starves the quorum is a legal outcome —
+        // but it must be the *same* outcome, bit for bit, on every run.
+        (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
+        (a, b) => panic!(
+            "two runs of one seed diverged: {:?} vs {:?}",
+            a.map(|(t, _)| t.param_digest()),
+            b.map(|(t, _)| t.param_digest())
+        ),
+    }
+}
+
+/// Churn under a quorum degrades gracefully: the departed worker's frames
+/// stop (visible in the per-hop ledger), the survivors finish every round,
+/// shutdown tolerates the missing Bye, and the whole thing is reproducible.
+#[test]
+fn churned_worker_degrades_quorum_run_gracefully() {
+    let obj = logreg();
+    let cfg = DriverConfig {
+        rounds: 8,
+        workers: 4,
+        quorum: Some(2),
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros],
+        record_every: 4,
+        ..Default::default()
+    };
+    // Worker 3 vanishes at 1 ms of virtual time — after its first uplink
+    // frame (departures start at t=0) but rounds before the run completes.
+    let churned = SimConfig { churn: vec![(3, 1_000_000)], ..Default::default() };
+    let (tr_a, rep_a) = sim::run(&obj, &TernaryCodec, "sim", &cfg, &churned).unwrap();
+    let (tr_b, rep_b) = sim::run(&obj, &TernaryCodec, "sim", &cfg, &churned).unwrap();
+    assert_eq!(tr_a.param_digest(), tr_b.param_digest(), "churn is deterministic");
+    assert_eq!(rep_a.virtual_ns, rep_b.virtual_ns);
+    assert_eq!(rep_a.tracer.digest(), rep_b.tracer.digest());
+    assert_eq!(tr_a.rounds, 8, "every round completes on the survivors");
+    let sent = |w: usize| rep_a.tracer.entities[TracerReport::worker(w)].sent_frames;
+    assert!(sent(3) >= 1, "worker 3 departs after its round-0 frame");
+    assert!(
+        sent(3) < sent(0),
+        "the churned worker must fall silent: {} !< {}",
+        sent(3),
+        sent(0)
+    );
+}
+
+/// A full-barrier run cannot survive churn — and it must say so, fast, with
+/// a diagnosis, instead of hanging the gather forever.
+#[test]
+fn full_barrier_churn_fails_fast_with_a_deadlock_error() {
+    let obj = logreg();
+    let cfg = DriverConfig {
+        rounds: 50,
+        workers: 3,
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros],
+        record_every: 10,
+        ..Default::default()
+    };
+    let churned = SimConfig { churn: vec![(1, 1_000_000)], ..Default::default() };
+    let err = sim::run(&obj, &TernaryCodec, "sim", &cfg, &churned).unwrap_err();
+    assert!(
+        err.to_string().contains("simulated deadlock"),
+        "the leader must diagnose the stuck barrier, got: {err}"
+    );
+}
+
+/// Model validation on the fabric: under `round_sync` (barrier departures),
+/// R rounds of the real protocol cost exactly R times the `LinkModel`
+/// closed form — `round_time` for the full barrier, `quorum_round_time`
+/// for k-of-M — up to integer-nanosecond rounding plus the Stop/Bye
+/// shutdown tail. Frame sizes are taken from the run's own wire ledger, so
+/// the check holds whatever the codec emits.
+#[test]
+fn round_sync_virtual_time_matches_the_closed_forms() {
+    let obj = logreg();
+    let sim_cfg = SimConfig { round_sync: true, ..Default::default() };
+    let model = sim_cfg.link_model();
+    let (m, rounds) = (4usize, 10usize);
+    let lat_ns = sim_cfg.latency_ns as f64;
+    // Per-frame sizes from the measured ledger: uplink = R*M Grad frames
+    // plus M 11-byte Byes; downlink = R*M Aggregate frames plus M 11-byte
+    // Stops. Exact division proves the frames really are constant-size.
+    let frame_sizes = |tr: &tng::coordinator::Trace| -> (usize, usize) {
+        let per_dir = (rounds * m) as u64;
+        let up = tr.total_wire_up_bytes - 11 * m as u64;
+        let down = tr.total_wire_down_bytes - 11 * m as u64;
+        assert_eq!(up % per_dir, 0, "constant-size Grad frames");
+        assert_eq!(down % per_dir, 0, "constant-size Aggregate frames");
+        ((up / per_dir) as usize, (down / per_dir) as usize)
+    };
+
+    // Full barrier: R * round_time.
+    let cfg = DriverConfig {
+        rounds,
+        workers: m,
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros],
+        record_every: 5,
+        ..Default::default()
+    };
+    let (tr, rep) = sim::run(&obj, &TernaryCodec, "sim", &cfg, &sim_cfg).unwrap();
+    let (g, d) = frame_sizes(&tr);
+    let expect = rounds as f64 * model.round_time(&vec![g; m], d) * 1e9;
+    let v = rep.virtual_ns as f64;
+    // Shutdown tail: M Stop broadcasts + the Byes pipelined behind them,
+    // each an 11-byte frame slot.
+    let slack = (m + 2) as f64 * (lat_ns + 1_000.0);
+    assert!(
+        v >= expect * (1.0 - 1e-9) && v <= expect + slack,
+        "full barrier: virtual {v} ns vs model {expect} ns (+{slack} shutdown)"
+    );
+
+    // k-of-M quorum: R * quorum_round_time, strictly below the barrier.
+    // (Valid in round_sync because the broadcast phase M*d dominates the
+    // straggler's leftover NIC occupancy (M-k)*u.)
+    let k = 3usize;
+    let qcfg = DriverConfig { quorum: Some(k), ..cfg };
+    let (qtr, qrep) = sim::run(&obj, &TernaryCodec, "sim", &qcfg, &sim_cfg).unwrap();
+    let (qg, qd) = frame_sizes(&qtr);
+    assert_eq!((qg, qd), (g, d), "quorum must not change the frames");
+    let qexpect = rounds as f64 * model.quorum_round_time(&vec![g; m], k, d) * 1e9;
+    let qv = qrep.virtual_ns as f64;
+    // The drain also swallows the last round's M-k straggler Grad frames.
+    let qslack = (2 * m + 3) as f64 * (lat_ns + 1_000.0);
+    assert!(
+        qv >= qexpect * (1.0 - 1e-9) && qv <= qexpect + qslack,
+        "quorum: virtual {qv} ns vs model {qexpect} ns (+{qslack} shutdown)"
+    );
+    assert!(qv < v, "the quorum round must be faster than the barrier");
+    // Under barrier departures the straggler set is the highest worker ids,
+    // every round: the deterministic late/skipped ledger.
+    assert_eq!(qtr.total_late_frames, (rounds as u64 - 1) * (m - k) as u64);
+    assert_eq!(qtr.total_skipped_frames, (m - k) as u64);
+}
+
+/// Model validation on the scenario engine: flat, quorum, and two-level
+/// tree rounds each land on their closed form within 1e-4 relative error
+/// (the slack is integer-nanosecond rounding of per-frame times).
+#[test]
+fn scenario_engine_matches_the_link_model_closed_forms() {
+    let model = LinkModel::default();
+    let frame = 262_144usize;
+    let close = |got: u64, want_s: f64, what: &str| {
+        let want = want_s * 1e9;
+        let rel = (got as f64 - want).abs() / want;
+        assert!(rel < 1e-4, "{what}: sim {got} ns vs model {want} ns (rel {rel:.2e})");
+    };
+    let m = 32usize;
+    let mut flat = RoundScenario::new(ScenarioConfig { workers: m, ..Default::default() });
+    close(flat.round(), model.round_time(&vec![frame; m], frame), "flat");
+
+    let k = 20usize;
+    let mut q =
+        RoundScenario::new(ScenarioConfig { workers: m, quorum: k, ..Default::default() });
+    close(q.round(), model.quorum_round_time(&vec![frame; m], k, frame), "quorum");
+
+    let mut tree =
+        RoundScenario::new(ScenarioConfig { workers: m, groups: 2, ..Default::default() });
+    let group_sizes: Vec<Vec<usize>> = vec![vec![frame; 16], vec![frame; 16]];
+    close(
+        tree.round(),
+        model.tree_round_time(&group_sizes, &[frame; 2], m, frame),
+        "tree",
+    );
+}
+
+/// The acceptance scale: a 10,000-worker simulated round — with jitter and
+/// loss live — runs in milliseconds of wall time and is bit-reproducible
+/// from its seed (round times, starvation counter, per-hop ledger digest).
+#[test]
+fn ten_thousand_worker_scenario_is_fast_and_bit_reproducible() {
+    let cfg = ScenarioConfig {
+        workers: 10_000,
+        groups: 64,
+        jitter_ns: 20_000,
+        loss: 0.01,
+        seed: 11,
+        ..Default::default()
+    };
+    let mut a = RoundScenario::new(cfg.clone());
+    let mut b = RoundScenario::new(cfg);
+    for r in 0..5 {
+        assert_eq!(a.round(), b.round(), "round {r} must be bit-identical");
+    }
+    assert_eq!(a.now(), b.now());
+    assert_eq!(a.tracer().digest(), b.tracer().digest());
+    assert!(a.tracer().lost_frames() > 0, "1% loss over 50k leaf frames must fire");
+    assert_eq!(a.rounds(), 5);
+}

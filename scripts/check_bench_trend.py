@@ -19,6 +19,11 @@ committed still tells the story each PR's subsystem claims:
   it is bit-identical to, and the fused normalize→reduce→quantize TNG path
   must hold a >=4x encode-throughput win over the historical three-pass
   scalar path at dim 2^24.
+* BENCH_PR8 — simulated rounds at scale: the scenario engine's virtual
+  round time must agree with the `LinkModel` closed form (ratio pinned
+  near 1.0), the two-level tree must beat the flat star at the same scale,
+  virtual time must grow with the worker count, and evaluating a simulated
+  round must stay cheap in wall-clock terms.
 
 Exit status 0 = all invariants hold; 1 = a regression (or malformed file),
 with one line per failure.
@@ -123,6 +128,35 @@ def main():
         fused = pr7["tng-ternary-fused-2^24"]["speedup"]
         check(fused >= 4.0,
               f"fused TNG encode >= 4x the three-pass scalar path at 2^24 (got {fused})")
+
+    print("BENCH_PR8.json (simulated rounds at scale)")
+    pr8 = load(root, "BENCH_PR8.json",
+               ["flat-1k", "flat-10k", "groups64-1k", "groups64-10k"])
+    if pr8:
+        for name, cfg in pr8.items():
+            sim, model = cfg["sim_ms_per_round"], cfg["model_ms_per_round"]
+            wall = cfg["wall_us_per_round"]
+            check(sim > 0 and model > 0, f"{name}: positive round times ({sim}, {model})")
+            check(0.9 < cfg["ratio"] < 1.1,
+                  f"{name}: simulation agrees with the closed form "
+                  f"(ratio {cfg['ratio']})")
+            check(abs(cfg["ratio"] - sim / model) < 0.02,
+                  f"{name}: ratio consistent with timings "
+                  f"({cfg['ratio']} vs {sim}/{model}={sim / model:.6f})")
+            check(wall > 0, f"{name}: positive wall time ({wall} us)")
+            # The point of the engine: a simulated round is ~6 orders of
+            # magnitude cheaper to *evaluate* than to *experience*.
+            check(wall < 1e5,
+                  f"{name}: one simulated round evaluates in < 0.1 s wall "
+                  f"(got {wall} us)")
+        check(pr8["flat-10k"]["sim_ms_per_round"] > pr8["flat-1k"]["sim_ms_per_round"],
+              "virtual round time grows with the worker count (flat)")
+        check(pr8["groups64-10k"]["sim_ms_per_round"]
+              > pr8["groups64-1k"]["sim_ms_per_round"],
+              "virtual round time grows with the worker count (tree)")
+        check(pr8["groups64-10k"]["sim_ms_per_round"]
+              < pr8["flat-10k"]["sim_ms_per_round"],
+              "at 10k workers the two-level tree beats the flat star")
 
     if FAILURES:
         print(f"\n{len(FAILURES)} bench-trend failure(s)")
