@@ -296,4 +296,64 @@ fn main() {
     json.push_str("}\n");
     std::fs::write("BENCH_PR8.json", &json).expect("write BENCH_PR8.json");
     println!("# wrote BENCH_PR8.json");
+
+    // --- Telemetry overhead (the PR-9 obs subsystem) ---------------------
+    // The same 50-round driver workload under obs=off / spans / full. The
+    // contract: with obs=off every span site costs one relaxed atomic
+    // load, spans-mode overhead stays under 2% of the off baseline, and
+    // the param digest is identical in every mode (telemetry observes,
+    // never perturbs). Emits BENCH_PR9.json, gated by check_bench_trend.py.
+    println!("\n# telemetry overhead: 50 driver rounds per obs mode (D=512, M=4, ternary)");
+    use tng::obs;
+    let obs_cfg = DriverConfig {
+        workers: 4,
+        rounds: 50,
+        schedule: StepSchedule::Const(0.25),
+        eval_loss: false,
+        record_every: 50,
+        ..Default::default()
+    };
+    obs::configure(obs::Mode::Off, None);
+    let off_digest = driver::run(&obj, &TernaryCodec, "obs-off", &obs_cfg).param_digest();
+    let mut json = String::from("{\n");
+    let obs_modes: [(&str, obs::Mode); 3] = [
+        ("obs-off", obs::Mode::Off),
+        ("obs-spans", obs::Mode::Spans),
+        ("obs-full", obs::Mode::Full),
+    ];
+    let mut off_ms = 0.0f64;
+    let n_configs = obs_modes.len();
+    for (i, (label, mode)) in obs_modes.into_iter().enumerate() {
+        obs::configure(mode, None);
+        let r = bench(&format!("driver50/{label}/M4"), BUDGET, || {
+            black_box(driver::run(&obj, &TernaryCodec, label, &obs_cfg))
+        });
+        let wall_ms = r.mean.as_secs_f64() * 1e3 / obs_cfg.rounds as f64;
+        // One fresh capture for the span count and the invariance check
+        // (configure resets the sink the bench iterations filled).
+        obs::configure(mode, None);
+        let digest = driver::run(&obj, &TernaryCodec, label, &obs_cfg).param_digest();
+        let cap = obs::take_capture();
+        let spans = cap.spans.len() as u64 + cap.dropped;
+        if mode == obs::Mode::Off {
+            off_ms = wall_ms;
+        }
+        let vs_off = if off_ms > 0.0 { wall_ms / off_ms } else { 1.0 };
+        let overhead_pct = (vs_off - 1.0) * 100.0;
+        let matches = digest == off_digest;
+        println!(
+            "  {label:<10} wall_ms/round {wall_ms:8.4}   vs off {vs_off:6.4}x \
+             ({overhead_pct:+5.2}%)   spans/run {spans:5}   digest==off {matches}"
+        );
+        json.push_str(&format!(
+            "  \"{label}\": {{\"wall_ms_per_round\": {wall_ms:.4}, \"vs_off\": {vs_off:.4}, \
+             \"overhead_pct\": {overhead_pct:.2}, \"spans_per_run\": {spans}, \
+             \"digest_matches_off\": {matches}}}{}\n",
+            if i + 1 < n_configs { "," } else { "" }
+        ));
+    }
+    json.push_str("}\n");
+    std::fs::write("BENCH_PR9.json", &json).expect("write BENCH_PR9.json");
+    println!("# wrote BENCH_PR9.json");
+    obs::configure(obs::Mode::Off, None);
 }

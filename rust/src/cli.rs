@@ -11,6 +11,7 @@
 //! tng sim  sim_lat=0.1 sim_loss=0.01 [...]    simulated-network cluster run
 //! tng leader addr=H:P workers=N [...]         TCP leader for N processes
 //! tng worker addr=H:P id=K [...]              TCP worker process K
+//! tng report trace.jsonl                      summarize an exported trace
 //! tng info                                    artifact + platform info
 //! ```
 
@@ -46,6 +47,8 @@ COMMANDS:
             sockets, run the rounds, print the trace summary + param digest
     worker  TCP cluster worker: connect addr=, identify as id=K; every
             config key must mirror the leader's (see EXPERIMENTS.md §Cluster)
+    report  Summarize an exported telemetry trace: per-phase span table,
+            poll-loop counters, histograms (tng report <trace.jsonl>)
     info    Show PJRT platform + loaded artifacts
     help    Show this help
 
@@ -86,6 +89,13 @@ RUN/LEADER/WORKER OPTIONS (the figure harnesses use their own method grid):
                         shard gradients — the §Regimes TNG-winning regime)
     ref_score=cnz       reference search scoring: cnz (fast ratio) | bytes
                         (measured encoded frame size per candidate)
+    obs=off             round-lifecycle telemetry: spans (phase spans only)
+                        | full (spans + counters + histograms). Never
+                        perturbs the math: param digests and wire ledgers
+                        are identical under any obs mode
+    trace_out=PATH      export the captured telemetry on completion:
+                        PATH.jsonl (tng report) and PATH.json
+                        (chrome://tracing); extensionless paths get both
 
 SIM OPTIONS (tng sim; see EXPERIMENTS.md Simulation section):
     sim_lat=0.1         one-way per-frame link latency, ms
@@ -110,15 +120,24 @@ pub fn parse<S: AsRef<str>>(args: &[S]) -> Result<Cli> {
     };
     let command = command.as_ref().to_string();
     match command.as_str() {
-        "fig1" | "fig2" | "fig3" | "fig4" | "run" | "sim" | "leader" | "worker" | "info"
-        | "help" => {}
+        "fig1" | "fig2" | "fig3" | "fig4" | "run" | "sim" | "leader" | "worker" | "report"
+        | "info" | "help" => {}
         other => bail!("unknown command '{other}'\n\n{USAGE}"),
     }
     let rest: Vec<&str> = args[1..].iter().map(|s| s.as_ref()).collect();
     if rest.first() == Some(&"help") {
         return Ok(Cli { command: "help-cmd".into(), opts: Settings::from_args(&[format!("cmd={command}")])? });
     }
-    let opts = Settings::from_args(&rest)?;
+    // `tng report <trace.jsonl>`: the bare positional is sugar for file=.
+    let opts = if command == "report" {
+        let mapped: Vec<String> = rest
+            .iter()
+            .map(|a| if a.contains('=') { a.to_string() } else { format!("file={a}") })
+            .collect();
+        Settings::from_args(&mapped)?
+    } else {
+        Settings::from_args(&rest)?
+    };
     Ok(Cli { command, opts })
 }
 
@@ -149,6 +168,16 @@ mod tests {
         let c = parse(&["sim", "sim_lat=0.2", "sim_loss=0.01", "quorum=3"]).unwrap();
         assert_eq!(c.command, "sim");
         assert_eq!(c.opts.f64_or("sim_lat", 0.0).unwrap(), 0.2);
+    }
+
+    #[test]
+    fn report_positional_arg_maps_to_file() {
+        let c = parse(&["report", "/tmp/trace.jsonl"]).unwrap();
+        assert_eq!(c.command, "report");
+        assert_eq!(c.opts.str_or("file", ""), "/tmp/trace.jsonl");
+        // Explicit key=value still works (and mixes with positionals).
+        let c = parse(&["report", "file=t.jsonl"]).unwrap();
+        assert_eq!(c.opts.str_or("file", ""), "t.jsonl");
     }
 
     #[test]

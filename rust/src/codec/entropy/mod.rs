@@ -376,7 +376,11 @@ impl<C: Codec> Codec for EntropyCodec<C> {
         // compress, so 2x the raw frame plus slack is far above any stream
         // the coder emits for codec-produced payloads.
         coded.reserve(2 * super::wire::frame_len(inner) + 64);
+        let mut sp = crate::obs::span(crate::obs::Phase::EntropyEncode);
         encode_frame(inner, coded);
+        if sp.active() {
+            sp.set_bytes(coded.len() as u64);
+        }
     }
 
     fn is_unbiased(&self) -> bool {

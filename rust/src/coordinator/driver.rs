@@ -26,6 +26,7 @@ use crate::coordinator::protocol::{CAGG_OVERHEAD_BYTES, MSG_HEADER_BYTES};
 use crate::downlink::{DownlinkCompressor, DownlinkSpec};
 use crate::link::{late_fold_scale, LinkSender, TreeAggregator, TreeTopology};
 use crate::objectives::Objective;
+use crate::obs;
 use crate::optim::{EstimatorKind, GradEstimator, Lbfgs, StepSchedule};
 use crate::tng::{
     CnzEstimator, CnzSelector, Normalization, RefScore, ReferenceKind, ReferenceManager,
@@ -161,6 +162,9 @@ impl Default for DriverConfig {
 
 pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConfig) -> Trace {
     let t_start = Instant::now();
+    // Telemetry: the driver mirrors every entity on one thread, so spans
+    // switch `set_entity` between the leader (0) and worker 1 + wk.
+    obs::install(None, 0);
     let dim = obj.dim();
     let m = cfg.workers;
     assert!(m >= 1);
@@ -284,6 +288,8 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
     }
 
     for t in 0..cfg.rounds {
+        obs::set_round(t as u32);
+        let _round_sp = obs::span(obs::Phase::Round);
         let eta = cfg.schedule.step(t);
 
         // ---- SVRG anchor refresh: one full-gradient synchronization ----
@@ -318,7 +324,11 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             tr.begin_round();
         }
         for wk in 0..m {
-            estimators[wk].grad(obj, &shards[wk], &w, &mut rngs[wk], &mut g);
+            obs::set_entity(1 + wk as u32);
+            {
+                let _sp = obs::span(obs::Phase::Grad);
+                estimators[wk].grad(obj, &shards[wk], &w, &mut rngs[wk], &mut g);
+            }
             let selector = &mut selectors[wk];
 
             // WorkerAnchor maintenance round: the worker transmits its
@@ -387,6 +397,8 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
             }
         }
 
+        obs::set_entity(0);
+
         // ---- group tier: re-encode each partial up its compressed link --
         if let Some(tr) = tree.as_mut() {
             wire_partial += tr.finish_round(&mut v_avg);
@@ -396,12 +408,15 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         // After the on-time 1/M contributions, in worker-id order, at the
         // damped weight — the exact fold order the transport leaders apply,
         // which is what keeps quorum runs digest-identical across runtimes.
+        let late_sp = obs::span(obs::Phase::Fold);
         for slot in pending.iter_mut() {
             if let Some(d) = slot.take() {
                 math::axpy(late_fold_scale(m), &d, &mut v_avg);
                 late_total += 1;
+                obs::counter(obs::Counter::LateFrames, 1);
             }
         }
+        drop(late_sp);
         std::mem::swap(&mut pending, &mut pending_next);
 
         // ---- leader: compress the downlink broadcast (optional) ----------
@@ -421,6 +436,7 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         };
 
         // ---- leader: precondition + step --------------------------------
+        let step_sp = obs::span(obs::Phase::Step);
         w_prev.copy_from_slice(&w);
         if let Some(l) = lbfgs.as_mut() {
             l.observe(&w, v_step);
@@ -429,6 +445,7 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
         } else {
             math::axpy(-eta, v_step, &mut w);
         }
+        drop(step_sp);
 
         // ---- advance shared reference state ------------------------------
         let ctx = RoundCtx {
@@ -479,13 +496,18 @@ pub fn run(obj: &dyn Objective, codec: &dyn Codec, label: &str, cfg: &DriverConf
     // Late frames still buffered when the run ends never fold into any
     // aggregate: count them skipped, exactly as the transport leaders count
     // frames drained after Stop.
-    skipped_total += pending.iter().filter(|p| p.is_some()).count() as u64;
-    skipped_total += pending_next.iter().filter(|p| p.is_some()).count() as u64;
+    let leftover = pending.iter().filter(|p| p.is_some()).count() as u64
+        + pending_next.iter().filter(|p| p.is_some()).count() as u64;
+    skipped_total += leftover;
+    if leftover > 0 {
+        obs::counter(obs::Counter::SkippedFrames, leftover);
+    }
 
     // Shutdown handshake mirror: Stop to each worker, one Bye back each.
     wire_down += m as u64 * hdr;
     wire_up += m as u64 * hdr;
 
+    obs::flush();
     Trace {
         label: label.to_string(),
         records,

@@ -61,6 +61,7 @@ use crate::coordinator::protocol::Msg;
 use crate::downlink::{DownlinkCompressor, DownlinkDecoder};
 use crate::link::{late_fold_scale, LinkSender, TreeAggregator};
 use crate::objectives::Objective;
+use crate::obs;
 use crate::optim::{GradEstimator, Lbfgs};
 use crate::tng::{CnzSelector, ReferenceKind, ReferenceManager, RoundCtx};
 use crate::transport::{channel_pair, LeaderTransport, WorkerTransport};
@@ -195,8 +196,21 @@ fn gather_quorum(
             (None, None) => unreachable!("gather_quorum requires a quorum config"),
         }
     };
+    let mut first_arrival = u64::MAX;
+    let mut last_arrival = 0u64;
     while !complete(slots, fold_now) {
-        let msg = Msg::from_bytes(&tp.recv_deadline(deadline)?)?;
+        let frame = {
+            let mut sp = obs::span(obs::Phase::Recv);
+            let f = tp.recv_deadline(deadline)?;
+            sp.set_bytes(f.len() as u64);
+            f
+        };
+        if obs::full() {
+            let now = obs::now_ns();
+            first_arrival = first_arrival.min(now);
+            last_arrival = last_arrival.max(now);
+        }
+        let msg = Msg::from_bytes(&frame)?;
         let Msg::Grad { worker, round, .. } = &msg else {
             bail!("leader: expected Grad, got {}", msg.kind_name());
         };
@@ -229,7 +243,14 @@ fn gather_quorum(
             fold_now[w] = Some(msg);
         } else {
             *skipped += 1;
+            obs::counter(obs::Counter::SkippedFrames, 1);
         }
+    }
+    if obs::full() && first_arrival != u64::MAX {
+        obs::observe(
+            obs::Hist::QuorumSpreadNs,
+            last_arrival.saturating_sub(first_arrival),
+        );
     }
     Ok(())
 }
@@ -247,6 +268,7 @@ fn apply_aggregate(
     lbfgs: &mut Option<Lbfgs>,
     selector: &mut CnzSelector,
 ) {
+    let _sp = obs::span(obs::Phase::Step);
     w_prev.copy_from_slice(w);
     if let Some(l) = lbfgs.as_mut() {
         l.observe(w.as_slice(), v);
@@ -277,6 +299,9 @@ fn worker_loop(
     tp: &mut dyn WorkerTransport,
 ) -> Result<()> {
     let dim = obj.dim();
+    // Telemetry: this thread records as entity 1 + id, stamped by the
+    // transport's clock (virtual on sim, wall elsewhere).
+    obs::install(tp.obs_clock(), 1 + id as u32);
     let mut rng = Rng::new(cfg.seed).split(1 + id as u64);
     let mut est = GradEstimator::new(cfg.estimator, cfg.batch, dim);
     // The worker's uplink sender (streaming link): normalizer + arena; the
@@ -293,6 +318,7 @@ fn worker_loop(
     let mut dl_dec = cfg.downlink.as_ref().map(|dl| DownlinkDecoder::new(dim, dl.ef));
 
     for t in 0..cfg.rounds {
+        obs::set_round(t as u32);
         // SVRG anchor synchronization.
         if est.anchor_due(t) && obj.n() > 0 {
             est.set_anchor(obj, &shard, &w);
@@ -306,7 +332,10 @@ fn worker_loop(
             }
         }
 
-        est.grad(obj, &shard, &w, &mut rng, &mut g);
+        {
+            let _sp = obs::span(obs::Phase::Grad);
+            est.grad(obj, &shard, &w, &mut rng, &mut g);
+        }
         // Shared scoring dispatch (same entry point as the driver, so the
         // runtimes cannot diverge on how the search is scored).
         let (ref_idx, _score, _sig) =
@@ -323,18 +352,29 @@ fn worker_loop(
         // ShardedCodec fans the shards out over threads here), then frame
         // the message straight from the borrowed Encoded.
         uplink.encode_against(&g, gref, &mut rng);
-        tp.send(Msg::grad_frame(
-            id as u16,
-            t as u32,
-            uplink.encoded(),
-            scalar,
-            ref_idx as u8,
-        ))?;
+        let frame = {
+            let mut sp = obs::span(obs::Phase::FrameBuild);
+            let f =
+                Msg::grad_frame(id as u16, t as u32, uplink.encoded(), scalar, ref_idx as u8);
+            sp.set_bytes(f.len() as u64);
+            f
+        };
+        {
+            let mut sp = obs::span(obs::Phase::Send);
+            sp.set_bytes(frame.len() as u64);
+            tp.send(frame)?;
+        }
 
         // Apply the round's aggregate (raw or compressed — whichever the
         // shared config promises; receiving the other kind is a config
         // mismatch) to the local replicas.
-        match Msg::from_bytes(&tp.recv()?)? {
+        let reply = {
+            let mut sp = obs::span(obs::Phase::Recv);
+            let f = tp.recv()?;
+            sp.set_bytes(f.len() as u64);
+            f
+        };
+        match Msg::from_bytes(&reply)? {
             Msg::Aggregate { v, eta, .. } => {
                 if dl_dec.is_some() {
                     bail!(
@@ -351,7 +391,10 @@ fn worker_loop(
                          codec is configured — config mismatch"
                     );
                 };
-                let vhat = dec.apply(&enc)?;
+                let vhat = {
+                    let _sp = obs::span(obs::Phase::Decode);
+                    dec.apply(&enc)?
+                };
                 apply_aggregate(t, vhat, eta, &mut w, &mut w_prev, &mut lbfgs, &mut selector);
             }
             Msg::Stop { round } => {
@@ -373,7 +416,9 @@ fn worker_loop(
         Msg::Stop { .. } => {}
         other => bail!("worker {id}: expected Stop, got {}", other.kind_name()),
     }
-    tp.send(Msg::Bye { worker: id as u16 }.to_bytes())
+    let res = tp.send(Msg::Bye { worker: id as u16 }.to_bytes());
+    obs::flush();
+    res
 }
 
 /// Leader body, returning the run trace.
@@ -386,6 +431,9 @@ fn leader_loop(
     tp: &mut dyn LeaderTransport,
 ) -> Result<Trace> {
     let t_start = Instant::now();
+    // Telemetry: the leader thread records as entity 0 on the transport's
+    // clock (virtual on sim, wall elsewhere).
+    obs::install(tp.obs_clock(), 0);
     let dim = obj.dim();
     let m = cfg.workers;
     // The leader's end of the worker uplinks (streaming link): decodes
@@ -427,6 +475,8 @@ fn leader_loop(
     let mut skipped_total: u64 = 0;
 
     for t in 0..cfg.rounds {
+        obs::set_round(t as u32);
+        let _round_sp = obs::span(obs::Phase::Round);
         // SVRG anchor fan-in/out.
         if svrg && est_probe.anchor_due(t) && total_n > 0 {
             // Buffer and fold in worker-id order: float addition is not
@@ -480,6 +530,8 @@ fn leader_loop(
         } else {
             (Vec::new(), Vec::new())
         };
+        let gather_sp = obs::span(obs::Phase::GatherWait);
+        let gather_t0 = obs::now_ns();
         if quorum_on {
             gather_quorum(
                 tp,
@@ -495,8 +547,21 @@ fn leader_loop(
             )?;
         } else {
             let mut seen = 0usize;
+            let mut first_arrival = u64::MAX;
+            let mut last_arrival = 0u64;
             while seen < m {
-                let msg = Msg::from_bytes(&tp.recv_deadline(deadline)?)?;
+                let frame = {
+                    let mut sp = obs::span(obs::Phase::Recv);
+                    let f = tp.recv_deadline(deadline)?;
+                    sp.set_bytes(f.len() as u64);
+                    f
+                };
+                if obs::full() {
+                    let now = obs::now_ns();
+                    first_arrival = first_arrival.min(now);
+                    last_arrival = last_arrival.max(now);
+                }
+                let msg = Msg::from_bytes(&frame)?;
                 if let Msg::Grad { worker, .. } = &msg {
                     let idx = *worker as usize;
                     if idx >= m {
@@ -511,12 +576,26 @@ fn leader_loop(
                     bail!("leader: expected Grad, got {}", msg.kind_name());
                 }
             }
+            if obs::full() && first_arrival != u64::MAX {
+                obs::observe(
+                    obs::Hist::QuorumSpreadNs,
+                    last_arrival.saturating_sub(first_arrival),
+                );
+            }
         }
+        if obs::full() {
+            obs::observe(
+                obs::Hist::GatherWaitNs,
+                obs::now_ns().saturating_sub(gather_t0),
+            );
+        }
+        drop(gather_sp);
         let eta = cfg.schedule.step(t);
         let mut v_avg = vec![0.0f32; dim];
         if let Some(tr) = tree.as_mut() {
             tr.begin_round();
         }
+        let fold_sp = obs::span(obs::Phase::Fold);
         for (wk, slot) in slots.into_iter().enumerate() {
             // Quorum mode leaves the slots of late/unarrived workers empty;
             // the full barrier fills every one.
@@ -545,9 +624,12 @@ fn leader_loop(
                 None => math::axpy(1.0 / m as f32, decoded, &mut v_avg),
             }
         }
+        drop(fold_sp);
 
         // Group tier: re-encode each group's partial up its compressed
         // link; the root's aggregate is the sum of the reconstructions.
+        // (`finish_round` records its own Fold span, tagged with the
+        // group-up partial bytes.)
         if let Some(tr) = tree.as_mut() {
             partial_wire += tr.finish_round(&mut v_avg);
         }
@@ -556,6 +638,7 @@ fn leader_loop(
         // contributions, in worker-id order, at the damped weight — the
         // identical order and scale the deterministic driver applies, which
         // is what keeps scripted quorum runs digest-identical.
+        let late_sp = obs::span(obs::Phase::Fold);
         for slot in fold_now {
             let Some(Msg::Grad { enc, scalar, ref_idx, .. }) = slot else { continue };
             if ref_idx as usize >= cfg.references.len() {
@@ -579,7 +662,9 @@ fn leader_loop(
             cnz.observe(decoded, gref);
             math::axpy(late_fold_scale(m), decoded, &mut v_avg);
             late_total += 1;
+            obs::counter(obs::Counter::LateFrames, 1);
         }
+        drop(late_sp);
 
         // Broadcast (compressed or raw), then apply the identical update
         // every worker applies. With downlink compression the leader steps
@@ -587,13 +672,26 @@ fn leader_loop(
         // replica matches the workers' bit for bit.
         if let Some(dl) = downlink.as_mut() {
             let (enc, vhat) = dl.compress(&v_avg);
-            let frame = Msg::compressed_aggregate_frame(t as u32, eta, enc);
+            let frame = {
+                let mut sp = obs::span(obs::Phase::FrameBuild);
+                let f = Msg::compressed_aggregate_frame(t as u32, eta, enc);
+                sp.set_bytes(f.len() as u64);
+                f
+            };
             v_avg.copy_from_slice(vhat);
+            let mut sp = obs::span(obs::Phase::Broadcast);
+            sp.set_bytes(frame.len() as u64 * m as u64);
             tp.broadcast(&frame)?;
         } else {
-            tp.broadcast(
-                &Msg::Aggregate { round: t as u32, v: v_avg.clone(), eta }.to_bytes(),
-            )?;
+            let frame = {
+                let mut sp = obs::span(obs::Phase::FrameBuild);
+                let f = Msg::Aggregate { round: t as u32, v: v_avg.clone(), eta }.to_bytes();
+                sp.set_bytes(f.len() as u64);
+                f
+            };
+            let mut sp = obs::span(obs::Phase::Broadcast);
+            sp.set_bytes(frame.len() as u64 * m as u64);
+            tp.broadcast(&frame)?;
         }
         apply_aggregate(t, &v_avg, eta, &mut w, &mut w_prev, &mut lbfgs, &mut selector);
 
@@ -658,13 +756,19 @@ fn leader_loop(
                 // is no round left to fold it into — drained and counted,
                 // never silently lost in the transport.
                 skipped_total += 1;
+                obs::counter(obs::Counter::SkippedFrames, 1);
             }
             other => bail!("leader: expected Bye, got {}", other.kind_name()),
         }
     }
     // Frames still held for a fold that will never happen are skipped too.
-    skipped_total += fold_next.iter().filter(|f| f.is_some()).count() as u64;
+    let leftover = fold_next.iter().filter(|f| f.is_some()).count() as u64;
+    skipped_total += leftover;
+    if leftover > 0 {
+        obs::counter(obs::Counter::SkippedFrames, leftover);
+    }
     let s = tp.stats();
+    obs::flush();
     Ok(Trace {
         label: label.to_string(),
         records,

@@ -23,6 +23,7 @@ use anyhow::{Context, Result};
 
 use crate::codec::{Codec, Encoded};
 use crate::link::LinkSender;
+use crate::obs;
 use crate::util::Rng;
 
 /// The downlink direction's spec — the shared link spec under its
@@ -75,7 +76,12 @@ impl DownlinkCompressor {
     /// reconstruction v̂ — see [`crate::link::LinkSender::compress`] for
     /// the recursion.
     pub fn compress(&mut self, v: &[f32]) -> (&Encoded, &[f32]) {
-        self.link.compress(v)
+        let mut sp = obs::span(obs::Phase::DownlinkCompress);
+        let (enc, vhat) = self.link.compress(v);
+        if sp.active() {
+            sp.set_bytes(crate::codec::wire::frame_len(enc) as u64);
+        }
+        (enc, vhat)
     }
 
     /// The current shared EF reference h (diagnostic).

@@ -31,7 +31,7 @@ pub use crate::codec::spec::make_codec;
 /// Keys (all `key=value`): `n dim csk cth seed lambda codec tng ref_window
 /// ref_score workers rounds batch eta estimator anchor_every memory
 /// record_every eval opt opt_iters down down_ef groups up up_ef quorum late
-/// late_period`. The `tng sim` subcommand layers the network-model keys
+/// late_period obs trace_out`. The `tng sim` subcommand layers the network-model keys
 /// parsed by [`sim_setup`] (`sim_lat sim_gbps sim_down_gbps sim_jitter
 /// sim_loss sim_seed sim_churn sim_timeout sim_sync`) on top of this set.
 ///
@@ -75,6 +75,7 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
     };
     let codec_spec = s.str_or("codec", "ternary");
     let codec = make_codec(&codec_spec)?;
+    obs_setup(s)?;
     let use_tng = s.bool_or("tng", true)?;
     let anchor = s.usize_or("anchor_every", 64)?;
     let ref_score = match s.str_or("ref_score", "cnz").as_str() {
@@ -242,6 +243,33 @@ pub fn cluster_setup(s: &Settings) -> Result<(LogReg, Box<dyn Codec>, DriverConf
         cfg.workers
     );
     Ok((obj, codec, cfg, label))
+}
+
+/// Parse and install the telemetry keys: `obs=off|spans|full` +
+/// `trace_out=<path>`. Called from [`cluster_setup`] (so every runtime —
+/// driver, channel, TCP, sim — shares one config surface) and directly by
+/// the `tng sim scenario=true` harness, which bypasses `cluster_setup`.
+/// Telemetry never perturbs RNG streams or wire bytes; `param_digest` is
+/// invariant under any obs mode (pinned by `rust/tests/obs.rs`).
+pub fn obs_setup(s: &Settings) -> Result<()> {
+    let obs_mode = match s.raw("obs") {
+        None | Some("") => crate::obs::Mode::Off,
+        Some(v) => match crate::obs::Mode::parse(v) {
+            Some(m) => m,
+            None => bail!("obs must be 'off', 'spans', or 'full', got '{v}'"),
+        },
+    };
+    let trace_out = match s.raw("trace_out") {
+        None | Some("") => None,
+        Some(p) => {
+            if obs_mode == crate::obs::Mode::Off {
+                bail!("trace_out= requires obs=spans or obs=full");
+            }
+            Some(std::path::PathBuf::from(p))
+        }
+    };
+    crate::obs::configure(obs_mode, trace_out);
+    Ok(())
 }
 
 /// Parse the simulated-network model for one `tng sim` run. Keys (all
@@ -580,6 +608,32 @@ mod tests {
             let s = Settings::from_args(&bad).unwrap();
             assert!(cluster_setup(&s).is_err(), "{bad:?} must fail at setup");
         }
+    }
+
+    #[test]
+    fn cluster_setup_parses_obs_keys() {
+        // Defaults: telemetry off, no trace path.
+        let s = Settings::from_args(&["n=32", "dim=8"]).unwrap();
+        cluster_setup(&s).unwrap();
+        assert_eq!(crate::obs::mode(), crate::obs::Mode::Off);
+        assert!(crate::obs::trace_out().is_none());
+        // obs=full + trace_out installs both.
+        let s =
+            Settings::from_args(&["n=32", "dim=8", "obs=full", "trace_out=/tmp/t"]).unwrap();
+        cluster_setup(&s).unwrap();
+        assert_eq!(crate::obs::mode(), crate::obs::Mode::Full);
+        assert_eq!(
+            crate::obs::trace_out(),
+            Some(std::path::PathBuf::from("/tmp/t"))
+        );
+        // Bad values fail at setup, not mid-run.
+        let s = Settings::from_args(&["n=32", "dim=8", "obs=wat"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
+        // trace_out without telemetry is a config error, not a silent no-op.
+        let s = Settings::from_args(&["n=32", "dim=8", "trace_out=/tmp/t"]).unwrap();
+        assert!(cluster_setup(&s).is_err());
+        // Leave the process-wide mode off for every other test.
+        crate::obs::configure(crate::obs::Mode::Off, None);
     }
 
     #[test]

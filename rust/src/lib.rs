@@ -49,6 +49,7 @@ pub mod downlink;
 pub mod experiments;
 pub mod link;
 pub mod objectives;
+pub mod obs;
 pub mod optim;
 #[cfg(feature = "xla")]
 pub mod runtime;

@@ -10,7 +10,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::codec::{Codec, CodecScratch, Encoded};
+use crate::codec::{wire, Codec, CodecScratch, Encoded};
+use crate::obs;
 use crate::tng::{CnzSelector, Normalization, RefScore, Tng};
 use crate::util::Rng;
 
@@ -154,7 +155,11 @@ impl<C: Codec> LinkSender<C> {
     /// hot path). The result stays borrowed in the arena — frame it via
     /// [`LinkSender::encoded`] without cloning.
     pub fn encode_against(&mut self, v: &[f32], gref: &[f32], rng: &mut Rng) -> &Encoded {
+        let mut sp = obs::span(obs::Phase::Encode);
         self.tng.encode_into(v, gref, rng, &mut self.scratch);
+        if sp.active() {
+            sp.set_bytes(wire::frame_len(&self.scratch.enc) as u64);
+        }
         &self.scratch.enc
     }
 
@@ -167,6 +172,10 @@ impl<C: Codec> LinkSender<C> {
     /// Decode a received payload against an external reference into the
     /// link's arena (the leader-side uplink fold).
     pub fn decode_against(&mut self, enc: &Encoded, gref: &[f32]) -> &[f32] {
+        let mut sp = obs::span(obs::Phase::Decode);
+        if sp.active() {
+            sp.set_bytes(wire::frame_len(enc) as u64);
+        }
         self.tng.decode_into(enc, gref, &mut self.scratch.decoded);
         &self.scratch.decoded
     }
@@ -174,7 +183,11 @@ impl<C: Codec> LinkSender<C> {
     /// Decode the arena's own last-encoded payload against `gref` — the
     /// deterministic driver's fold, which never serializes the frame.
     pub fn decode_own(&mut self, gref: &[f32]) -> &[f32] {
+        let mut sp = obs::span(obs::Phase::Decode);
         let CodecScratch { enc, decoded, .. } = &mut self.scratch;
+        if sp.active() {
+            sp.set_bytes(wire::frame_len(enc) as u64);
+        }
         self.tng.decode_into(enc, gref, decoded);
         decoded
     }
@@ -190,6 +203,7 @@ impl<C: Codec> LinkSender<C> {
         g: &[f32],
         rng: &Rng,
     ) -> (usize, f64, usize) {
+        let _sp = obs::span(obs::Phase::RefSearch);
         selector.select_scored(score, g, &self.tng, rng, &mut self.scratch)
     }
 

@@ -145,6 +145,7 @@ impl TreeAggregator {
     /// `v_avg`, and charge the exact `Msg::PartialAggregate` frame bytes
     /// to the group-up ledger. Returns this round's group-up bytes.
     pub fn finish_round(&mut self, v_avg: &mut [f32]) -> u64 {
+        let mut sp = crate::obs::span(crate::obs::Phase::Fold);
         let TreeAggregator { links, partials, .. } = self;
         let mut bytes = 0u64;
         for (link, partial) in links.iter_mut().zip(partials.iter()) {
@@ -157,6 +158,9 @@ impl TreeAggregator {
             }
         }
         self.wire_bytes += bytes;
+        if sp.active() {
+            sp.set_bytes(bytes);
+        }
         bytes
     }
 

@@ -44,6 +44,10 @@ fn main() -> Result<()> {
         "sim" => sim_run(&parsed.opts)?,
         "leader" => tcp_leader(&parsed.opts)?,
         "worker" => tcp_worker(&parsed.opts)?,
+        "report" => {
+            let file = parsed.opts.require("file")?;
+            tng::obs::report::run(std::path::Path::new(file))?;
+        }
         other => unreachable!("cli::parse admitted '{other}'"),
     }
     Ok(())
@@ -95,6 +99,18 @@ fn print_records(tr: &tng::coordinator::metrics::Trace) {
     }
 }
 
+/// Write the captured telemetry to `trace_out=` (no-op unless configured)
+/// and announce each file written.
+fn export_trace() -> Result<()> {
+    // Drain this thread's recorder (the run loops flush their own threads;
+    // the scenario engine records on the main thread and relies on this).
+    tng::obs::flush();
+    for p in tng::obs::export::export_if_configured()? {
+        println!("trace written: {}", p.display());
+    }
+    Ok(())
+}
+
 /// `tng sim`: one cluster over the simulated network — the exact
 /// leader/worker protocol on a virtual clock (`transport::sim`), with
 /// latency/bandwidth/jitter/loss/churn from the `sim_*` keys. With
@@ -120,14 +136,17 @@ fn sim_run(s: &Settings) -> Result<()> {
         wall.elapsed(),
     );
     println!(
-        "late={} skipped={} lost_frames={} ledger_digest={:016x} param_digest={:016x}",
+        "late={} skipped={} lost_frames={} wall_ms={:.1} virt_ms={:.3} \
+         ledger_digest={:016x} param_digest={:016x}",
         tr.total_late_frames,
         tr.total_skipped_frames,
         report.tracer.lost_frames(),
+        wall.elapsed().as_secs_f64() * 1e3,
+        report.virtual_ns as f64 / 1e6,
         report.tracer.digest(),
         tr.param_digest(),
     );
-    Ok(())
+    export_trace()
 }
 
 /// `tng sim scenario=true`: timing-only rounds at arbitrary scale. Takes the
@@ -165,6 +184,8 @@ fn sim_scenario(s: &Settings) -> Result<()> {
         ..Default::default()
     };
     let sim = common::sim_setup(s, &gate)?;
+    // The scenario path bypasses cluster_setup; accept the obs keys here.
+    common::obs_setup(s)?;
     let cfg = ScenarioConfig {
         workers,
         groups,
@@ -193,11 +214,12 @@ fn sim_scenario(s: &Settings) -> Result<()> {
         sc.tracer().lost_frames(),
     );
     println!(
-        "ledger_digest={:016x}  wall={:.1?}",
+        "ledger_digest={:016x}  wall_ms={:.1}  virt_ms={:.3}",
         sc.tracer().digest(),
-        wall.elapsed()
+        wall.elapsed().as_secs_f64() * 1e3,
+        sc.now() as f64 / 1e6,
     );
-    Ok(())
+    export_trace()
 }
 
 /// TCP cluster leader: bind, accept `workers=` connections (each worker
@@ -217,13 +239,17 @@ fn tcp_leader(s: &Settings) -> Result<()> {
     println!("{}", common::summarize(&tr));
     print_records(&tr);
     println!(
-        "wire up_bits={} down_bits={} ctrl_bytes={} param_digest={:016x}",
+        "wire up_bits={} down_bits={} ctrl_bytes={} wall_ms={:.1} param_digest={:016x}",
         tr.total_up_bits,
         tr.total_down_bits,
         tp.ctrl_bytes(),
+        tr.wall.as_secs_f64() * 1e3,
         tr.param_digest()
     );
-    Ok(())
+    // Telemetry export is leader-side: in a TCP cluster every process parses
+    // the same trace_out=, so only the leader writes (workers would clobber
+    // the same path with their own capture).
+    export_trace()
 }
 
 /// TCP cluster worker `id=K`: rebuild the identical objective/config from
@@ -266,5 +292,5 @@ fn custom_run(s: &Settings) -> Result<()> {
     let tr = driver::run(&obj, codec.as_ref(), &label, &cfg);
     println!("{}", common::summarize(&tr));
     print_records(&tr);
-    Ok(())
+    export_trace()
 }

@@ -1,0 +1,222 @@
+//! Deterministic trace exporters: a JSONL event log (the `tng report`
+//! input) and Chrome trace-event JSON (loads in chrome://tracing /
+//! Perfetto).
+//!
+//! Both formats are built with pure integer formatting — timestamps are
+//! emitted as exact nanosecond integers (JSONL) or `us.nnn` fixed-point
+//! strings (Chrome `ts`/`dur`), never floating-point — so a capture from a
+//! seeded sim run serializes to the **same bytes** on every invocation
+//! (pinned by `rust/tests/obs.rs` and validated structurally by
+//! `scripts/check_trace.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::recorder::{take_capture, trace_out, Capture, Counter, Hist, Phase};
+
+/// Microseconds with exactly three (nanosecond) decimals — the Chrome
+/// trace `ts`/`dur` unit, formatted deterministically.
+fn us_fixed(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+/// Serialize a capture as JSONL: one meta line, then spans (sorted), then
+/// non-zero counters in enum order, then non-empty histograms (sparse
+/// `[bucket, count]` pairs).
+pub fn to_jsonl(cap: &Capture) -> String {
+    let mut out = String::with_capacity(96 * (cap.spans.len() + 8));
+    out.push_str(&format!(
+        "{{\"type\":\"meta\",\"version\":1,\"mode\":\"{}\",\"clock\":\"{}\",\"spans\":{},\"dropped\":{}}}\n",
+        cap.mode.name(),
+        cap.clock,
+        cap.spans.len(),
+        cap.dropped
+    ));
+    for e in &cap.spans {
+        out.push_str(&format!(
+            "{{\"type\":\"span\",\"phase\":\"{}\",\"entity\":{},\"round\":{},\"t_ns\":{},\"dur_ns\":{},\"bytes\":{},\"seq\":{}}}\n",
+            Phase::ALL[e.phase as usize].name(),
+            e.entity,
+            e.round,
+            e.t_ns,
+            e.dur_ns,
+            e.bytes,
+            e.seq
+        ));
+    }
+    for c in Counter::ALL {
+        let v = cap.counters[c as usize];
+        if v != 0 {
+            out.push_str(&format!(
+                "{{\"type\":\"counter\",\"name\":\"{}\",\"value\":{}}}\n",
+                c.name(),
+                v
+            ));
+        }
+    }
+    for h in Hist::ALL {
+        let buckets = &cap.hists[h as usize];
+        if buckets.iter().all(|&b| b == 0) {
+            continue;
+        }
+        let mut pairs = String::new();
+        for (k, &n) in buckets.iter().enumerate() {
+            if n != 0 {
+                if !pairs.is_empty() {
+                    pairs.push(',');
+                }
+                pairs.push_str(&format!("[{k},{n}]"));
+            }
+        }
+        out.push_str(&format!(
+            "{{\"type\":\"hist\",\"name\":\"{}\",\"buckets\":[{}]}}\n",
+            h.name(),
+            pairs
+        ));
+    }
+    out
+}
+
+/// Serialize a capture as Chrome trace-event JSON: complete (`"ph":"X"`)
+/// events per span (`pid` 0, `tid` = entity: 0 the leader, 1 + w worker
+/// w), then one counter (`"ph":"C"`) event per non-zero counter.
+pub fn to_chrome(cap: &Capture) -> String {
+    let mut out = String::with_capacity(160 * (cap.spans.len() + 8));
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for e in &cap.spans {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "\n{{\"name\":\"{}\",\"cat\":\"tng\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"round\":{},\"bytes\":{},\"seq\":{}}}}}",
+            Phase::ALL[e.phase as usize].name(),
+            us_fixed(e.t_ns),
+            us_fixed(e.dur_ns),
+            e.entity,
+            e.round,
+            e.bytes,
+            e.seq
+        ));
+    }
+    for c in Counter::ALL {
+        let v = cap.counters[c as usize];
+        if v != 0 {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n{{\"name\":\"{}\",\"cat\":\"tng\",\"ph\":\"C\",\"ts\":0,\"pid\":0,\"tid\":0,\"args\":{{\"value\":{}}}}}",
+                c.name(),
+                v
+            ));
+        }
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// Write a capture to `path`. A `.jsonl` suffix writes the JSONL log; a
+/// `.json` suffix writes Chrome trace JSON; any other path is treated as a
+/// stem and **both** `<path>.jsonl` and `<path>.json` are written. Returns
+/// the paths written.
+pub fn export(cap: &Capture, path: &Path) -> Result<Vec<PathBuf>> {
+    let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+    let mut written = Vec::new();
+    let mut write = |p: PathBuf, body: String| -> Result<()> {
+        std::fs::write(&p, body)
+            .with_context(|| format!("writing trace file {}", p.display()))?;
+        written.push(p);
+        Ok(())
+    };
+    match ext {
+        "jsonl" => write(path.to_path_buf(), to_jsonl(cap))?,
+        "json" => write(path.to_path_buf(), to_chrome(cap))?,
+        _ => {
+            let mut jl = path.as_os_str().to_os_string();
+            jl.push(".jsonl");
+            write(PathBuf::from(jl), to_jsonl(cap))?;
+            let mut cj = path.as_os_str().to_os_string();
+            cj.push(".json");
+            write(PathBuf::from(cj), to_chrome(cap))?;
+        }
+    }
+    Ok(written)
+}
+
+/// Take the current capture and export it to the configured `trace_out=`
+/// path, if one is set. Returns the written paths (empty when unset —
+/// the capture is only consumed when a path is configured, so harnesses
+/// can call this unconditionally after a run).
+pub fn export_if_configured() -> Result<Vec<PathBuf>> {
+    match trace_out() {
+        Some(path) => export(&take_capture(), &path),
+        None => Ok(Vec::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::recorder::{Mode, SpanEvent, N_COUNTERS, N_HISTS, HIST_BUCKETS};
+    use super::*;
+
+    fn cap() -> Capture {
+        let mut counters = [0u64; N_COUNTERS];
+        counters[Counter::FramesSent as usize] = 12;
+        let mut hists = [[0u64; HIST_BUCKETS]; N_HISTS];
+        hists[Hist::ReadyBatch as usize][2] = 5;
+        Capture {
+            spans: vec![
+                SpanEvent { t_ns: 0, dur_ns: 1500, bytes: 64, seq: 0, round: 0, entity: 0, phase: Phase::Round as u8 },
+                SpanEvent { t_ns: 100, dur_ns: 7, bytes: 0, seq: 1, round: 0, entity: 2, phase: Phase::Encode as u8 },
+            ],
+            counters,
+            hists,
+            dropped: 0,
+            mode: Mode::Full,
+            clock: "virtual",
+        }
+    }
+
+    #[test]
+    fn jsonl_is_deterministic_and_structured() {
+        let c = cap();
+        let a = to_jsonl(&c);
+        assert_eq!(a, to_jsonl(&c), "serialization must be deterministic");
+        let lines: Vec<&str> = a.lines().collect();
+        assert_eq!(lines.len(), 1 + 2 + 1 + 1, "meta + 2 spans + counter + hist");
+        assert!(lines[0].contains("\"type\":\"meta\"") && lines[0].contains("\"clock\":\"virtual\""));
+        assert!(lines[1].contains("\"phase\":\"round\"") && lines[1].contains("\"dur_ns\":1500"));
+        assert!(lines[3].contains("\"name\":\"frames_sent\"") && lines[3].contains("\"value\":12"));
+        assert!(lines[4].contains("\"buckets\":[[2,5]]"));
+    }
+
+    #[test]
+    fn chrome_ts_is_fixed_point_us() {
+        assert_eq!(us_fixed(0), "0.000");
+        assert_eq!(us_fixed(1500), "1.500");
+        assert_eq!(us_fixed(1_234_567), "1234.567");
+        let body = to_chrome(&cap());
+        assert_eq!(body, to_chrome(&cap()));
+        assert!(body.starts_with("{\"traceEvents\":["));
+        assert!(body.contains("\"ph\":\"X\""));
+        assert!(body.contains("\"ts\":0.000,\"dur\":1.500"));
+        assert!(body.contains("\"ph\":\"C\""));
+    }
+
+    #[test]
+    fn export_writes_both_formats_for_a_stem() {
+        let dir = std::env::temp_dir().join(format!("tng_obs_export_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let written = export(&cap(), &dir.join("trace")).unwrap();
+        assert_eq!(written.len(), 2);
+        assert!(written[0].to_string_lossy().ends_with("trace.jsonl"));
+        assert!(written[1].to_string_lossy().ends_with("trace.json"));
+        let only = export(&cap(), &dir.join("t.json")).unwrap();
+        assert_eq!(only.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,39 @@
+//! # Observability: round-lifecycle telemetry across all four runtimes
+//!
+//! A per-thread, zero-steady-state-allocation span/counter/histogram
+//! recorder ([`recorder`]) instrumenting the full round lifecycle —
+//! normalize+quantize, reference search, entropy coding, frame build,
+//! send/recv, the TCP poll loop's gather-wait, decode, fold, downlink
+//! compression, broadcast, step — in the deterministic driver, the channel
+//! threads, the TCP poll-loop leader, and the discrete-event simulation
+//! alike. See DESIGN.md §Observability for the layout, the clock
+//! abstraction, and the invariance contract.
+//!
+//! The three load-bearing properties:
+//!
+//! * **Invariance** — telemetry never draws from an RNG stream, never
+//!   writes a wire byte, never branches the protocol: `param_digest` and
+//!   all three wire ledgers are identical under `obs=off|spans|full`
+//!   (pinned by `rust/tests/obs.rs`). With `obs=off` every span site costs
+//!   one relaxed atomic load.
+//! * **Determinism** — on `transport/sim` each thread's spans are stamped
+//!   by a **virtual** clock (the owning entity's simulated ns), so a
+//!   seeded sim run exports byte-identical trace files on every
+//!   invocation.
+//! * **Zero steady-state allocation** — a warm recorder emits spans,
+//!   counters, and histogram observations without touching the heap
+//!   (pinned by `rust/tests/alloc.rs`).
+//!
+//! Configure with the `obs=off|spans|full` and `trace_out=<path>` config
+//! keys (parsed in `experiments::common::cluster_setup`); inspect exported
+//! JSONL logs with `tng report <trace.jsonl>` ([`report`]).
+
+pub mod export;
+pub mod recorder;
+pub mod report;
+
+pub use recorder::{
+    configure, counter, enabled, flush, full, install, mode, now_ns, observe, set_entity,
+    set_round, span, span_at, take_capture, trace_out, warm, Capture, Counter, Hist, Mode,
+    Phase, SpanEvent, SpanGuard, VirtualClock, N_COUNTERS, N_HISTS, N_PHASES, RING_CAP,
+};

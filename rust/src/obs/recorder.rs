@@ -1,0 +1,739 @@
+//! The per-thread telemetry recorder: fixed-capacity span ring, counter
+//! array, and log2-bucket histograms, all behind one relaxed atomic mode
+//! gate.
+//!
+//! # Zero-steady-state-allocation contract
+//!
+//! A **warm** recorder (its ring allocated, which happens lazily on the
+//! first enabled record) never touches the heap again: spans overwrite the
+//! ring in place (oldest-first once full, counted in `dropped`), counters
+//! and histograms are fixed arrays. `rust/tests/alloc.rs` pins this,
+//! including inside a 10k-worker simulated scenario round. With `obs=off`
+//! every instrumentation site costs exactly **one relaxed atomic load**
+//! ([`enabled`] / [`full`]) — the contract DESIGN.md §Observability states.
+//!
+//! # Determinism contract
+//!
+//! Telemetry is an observer: it never draws from an RNG stream, never
+//! writes a wire byte, and never branches the protocol. Param digests and
+//! all three wire ledgers are invariant under `obs=` (pinned by
+//! `rust/tests/obs.rs`). On the simulated transport every thread's clock is
+//! **virtual** (installed via [`install`] from
+//! `LeaderTransport::obs_clock`), and each entity's virtual clock is only
+//! advanced from its owning thread (the fabric's quiescence contract), so
+//! a seeded sim run's exported timeline is bit-reproducible.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Telemetry mode (`obs=` config key). `Spans` records the span ring only;
+/// `Full` adds counters and histograms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Mode {
+    Off = 0,
+    Spans = 1,
+    Full = 2,
+}
+
+impl Mode {
+    /// Parse an `obs=` value; `None` for anything unrecognized (the caller
+    /// turns that into a fail-at-the-CLI error).
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "off" => Some(Mode::Off),
+            "spans" => Some(Mode::Spans),
+            "full" => Some(Mode::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Off => "off",
+            Mode::Spans => "spans",
+            Mode::Full => "full",
+        }
+    }
+}
+
+/// One phase of the round lifecycle. The numeric value indexes the
+/// per-phase duration histograms and the report table; [`Phase::ALL`] is
+/// the canonical order every exporter emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    /// Worker gradient estimation (the local compute before any coding).
+    Grad = 0,
+    /// §3.1 reference-pool search (trial scoring over the candidate pool).
+    RefSearch = 1,
+    /// Normalize + quantize + wire-encode of one uplink frame
+    /// (`LinkSender::encode_against` — the TNG hot path).
+    Encode = 2,
+    /// The adaptive range coder alone (nested inside `Encode` for
+    /// `entropy:<inner>` codecs, and inside `RefSearch` trial encodes).
+    EntropyEncode = 3,
+    /// Building one `protocol::Msg` frame around an encoded payload.
+    FrameBuild = 4,
+    /// Transport send of one frame (worker uplink or leader `send_to`).
+    Send = 5,
+    /// Transport receive of one frame.
+    Recv = 6,
+    /// The leader's whole-gather wait: first `recv` call to quorum/barrier
+    /// close (wall wait on the real transports, virtual on sim).
+    GatherWait = 7,
+    /// Decoding one received payload against the reference.
+    Decode = 8,
+    /// Folding decoded contributions into the round aggregate (incl. the
+    /// tree tier's `finish_round` and the quorum late-frame fold).
+    Fold = 9,
+    /// Leader-side downlink compression of the aggregate.
+    DownlinkCompress = 10,
+    /// Leader broadcast of the aggregate to all workers.
+    Broadcast = 11,
+    /// Applying the reconstructed aggregate to the local replica.
+    Step = 12,
+    /// One whole synchronization round (leader-side envelope).
+    Round = 13,
+}
+
+pub const N_PHASES: usize = 14;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Grad,
+        Phase::RefSearch,
+        Phase::Encode,
+        Phase::EntropyEncode,
+        Phase::FrameBuild,
+        Phase::Send,
+        Phase::Recv,
+        Phase::GatherWait,
+        Phase::Decode,
+        Phase::Fold,
+        Phase::DownlinkCompress,
+        Phase::Broadcast,
+        Phase::Step,
+        Phase::Round,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Grad => "grad",
+            Phase::RefSearch => "ref_search",
+            Phase::Encode => "encode",
+            Phase::EntropyEncode => "entropy_encode",
+            Phase::FrameBuild => "frame_build",
+            Phase::Send => "send",
+            Phase::Recv => "recv",
+            Phase::GatherWait => "gather_wait",
+            Phase::Decode => "decode",
+            Phase::Fold => "fold",
+            Phase::DownlinkCompress => "downlink_compress",
+            Phase::Broadcast => "broadcast",
+            Phase::Step => "step",
+            Phase::Round => "round",
+        }
+    }
+}
+
+/// Monotonic event counters (`obs=full` only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Counter {
+    /// `poll(2)` wakeups in the TCP leader's readiness loop.
+    PollWakeups = 0,
+    /// Wakeups that returned no readable connection (deadline pacing).
+    PollTimeouts = 1,
+    FramesSent = 2,
+    FramesRecv = 3,
+    BytesSent = 4,
+    BytesRecv = 5,
+    /// Gradient frames that missed their round's quorum and were folded
+    /// one round late.
+    LateFrames = 6,
+    /// Gradient frames dropped as ≥ 2 rounds stale (or post-run).
+    SkippedFrames = 7,
+}
+
+pub const N_COUNTERS: usize = 8;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::PollWakeups,
+        Counter::PollTimeouts,
+        Counter::FramesSent,
+        Counter::FramesRecv,
+        Counter::BytesSent,
+        Counter::BytesRecv,
+        Counter::LateFrames,
+        Counter::SkippedFrames,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::PollWakeups => "poll_wakeups",
+            Counter::PollTimeouts => "poll_timeouts",
+            Counter::FramesSent => "frames_sent",
+            Counter::FramesRecv => "frames_recv",
+            Counter::BytesSent => "bytes_sent",
+            Counter::BytesRecv => "bytes_recv",
+            Counter::LateFrames => "late_frames",
+            Counter::SkippedFrames => "skipped_frames",
+        }
+    }
+}
+
+/// Log2-bucket histograms (`obs=full` only): bucket k counts values in
+/// `[2^(k-1), 2^k)` (bucket 0 counts zeros).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Hist {
+    /// Readable connections per TCP poll wakeup (readiness batch size).
+    ReadyBatch = 0,
+    /// Leader gather-wait per round, ns.
+    GatherWaitNs = 1,
+    /// Arrival-order spread of one gather (last − first arrival), ns.
+    QuorumSpreadNs = 2,
+}
+
+pub const N_HISTS: usize = 3;
+pub const HIST_BUCKETS: usize = 64;
+
+impl Hist {
+    pub const ALL: [Hist; N_HISTS] =
+        [Hist::ReadyBatch, Hist::GatherWaitNs, Hist::QuorumSpreadNs];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::ReadyBatch => "ready_batch",
+            Hist::GatherWaitNs => "gather_wait_ns",
+            Hist::QuorumSpreadNs => "quorum_spread_ns",
+        }
+    }
+}
+
+/// One recorded span. `seq` is the recording thread's monotone sequence
+/// number — the deterministic tie-break when sorting a capture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub t_ns: u64,
+    pub dur_ns: u64,
+    pub bytes: u64,
+    pub seq: u64,
+    pub round: u32,
+    pub entity: u32,
+    pub phase: u8,
+}
+
+/// A shared virtual-clock closure (ns). Installed per thread via
+/// [`install`]; the sim transports hand one out through
+/// `LeaderTransport::obs_clock` / `WorkerTransport::obs_clock`.
+pub type VirtualClock = Arc<dyn Fn() -> u64 + Send + Sync>;
+
+enum ClockSource {
+    /// Process-wide monotonic wall clock (ns since the shared epoch).
+    Wall,
+    Virtual(VirtualClock),
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+impl ClockSource {
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        match self {
+            ClockSource::Wall => EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64,
+            ClockSource::Virtual(f) => f(),
+        }
+    }
+}
+
+static MODE: AtomicU8 = AtomicU8::new(Mode::Off as u8);
+
+/// Is any telemetry mode on? One relaxed load — the whole cost of a span
+/// site under `obs=off`.
+#[inline]
+pub fn enabled() -> bool {
+    MODE.load(Ordering::Relaxed) != Mode::Off as u8
+}
+
+/// Are counters/histograms on (`obs=full`)?
+#[inline]
+pub fn full() -> bool {
+    MODE.load(Ordering::Relaxed) == Mode::Full as u8
+}
+
+/// The current mode.
+pub fn mode() -> Mode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => Mode::Spans,
+        2 => Mode::Full,
+        _ => Mode::Off,
+    }
+}
+
+/// Per-thread span ring capacity. ~16k spans ≈ 900 KiB per recording
+/// thread; overflow overwrites oldest-first and counts into `dropped`
+/// (deterministically, so digest-pinned sim exports stay reproducible).
+pub const RING_CAP: usize = 1 << 14;
+
+struct Recorder {
+    spans: Vec<SpanEvent>,
+    /// Oldest element once the ring is full (next overwrite position).
+    head: usize,
+    dropped: u64,
+    counters: [u64; N_COUNTERS],
+    hists: [[u64; HIST_BUCKETS]; N_HISTS],
+    seq: u64,
+    entity: u32,
+    round: u32,
+    clock: ClockSource,
+    is_virtual: bool,
+    warm: bool,
+    dirty: bool,
+}
+
+impl Recorder {
+    const fn new() -> Self {
+        Recorder {
+            spans: Vec::new(),
+            head: 0,
+            dropped: 0,
+            counters: [0; N_COUNTERS],
+            hists: [[0; HIST_BUCKETS]; N_HISTS],
+            seq: 0,
+            entity: 0,
+            round: 0,
+            clock: ClockSource::Wall,
+            is_virtual: false,
+            warm: false,
+            dirty: false,
+        }
+    }
+
+    /// Pre-allocate the ring (the one allocation a recording thread ever
+    /// makes; called lazily from the first enabled record, or eagerly by
+    /// [`warm`]).
+    fn warm(&mut self) {
+        if !self.warm {
+            self.spans.reserve(RING_CAP);
+            self.warm = true;
+        }
+    }
+
+    #[inline]
+    fn record(&mut self, phase: u8, t_ns: u64, dur_ns: u64, bytes: u64, entity: u32, round: u32) {
+        self.warm();
+        let ev = SpanEvent { t_ns, dur_ns, bytes, seq: self.seq, round, entity, phase };
+        self.seq += 1;
+        if self.spans.len() < RING_CAP {
+            self.spans.push(ev);
+        } else {
+            self.spans[self.head] = ev;
+            self.head = (self.head + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+        self.dirty = true;
+    }
+
+    /// Drain into the global sink in recording order and reset.
+    fn flush_into(&mut self, sink: &mut Sink) {
+        // Ring order: oldest first. head is 0 until the ring wraps.
+        sink.spans.extend_from_slice(&self.spans[self.head..]);
+        sink.spans.extend_from_slice(&self.spans[..self.head]);
+        for (s, c) in sink.counters.iter_mut().zip(&self.counters) {
+            *s += c;
+        }
+        for (sh, h) in sink.hists.iter_mut().zip(&self.hists) {
+            for (sb, b) in sh.iter_mut().zip(h) {
+                *sb += b;
+            }
+        }
+        sink.dropped += self.dropped;
+        if self.is_virtual {
+            sink.virtual_events = true;
+        } else {
+            sink.wall_events = true;
+        }
+        self.spans.clear();
+        self.head = 0;
+        self.dropped = 0;
+        self.counters = [0; N_COUNTERS];
+        self.hists = [[0; HIST_BUCKETS]; N_HISTS];
+        self.dirty = false;
+    }
+}
+
+thread_local! {
+    static REC: RefCell<Recorder> = const { RefCell::new(Recorder::new()) };
+}
+
+struct Sink {
+    spans: Vec<SpanEvent>,
+    counters: [u64; N_COUNTERS],
+    hists: [[u64; HIST_BUCKETS]; N_HISTS],
+    dropped: u64,
+    wall_events: bool,
+    virtual_events: bool,
+}
+
+impl Sink {
+    const fn new() -> Self {
+        Sink {
+            spans: Vec::new(),
+            counters: [0; N_COUNTERS],
+            hists: [[0; HIST_BUCKETS]; N_HISTS],
+            dropped: 0,
+            wall_events: false,
+            virtual_events: false,
+        }
+    }
+
+    fn reset(&mut self) {
+        *self = Sink::new();
+    }
+}
+
+static SINK: Mutex<Sink> = Mutex::new(Sink::new());
+static TRACE_OUT: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Set the process-wide mode and trace-output path, and reset the capture
+/// sink. Called by `cluster_setup` from the `obs=` / `trace_out=` keys and
+/// directly by tests.
+pub fn configure(mode: Mode, trace_out: Option<PathBuf>) {
+    MODE.store(mode as u8, Ordering::Relaxed);
+    *TRACE_OUT.lock().unwrap() = trace_out;
+    SINK.lock().unwrap().reset();
+}
+
+/// The configured `trace_out=` path, if any.
+pub fn trace_out() -> Option<PathBuf> {
+    TRACE_OUT.lock().unwrap().clone()
+}
+
+/// Install this thread's clock + entity id for the coming run. The
+/// transports hand out a virtual clock on sim (`obs_clock`), `None`
+/// everywhere else (wall clock). Entity ids follow the sim tracer's
+/// convention: 0 = leader, 1 + w = worker w.
+pub fn install(clock: Option<VirtualClock>, entity: u32) {
+    if !enabled() {
+        return;
+    }
+    REC.with(|r| {
+        let mut r = r.borrow_mut();
+        r.is_virtual = clock.is_some();
+        r.clock = match clock {
+            Some(f) => ClockSource::Virtual(f),
+            None => ClockSource::Wall,
+        };
+        r.entity = entity;
+    });
+}
+
+/// Pre-allocate this thread's ring outside the measured region (the alloc
+/// test calls this; production threads warm lazily on first record).
+pub fn warm() {
+    REC.with(|r| r.borrow_mut().warm());
+}
+
+/// Tag subsequent spans on this thread with round `t`.
+#[inline]
+pub fn set_round(t: u32) {
+    if !enabled() {
+        return;
+    }
+    REC.with(|r| r.borrow_mut().round = t);
+}
+
+/// Tag subsequent spans on this thread with entity `e` (the deterministic
+/// driver switches entities within its single thread).
+#[inline]
+pub fn set_entity(e: u32) {
+    if !enabled() {
+        return;
+    }
+    REC.with(|r| r.borrow_mut().entity = e);
+}
+
+/// The current reading of this thread's telemetry clock — virtual ns on a
+/// sim-installed thread, wall ns otherwise. Returns 0 when telemetry is
+/// off (callers only use the value under [`enabled`]/[`full`]).
+#[inline]
+pub fn now_ns() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    REC.with(|r| r.borrow().clock.now_ns())
+}
+
+/// RAII phase span: records `[creation, drop)` against the thread's clock.
+/// Inactive (a bool check on drop) when telemetry is off.
+pub struct SpanGuard {
+    phase: u8,
+    t0: u64,
+    bytes: u64,
+    active: bool,
+}
+
+/// Open a span for `phase`. Costs one relaxed atomic load when `obs=off`.
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { phase: phase as u8, t0: 0, bytes: 0, active: false };
+    }
+    let t0 = REC.with(|r| r.borrow().clock.now_ns());
+    SpanGuard { phase: phase as u8, t0, bytes: 0, active: true }
+}
+
+impl SpanGuard {
+    /// Is this span recording? (Gate for byte-size computations that are
+    /// only worth doing when the result will be kept.)
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    /// Attach a byte count (frame/payload size) to the span.
+    #[inline]
+    pub fn set_bytes(&mut self, n: u64) {
+        self.bytes = n;
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        REC.with(|r| {
+            let mut r = r.borrow_mut();
+            let t1 = r.clock.now_ns();
+            let (entity, round) = (r.entity, r.round);
+            r.record(self.phase, self.t0, t1.saturating_sub(self.t0), self.bytes, entity, round);
+        });
+    }
+}
+
+/// Record a span with explicit (virtual) timestamps — the scenario
+/// engine's entry point, which owns its own clock.
+#[inline]
+pub fn span_at(phase: Phase, entity: u32, round: u32, t_ns: u64, dur_ns: u64, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    REC.with(|r| r.borrow_mut().record(phase as u8, t_ns, dur_ns, bytes, entity, round));
+}
+
+/// Bump a counter by `delta` (`obs=full` only).
+#[inline]
+pub fn counter(c: Counter, delta: u64) {
+    if !full() {
+        return;
+    }
+    REC.with(|r| {
+        let mut r = r.borrow_mut();
+        r.warm();
+        r.counters[c as usize] += delta;
+        r.dirty = true;
+    });
+}
+
+/// Record one histogram observation (`obs=full` only).
+#[inline]
+pub fn observe(h: Hist, value: u64) {
+    if !full() {
+        return;
+    }
+    REC.with(|r| {
+        let mut r = r.borrow_mut();
+        r.warm();
+        let bucket = (u64::BITS - value.leading_zeros()).min(HIST_BUCKETS as u32 - 1) as usize;
+        r.hists[h as usize][bucket] += 1;
+        r.dirty = true;
+    });
+}
+
+/// Drain this thread's recorder into the process-wide sink. Allocates (the
+/// sink grows) — call at run end, never in the steady state. The run loops
+/// (`driver::run`, `parallel::run_leader` / `run_worker`) call it on exit.
+pub fn flush() {
+    REC.with(|r| {
+        let mut r = r.borrow_mut();
+        if !r.dirty {
+            return;
+        }
+        r.flush_into(&mut SINK.lock().unwrap());
+    });
+}
+
+/// Everything flushed since the last capture/configure, with spans sorted
+/// by `(t_ns, entity, seq)` — a deterministic total order on the sim
+/// transport (each entity's events are recorded by one thread in virtual-
+/// time order), which is what makes trace exports byte-reproducible.
+pub struct Capture {
+    pub spans: Vec<SpanEvent>,
+    pub counters: [u64; N_COUNTERS],
+    pub hists: [[u64; HIST_BUCKETS]; N_HISTS],
+    pub dropped: u64,
+    pub mode: Mode,
+    /// "wall" | "virtual" | "mixed" | "none" — which clock(s) stamped the
+    /// spans.
+    pub clock: &'static str,
+}
+
+/// Take the current capture, resetting the sink.
+pub fn take_capture() -> Capture {
+    let mut sink = SINK.lock().unwrap();
+    let mut spans = std::mem::take(&mut sink.spans);
+    spans.sort_by_key(|e| (e.t_ns, e.entity, e.seq));
+    let cap = Capture {
+        spans,
+        counters: sink.counters,
+        hists: sink.hists,
+        dropped: sink.dropped,
+        mode: mode(),
+        clock: match (sink.wall_events, sink.virtual_events) {
+            (true, true) => "mixed",
+            (false, true) => "virtual",
+            (true, false) => "wall",
+            (false, false) => "none",
+        },
+    };
+    sink.reset();
+    cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mode is process-global; every test here serializes on this lock and
+    /// restores `Off` before releasing it. While one of these tests holds
+    /// mode non-`Off`, *other* lib tests' run threads may legitimately
+    /// record and flush into the shared sink — so every assertion below
+    /// filters on entity ids no real runtime uses (runtimes use 0 for the
+    /// leader and 1 + w for worker w; these tests use 9_000_000+).
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    const E: u32 = 9_000_000; // magic entity base, disjoint from real ids
+
+    fn mine(cap: &Capture, entity: u32) -> Vec<SpanEvent> {
+        cap.spans.iter().copied().filter(|s| s.entity == entity).collect()
+    }
+
+    #[test]
+    fn off_mode_records_nothing_and_guard_is_inert() {
+        let _g = LOCK.lock().unwrap();
+        configure(Mode::Off, None);
+        {
+            let mut sp = span(Phase::Encode);
+            assert!(!sp.active());
+            sp.set_bytes(10);
+        }
+        counter(Counter::SkippedFrames, 3);
+        observe(Hist::QuorumSpreadNs, 4);
+        span_at(Phase::Round, E, 0, 0, 5, 0);
+        flush();
+        let cap = take_capture();
+        assert!(mine(&cap, E).is_empty(), "off mode must not record spans");
+        assert_eq!(cap.counters[Counter::SkippedFrames as usize], 0);
+    }
+
+    #[test]
+    fn spans_mode_skips_counters_and_hists() {
+        let _g = LOCK.lock().unwrap();
+        configure(Mode::Spans, None);
+        // SkippedFrames / QuorumSpreadNs are only touched by quorum gathers
+        // under obs=full — no concurrent lib test can bump them here.
+        counter(Counter::SkippedFrames, 3);
+        observe(Hist::QuorumSpreadNs, 4);
+        span_at(Phase::Round, E + 1, 7, 100, 5, 64);
+        flush();
+        let cap = take_capture();
+        let ours = mine(&cap, E + 1);
+        assert_eq!(ours.len(), 1);
+        assert_eq!(ours[0].round, 7);
+        assert_eq!(ours[0].bytes, 64);
+        assert_eq!(cap.counters[Counter::SkippedFrames as usize], 0);
+        assert_eq!(cap.hists[Hist::QuorumSpreadNs as usize], [0; HIST_BUCKETS]);
+        configure(Mode::Off, None);
+    }
+
+    #[test]
+    fn full_mode_counts_and_buckets() {
+        let _g = LOCK.lock().unwrap();
+        configure(Mode::Full, None);
+        counter(Counter::SkippedFrames, 3);
+        counter(Counter::SkippedFrames, 2);
+        observe(Hist::QuorumSpreadNs, 0); // bucket 0
+        observe(Hist::QuorumSpreadNs, 1); // bucket 1
+        observe(Hist::QuorumSpreadNs, 2); // bucket 2
+        observe(Hist::QuorumSpreadNs, 3); // bucket 2
+        observe(Hist::QuorumSpreadNs, u64::MAX); // clamped to the last bucket
+        flush();
+        let cap = take_capture();
+        assert_eq!(cap.counters[Counter::SkippedFrames as usize], 5);
+        let h = &cap.hists[Hist::QuorumSpreadNs as usize];
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[2], 2);
+        assert_eq!(h[HIST_BUCKETS - 1], 1);
+        configure(Mode::Off, None);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _g = LOCK.lock().unwrap();
+        configure(Mode::Spans, None);
+        for i in 0..(RING_CAP as u64 + 10) {
+            span_at(Phase::Encode, E + 2, 0, i, 1, 0);
+        }
+        flush();
+        let cap = take_capture();
+        let ours = mine(&cap, E + 2);
+        assert_eq!(ours.len(), RING_CAP);
+        assert!(cap.dropped >= 10);
+        // Oldest 10 were overwritten: the earliest surviving start is 10.
+        assert_eq!(ours.first().unwrap().t_ns, 10);
+        assert_eq!(ours.last().unwrap().t_ns, RING_CAP as u64 + 9);
+        configure(Mode::Off, None);
+    }
+
+    #[test]
+    fn virtual_clock_stamps_spans_and_capture_sorts() {
+        let _g = LOCK.lock().unwrap();
+        configure(Mode::Spans, None);
+        let t = Arc::new(std::sync::atomic::AtomicU64::new(100));
+        let tc = t.clone();
+        install(Some(Arc::new(move || tc.load(Ordering::Relaxed))), E + 3);
+        set_round(2);
+        {
+            let mut sp = span(Phase::GatherWait);
+            assert!(sp.active());
+            t.store(250, Ordering::Relaxed);
+            sp.set_bytes(8);
+        }
+        span_at(Phase::Send, E + 4, 2, 50, 5, 16); // earlier start: sorts first
+        flush();
+        let cap = take_capture();
+        // "mixed" tolerated: a concurrent lib test's wall-clock flush may
+        // land in the sink alongside our virtual events.
+        assert!(cap.clock == "virtual" || cap.clock == "mixed", "{}", cap.clock);
+        let ours: Vec<SpanEvent> =
+            cap.spans.iter().copied().filter(|s| s.entity >= E + 3).collect();
+        assert_eq!(ours.len(), 2);
+        assert_eq!(ours[0].t_ns, 50);
+        assert_eq!(ours[1].t_ns, 100);
+        assert_eq!(ours[1].dur_ns, 150);
+        assert_eq!(ours[1].entity, E + 3);
+        assert_eq!(ours[1].round, 2);
+        // Restore the wall clock for whatever runs next on this thread.
+        install(None, 0);
+        configure(Mode::Off, None);
+    }
+}

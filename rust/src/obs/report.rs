@@ -1,0 +1,199 @@
+//! `tng report <trace.jsonl>`: aggregate a JSONL event log into a
+//! per-phase time/bytes summary table (plus counters and histograms).
+//!
+//! The parser is a minimal extractor for the exact format
+//! [`super::export::to_jsonl`] emits (this repo has no JSON crate offline);
+//! unknown line types are skipped so the format can grow. Rendering is
+//! deterministic — `tng report` on the same file always prints the same
+//! bytes (round-tripped by `rust/tests/obs.rs`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Extract the raw text of `"key":<value>` from one JSONL object line
+/// (value ends at the next `,` or `}` — sufficient for the flat integer /
+/// string fields the exporter writes; not used for nested arrays).
+fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find(|c| c == ',' || c == '}')?;
+    Some(rest[..end].trim())
+}
+
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    field(line, key)?.parse().ok()
+}
+
+fn field_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    field(line, key)?.strip_prefix('"')?.strip_suffix('"')
+}
+
+#[derive(Default)]
+struct PhaseAgg {
+    count: u64,
+    total_ns: u64,
+    max_ns: u64,
+    bytes: u64,
+}
+
+/// Render the report for one JSONL trace file.
+pub fn render(path: &Path) -> Result<String> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    let mut meta: Option<String> = None;
+    // First-seen order keeps the table deterministic without a map.
+    let mut phases: Vec<(String, PhaseAgg)> = Vec::new();
+    let mut counters: Vec<(String, u64)> = Vec::new();
+    let mut hists: Vec<(String, Vec<(u64, u64)>)> = Vec::new();
+    for (lineno, line) in body.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let bad = || format!("{}:{}: malformed trace line", path.display(), lineno + 1);
+        match field_str(line, "type") {
+            Some("meta") => {
+                let mode = field_str(line, "mode").with_context(bad)?;
+                let clock = field_str(line, "clock").with_context(bad)?;
+                let dropped = field_u64(line, "dropped").with_context(bad)?;
+                meta = Some(format!("mode={mode} clock={clock} dropped_spans={dropped}"));
+            }
+            Some("span") => {
+                let name = field_str(line, "phase").with_context(bad)?;
+                let dur = field_u64(line, "dur_ns").with_context(bad)?;
+                let bytes = field_u64(line, "bytes").with_context(bad)?;
+                let agg = match phases.iter_mut().find(|(n, _)| n == name) {
+                    Some((_, a)) => a,
+                    None => {
+                        phases.push((name.to_string(), PhaseAgg::default()));
+                        &mut phases.last_mut().unwrap().1
+                    }
+                };
+                agg.count += 1;
+                agg.total_ns += dur;
+                agg.max_ns = agg.max_ns.max(dur);
+                agg.bytes += bytes;
+            }
+            Some("counter") => {
+                let name = field_str(line, "name").with_context(bad)?;
+                let value = field_u64(line, "value").with_context(bad)?;
+                counters.push((name.to_string(), value));
+            }
+            Some("hist") => {
+                let name = field_str(line, "name").with_context(bad)?;
+                // buckets is the sparse [[k,n],...] array — parse by pairs.
+                let start = line.find("\"buckets\":[").map(|i| i + "\"buckets\":[".len());
+                let Some(start) = start else { bail!(bad()) };
+                let Some(end) = line[start..].find("]}").map(|i| start + i) else {
+                    bail!(bad())
+                };
+                let mut pairs = Vec::new();
+                for part in line[start..end].split("],") {
+                    let part = part.trim_start_matches('[').trim_end_matches(']');
+                    if part.is_empty() {
+                        continue;
+                    }
+                    let Some((k, n)) = part.split_once(',') else { bail!(bad()) };
+                    pairs.push((
+                        k.trim().parse::<u64>().ok().with_context(bad)?,
+                        n.trim().parse::<u64>().ok().with_context(bad)?,
+                    ));
+                }
+                hists.push((name.to_string(), pairs));
+            }
+            _ => {} // unknown line types are forward-compatible no-ops
+        }
+    }
+    let Some(meta) = meta else {
+        bail!("{}: not a tng trace (no meta line)", path.display());
+    };
+    let mut out = String::new();
+    out.push_str(&format!("trace {}\n{}\n\n", path.display(), meta));
+    out.push_str(&format!(
+        "{:<18} {:>8} {:>12} {:>12} {:>12} {:>14}\n",
+        "phase", "count", "total_ms", "mean_us", "max_us", "bytes"
+    ));
+    for (name, a) in &phases {
+        let mean_us = a.total_ns as f64 / 1e3 / a.count.max(1) as f64;
+        out.push_str(&format!(
+            "{:<18} {:>8} {:>12.3} {:>12.3} {:>12.3} {:>14}\n",
+            name,
+            a.count,
+            a.total_ns as f64 / 1e6,
+            mean_us,
+            a.max_ns as f64 / 1e3,
+            a.bytes
+        ));
+    }
+    if !counters.is_empty() {
+        out.push_str("\ncounters:\n");
+        for (name, v) in &counters {
+            out.push_str(&format!("  {name:<18} {v}\n"));
+        }
+    }
+    if !hists.is_empty() {
+        out.push_str("\nhistograms (log2 buckets: k counts values in [2^(k-1), 2^k)):\n");
+        for (name, pairs) in &hists {
+            let n: u64 = pairs.iter().map(|&(_, c)| c).sum();
+            let max_bucket = pairs.iter().map(|&(k, _)| k).max().unwrap_or(0);
+            out.push_str(&format!("  {name:<18} n={n} max_bucket={max_bucket}"));
+            for &(k, c) in pairs {
+                out.push_str(&format!(" [{k}]={c}"));
+            }
+            out.push('\n');
+        }
+    }
+    Ok(out)
+}
+
+/// The `tng report` entry point.
+pub fn run(path: &Path) -> Result<()> {
+    print!("{}", render(path)?);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_trace(name: &str, body: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("tng_report_{}_{name}", std::process::id()));
+        std::fs::write(&p, body).unwrap();
+        p
+    }
+
+    #[test]
+    fn renders_phases_counters_and_hists_deterministically() {
+        let body = "\
+{\"type\":\"meta\",\"version\":1,\"mode\":\"full\",\"clock\":\"virtual\",\"spans\":3,\"dropped\":0}\n\
+{\"type\":\"span\",\"phase\":\"encode\",\"entity\":1,\"round\":0,\"t_ns\":0,\"dur_ns\":2000,\"bytes\":64,\"seq\":0}\n\
+{\"type\":\"span\",\"phase\":\"encode\",\"entity\":2,\"round\":0,\"t_ns\":5,\"dur_ns\":4000,\"bytes\":64,\"seq\":1}\n\
+{\"type\":\"span\",\"phase\":\"round\",\"entity\":0,\"round\":0,\"t_ns\":0,\"dur_ns\":9000,\"bytes\":0,\"seq\":2}\n\
+{\"type\":\"counter\",\"name\":\"frames_sent\",\"value\":2}\n\
+{\"type\":\"hist\",\"name\":\"ready_batch\",\"buckets\":[[1,3],[2,1]]}\n";
+        let p = write_trace("ok.jsonl", body);
+        let a = render(&p).unwrap();
+        assert_eq!(a, render(&p).unwrap(), "report must be deterministic");
+        assert!(a.contains("mode=full clock=virtual dropped_spans=0"), "{a}");
+        // encode: 2 spans, 6000 ns total, mean 3 us, 128 bytes.
+        let enc = a.lines().find(|l| l.starts_with("encode")).unwrap();
+        assert!(enc.contains("2") && enc.contains("0.006") && enc.contains("3.000"), "{enc}");
+        assert!(enc.trim_end().ends_with("128"), "{enc}");
+        assert!(a.contains("frames_sent"), "{a}");
+        assert!(a.contains("n=4 max_bucket=2 [1]=3 [2]=1"), "{a}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_non_trace_files() {
+        let p = write_trace("bad.jsonl", "not a trace\n{\"type\":\"span\"}\n");
+        let err = render(&p).unwrap_err();
+        assert!(err.to_string().contains("malformed trace line"), "{err}");
+        let p2 = write_trace("empty.jsonl", "");
+        let err = render(&p2).unwrap_err();
+        assert!(err.to_string().contains("no meta line"), "{err}");
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(p2).ok();
+    }
+}

@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::network::{star, StarFabric, WorkerPort};
+use crate::obs;
 
 use super::{LeaderTransport, NetSnapshot, WorkerTransport};
 
@@ -46,22 +47,27 @@ impl LeaderTransport for ChannelLeader {
     }
 
     fn recv_deadline(&mut self, deadline: Option<Instant>) -> Result<Vec<u8>> {
-        match deadline {
-            None => self.fabric.leader_rx.recv().map_err(|_| anyhow!("all workers hung up")),
+        let frame = match deadline {
+            None => {
+                self.fabric.leader_rx.recv().map_err(|_| anyhow!("all workers hung up"))?
+            }
             Some(dl) => {
                 let left = dl.saturating_duration_since(Instant::now());
                 if left.is_zero() {
                     bail!("straggler timeout: gather deadline passed with frames missing");
                 }
                 match self.fabric.leader_rx.recv_timeout(left) {
-                    Ok(f) => Ok(f),
+                    Ok(f) => f,
                     Err(RecvTimeoutError::Timeout) => {
                         bail!("straggler timeout: no uplink frame within {left:?}")
                     }
                     Err(RecvTimeoutError::Disconnected) => bail!("all workers hung up"),
                 }
             }
-        }
+        };
+        obs::counter(obs::Counter::FramesRecv, 1);
+        obs::counter(obs::Counter::BytesRecv, frame.len() as u64);
+        Ok(frame)
     }
 
     fn send_to(&mut self, worker: usize, frame: &[u8]) -> Result<()> {
@@ -69,7 +75,10 @@ impl LeaderTransport for ChannelLeader {
         let Some(down) = self.fabric.down.get(worker) else {
             bail!("send_to worker {worker} out of range 0..{m}");
         };
-        down.send(frame.to_vec())
+        down.send(frame.to_vec())?;
+        obs::counter(obs::Counter::FramesSent, 1);
+        obs::counter(obs::Counter::BytesSent, frame.len() as u64);
+        Ok(())
     }
 
     fn stats(&self) -> NetSnapshot {

@@ -61,6 +61,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::obs;
+
 /// Data-plane byte/message counters for one fabric, leader's view.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct NetSnapshot {
@@ -128,6 +130,16 @@ pub trait LeaderTransport {
     fn virtual_elapsed(&self) -> Option<Duration> {
         None
     }
+
+    /// The clock that should stamp telemetry spans recorded on this
+    /// transport's thread (`obs::install`). `None` = process wall clock.
+    /// Only the sim backend overrides this: its runs are timed in virtual
+    /// ns, and per-entity virtual clocks are only advanced from their
+    /// owning threads, so spans stamped through this clock make a seeded
+    /// run's trace export bit-reproducible.
+    fn obs_clock(&self) -> Option<obs::VirtualClock> {
+        None
+    }
 }
 
 /// One worker's side of the fabric.
@@ -138,4 +150,10 @@ pub trait WorkerTransport {
 
     /// Receive the next downlink frame from the leader.
     fn recv(&mut self) -> Result<Vec<u8>>;
+
+    /// Telemetry clock for this worker's thread; see
+    /// [`LeaderTransport::obs_clock`].
+    fn obs_clock(&self) -> Option<obs::VirtualClock> {
+        None
+    }
 }

@@ -17,6 +17,8 @@
 use std::io;
 use std::time::Duration;
 
+use crate::obs;
+
 /// One descriptor's readiness report from [`wait_readable`].
 pub const READ_EVENTS: i16 = POLLIN | POLLERR | POLLHUP | POLLNVAL;
 
@@ -120,7 +122,23 @@ fn fallback_plan(nfds: usize, timeout: Option<Duration>) -> (Duration, Vec<usize
     }
 }
 
-pub use sys::wait_readable;
+/// Readiness gate with poll-loop telemetry: every call is one wakeup, an
+/// empty report is a timeout (or signal), and a non-empty report's size
+/// feeds the ready-batch histogram — how many connections each wakeup
+/// services is the leader loop's efficiency number.
+pub fn wait_readable(
+    fds: &[std::os::raw::c_int],
+    timeout: Option<Duration>,
+) -> io::Result<Vec<usize>> {
+    let ready = sys::wait_readable(fds, timeout)?;
+    obs::counter(obs::Counter::PollWakeups, 1);
+    if ready.is_empty() {
+        obs::counter(obs::Counter::PollTimeouts, 1);
+    } else {
+        obs::observe(obs::Hist::ReadyBatch, ready.len() as u64);
+    }
+    Ok(ready)
+}
 
 #[cfg(test)]
 mod fallback_tests {

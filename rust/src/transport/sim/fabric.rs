@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::obs;
 use crate::util::rng::Rng;
 
 use super::super::{LeaderTransport, NetSnapshot, WorkerTransport};
@@ -353,6 +354,8 @@ impl LeaderTransport for SimLeader {
                     core.stats.up_bytes += ev.data.len() as u64;
                     core.stats.up_msgs += 1;
                     core.tracer.on_recv(TracerReport::LEADER, ev.data.len(), now);
+                    obs::counter(obs::Counter::FramesRecv, 1);
+                    obs::counter(obs::Counter::BytesRecv, ev.data.len() as u64);
                     return Ok(ev.data);
                 }
                 // Heap and pending are empty, every downlink queue is
@@ -386,6 +389,8 @@ impl LeaderTransport for SimLeader {
             bail!("send_to worker {worker} out of range 0..{m}");
         }
         core.push_down(worker, frame);
+        obs::counter(obs::Counter::FramesSent, 1);
+        obs::counter(obs::Counter::BytesSent, frame.len() as u64);
         self.shared.cv.notify_all();
         Ok(())
     }
@@ -399,6 +404,8 @@ impl LeaderTransport for SimLeader {
         for w in 0..core.m {
             core.push_down(w, frame);
         }
+        obs::counter(obs::Counter::FramesSent, core.m as u64);
+        obs::counter(obs::Counter::BytesSent, frame.len() as u64 * core.m as u64);
         if core.round_sync {
             core.round_barrier = core.last_down_deliver.iter().copied().max().unwrap_or(0);
         }
@@ -412,6 +419,14 @@ impl LeaderTransport for SimLeader {
 
     fn virtual_elapsed(&self) -> Option<Duration> {
         Some(Duration::from_nanos(self.shared.lock().now))
+    }
+
+    /// The leader's virtual clock. `core.now` is only advanced from
+    /// leader-thread transport calls, and span sites never hold the core
+    /// lock, so this read is deterministic and deadlock-free.
+    fn obs_clock(&self) -> Option<obs::VirtualClock> {
+        let shared = Arc::clone(&self.shared);
+        Some(Arc::new(move || shared.lock().now))
     }
 }
 
@@ -469,6 +484,14 @@ impl WorkerTransport for SimWorker {
             core = self.shared.wait(core);
             core.running += 1;
         }
+    }
+
+    /// Worker `w`'s virtual clock. `worker_now[w]` is only advanced from
+    /// worker `w`'s own `recv`, so reads from that thread are deterministic.
+    fn obs_clock(&self) -> Option<obs::VirtualClock> {
+        let shared = Arc::clone(&self.shared);
+        let w = self.w;
+        Some(Arc::new(move || shared.lock().worker_now[w]))
     }
 }
 

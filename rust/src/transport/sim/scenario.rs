@@ -18,6 +18,7 @@
 //! `rust/tests/sim_transport.rs` turn those formulas into checked code.
 
 use crate::coordinator::network::LinkModel;
+use crate::obs;
 use crate::util::rng::Rng;
 
 use super::fabric::{tx_ns, SIM_STREAM_BASE};
@@ -184,7 +185,27 @@ impl RoundScenario {
             completion = completion.max(deliver);
         }
         self.now = completion;
+        let round_idx = self.rounds as u32;
         self.rounds += 1;
+        // Telemetry on the virtual timeline: `span_at` stamps the simulated
+        // clock directly (entity 0 = the root aggregator), so exports from a
+        // seeded scenario are byte-reproducible. Zero-alloc: the recorder's
+        // ring and counter arrays are fixed at construction.
+        if obs::enabled() {
+            obs::span_at(obs::Phase::GatherWait, 0, round_idx, t0, gather - t0, 0);
+            obs::span_at(
+                obs::Phase::Broadcast,
+                0,
+                round_idx,
+                gather,
+                completion - gather,
+                (self.m * self.down_bytes) as u64,
+            );
+            obs::span_at(obs::Phase::Round, 0, round_idx, t0, completion - t0, 0);
+        }
+        obs::counter(obs::Counter::FramesSent, self.m as u64);
+        obs::counter(obs::Counter::BytesSent, (self.m * self.down_bytes) as u64);
+        obs::observe(obs::Hist::GatherWaitNs, gather - t0);
         completion - t0
     }
 
@@ -204,6 +225,8 @@ impl RoundScenario {
                 deliver += (self.rng_up[w].f64() * self.jitter_ns as f64) as u64;
             }
             self.tracer.on_recv(TracerReport::LEADER, self.up_bytes, deliver);
+            obs::counter(obs::Counter::FramesRecv, 1);
+            obs::counter(obs::Counter::BytesRecv, self.up_bytes as u64);
             self.arrivals.push(deliver);
         }
         let last = self.arrivals.iter().copied().max().unwrap_or(t0);
@@ -261,6 +284,8 @@ impl RoundScenario {
                 deliver += (self.rng_up[agg].f64() * self.jitter_ns as f64) as u64;
             }
             self.tracer.on_recv(TracerReport::LEADER, self.partial_bytes, deliver);
+            obs::counter(obs::Counter::FramesRecv, 1);
+            obs::counter(obs::Counter::BytesRecv, self.partial_bytes as u64);
             gather = gather.max(deliver);
         }
         gather

@@ -36,6 +36,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::network::NetStats;
 use crate::coordinator::protocol::Msg;
+use crate::obs;
 
 use super::frame::{read_frame, write_frame, Reassembler};
 use super::poll::wait_readable;
@@ -257,6 +258,8 @@ impl TcpLeader {
         {
             stats.up_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
             stats.up_msgs.fetch_add(1, Ordering::Relaxed);
+            obs::counter(obs::Counter::FramesRecv, 1);
+            obs::counter(obs::Counter::BytesRecv, frame.len() as u64);
             ready.push_back(frame);
         }
         Ok(())
@@ -313,6 +316,8 @@ impl LeaderTransport for TcpLeader {
         conn.sock.flush()?;
         self.stats.down_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
         self.stats.down_msgs.fetch_add(1, Ordering::Relaxed);
+        obs::counter(obs::Counter::FramesSent, 1);
+        obs::counter(obs::Counter::BytesSent, frame.len() as u64);
         Ok(())
     }
 

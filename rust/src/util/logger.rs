@@ -7,7 +7,7 @@
 //! macros, which lazily format only when the level is enabled.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -35,17 +35,39 @@ impl Level {
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static START: OnceLock<Instant> = OnceLock::new();
 
+/// Parse one `TNG_LOG` value. `Ok` is the level filter (0 = off);
+/// `Err(())` means the value is unrecognized and the caller falls back to
+/// the default (`info`) after warning once.
+fn parse_level(value: &str) -> Result<u8, ()> {
+    match value {
+        "error" => Ok(Level::Error as u8),
+        "warn" => Ok(Level::Warn as u8),
+        "info" => Ok(Level::Info as u8),
+        "debug" => Ok(Level::Debug as u8),
+        "trace" => Ok(Level::Trace as u8),
+        "off" => Ok(0),
+        _ => Err(()),
+    }
+}
+
 /// Install the logger once; later calls are no-ops (tests call this
-/// repeatedly). Level comes from `TNG_LOG`.
+/// repeatedly). Level comes from `TNG_LOG`; an unrecognized value warns on
+/// stderr once per process and falls back to the default (`info`) instead
+/// of silently masquerading as it.
 pub fn init() {
+    static WARN_ONCE: Once = Once::new();
     START.get_or_init(Instant::now);
     let level = match std::env::var("TNG_LOG").as_deref() {
-        Ok("error") => Level::Error as u8,
-        Ok("warn") => Level::Warn as u8,
-        Ok("debug") => Level::Debug as u8,
-        Ok("trace") => Level::Trace as u8,
-        Ok("off") => 0,
-        _ => Level::Info as u8,
+        Err(_) => Level::Info as u8,
+        Ok(value) => parse_level(value).unwrap_or_else(|()| {
+            WARN_ONCE.call_once(|| {
+                eprintln!(
+                    "[tng] TNG_LOG='{value}' is not one of error|warn|info|debug|trace|off; \
+                     using 'info'"
+                );
+            });
+            Level::Info as u8
+        }),
     };
     MAX_LEVEL.store(level, Ordering::Relaxed);
 }
@@ -122,6 +144,26 @@ macro_rules! log_trace {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parse_level_accepts_every_documented_value() {
+        assert_eq!(parse_level("error"), Ok(Level::Error as u8));
+        assert_eq!(parse_level("warn"), Ok(Level::Warn as u8));
+        // `info` is accepted explicitly, not just as the unknown-value
+        // fallback (the old parser conflated the two).
+        assert_eq!(parse_level("info"), Ok(Level::Info as u8));
+        assert_eq!(parse_level("debug"), Ok(Level::Debug as u8));
+        assert_eq!(parse_level("trace"), Ok(Level::Trace as u8));
+        assert_eq!(parse_level("off"), Ok(0));
+    }
+
+    #[test]
+    fn parse_level_rejects_unknown_values() {
+        assert_eq!(parse_level("verbose"), Err(()));
+        assert_eq!(parse_level("INFO"), Err(()), "values are case-sensitive");
+        assert_eq!(parse_level(""), Err(()));
+        assert_eq!(parse_level("warn "), Err(()));
+    }
 
     #[test]
     fn init_is_idempotent_and_macros_work() {

@@ -3,7 +3,10 @@
 //! the dense stochastic codecs (ternary, chunked ternary, QSGD), the serial
 //! sharded path, and the entropy-coded envelope (whose coded stream and
 //! wire frame vary a little in length round to round — the arena carries
-//! 2x-frame headroom so the variation never reallocates).
+//! 2x-frame headroom so the variation never reallocates). The same
+//! guarantee covers the telemetry recorder: a warm recorder emits spans,
+//! counters, and histogram observations heap-free, including inside a
+//! 10k-worker scenario round under `obs=full`.
 //!
 //! This file intentionally holds a single #[test]: the counting allocator
 //! is process-global, and a lone test keeps other threads from muddying the
@@ -179,4 +182,60 @@ fn steady_state_rounds_allocate_nothing() {
             "{name}: steady-state simulated rounds must not allocate"
         );
     }
+
+    // The telemetry recorder (PR-9): a warm recorder emits spans, counters,
+    // and histogram observations without touching the heap. Warm = the ring
+    // pre-allocated (`obs::warm`, or lazily on the first enabled record);
+    // `flush` is the one allocating call and belongs at run end, outside
+    // the steady state.
+    use tng::obs;
+    obs::configure(obs::Mode::Full, None);
+    obs::install(None, 0);
+    obs::warm();
+    {
+        let mut sp = obs::span(obs::Phase::Encode);
+        sp.set_bytes(1);
+    }
+    obs::counter(obs::Counter::FramesSent, 1);
+    obs::observe(obs::Hist::GatherWaitNs, 1);
+    let before = alloc_count();
+    for i in 0..1_000u64 {
+        obs::set_round(i as u32);
+        let mut sp = obs::span(obs::Phase::Encode);
+        sp.set_bytes(64);
+        drop(sp);
+        obs::span_at(obs::Phase::Round, 0, i as u32, i, 1, 0);
+        obs::counter(obs::Counter::BytesSent, 64);
+        obs::observe(obs::Hist::GatherWaitNs, i);
+    }
+    assert_eq!(
+        alloc_count() - before,
+        0,
+        "warm telemetry recorder must not allocate in the steady state"
+    );
+
+    // And the end-to-end form of the same guarantee: a 10k-worker scenario
+    // round under obs=full — span_at on the virtual timeline plus frame /
+    // byte counters and the gather-wait histogram — stays allocation-free.
+    let mut sc = RoundScenario::new(ScenarioConfig {
+        workers: 10_000,
+        quorum: 6_000,
+        jitter_ns: 20_000,
+        loss: 0.01,
+        seed: 11,
+        ..Default::default()
+    });
+    for _ in 0..4 {
+        sc.round();
+    }
+    let before = alloc_count();
+    for _ in 0..25 {
+        std::hint::black_box(sc.round());
+    }
+    assert_eq!(
+        alloc_count() - before,
+        0,
+        "obs=full 10k-worker scenario rounds must not allocate"
+    );
+    obs::configure(obs::Mode::Off, None);
 }

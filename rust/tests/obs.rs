@@ -1,0 +1,210 @@
+//! Telemetry (PR-9) integration tests — the two contracts DESIGN.md
+//! §Observability states:
+//!
+//! 1. **Invariance** — telemetry is a pure observer: `param_digest`, the
+//!    final iterate, and all three wire ledgers are identical under
+//!    `obs=off` and `obs=full` on the deterministic driver, the channel
+//!    runtime, and the simulated transport, across the codec / downlink /
+//!    topology matrix.
+//! 2. **Determinism** — on the simulated transport every span is stamped
+//!    by the virtual clock, so two same-seed runs export *byte-identical*
+//!    trace files (both JSONL and Chrome JSON), and `tng report` renders
+//!    the same bytes from the same file.
+//!
+//! The obs mode is process-global, so every test serializes on one lock
+//! and restores `Mode::Off` before releasing it.
+
+use std::sync::Mutex;
+
+use tng::coordinator::{driver, parallel, DriverConfig};
+use tng::data::synthetic::{generate, SkewConfig};
+use tng::experiments::common::make_codec;
+use tng::link::TreeTopology;
+use tng::obs;
+use tng::objectives::logreg::LogReg;
+use tng::optim::StepSchedule;
+use tng::tng::ReferenceKind;
+use tng::transport::sim::{self, SimConfig};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn logreg() -> LogReg {
+    let ds = generate(&SkewConfig { n: 64, dim: 16, seed: 2, ..Default::default() });
+    LogReg::new(ds, 0.05)
+}
+
+fn base_cfg() -> DriverConfig {
+    DriverConfig {
+        rounds: 12,
+        workers: 4,
+        batch: 4,
+        schedule: StepSchedule::Const(0.2),
+        references: vec![ReferenceKind::Zeros, ReferenceKind::AvgDecoded { window: 2 }],
+        record_every: 4,
+        ..Default::default()
+    }
+}
+
+fn case_cfg(down: Option<&str>, groups: usize, spec: &str) -> DriverConfig {
+    let mut cfg = base_cfg();
+    if let Some(d) = down {
+        cfg.downlink = Some(tng::downlink::DownlinkSpec::new(d));
+    }
+    if groups >= 2 {
+        cfg.topology = Some(TreeTopology::new(groups, spec));
+    }
+    cfg
+}
+
+/// The (digest, iterate, wire-ledger) fingerprint the invariance contract
+/// pins.
+type Fingerprint = (u64, Vec<f32>, (u64, u64, u64));
+
+fn fingerprint(tr: &tng::coordinator::metrics::Trace) -> Fingerprint {
+    (
+        tr.param_digest(),
+        tr.final_w.clone(),
+        (tr.total_wire_up_bytes, tr.total_wire_down_bytes, tr.total_wire_partial_bytes),
+    )
+}
+
+/// Run all three in-process runtimes under the current obs mode and
+/// fingerprint each.
+fn run_all(obj: &LogReg, spec: &str, cfg: &DriverConfig) -> [Fingerprint; 3] {
+    let codec = make_codec(spec).unwrap();
+    let seq = driver::run(obj, codec.as_ref(), "seq", cfg);
+    let par = parallel::run(obj, codec.as_ref(), "par", cfg).unwrap();
+    let (simulated, _report) =
+        sim::run(obj, codec.as_ref(), "sim", cfg, &SimConfig::default()).unwrap();
+    [fingerprint(&seq), fingerprint(&par), fingerprint(&simulated)]
+}
+
+/// Telemetry never draws from an RNG stream, never writes a wire byte,
+/// never branches the protocol: every runtime's digest, iterate, and wire
+/// ledgers are identical with `obs=full` and `obs=off`.
+#[test]
+fn obs_full_is_invariant_across_runtimes_and_matrix() {
+    let _g = LOCK.lock().unwrap();
+    let obj = logreg();
+    let cases: [(&str, Option<&str>, usize); 3] = [
+        ("ternary", None, 1),
+        ("entropy:ternary", Some("entropy:ternary"), 1),
+        ("ternary", None, 2),
+    ];
+    for (spec, down, groups) in cases {
+        let what = format!("{spec}/down={down:?}/g{groups}");
+        let cfg = case_cfg(down, groups, spec);
+        obs::configure(obs::Mode::Off, None);
+        let off = run_all(&obj, spec, &cfg);
+        obs::configure(obs::Mode::Full, None);
+        let full = run_all(&obj, spec, &cfg);
+        // The capture must actually contain the run (the contract is
+        // "observed and unchanged", not "unobserved").
+        let cap = obs::take_capture();
+        assert!(!cap.spans.is_empty(), "{what}: obs=full must record spans");
+        for (i, runtime) in ["driver", "channel", "sim"].iter().enumerate() {
+            assert_eq!(off[i], full[i], "{what}: {runtime} must be obs-invariant");
+        }
+        // Cross-runtime agreement (the PR-8 contract) must survive under
+        // full telemetry too.
+        assert_eq!(full[0], full[1], "{what}: driver==channel under obs=full");
+        assert_eq!(full[0], full[2], "{what}: driver==sim under obs=full");
+    }
+    obs::configure(obs::Mode::Off, None);
+}
+
+/// `obs=spans` (the cheaper mode) is equally invariant, and records spans
+/// but no counters.
+#[test]
+fn obs_spans_is_invariant_and_skips_counters() {
+    let _g = LOCK.lock().unwrap();
+    let obj = logreg();
+    let cfg = base_cfg();
+    let codec = make_codec("ternary").unwrap();
+    obs::configure(obs::Mode::Off, None);
+    let off = fingerprint(&driver::run(&obj, codec.as_ref(), "seq", &cfg));
+    obs::configure(obs::Mode::Spans, None);
+    let spans = fingerprint(&driver::run(&obj, codec.as_ref(), "seq", &cfg));
+    let cap = obs::take_capture();
+    obs::configure(obs::Mode::Off, None);
+    assert_eq!(off, spans, "driver must be invariant under obs=spans");
+    assert!(!cap.spans.is_empty(), "spans mode records spans");
+    assert_eq!(cap.counters, [0; obs::N_COUNTERS], "spans mode records no counters");
+}
+
+/// One seeded sim run with `obs=full`, executed on a fresh thread (fresh
+/// per-thread recorders, so span sequence numbers are deterministic), its
+/// capture taken after the run's threads have flushed.
+fn captured_sim_run(jitter_ns: u64) -> obs::Capture {
+    obs::configure(obs::Mode::Full, None);
+    let handle = std::thread::spawn(move || {
+        let obj = logreg();
+        let codec = make_codec("entropy:ternary").unwrap();
+        let mut cfg = base_cfg();
+        cfg.downlink = Some(tng::downlink::DownlinkSpec::new("entropy:ternary"));
+        let sim = SimConfig { jitter_ns, ..Default::default() };
+        sim::run(&obj, codec.as_ref(), "sim", &cfg, &sim).unwrap();
+    });
+    handle.join().unwrap();
+    obs::take_capture()
+}
+
+/// The determinism contract: two same-seed sim runs export byte-identical
+/// trace files in both formats, and every span is virtual-clock-stamped.
+#[test]
+fn seeded_sim_runs_export_byte_identical_traces() {
+    let _g = LOCK.lock().unwrap();
+    let dir = std::env::temp_dir().join(format!("tng_obs_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let cap_a = captured_sim_run(50_000);
+    assert_eq!(cap_a.clock, "virtual", "sim spans must be virtual-clock-stamped");
+    assert!(cap_a.spans.len() > 100, "a 12-round 4-worker run records many spans");
+    assert!(cap_a.counters[obs::Counter::FramesSent as usize] > 0, "fabric counts frames");
+    let a = obs::export::export(&cap_a, &dir.join("a")).unwrap();
+    assert_eq!(a.len(), 2, "a stem path writes .jsonl and .json");
+
+    let cap_b = captured_sim_run(50_000);
+    let b = obs::export::export(&cap_b, &dir.join("b")).unwrap();
+    obs::configure(obs::Mode::Off, None);
+
+    for (pa, pb) in a.iter().zip(&b) {
+        let bytes_a = std::fs::read(pa).unwrap();
+        let bytes_b = std::fs::read(pb).unwrap();
+        assert!(!bytes_a.is_empty());
+        assert_eq!(
+            bytes_a, bytes_b,
+            "same-seed sim traces must serialize to identical bytes ({})",
+            pa.display()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `tng report` round-trip: an exported JSONL trace renders to a
+/// deterministic summary naming the lifecycle phases and the transport
+/// counters.
+#[test]
+fn report_round_trips_an_exported_trace() {
+    let _g = LOCK.lock().unwrap();
+    let dir = std::env::temp_dir().join(format!("tng_obs_rep_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cap = captured_sim_run(0);
+    obs::configure(obs::Mode::Off, None);
+    let path = dir.join("trace.jsonl");
+    let written = obs::export::export(&cap, &path).unwrap();
+    assert_eq!(written, vec![path.clone()]);
+
+    let rendered = obs::report::render(&path).unwrap();
+    assert_eq!(rendered, obs::report::render(&path).unwrap(), "report is deterministic");
+    assert!(rendered.contains("mode=full clock=virtual"), "{rendered}");
+    for phase in ["grad", "encode", "entropy_encode", "decode", "downlink_compress", "round"] {
+        assert!(
+            rendered.lines().any(|l| l.starts_with(phase)),
+            "report must tabulate phase '{phase}':\n{rendered}"
+        );
+    }
+    assert!(rendered.contains("frames_sent"), "{rendered}");
+    assert!(rendered.contains("gather_wait_ns"), "{rendered}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -24,6 +24,11 @@ committed still tells the story each PR's subsystem claims:
   near 1.0), the two-level tree must beat the flat star at the same scale,
   virtual time must grow with the worker count, and evaluating a simulated
   round must stay cheap in wall-clock terms.
+* BENCH_PR9 — round-lifecycle telemetry: the obs=off baseline must be
+  unperturbed (one relaxed atomic load per span site), obs=spans must cost
+  < 2% over off and obs=full < 5%, span counts must behave (none when off,
+  recorded when on), and the param digest must match the off baseline in
+  every mode — telemetry observes, never perturbs.
 
 Exit status 0 = all invariants hold; 1 = a regression (or malformed file),
 with one line per failure.
@@ -157,6 +162,34 @@ def main():
         check(pr8["groups64-10k"]["sim_ms_per_round"]
               < pr8["flat-10k"]["sim_ms_per_round"],
               "at 10k workers the two-level tree beats the flat star")
+
+    print("BENCH_PR9.json (telemetry overhead: obs=off/spans/full)")
+    pr9 = load(root, "BENCH_PR9.json", ["obs-off", "obs-spans", "obs-full"])
+    if pr9:
+        off = pr9["obs-off"]
+        check(abs(off["vs_off"] - 1.0) < 1e-9, "obs=off is its own baseline")
+        check(off["spans_per_run"] == 0, "obs=off records no spans")
+        for name, cfg in pr9.items():
+            wall = cfg["wall_ms_per_round"]
+            check(wall > 0, f"{name}: positive wall time ({wall} ms)")
+            check(abs(cfg["vs_off"] - wall / off["wall_ms_per_round"]) < 0.001,
+                  f"{name}: vs_off consistent with timings "
+                  f"({cfg['vs_off']} vs {wall / off['wall_ms_per_round']:.4f})")
+            check(abs(cfg["overhead_pct"] - (cfg["vs_off"] - 1.0) * 100.0) < 0.05,
+                  f"{name}: overhead_pct consistent with vs_off")
+            check(cfg["digest_matches_off"] is True,
+                  f"{name}: param digest identical to obs=off "
+                  "(telemetry observes, never perturbs)")
+        spans_mode, full_mode = pr9["obs-spans"], pr9["obs-full"]
+        check(spans_mode["spans_per_run"] > 0, "obs=spans records spans")
+        check(full_mode["spans_per_run"] >= spans_mode["spans_per_run"],
+              "obs=full records at least the spans-mode span set")
+        check(spans_mode["overhead_pct"] < 2.0,
+              f"obs=spans overhead < 2% of the off baseline "
+              f"(got {spans_mode['overhead_pct']}%)")
+        check(full_mode["overhead_pct"] < 5.0,
+              f"obs=full overhead < 5% of the off baseline "
+              f"(got {full_mode['overhead_pct']}%)")
 
     if FAILURES:
         print(f"\n{len(FAILURES)} bench-trend failure(s)")

@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""Structurally validate exported tng telemetry traces (stdlib only).
+
+Chrome trace JSON (`trace_out=foo.json`, loads in chrome://tracing /
+Perfetto) and the JSONL event log (`trace_out=foo.jsonl`, the `tng report`
+input) are both emitted by `rust/src/obs/export.rs` with pure integer
+formatting, so beyond "is valid JSON" this checks the invariants the
+exporter promises:
+
+* Chrome: a `traceEvents` array of complete (`ph:"X"`) span events with
+  fixed-point microsecond `ts`/`dur`, `pid` 0, integer `tid` (0 = leader,
+  1 + w = worker w), known phase names, and non-decreasing `ts` (the
+  capture is sorted); counter (`ph:"C"`) events only for known counters.
+* JSONL: one `meta` header line (version 1, known mode/clock), then only
+  known record types with the required integer fields; span lines sorted
+  by (t_ns, entity, seq) and seq strictly increasing per entity.
+
+Usage: check_trace.py TRACE.json [TRACE.jsonl ...]; exit 0 = every file
+valid, 1 otherwise (one line per failure).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+PHASES = {
+    "grad", "ref_search", "encode", "entropy_encode", "frame_build", "send",
+    "recv", "gather_wait", "decode", "fold", "downlink_compress", "broadcast",
+    "step", "round",
+}
+COUNTERS = {
+    "poll_wakeups", "poll_timeouts", "frames_sent", "frames_recv",
+    "bytes_sent", "bytes_recv", "late_frames", "skipped_frames",
+}
+HISTS = {"ready_batch", "gather_wait_ns", "quorum_spread_ns"}
+MODES = {"off", "spans", "full"}
+CLOCKS = {"wall", "virtual", "mixed", "none"}
+
+FAILURES = []
+
+
+def fail(path, msg):
+    FAILURES.append(f"{path}: {msg}")
+    print(f"  FAIL: {path}: {msg}")
+
+
+def check_chrome(path):
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return fail(path, f"invalid JSON: {e}")
+    events = data.get("traceEvents")
+    if not isinstance(events, list):
+        return fail(path, "no traceEvents array")
+    if data.get("displayTimeUnit") != "ms":
+        fail(path, f"displayTimeUnit is {data.get('displayTimeUnit')!r}, want 'ms'")
+    last_ts = -1.0
+    spans = counters = 0
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            fail(path, f"{where}: not an object")
+            continue
+        if ev.get("cat") != "tng":
+            fail(path, f"{where}: cat is {ev.get('cat')!r}, want 'tng'")
+        if ev.get("pid") != 0:
+            fail(path, f"{where}: pid is {ev.get('pid')!r}, want 0")
+        ph = ev.get("ph")
+        if ph == "X":
+            spans += 1
+            if ev.get("name") not in PHASES:
+                fail(path, f"{where}: unknown phase {ev.get('name')!r}")
+            if not isinstance(ev.get("tid"), int) or ev["tid"] < 0:
+                fail(path, f"{where}: tid must be a non-negative entity id")
+            for key in ("ts", "dur"):
+                v = ev.get(key)
+                if not isinstance(v, (int, float)) or v < 0:
+                    fail(path, f"{where}: {key} must be a non-negative number")
+            args = ev.get("args", {})
+            for key in ("round", "bytes", "seq"):
+                if not isinstance(args.get(key), int):
+                    fail(path, f"{where}: args.{key} must be an integer")
+            ts = float(ev.get("ts", 0))
+            if ts < last_ts:
+                fail(path, f"{where}: ts {ts} < previous {last_ts} (capture unsorted)")
+            last_ts = ts
+        elif ph == "C":
+            counters += 1
+            if ev.get("name") not in COUNTERS:
+                fail(path, f"{where}: unknown counter {ev.get('name')!r}")
+            if not isinstance(ev.get("args", {}).get("value"), int):
+                fail(path, f"{where}: args.value must be an integer")
+        else:
+            fail(path, f"{where}: unknown ph {ph!r}")
+    if spans == 0:
+        fail(path, "no span events")
+    print(f"  ok: {path} ({spans} spans, {counters} counters)")
+
+
+def check_jsonl(path):
+    lines = [l for l in path.read_text().splitlines() if l.strip()]
+    if not lines:
+        return fail(path, "empty trace")
+    objs = []
+    for lineno, line in enumerate(lines, 1):
+        try:
+            objs.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            return fail(path, f"line {lineno}: invalid JSON: {e}")
+    meta = objs[0]
+    if meta.get("type") != "meta":
+        return fail(path, "first line is not the meta header")
+    if meta.get("version") != 1:
+        fail(path, f"meta version {meta.get('version')!r}, want 1")
+    if meta.get("mode") not in MODES:
+        fail(path, f"meta mode {meta.get('mode')!r} unknown")
+    if meta.get("clock") not in CLOCKS:
+        fail(path, f"meta clock {meta.get('clock')!r} unknown")
+    span_count = 0
+    last_key = None
+    per_entity_seq = {}
+    for lineno, obj in enumerate(objs[1:], 2):
+        kind = obj.get("type")
+        where = f"line {lineno}"
+        if kind == "span":
+            span_count += 1
+            if obj.get("phase") not in PHASES:
+                fail(path, f"{where}: unknown phase {obj.get('phase')!r}")
+            for key in ("entity", "round", "t_ns", "dur_ns", "bytes", "seq"):
+                if not isinstance(obj.get(key), int) or obj[key] < 0:
+                    fail(path, f"{where}: {key} must be a non-negative integer")
+                    break
+            else:
+                key3 = (obj["t_ns"], obj["entity"], obj["seq"])
+                if last_key is not None and key3 < last_key:
+                    fail(path, f"{where}: spans not sorted by (t_ns, entity, seq)")
+                last_key = key3
+                prev = per_entity_seq.get(obj["entity"])
+                if prev is not None and obj["seq"] <= prev:
+                    fail(path, f"{where}: seq not strictly increasing for "
+                               f"entity {obj['entity']}")
+                per_entity_seq[obj["entity"]] = obj["seq"]
+        elif kind == "counter":
+            if obj.get("name") not in COUNTERS:
+                fail(path, f"{where}: unknown counter {obj.get('name')!r}")
+            if not isinstance(obj.get("value"), int):
+                fail(path, f"{where}: counter value must be an integer")
+        elif kind == "hist":
+            if obj.get("name") not in HISTS:
+                fail(path, f"{where}: unknown histogram {obj.get('name')!r}")
+            buckets = obj.get("buckets")
+            if not isinstance(buckets, list) or not all(
+                isinstance(p, list) and len(p) == 2
+                and all(isinstance(x, int) and x >= 0 for x in p)
+                for p in buckets
+            ):
+                fail(path, f"{where}: buckets must be [bucket, count] pairs")
+        else:
+            # Unknown types are forward-compatible in the reader, but a
+            # fresh export must only contain what the exporter writes.
+            fail(path, f"{where}: unknown record type {kind!r}")
+    if meta.get("spans") != span_count:
+        fail(path, f"meta says {meta.get('spans')} spans, file has {span_count}")
+    if span_count == 0:
+        fail(path, "no span records")
+    print(f"  ok: {path} ({span_count} spans)")
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    for arg in sys.argv[1:]:
+        path = Path(arg)
+        if not path.is_file():
+            fail(path, "missing")
+        elif path.suffix == ".jsonl":
+            check_jsonl(path)
+        else:
+            check_chrome(path)
+    if FAILURES:
+        print(f"\n{len(FAILURES)} trace failure(s)")
+        return 1
+    print("\ntraces ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
