@@ -293,6 +293,14 @@ struct Recorder {
     round: u32,
     clock: ClockSource,
     is_virtual: bool,
+    /// Which timebases stamped this thread's recorded spans, tracked per
+    /// record (not per installed clock): guard spans follow the installed
+    /// `ClockSource`, while explicit-timestamp `span_at` records are
+    /// virtual by contract even when the thread's own clock is wall (the
+    /// scenario engine runs on an uninstalled main thread) — so the
+    /// exported meta `clock` label matches the timestamps.
+    saw_wall: bool,
+    saw_virtual: bool,
     warm: bool,
     dirty: bool,
 }
@@ -310,6 +318,8 @@ impl Recorder {
             round: 0,
             clock: ClockSource::Wall,
             is_virtual: false,
+            saw_wall: false,
+            saw_virtual: false,
             warm: false,
             dirty: false,
         }
@@ -326,8 +336,22 @@ impl Recorder {
     }
 
     #[inline]
-    fn record(&mut self, phase: u8, t_ns: u64, dur_ns: u64, bytes: u64, entity: u32, round: u32) {
+    fn record(
+        &mut self,
+        phase: u8,
+        t_ns: u64,
+        dur_ns: u64,
+        bytes: u64,
+        entity: u32,
+        round: u32,
+        virtual_ts: bool,
+    ) {
         self.warm();
+        if virtual_ts {
+            self.saw_virtual = true;
+        } else {
+            self.saw_wall = true;
+        }
         let ev = SpanEvent { t_ns, dur_ns, bytes, seq: self.seq, round, entity, phase };
         self.seq += 1;
         if self.spans.len() < RING_CAP {
@@ -354,9 +378,10 @@ impl Recorder {
             }
         }
         sink.dropped += self.dropped;
-        if self.is_virtual {
+        if self.saw_virtual {
             sink.virtual_events = true;
-        } else {
+        }
+        if self.saw_wall {
             sink.wall_events = true;
         }
         self.spans.clear();
@@ -364,6 +389,8 @@ impl Recorder {
         self.dropped = 0;
         self.counters = [0; N_COUNTERS];
         self.hists = [[0; HIST_BUCKETS]; N_HISTS];
+        self.saw_wall = false;
+        self.saw_virtual = false;
         self.dirty = false;
     }
 }
@@ -513,20 +540,31 @@ impl Drop for SpanGuard {
         REC.with(|r| {
             let mut r = r.borrow_mut();
             let t1 = r.clock.now_ns();
-            let (entity, round) = (r.entity, r.round);
-            r.record(self.phase, self.t0, t1.saturating_sub(self.t0), self.bytes, entity, round);
+            let (entity, round, virt) = (r.entity, r.round, r.is_virtual);
+            r.record(
+                self.phase,
+                self.t0,
+                t1.saturating_sub(self.t0),
+                self.bytes,
+                entity,
+                round,
+                virt,
+            );
         });
     }
 }
 
-/// Record a span with explicit (virtual) timestamps — the scenario
-/// engine's entry point, which owns its own clock.
+/// Record a span with explicit **virtual** timestamps — the scenario
+/// engine's entry point, which owns its own clock. The record is marked
+/// virtual regardless of the thread's installed `ClockSource`, so a
+/// scenario capture exports `clock="virtual"` even though the engine runs
+/// on an uninstalled (wall-clock) thread.
 #[inline]
 pub fn span_at(phase: Phase, entity: u32, round: u32, t_ns: u64, dur_ns: u64, bytes: u64) {
     if !enabled() {
         return;
     }
-    REC.with(|r| r.borrow_mut().record(phase as u8, t_ns, dur_ns, bytes, entity, round));
+    REC.with(|r| r.borrow_mut().record(phase as u8, t_ns, dur_ns, bytes, entity, round, true));
 }
 
 /// Bump a counter by `delta` (`obs=full` only).
@@ -701,6 +739,23 @@ mod tests {
         // Oldest 10 were overwritten: the earliest surviving start is 10.
         assert_eq!(ours.first().unwrap().t_ns, 10);
         assert_eq!(ours.last().unwrap().t_ns, RING_CAP as u64 + 9);
+        configure(Mode::Off, None);
+    }
+
+    #[test]
+    fn span_at_marks_the_capture_virtual_without_an_installed_clock() {
+        let _g = LOCK.lock().unwrap();
+        configure(Mode::Spans, None);
+        // The scenario engine's situation: the main thread never calls
+        // install (its ClockSource is wall), but span_at records carry
+        // simulated-ns timestamps — the meta clock label must say so.
+        span_at(Phase::Round, E + 5, 0, 1_000, 10, 0);
+        flush();
+        let cap = take_capture();
+        assert_eq!(mine(&cap, E + 5).len(), 1);
+        // "mixed" tolerated: a concurrent lib test's wall-clock flush may
+        // land in the sink alongside our virtual events.
+        assert!(cap.clock == "virtual" || cap.clock == "mixed", "{}", cap.clock);
         configure(Mode::Off, None);
     }
 

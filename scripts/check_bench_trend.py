@@ -28,7 +28,11 @@ committed still tells the story each PR's subsystem claims:
   unperturbed (one relaxed atomic load per span site), obs=spans must cost
   < 2% over off and obs=full < 5%, span counts must behave (none when off,
   recorded when on), and the param digest must match the off baseline in
-  every mode — telemetry observes, never perturbs.
+  every mode — telemetry observes, never perturbs. These are claims about
+  a real run, so they are only *asserted* when the file's `_meta.provenance`
+  is "measured" (written by the bench itself); a hand-committed
+  "estimated" placeholder gets its internal arithmetic checked and the
+  run-derived pins reported as SKIPPED, never passed off as verified.
 
 Exit status 0 = all invariants hold; 1 = a regression (or malformed file),
 with one line per failure.
@@ -166,9 +170,11 @@ def main():
     print("BENCH_PR9.json (telemetry overhead: obs=off/spans/full)")
     pr9 = load(root, "BENCH_PR9.json", ["obs-off", "obs-spans", "obs-full"])
     if pr9:
+        meta = pr9.pop("_meta", {})
+        measured = meta.get("provenance") == "measured"
         off = pr9["obs-off"]
+        # Internal arithmetic must be consistent whatever the provenance.
         check(abs(off["vs_off"] - 1.0) < 1e-9, "obs=off is its own baseline")
-        check(off["spans_per_run"] == 0, "obs=off records no spans")
         for name, cfg in pr9.items():
             wall = cfg["wall_ms_per_round"]
             check(wall > 0, f"{name}: positive wall time ({wall} ms)")
@@ -177,19 +183,30 @@ def main():
                   f"({cfg['vs_off']} vs {wall / off['wall_ms_per_round']:.4f})")
             check(abs(cfg["overhead_pct"] - (cfg["vs_off"] - 1.0) * 100.0) < 0.05,
                   f"{name}: overhead_pct consistent with vs_off")
-            check(cfg["digest_matches_off"] is True,
-                  f"{name}: param digest identical to obs=off "
-                  "(telemetry observes, never perturbs)")
-        spans_mode, full_mode = pr9["obs-spans"], pr9["obs-full"]
-        check(spans_mode["spans_per_run"] > 0, "obs=spans records spans")
-        check(full_mode["spans_per_run"] >= spans_mode["spans_per_run"],
-              "obs=full records at least the spans-mode span set")
-        check(spans_mode["overhead_pct"] < 2.0,
-              f"obs=spans overhead < 2% of the off baseline "
-              f"(got {spans_mode['overhead_pct']}%)")
-        check(full_mode["overhead_pct"] < 5.0,
-              f"obs=full overhead < 5% of the off baseline "
-              f"(got {full_mode['overhead_pct']}%)")
+        if not measured:
+            # The overhead/span/digest pins are claims about a real bench
+            # run; an "estimated" file cannot witness them. Say so loudly
+            # instead of rubber-stamping unverified numbers.
+            print(f"  SKIP: provenance is {meta.get('provenance', 'absent')!r} "
+                  "(not 'measured') - overhead (<2%/<5%), span-count, and "
+                  "digest-invariance pins deferred until `cargo bench "
+                  "--bench bench_coordinator` rewrites BENCH_PR9.json")
+        else:
+            check(off["spans_per_run"] == 0, "obs=off records no spans")
+            for name, cfg in pr9.items():
+                check(cfg["digest_matches_off"] is True,
+                      f"{name}: param digest identical to obs=off "
+                      "(telemetry observes, never perturbs)")
+            spans_mode, full_mode = pr9["obs-spans"], pr9["obs-full"]
+            check(spans_mode["spans_per_run"] > 0, "obs=spans records spans")
+            check(full_mode["spans_per_run"] >= spans_mode["spans_per_run"],
+                  "obs=full records at least the spans-mode span set")
+            check(spans_mode["overhead_pct"] < 2.0,
+                  f"obs=spans overhead < 2% of the off baseline "
+                  f"(got {spans_mode['overhead_pct']}%)")
+            check(full_mode["overhead_pct"] < 5.0,
+                  f"obs=full overhead < 5% of the off baseline "
+                  f"(got {full_mode['overhead_pct']}%)")
 
     if FAILURES:
         print(f"\n{len(FAILURES)} bench-trend failure(s)")

@@ -13,10 +13,16 @@ exporter promises:
   capture is sorted); counter (`ph:"C"`) events only for known counters.
 * JSONL: one `meta` header line (version 1, known mode/clock), then only
   known record types with the required integer fields; span lines sorted
-  by (t_ns, entity, seq) and seq strictly increasing per entity.
+  by (t_ns, entity, seq) and seq unique per entity. Note seq is NOT
+  monotone within an entity after the sort: envelope spans (`round`,
+  `gather_wait`) carry their *open*-time t_ns but their *drop*-time seq,
+  so a later-starting inner span (`recv`, `frame_build`, `broadcast`)
+  legitimately follows the envelope line with a smaller seq.
 
 Usage: check_trace.py TRACE.json [TRACE.jsonl ...]; exit 0 = every file
-valid, 1 otherwise (one line per failure).
+valid, 1 otherwise (one line per failure). `check_trace.py --self-test`
+validates the checker itself against built-in fixtures (including the
+envelope-span seq pattern above) without needing a trace export.
 """
 
 import json
@@ -135,11 +141,16 @@ def check_jsonl(path):
                 if last_key is not None and key3 < last_key:
                     fail(path, f"{where}: spans not sorted by (t_ns, entity, seq)")
                 last_key = key3
-                prev = per_entity_seq.get(obj["entity"])
-                if prev is not None and obj["seq"] <= prev:
-                    fail(path, f"{where}: seq not strictly increasing for "
+                # seq is each recorder thread's monotone counter, assigned
+                # at span *drop*; after the (t_ns, entity, seq) sort it is
+                # unique per entity but not ordered (envelope spans open
+                # early and drop late). Uniqueness is what makes the sort
+                # key a total order, so that is what we check.
+                seen = per_entity_seq.setdefault(obj["entity"], set())
+                if obj["seq"] in seen:
+                    fail(path, f"{where}: duplicate seq {obj['seq']} for "
                                f"entity {obj['entity']}")
-                per_entity_seq[obj["entity"]] = obj["seq"]
+                seen.add(obj["seq"])
         elif kind == "counter":
             if obj.get("name") not in COUNTERS:
                 fail(path, f"{where}: unknown counter {obj.get('name')!r}")
@@ -166,10 +177,84 @@ def check_jsonl(path):
     print(f"  ok: {path} ({span_count} spans)")
 
 
+def self_test():
+    """Validate the checker against built-in fixtures shaped like a real
+    leader export: envelope spans (round, gather_wait) carry their open-time
+    t_ns and drop-time seq, so after the (t_ns, entity, seq) sort, inner
+    spans with later t_ns but smaller seq follow them — the pattern every
+    leader trace contains and the checker must accept."""
+    import tempfile
+
+    # Leader round on entity 0: recv x2 drop first (seq 0, 1), then
+    # gather_wait (seq 2), frame_build (seq 3), broadcast (seq 4), and the
+    # round envelope last (seq 5, t_ns back at the round start). Sorted by
+    # (t_ns, entity, seq) the envelopes precede inner spans with larger seq.
+    spans = [  # (phase, t_ns, dur_ns, seq, bytes), already (t_ns, entity, seq)-sorted
+        ("gather_wait", 0, 30, 2, 0),
+        ("round", 0, 60, 5, 0),
+        ("recv", 10, 3, 0, 64),
+        ("recv", 12, 3, 1, 64),
+        ("frame_build", 35, 4, 3, 128),
+        ("broadcast", 40, 15, 4, 256),
+    ]
+    jsonl = [json.dumps({"type": "meta", "version": 1, "mode": "full",
+                         "clock": "virtual", "spans": len(spans),
+                         "dropped": 0})]
+    for phase, t_ns, dur_ns, seq, nbytes in spans:
+        jsonl.append(json.dumps({"type": "span", "phase": phase, "entity": 0,
+                                 "round": 0, "t_ns": t_ns, "dur_ns": dur_ns,
+                                 "bytes": nbytes, "seq": seq}))
+    jsonl.append(json.dumps({"type": "counter", "name": "frames_recv",
+                             "value": 2}))
+    jsonl.append(json.dumps({"type": "hist", "name": "gather_wait_ns",
+                             "buckets": [[5, 1]]}))
+    chrome = {
+        "displayTimeUnit": "ms",
+        "traceEvents": [
+            {"name": phase, "cat": "tng", "ph": "X", "ts": t_ns / 1000.0,
+             "dur": dur_ns / 1000.0, "pid": 0, "tid": 0,
+             "args": {"round": 0, "bytes": nbytes, "seq": seq}}
+            for phase, t_ns, dur_ns, seq, nbytes in spans
+        ] + [{"name": "frames_recv", "cat": "tng", "ph": "C", "ts": 0,
+              "pid": 0, "tid": 0, "args": {"value": 2}}],
+    }
+    with tempfile.TemporaryDirectory() as tmp:
+        jl = Path(tmp) / "fixture.jsonl"
+        jl.write_text("\n".join(jsonl) + "\n")
+        cj = Path(tmp) / "fixture.json"
+        cj.write_text(json.dumps(chrome))
+        check_jsonl(jl)
+        check_chrome(cj)
+        if FAILURES:
+            print(f"\nself-test FAILED: a valid leader-shaped trace was "
+                  f"rejected ({len(FAILURES)} failure(s))")
+            return 1
+        # A duplicated (entity, seq) pair must be rejected: append a copy
+        # of an existing span line (bumping t_ns to keep the sort valid).
+        dup = json.loads(jsonl[-3])
+        dup["t_ns"] += 1000
+        bad = Path(tmp) / "dup.jsonl"
+        meta = json.loads(jsonl[0])
+        meta["spans"] += 1
+        bad.write_text("\n".join([json.dumps(meta)] + jsonl[1:] +
+                                 [json.dumps(dup)]) + "\n")
+        before = len(FAILURES)
+        check_jsonl(bad)
+        dup_caught = any("duplicate seq" in f for f in FAILURES[before:])
+        del FAILURES[before:]
+        if not dup_caught:
+            print("\nself-test FAILED: duplicate per-entity seq not caught")
+            return 1
+    print("\nself-test ok")
+    return 0
+
+
 def main():
     if len(sys.argv) < 2:
         print(__doc__)
         return 2
+    if sys.argv[1] == "--self-test":
+        return self_test()
     for arg in sys.argv[1:]:
         path = Path(arg)
         if not path.is_file():
