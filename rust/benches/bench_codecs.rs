@@ -122,7 +122,7 @@ fn main() {
                 black_box(scratch.enc.dim)
             })
             .report_throughput(4 * d);
-            let Payload::Entropy { inner, coded } = &scratch.enc.payload else {
+            let Payload::Entropy { inner, coded, .. } = &scratch.enc.payload else {
                 unreachable!("entropy codec must emit an entropy payload")
             };
             println!(
@@ -187,6 +187,113 @@ fn main() {
 
     // ---- PR-7 kernel dispatch: scalar vs AVX2, unfused vs fused ---------
     bench_kernels(&mut rng);
+
+    // ---- PR-10 parallel entropy coding ----------------------------------
+    bench_entropy(&mut rng);
+}
+
+/// PR-10 parallel-entropy benchmarks: the serial legacy (lane=1, one shared
+/// model bank, single thread) entropy path vs the interleaved-lane +
+/// per-shard-bank + threaded-section coder, and the flat lane-ILP A/B.
+/// Emits BENCH_PR10.json (checked by scripts/check_bench_trend.py). The
+/// inner quantize stage is configured identically on both sides, so the
+/// sharded A/B isolates the entropy stage this PR parallelizes; the wire
+/// invariance flags witness that none of it changes bytes.
+fn bench_entropy(rng: &mut Rng) {
+    println!("# PR-10 parallel entropy coding: lanes, per-shard banks, threaded sections");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pow = 24u32;
+    let d = 1usize << pow;
+    let v = randv(rng, d);
+    let bytes = 4 * d;
+
+    // Sharded path: serial legacy coder vs the full parallel pipeline.
+    // Inner quantize: 16 shards on up to 16 threads in BOTH configs.
+    let quant = || ShardedCodec::new(TernaryCodec, 16);
+    let serial = EntropyCodec::new(quant()).with_lanes(1).with_threads(1);
+    let parallel = EntropyCodec::new(quant());
+    let mut scratch = CodecScratch::new();
+    scratch.warm(d);
+    let mut r = Rng::new(31);
+    let res_serial = bench(&format!("entropy_serial[lane1,1thr]/shard16-ternary/d{d}"), BUDGET, || {
+        serial.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+        black_box(scratch.enc.dim)
+    });
+    res_serial.report_throughput(bytes);
+    let mut r = Rng::new(31);
+    let res_par = bench(&format!("entropy_parallel[lane4,auto]/shard16-ternary/d{d}"), BUDGET, || {
+        parallel.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+        black_box(scratch.enc.dim)
+    });
+    res_par.report_throughput(bytes);
+    let (ser_ns, par_ns) = (
+        1e9 * res_serial.mean.as_secs_f64() / d as f64,
+        1e9 * res_par.mean.as_secs_f64() / d as f64,
+    );
+    let shard_speedup = ser_ns / par_ns;
+    println!(
+        "entropy/sharded16/2^{pow}: serial {ser_ns:.2} ns/elt, parallel {par_ns:.2} ns/elt, \
+         {shard_speedup:.2}x ({cores} cores)"
+    );
+
+    // Flat path: lane ILP alone (single thread, streamed fused in both).
+    let flat1 = EntropyCodec::new(TernaryCodec).with_lanes(1);
+    let flat4 = EntropyCodec::new(TernaryCodec);
+    let mut r = Rng::new(33);
+    let res_l1 = bench(&format!("entropy_flat[lane1]/ternary/d{d}"), BUDGET, || {
+        flat1.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+        black_box(scratch.enc.dim)
+    });
+    res_l1.report_throughput(bytes);
+    let mut r = Rng::new(33);
+    let res_l4 = bench(&format!("entropy_flat[lane4]/ternary/d{d}"), BUDGET, || {
+        flat4.encode_into(black_box(&v), &mut r, &mut scratch.enc);
+        black_box(scratch.enc.dim)
+    });
+    res_l4.report_throughput(bytes);
+    let (l1_ns, l4_ns) = (
+        1e9 * res_l1.mean.as_secs_f64() / d as f64,
+        1e9 * res_l4.mean.as_secs_f64() / d as f64,
+    );
+    let lane_speedup = l1_ns / l4_ns;
+    println!("entropy/flat-lanes/2^{pow}: lane1 {l1_ns:.2} ns/elt, lane4 {l4_ns:.2} ns/elt, {lane_speedup:.2}x");
+
+    // Wire invariance witnesses. lane=1 must equal the frozen serial frame
+    // byte for byte; the v2 envelope must not depend on the thread count.
+    let mut r = Rng::new(35);
+    let mut out = tng::codec::Encoded::empty();
+    flat1.encode_into(&v[..1 << 20], &mut r, &mut out);
+    let lane1_match = {
+        let Payload::Entropy { inner, coded, .. } = &out.payload else { unreachable!() };
+        let mut reference = Vec::new();
+        tng::codec::entropy::encode_frame(inner, &mut reference);
+        *coded == reference
+    };
+    let thread_invariant = {
+        let enc_with = |threads: usize| {
+            let c = EntropyCodec::new(quant()).with_threads(threads);
+            let mut r = Rng::new(37);
+            let mut out = tng::codec::Encoded::empty();
+            c.encode_into(&v[..1 << 22], &mut r, &mut out);
+            wire::to_bytes(&out)
+        };
+        enc_with(1) == enc_with(cores.max(2))
+    };
+    println!("entropy/wire: lane1_bytes_match_serial={lane1_match} thread_invariant={thread_invariant}");
+
+    let json = format!(
+        "{{\n  \"_meta\": {{\"provenance\": \"measured\", \"cores\": {cores}}},\n  \
+         \"entropy-sharded16-2^{pow}\": {{\"serial_ns_per_elt\": {ser_ns:.4}, \
+         \"parallel_ns_per_elt\": {par_ns:.4}, \"speedup\": {shard_speedup:.4}, \
+         \"lanes\": 4, \"threads\": {}}},\n  \
+         \"entropy-flat-lanes-2^{pow}\": {{\"lane1_ns_per_elt\": {l1_ns:.4}, \
+         \"lane4_ns_per_elt\": {l4_ns:.4}, \"speedup\": {lane_speedup:.4}}},\n  \
+         \"wire-invariance\": {{\"lane1_bytes_match_serial\": {lane1_match}, \
+         \"thread_invariant_bytes\": {thread_invariant}}}\n}}\n",
+        cores.min(16)
+    );
+    std::fs::write("BENCH_PR10.json", &json).expect("write BENCH_PR10.json");
+    println!("# wrote BENCH_PR10.json");
 }
 
 fn clone_codec(label: &str) -> Box<dyn Codec> {

@@ -50,6 +50,52 @@ impl Codec for ChunkedTernaryCodec {
             }
         }
     }
+
+    /// Streamed encode in two passes: all chunk scales first (`abs_max`
+    /// draws no randomness, so this reorders nothing), then per-chunk
+    /// quantize + sink. Draw order and output are bit-identical to
+    /// [`Codec::encode_into`]; the per-chunk scales are all final before
+    /// the first sink call, as the streaming contract requires.
+    fn encode_streamed(
+        &self,
+        v: &[f32],
+        _reduced: Option<f64>,
+        rng: &mut Rng,
+        out: &mut Encoded,
+        sink: &mut dyn FnMut(&Encoded, std::ops::Range<usize>),
+    ) -> bool {
+        debug_assert!(
+            simd::first_non_finite(v).is_none(),
+            "non-finite gradient reached ChunkedTernaryCodec (use try_encode_into)"
+        );
+        out.dim = v.len();
+        {
+            let (chunk, scales, codes) = out.payload.ternary_chunked_mut();
+            *chunk = self.chunk as u32;
+            codes.clear();
+            codes.resize(v.len(), 0);
+            scales.clear();
+            for block in v.chunks(self.chunk) {
+                scales.push(simd::abs_max(block));
+            }
+        }
+        if v.is_empty() {
+            sink(out, 0..0);
+            return true;
+        }
+        for (ci, block) in v.chunks(self.chunk).enumerate() {
+            let base = ci * self.chunk;
+            {
+                let (_, scales, codes) = out.payload.ternary_chunked_mut();
+                let r = scales[ci];
+                if r > 0.0 {
+                    simd::ternary_quantize(block, 1.0 / r, rng, &mut codes[base..base + block.len()]);
+                }
+            }
+            sink(out, base..base + block.len());
+        }
+        true
+    }
 }
 
 #[cfg(test)]

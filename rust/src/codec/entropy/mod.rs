@@ -5,8 +5,9 @@
 //! estimate that. This module makes it real: a self-contained adaptive
 //! range coder ([`rc`]) with per-payload-family symbol models ([`models`])
 //! turns any [`Encoded`] message into an actual compressed byte stream that
-//! crosses the wire behind its own tag (`codec::wire` tag 6, length-
-//! prefixed), so wire totals on every runtime are *measured* bytes.
+//! crosses the wire behind its own tag (`codec::wire` tag 6 for the serial
+//! v1 stream, tag 7 for the interleaved lane envelope, both
+//! length-prefixed), so wire totals on every runtime are *measured* bytes.
 //!
 //! # Using it
 //!
@@ -25,7 +26,7 @@
 //! assert_eq!(bytes.len(), 9 + coded.len()); // tag + dim + length prefix
 //! ```
 //!
-//! # Stream format
+//! # Serial stream format (v1, `lanes == 1`, wire tag 6)
 //!
 //! One frame is one range-coder stream (4-byte init window, 4-byte flush,
 //! one byte per renormalization in between) coding, in order: the inner
@@ -47,42 +48,88 @@
 //! Sparse index gaps are `index.wrapping_sub(prev + 1)` so sorted pair
 //! lists (what `SparseCodec` emits) become small symbols, while arbitrary
 //! hand-built lists still round-trip exactly. A sharded message shares one
-//! model bank across its parts — homogeneous shards keep sharpening the
-//! same distributions.
+//! model bank across its parts in this format — which is also why v1
+//! cannot encode shards concurrently; that is what the lane envelope fixes.
+//! This format is frozen: one-lane frames are byte-identical to every
+//! stream emitted before lanes existed.
+//!
+//! # Lane envelope (v2, `lanes >= 2`, wire tag 7)
+//!
+//! ```text
+//! envelope := lanes u8 | kind u8 | body
+//! kind 0x00 (flat)    : body := lane_group          — one group, whole payload
+//! kind 0x01 (sharded) : body := nparts u32le
+//!                             | { part_dim u32le, sec_len u32le } × nparts
+//!                             | section × nparts    — section := lane_group
+//! lane_group := lane_len u32le × (lanes − 1) | lane_stream × lanes
+//! ```
+//!
+//! Each `lane_group` is the interleaved-lane encoding of one payload
+//! (decision `k` on lane `k % lanes`, see [`rc`]): shared model bank,
+//! per-lane byte streams, terminator coded in-stream, last lane's length
+//! implied by the remainder. The sharded kind is used exactly when the
+//! top-level payload is a non-empty `Sharded`: every part becomes its own
+//! section with a **fresh model bank**, so sections are independent byte
+//! strings — they can be encoded on any number of threads (and placed in
+//! table order afterwards) without changing a single byte, and decoded the
+//! same way. Nested payloads inside a section (a part that is itself
+//! sharded, or an entropy envelope) code in-stream exactly as in v1, except
+//! that a nested `Entropy` payload in a v2 stream carries its lane count
+//! before its length so mixed compositions round-trip. One lane inside an
+//! envelope is a decode error: the canonical encoding of a one-lane frame
+//! is v1/tag 6, so every message still has exactly one wire encoding.
 //!
 //! # Determinism and safety
 //!
-//! * Models are fixed-size, integer-only, and **reset per frame**: a frame
-//!   is a pure function of the inner message, identical on every platform
-//!   and runtime (driver ≡ channel ≡ TCP, like every other frame).
-//! * Decoding is strict: byte reads past the stream error (truncation is a
-//!   deterministic failure, never zero-fill), the terminator must match,
-//!   the stream must be consumed exactly, and all `codec::wire` structural
-//!   rules (sparse bounds, shard tiling, nesting depth) are re-enforced.
+//! * Models are fixed-size, integer-only, and **reset per frame** (and per
+//!   section): a frame is a pure function of the inner message and the
+//!   lane count, identical on every platform, runtime, thread count, and
+//!   SIMD backend (driver ≡ channel ≡ TCP ≡ sim, like every other frame).
+//! * Decoding is strict: byte reads past a lane error (truncation is a
+//!   deterministic failure, never zero-fill), lane-length prefixes must
+//!   stay inside the group, section lengths must tile the body exactly,
+//!   the terminator must match, every lane must be consumed exactly, and
+//!   all `codec::wire` structural rules (sparse bounds, shard tiling,
+//!   nesting depth) are re-enforced.
 //! * `dim` is capped at [`MAX_ENTROPY_DIM`] and total sharded parts per
 //!   frame at [`MAX_ENTROPY_PARTS`]: an entropy stream can encode
 //!   thousands of symbols per byte, so explicit caps bound
 //!   decompression-bomb allocations the way `codec::wire`'s
-//!   physical-byte arithmetic bounds forged headers.
+//!   physical-byte arithmetic bounds forged headers. The envelope's
+//!   section table costs 8 physical bytes per part, which bounds forged
+//!   part counts against the body length as well.
 
 pub mod models;
 pub mod rc;
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 
 use self::models::Models;
-use self::rc::{RangeDecoder, RangeEncoder};
+use self::rc::{RangeDecoder, RangeEncoder, MAX_LANES};
 use super::wire::{
     MAX_SHARD_DEPTH, TAG_DENSE, TAG_ENTROPY, TAG_QUANTIZED, TAG_SHARDED, TAG_SPARSE,
     TAG_TERNARY, TAG_TERNARY_CHUNKED,
 };
-use super::{Codec, Encoded, Payload};
+use super::{Codec, Encoded, Payload, Reduction};
 use crate::util::Rng;
 
 /// Terminator byte coded (as direct bits) after the payload: a desynced or
 /// corrupted stream fails this check with probability ≥ 255/256 even when
 /// it happens to survive the structural checks.
 const FRAME_MAGIC: u32 = 0xA5;
+
+/// Default lane count for new entropy envelopes. A wire constant, not a
+/// tuning knob: two peers must agree on the byte stream, so the lane count
+/// travels in the envelope and this default only decides what encoders
+/// emit. 4 lanes keeps the whole working set (4 × low/range) in registers
+/// while covering the ~3-cycle renormalization dependency chain.
+pub const ENTROPY_LANES: usize = 4;
+
+/// Envelope section kinds (byte 1 of a v2 envelope).
+const SEC_FLAT: u8 = 0x00;
+const SEC_SHARDED: u8 = 0x01;
 
 /// Decompression-bomb guard: frames claiming more coordinates than this are
 /// rejected before any symbol is decoded (2^26 ≈ 67M coordinates — far past
@@ -98,10 +145,116 @@ pub const MAX_ENTROPY_DIM: usize = 1 << 26;
 /// orders of magnitude past any real shard plan (shards ≈ cores).
 pub const MAX_ENTROPY_PARTS: usize = 1 << 16;
 
-/// Encode `e`'s payload as one entropy stream, appending to `out` (which
-/// the [`EntropyCodec`] hot path reuses round to round). Panics on
-/// structurally invalid payloads (non-ternary codes, `i16::MIN` levels,
-/// dim over [`MAX_ENTROPY_DIM`]) — the same contract as `wire::write_into`.
+// ---------------------------------------------------------------------------
+// Lane scratch: per-thread byte buffers for lane streams.
+// ---------------------------------------------------------------------------
+
+/// Per-thread lane byte buffers. Lane streams are assembled here and then
+/// copied (prefix table + concatenation) into the caller's `coded` buffer;
+/// keeping them thread-local means the steady-state encode path allocates
+/// nothing once warm, and threaded section encoding needs no locking.
+struct LaneScratch {
+    lanes: [Vec<u8>; MAX_LANES],
+}
+
+thread_local! {
+    static SCRATCH: RefCell<LaneScratch> = RefCell::new(LaneScratch {
+        lanes: Default::default(),
+    });
+}
+
+/// Run `f` over this thread's first `lanes` lane buffers, cleared but with
+/// their capacity intact. Not reentrant (the nested-entropy arm copies raw
+/// bytes instead of recursing, so nothing on the encode path re-enters).
+fn with_lane_bufs<R>(lanes: usize, f: impl FnOnce(&mut [Vec<u8>]) -> R) -> R {
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        let bufs = &mut s.lanes[..lanes];
+        for b in bufs.iter_mut() {
+            b.clear();
+        }
+        f(bufs)
+    })
+}
+
+/// Pre-reserve this thread's lane buffers for dimension `dim` (the
+/// `CodecScratch::warm` hook): the model banks live on the stack, so the
+/// lane byte buffers are the only heap state the entropy path touches.
+pub(crate) fn warm_lane_scratch(dim: usize) {
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        for (l, buf) in s.lanes.iter_mut().enumerate() {
+            // Ternary payloads code ≲ 2 bits/elt, split across the default
+            // lane count; anything hotter grows once and stays.
+            let want = if l < ENTROPY_LANES { dim / 4 + 64 } else { 64 };
+            buf.reserve(want.saturating_sub(buf.len()));
+        }
+    });
+}
+
+/// Append one lane group for `body`'s decisions: fresh interleaved encoder,
+/// in-stream terminator, then `(lanes − 1)` length prefixes and the
+/// concatenated lane streams.
+fn encode_group(
+    lanes: usize,
+    out: &mut Vec<u8>,
+    body: impl FnOnce(&mut Models, &mut RangeEncoder),
+) {
+    with_lane_bufs(lanes, |bufs| {
+        let mut ms = Models::new();
+        let mut enc = RangeEncoder::interleaved(bufs);
+        body(&mut ms, &mut enc);
+        enc.encode_direct(FRAME_MAGIC, 8);
+        enc.finish();
+        write_group_bytes(lanes, bufs, out);
+    })
+}
+
+/// Serialize already-encoded lane buffers as a lane group.
+fn write_group_bytes(lanes: usize, bufs: &[Vec<u8>], out: &mut Vec<u8>) {
+    for b in &bufs[..lanes - 1] {
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    }
+    for b in &bufs[..lanes] {
+        out.extend_from_slice(b);
+    }
+}
+
+/// Split one lane group back into per-lane slices. Every prefix must stay
+/// inside the group; the last lane takes the remainder (its length is
+/// implied, so the group itself cannot carry trailing garbage — appended
+/// bytes land in the last lane and fail its exact-consumption check).
+fn split_group(lanes: usize, buf: &[u8]) -> Result<[&[u8]; MAX_LANES]> {
+    let npfx = lanes - 1;
+    let Some(streams_len) = buf.len().checked_sub(4 * npfx) else {
+        bail!("entropy lane group truncated: {} bytes for {lanes} lanes", buf.len());
+    };
+    let mut slices: [&[u8]; MAX_LANES] = [&[]; MAX_LANES];
+    let mut off = 4 * npfx;
+    let mut used = 0usize;
+    for (i, slot) in slices.iter_mut().enumerate().take(npfx) {
+        let len =
+            u32::from_le_bytes(buf[4 * i..4 * i + 4].try_into().unwrap()) as usize;
+        if len > streams_len - used {
+            bail!("entropy lane {i} length {len} overflows the group");
+        }
+        *slot = &buf[off..off + len];
+        off += len;
+        used += len;
+    }
+    slices[npfx] = &buf[off..];
+    Ok(slices)
+}
+
+// ---------------------------------------------------------------------------
+// v1: the frozen serial frame.
+// ---------------------------------------------------------------------------
+
+/// Encode `e`'s payload as one serial (v1) entropy stream, appending to
+/// `out` (which the [`EntropyCodec`] hot path reuses round to round).
+/// Panics on structurally invalid payloads (non-ternary codes, `i16::MIN`
+/// levels, dim over [`MAX_ENTROPY_DIM`], a nested lane envelope) — the
+/// same contract as `wire::write_into`.
 pub fn encode_frame(e: &Encoded, out: &mut Vec<u8>) {
     assert!(e.dim <= MAX_ENTROPY_DIM, "dim {} exceeds entropy cap", e.dim);
     assert!(
@@ -126,9 +279,9 @@ fn count_parts(e: &Encoded) -> usize {
     }
 }
 
-/// Decode one entropy stream back into the message it was built from.
-/// `dim` comes from the outer wire header; `depth` continues the wire
-/// parser's nesting budget.
+/// Decode one serial (v1) entropy stream back into the message it was
+/// built from. `dim` comes from the outer wire header; `depth` continues
+/// the wire parser's nesting budget.
 pub fn decode_frame(buf: &[u8], dim: usize, depth: usize) -> Result<Encoded> {
     if dim > MAX_ENTROPY_DIM {
         bail!("entropy frame dim {dim} exceeds cap {MAX_ENTROPY_DIM}");
@@ -144,14 +297,217 @@ pub fn decode_frame(buf: &[u8], dim: usize, depth: usize) -> Result<Encoded> {
     Ok(Encoded { dim, payload })
 }
 
-/// Wrap an already-encoded message in an entropy-coded envelope (the
-/// allocating convenience used by tests and cold paths; the codec hot path
-/// is [`EntropyCodec::encode_into`]).
-pub fn wrap(inner: Encoded) -> Encoded {
-    let mut coded = Vec::new();
-    encode_frame(&inner, &mut coded);
-    Encoded { dim: inner.dim, payload: Payload::Entropy { inner: Box::new(inner), coded } }
+// ---------------------------------------------------------------------------
+// v2: the interleaved lane envelope.
+// ---------------------------------------------------------------------------
+
+/// Encode `e`'s payload as a v2 lane envelope (`lanes >= 2`), appending to
+/// `out`. A non-empty sharded payload becomes one section per part, each
+/// with a fresh model bank; `threads > 1` encodes sections concurrently
+/// (scoped threads, strided assignment) **without changing a byte** —
+/// sections are placed in table order regardless of which thread produced
+/// them. Panic contract matches [`encode_frame`].
+pub fn encode_envelope(e: &Encoded, lanes: usize, threads: usize, out: &mut Vec<u8>) {
+    assert!(
+        (2..=MAX_LANES).contains(&lanes),
+        "envelope lane count {lanes} outside 2..={MAX_LANES} (one lane is tag 6)"
+    );
+    assert!(e.dim <= MAX_ENTROPY_DIM, "dim {} exceeds entropy cap", e.dim);
+    assert!(
+        count_parts(e) <= MAX_ENTROPY_PARTS,
+        "sharded payload exceeds the {MAX_ENTROPY_PARTS}-part entropy cap"
+    );
+    out.push(lanes as u8);
+    match &e.payload {
+        Payload::Sharded { parts } if !parts.is_empty() => {
+            out.push(SEC_SHARDED);
+            out.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+            let table_pos = out.len();
+            for p in parts {
+                out.extend_from_slice(&(p.dim as u32).to_le_bytes());
+                out.extend_from_slice(&0u32.to_le_bytes()); // sec_len, patched below
+            }
+            let nthreads = threads
+                .max(1)
+                .min(parts.len())
+                .min(if e.dim >= super::sharded::PARALLEL_MIN_DIM { usize::MAX } else { 1 });
+            if nthreads > 1 {
+                // Thread t encodes parts t, t+n, t+2n, … into its own
+                // section buffers (its own lane scratch); the main thread
+                // then lays sections out in part order and patches the
+                // table, so the bytes are identical to the serial path.
+                let results: Vec<Vec<(usize, Vec<u8>)>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..nthreads)
+                        .map(|t| {
+                            let parts = &parts[..];
+                            scope.spawn(move || {
+                                let mut secs = Vec::new();
+                                let mut i = t;
+                                while i < parts.len() {
+                                    let mut sec = Vec::new();
+                                    encode_group(lanes, &mut sec, |ms, enc| {
+                                        encode_payload(&parts[i], ms, enc)
+                                    });
+                                    secs.push((i, sec));
+                                    i += nthreads;
+                                }
+                                secs
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                let mut ordered: Vec<Option<Vec<u8>>> = vec![None; parts.len()];
+                for secs in results {
+                    for (i, sec) in secs {
+                        ordered[i] = Some(sec);
+                    }
+                }
+                for (i, sec) in ordered.into_iter().enumerate() {
+                    let sec = sec.expect("every part encoded exactly once");
+                    let pos = table_pos + 8 * i + 4;
+                    out[pos..pos + 4].copy_from_slice(&(sec.len() as u32).to_le_bytes());
+                    out.extend_from_slice(&sec);
+                }
+            } else {
+                for (i, p) in parts.iter().enumerate() {
+                    let start = out.len();
+                    encode_group(lanes, out, |ms, enc| encode_payload(p, ms, enc));
+                    let sec_len = (out.len() - start) as u32;
+                    let pos = table_pos + 8 * i + 4;
+                    out[pos..pos + 4].copy_from_slice(&sec_len.to_le_bytes());
+                }
+            }
+        }
+        _ => {
+            out.push(SEC_FLAT);
+            encode_group(lanes, out, |ms, enc| encode_payload(e, ms, enc));
+        }
+    }
 }
+
+/// Decode a v2 lane envelope. `dim`/`depth` as in [`decode_frame`].
+pub fn decode_envelope(buf: &[u8], dim: usize, depth: usize) -> Result<Encoded> {
+    if dim > MAX_ENTROPY_DIM {
+        bail!("entropy frame dim {dim} exceeds cap {MAX_ENTROPY_DIM}");
+    }
+    if buf.len() < 2 {
+        bail!("entropy envelope truncated: {} bytes", buf.len());
+    }
+    let lanes = buf[0] as usize;
+    if !(2..=MAX_LANES).contains(&lanes) {
+        bail!("entropy envelope lane count {lanes} outside 2..={MAX_LANES}");
+    }
+    let kind = buf[1];
+    let body = &buf[2..];
+    let mut parts_budget = MAX_ENTROPY_PARTS;
+    match kind {
+        SEC_FLAT => {
+            let slices = split_group(lanes, body)?;
+            let mut ms = Models::new();
+            let mut dec = RangeDecoder::interleaved(&slices[..lanes])?;
+            let payload = decode_payload(&mut dec, &mut ms, dim, depth, &mut parts_budget)?;
+            if dec.decode_direct(8)? != FRAME_MAGIC {
+                bail!("entropy frame terminator mismatch (corrupted or desynced stream)");
+            }
+            dec.finish()?;
+            Ok(Encoded { dim, payload })
+        }
+        SEC_SHARDED => {
+            if depth >= MAX_SHARD_DEPTH {
+                bail!("sharded frame nested deeper than {MAX_SHARD_DEPTH}");
+            }
+            if body.len() < 4 {
+                bail!("entropy envelope section table truncated");
+            }
+            let nparts = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+            if nparts == 0 {
+                bail!("sharded lane envelope with zero parts (must be flat)");
+            }
+            if nparts > dim.max(1) {
+                bail!("sharded part count {nparts} exceeds dim {dim}");
+            }
+            if nparts > parts_budget {
+                bail!("sharded part count {nparts} exceeds the frame's part budget");
+            }
+            // The table costs 8 physical bytes per part, so the body length
+            // bounds forged counts before any allocation.
+            if nparts > (body.len() - 4) / 8 {
+                bail!("sharded part count {nparts} exceeds envelope capacity {}", body.len());
+            }
+            parts_budget -= nparts;
+            let table = &body[4..4 + 8 * nparts];
+            let mut secs = &body[4 + 8 * nparts..];
+            let mut parts = Vec::with_capacity(nparts);
+            let mut covered = 0usize;
+            for i in 0..nparts {
+                let part_dim =
+                    u32::from_le_bytes(table[8 * i..8 * i + 4].try_into().unwrap()) as usize;
+                let sec_len =
+                    u32::from_le_bytes(table[8 * i + 4..8 * i + 8].try_into().unwrap()) as usize;
+                if part_dim > dim.saturating_sub(covered) {
+                    bail!("shard dims overflow the message dim {dim}");
+                }
+                if sec_len > secs.len() {
+                    bail!("entropy section truncated: {} < {sec_len}", secs.len());
+                }
+                let sec = &secs[..sec_len];
+                secs = &secs[sec_len..];
+                // Fresh bank per section, mirroring the encoder.
+                let slices = split_group(lanes, sec)?;
+                let mut ms = Models::new();
+                let mut dec = RangeDecoder::interleaved(&slices[..lanes])?;
+                let payload =
+                    decode_payload(&mut dec, &mut ms, part_dim, depth + 1, &mut parts_budget)?;
+                if dec.decode_direct(8)? != FRAME_MAGIC {
+                    bail!("entropy frame terminator mismatch (corrupted or desynced stream)");
+                }
+                dec.finish()?;
+                covered += part_dim;
+                parts.push(Encoded { dim: part_dim, payload });
+            }
+            if covered != dim {
+                bail!("shard dims total {covered}, expected {dim}");
+            }
+            if !secs.is_empty() {
+                bail!("{} trailing bytes after entropy sections", secs.len());
+            }
+            Ok(Encoded { dim, payload: Payload::Sharded { parts } })
+        }
+        other => bail!("unknown entropy envelope kind {other}"),
+    }
+}
+
+/// Wrap an already-encoded message in an entropy envelope with the default
+/// lane count (the allocating convenience used by tests and cold paths; the
+/// codec hot path is [`EntropyCodec::encode_into`]). Matches the bytes the
+/// default [`EntropyCodec`] emits for the same inner message.
+pub fn wrap(inner: Encoded) -> Encoded {
+    wrap_lanes(inner, ENTROPY_LANES)
+}
+
+/// [`wrap`] with an explicit lane count; `lanes == 1` produces the frozen
+/// serial v1 frame (wire tag 6).
+pub fn wrap_lanes(inner: Encoded, lanes: usize) -> Encoded {
+    let mut coded = Vec::new();
+    if lanes <= 1 {
+        encode_frame(&inner, &mut coded);
+        Encoded {
+            dim: inner.dim,
+            payload: Payload::Entropy { inner: Box::new(inner), coded, lanes: 1 },
+        }
+    } else {
+        encode_envelope(&inner, lanes, 1, &mut coded);
+        Encoded {
+            dim: inner.dim,
+            payload: Payload::Entropy { inner: Box::new(inner), coded, lanes: lanes as u8 },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payload symbol coding (shared by v1 streams and v2 lane groups).
+// ---------------------------------------------------------------------------
 
 fn encode_payload(e: &Encoded, ms: &mut Models, enc: &mut RangeEncoder) {
     match &e.payload {
@@ -204,13 +560,72 @@ fn encode_payload(e: &Encoded, ms: &mut Models, enc: &mut RangeEncoder) {
                 encode_payload(p, ms, enc);
             }
         }
-        Payload::Entropy { coded, .. } => {
+        Payload::Entropy { coded, lanes, .. } => {
             ms.put_tag(enc, TAG_ENTROPY);
-            ms.put_u32(enc, coded.len() as u32);
+            if enc.lanes() == 1 {
+                // v1 streams are frozen: they predate lane envelopes and
+                // cannot describe one (PR 3 bit-compatibility).
+                assert!(
+                    *lanes <= 1,
+                    "a serial (v1) entropy stream cannot nest a lane envelope; \
+                     re-wrap the inner message with wrap_lanes(.., 1)"
+                );
+                ms.put_u32(enc, coded.len() as u32);
+            } else {
+                ms.put_u32(enc, (*lanes).max(1) as u32);
+                ms.put_u32(enc, coded.len() as u32);
+            }
             for &b in coded {
                 ms.put_raw_byte(enc, b);
             }
         }
+    }
+}
+
+/// Entropy-code the symbol slice `r` of `e` — plus, when `r.start == 0`,
+/// the payload tag and header fields. This is the streaming decomposition
+/// of [`encode_payload`] for the flat quantizer payloads: driving it with
+/// ranges that partition `0..dim` in order produces the identical decision
+/// sequence, hence identical bytes.
+fn encode_payload_range(
+    e: &Encoded,
+    r: std::ops::Range<usize>,
+    ms: &mut Models,
+    enc: &mut RangeEncoder,
+) {
+    match &e.payload {
+        Payload::Ternary { scale, codes } => {
+            if r.start == 0 {
+                ms.put_tag(enc, TAG_TERNARY);
+                ms.put_f32(enc, *scale);
+            }
+            for &c in &codes[r] {
+                ms.put_trit(enc, c);
+            }
+        }
+        Payload::TernaryChunked { chunk, scales, codes } => {
+            if r.start == 0 {
+                ms.put_tag(enc, TAG_TERNARY_CHUNKED);
+                ms.put_u32(enc, *chunk);
+                for &s in scales {
+                    ms.put_f32(enc, s);
+                }
+            }
+            for &c in &codes[r] {
+                ms.put_trit(enc, c);
+            }
+        }
+        Payload::Quantized { norm, levels, q } => {
+            if r.start == 0 {
+                ms.put_tag(enc, TAG_QUANTIZED);
+                ms.put_f32(enc, *norm);
+                ms.put_u32(enc, *levels);
+            }
+            for &x in &q[r] {
+                ms.put_level(enc, x);
+            }
+        }
+        _ => unreachable!("streaming codecs only emit flat quantizer payloads"),
     }
 }
 
@@ -322,6 +737,17 @@ fn decode_payload(
             if depth >= MAX_SHARD_DEPTH {
                 bail!("entropy frame nested deeper than {MAX_SHARD_DEPTH}");
             }
+            // In a v2 stream a nested entropy payload carries its lane
+            // count; v1 streams predate lanes and are always serial.
+            let nested_lanes = if dec.lanes() == 1 {
+                1usize
+            } else {
+                let l = ms.get_u32(dec)? as usize;
+                if !(1..=MAX_LANES).contains(&l) {
+                    bail!("nested entropy lane count {l} outside 1..={MAX_LANES}");
+                }
+                l
+            };
             let len = ms.get_u32(dec)? as usize;
             // A nested stream is range-coder output — incompressible — so a
             // *legitimate* outer stream is at least about as long as the
@@ -339,12 +765,23 @@ fn decode_payload(
             for _ in 0..len {
                 coded.push(ms.get_raw_byte(dec)?);
             }
-            let inner = decode_frame(&coded, dim, depth + 1)?;
-            Payload::Entropy { inner: Box::new(inner), coded }
+            let inner = if nested_lanes == 1 {
+                decode_frame(&coded, dim, depth + 1)?
+            } else {
+                if coded.first() != Some(&(nested_lanes as u8)) {
+                    bail!("nested envelope lane byte disagrees with its lane symbol");
+                }
+                decode_envelope(&coded, dim, depth + 1)?
+            };
+            Payload::Entropy { inner: Box::new(inner), coded, lanes: nested_lanes as u8 }
         }
         other => bail!("unknown payload tag {other}"),
     })
 }
+
+// ---------------------------------------------------------------------------
+// The codec.
+// ---------------------------------------------------------------------------
 
 /// `entropy:<inner>` — compress the wrapped codec's messages with the
 /// adaptive range coder, so everything downstream (wire totals, the
@@ -352,13 +789,148 @@ fn decode_payload(
 ///
 /// Statistically transparent: decode goes through the inner message, so
 /// unbiasedness and reconstruction error are exactly the inner codec's.
+///
+/// Encoding is fused where the inner codec supports
+/// [`Codec::encode_streamed`]: quantized symbols drain into the range coder
+/// in L1-resident blocks instead of a third full-memory pass, and with the
+/// default lane count the coder runs [`ENTROPY_LANES`] interleaved lanes.
+/// A non-empty sharded inner payload encodes one section per part (fresh
+/// model bank each) on up to `threads` scoped threads. None of this
+/// changes bytes: lane count is a wire constant, thread count and the
+/// streamed path are byte-invariant, and `with_lanes(1)` reproduces the
+/// frozen serial format bit-for-bit.
 pub struct EntropyCodec<C> {
     pub inner: C,
+    lanes: u8,
+    threads: usize,
 }
 
 impl<C: Codec> EntropyCodec<C> {
     pub fn new(inner: C) -> Self {
-        EntropyCodec { inner }
+        EntropyCodec {
+            inner,
+            lanes: ENTROPY_LANES as u8,
+            threads: super::sharded::default_threads(usize::MAX),
+        }
+    }
+
+    /// Set the lane count (1..=[`MAX_LANES`]); 1 selects the frozen serial
+    /// v1 format. Changes the wire bytes — both peers see the count in the
+    /// frame, so no out-of-band agreement is needed.
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        assert!(
+            (1..=MAX_LANES).contains(&lanes),
+            "lane count {lanes} outside 1..={MAX_LANES}"
+        );
+        self.lanes = lanes as u8;
+        self
+    }
+
+    /// Cap encode threads for sharded sections (≥ 1; default respects
+    /// `available_parallelism`). Never changes bytes.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        assert!(threads >= 1, "thread count must be >= 1");
+        self.threads = threads;
+        self
+    }
+
+    /// Shared body of [`Codec::encode_into`] / [`Codec::encode_reduced_into`].
+    fn encode_body(&self, v: &[f32], reduced: Option<f64>, rng: &mut Rng, out: &mut Encoded) {
+        assert!(v.len() <= MAX_ENTROPY_DIM, "dim {} exceeds entropy cap", v.len());
+        out.dim = v.len();
+        let (inner, coded, lanes_out) = out.payload.entropy_mut();
+        *lanes_out = self.lanes;
+        coded.clear();
+        let mut sp = crate::obs::span(crate::obs::Phase::EntropyEncode);
+        if self.lanes <= 1 {
+            self.encode_v1(v, reduced, rng, inner, coded);
+        } else {
+            self.encode_v2(v, reduced, rng, inner, coded);
+        }
+        if sp.active() {
+            sp.set_bytes(coded.len() as u64);
+        }
+    }
+
+    /// Serial v1 path: byte-identical to `encode_frame(inner)`, streamed
+    /// when the inner codec supports it.
+    fn encode_v1(
+        &self,
+        v: &[f32],
+        reduced: Option<f64>,
+        rng: &mut Rng,
+        inner: &mut Encoded,
+        coded: &mut Vec<u8>,
+    ) {
+        let mut ms = Models::new();
+        let mut enc = RangeEncoder::new(coded);
+        {
+            let mut sink = |e: &Encoded, r: std::ops::Range<usize>| {
+                encode_payload_range(e, r, &mut ms, &mut enc)
+            };
+            if self.inner.encode_streamed(v, reduced, rng, inner, &mut sink) {
+                drop(sink);
+                enc.encode_direct(FRAME_MAGIC, 8);
+                enc.finish();
+                return;
+            }
+        }
+        // No streaming path: full inner encode, then one coding pass —
+        // the exact `encode_frame` sequence (fresh models, untouched
+        // encoder), so the bytes match it bit for bit.
+        match reduced {
+            Some(red) => self.inner.encode_reduced_into(v, red, rng, inner),
+            None => self.inner.encode_into(v, rng, inner),
+        }
+        assert!(
+            count_parts(inner) <= MAX_ENTROPY_PARTS,
+            "sharded payload exceeds the {MAX_ENTROPY_PARTS}-part entropy cap"
+        );
+        encode_payload(inner, &mut ms, &mut enc);
+        enc.encode_direct(FRAME_MAGIC, 8);
+        enc.finish();
+    }
+
+    /// Lane-envelope path: streamed flat group when the inner codec
+    /// supports it, else a full inner encode fed to [`encode_envelope`]
+    /// (which shards into per-part sections on up to `self.threads`
+    /// threads). Both produce exactly the [`encode_envelope`] bytes.
+    fn encode_v2(
+        &self,
+        v: &[f32],
+        reduced: Option<f64>,
+        rng: &mut Rng,
+        inner: &mut Encoded,
+        coded: &mut Vec<u8>,
+    ) {
+        let lanes = self.lanes as usize;
+        let streamed = with_lane_bufs(lanes, |bufs| {
+            let mut ms = Models::new();
+            {
+                let mut enc = RangeEncoder::interleaved(bufs);
+                let mut sink = |e: &Encoded, r: std::ops::Range<usize>| {
+                    encode_payload_range(e, r, &mut ms, &mut enc)
+                };
+                if !self.inner.encode_streamed(v, reduced, rng, inner, &mut sink) {
+                    return false;
+                }
+                drop(sink);
+                enc.encode_direct(FRAME_MAGIC, 8);
+                enc.finish();
+            }
+            coded.push(self.lanes);
+            coded.push(SEC_FLAT);
+            write_group_bytes(lanes, bufs, coded);
+            true
+        });
+        if streamed {
+            return;
+        }
+        match reduced {
+            Some(red) => self.inner.encode_reduced_into(v, red, rng, inner),
+            None => self.inner.encode_into(v, rng, inner),
+        }
+        encode_envelope(inner, lanes, self.threads, coded);
     }
 }
 
@@ -368,19 +940,19 @@ impl<C: Codec> Codec for EntropyCodec<C> {
     }
 
     fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
-        out.dim = v.len();
-        let (inner, coded) = out.payload.entropy_mut();
-        self.inner.encode_into(v, rng, inner);
-        coded.clear();
-        // Headroom so the steady state never grows the buffer: real frames
-        // compress, so 2x the raw frame plus slack is far above any stream
-        // the coder emits for codec-produced payloads.
-        coded.reserve(2 * super::wire::frame_len(inner) + 64);
-        let mut sp = crate::obs::span(crate::obs::Phase::EntropyEncode);
-        encode_frame(inner, coded);
-        if sp.active() {
-            sp.set_bytes(coded.len() as u64);
-        }
+        self.encode_body(v, None, rng, out);
+    }
+
+    /// Forwards the inner codec's reduction so `Tng::encode_into` routes
+    /// entropy-wrapped quantizers through the fused normalize→reduce sweep
+    /// — together with the streamed encode this makes the whole path
+    /// normalize→quantize→entropy-code in one traversal of the vector.
+    fn reduction(&self) -> Option<Reduction> {
+        self.inner.reduction()
+    }
+
+    fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
+        self.encode_body(v, Some(reduced), rng, out);
     }
 
     fn is_unbiased(&self) -> bool {
@@ -409,6 +981,15 @@ mod tests {
         coded.len()
     }
 
+    fn envelope_roundtrip(inner: &Encoded, lanes: usize) -> usize {
+        let mut coded = Vec::new();
+        encode_envelope(inner, lanes, 1, &mut coded);
+        assert_eq!(coded[0] as usize, lanes);
+        let back = decode_envelope(&coded, inner.dim, 0).expect("decode");
+        assert_eq!(&back, inner);
+        coded.len()
+    }
+
     #[test]
     fn codec_outputs_roundtrip_for_every_family() {
         let mut rng = Rng::new(1);
@@ -419,6 +1000,28 @@ mod tests {
             frame_roundtrip(&SparseCodec::new(0.3).encode(&v, &mut rng));
             frame_roundtrip(&crate::codec::chunked::ChunkedTernaryCodec::new(5).encode(&v, &mut rng));
             frame_roundtrip(&ShardedCodec::new(TernaryCodec, 3).with_threads(1).encode(&v, &mut rng));
+        }
+    }
+
+    #[test]
+    fn envelopes_roundtrip_for_every_family_and_lane_count() {
+        let mut rng = Rng::new(2);
+        for lanes in 2..=MAX_LANES {
+            for d in [1usize, 3, 64, 257] {
+                let v = randv(1000 + d as u64, d);
+                envelope_roundtrip(&TernaryCodec.encode(&v, &mut rng), lanes);
+                envelope_roundtrip(&QsgdCodec::new(4).encode(&v, &mut rng), lanes);
+                envelope_roundtrip(&SparseCodec::new(0.3).encode(&v, &mut rng), lanes);
+                envelope_roundtrip(
+                    &crate::codec::chunked::ChunkedTernaryCodec::new(5).encode(&v, &mut rng),
+                    lanes,
+                );
+                // Non-empty sharded → SEC_SHARDED sections.
+                envelope_roundtrip(
+                    &ShardedCodec::new(TernaryCodec, 3).with_threads(1).encode(&v, &mut rng),
+                    lanes,
+                );
+            }
         }
     }
 
@@ -445,14 +1048,27 @@ mod tests {
         ];
         for e in &variants {
             frame_roundtrip(e);
+            envelope_roundtrip(e, 4);
         }
         let sharded = Encoded {
             dim: variants.iter().map(|e| e.dim).sum(),
             payload: Payload::Sharded { parts: variants.clone() },
         };
         frame_roundtrip(&sharded);
-        // Nested entropy envelopes (entropy:entropy:... on the factory side).
-        frame_roundtrip(&wrap(sharded));
+        envelope_roundtrip(&sharded, 3);
+        // Nested entropy envelopes (entropy:entropy:... on the factory
+        // side): a serial frame can nest serial frames...
+        frame_roundtrip(&wrap_lanes(sharded.clone(), 1));
+        // ...and a lane envelope can nest either format.
+        envelope_roundtrip(&wrap_lanes(sharded.clone(), 1), 2);
+        envelope_roundtrip(&wrap(sharded), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot nest a lane envelope")]
+    fn serial_frame_refuses_nested_lane_envelope() {
+        let inner = Encoded { dim: 2, payload: Payload::Dense { values: vec![1.0, 2.0] } };
+        encode_frame(&wrap(inner), &mut Vec::new());
     }
 
     #[test]
@@ -466,6 +1082,10 @@ mod tests {
         // Packed wire frame is 9 + 1024 bytes; 1% density must entropy-code
         // to a small fraction of that.
         assert!(coded_len < 200, "coded {coded_len} bytes");
+        // Lanes split the stream but keep the shared models: the envelope
+        // pays ~4 flush bytes per extra lane plus prefixes, nothing more.
+        let env_len = envelope_roundtrip(&e, 4);
+        assert!(env_len < coded_len + 40, "envelope {env_len} vs serial {coded_len}");
     }
 
     #[test]
@@ -498,11 +1118,75 @@ mod tests {
     }
 
     #[test]
+    fn envelope_truncation_garbage_and_forged_headers_are_rejected() {
+        let mut rng = Rng::new(55);
+        let v = randv(7, 300);
+        let inner = ShardedCodec::new(TernaryCodec, 3).with_threads(1).encode(&v, &mut rng);
+        let mut coded = Vec::new();
+        encode_envelope(&inner, 4, 1, &mut coded);
+        for cut in [0usize, 1, 2, 5, 9, coded.len() / 2, coded.len() - 1] {
+            assert!(decode_envelope(&coded[..cut], inner.dim, 0).is_err(), "cut {cut}");
+        }
+        let mut padded = coded.clone();
+        padded.extend_from_slice(&[0xDE, 0xAD]);
+        assert!(decode_envelope(&padded, inner.dim, 0).is_err(), "trailing garbage");
+        // Forged lane byte (1 and out-of-range values).
+        for lanes in [0u8, 1, (MAX_LANES + 1) as u8, 0xFF] {
+            let mut bad = coded.clone();
+            bad[0] = lanes;
+            assert!(decode_envelope(&bad, inner.dim, 0).is_err(), "lanes {lanes}");
+        }
+        // Forged kind byte.
+        let mut bad = coded.clone();
+        bad[1] = 0x7F;
+        assert!(decode_envelope(&bad, inner.dim, 0).is_err());
+        // Forged part count (table cost bound must reject before allocating).
+        let mut bad = coded.clone();
+        bad[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_envelope(&bad, inner.dim, 0).is_err());
+        // Bit-flips never panic.
+        for i in (0..coded.len()).step_by(5) {
+            let mut bad = coded.clone();
+            bad[i] ^= 0x11;
+            let _ = decode_envelope(&bad, inner.dim, 0);
+        }
+    }
+
+    #[test]
+    fn forged_lane_length_prefixes_are_rejected() {
+        let e = Encoded { dim: 64, payload: Payload::Ternary { scale: 1.0, codes: vec![1; 64] } };
+        let mut coded = Vec::new();
+        encode_envelope(&e, 4, 1, &mut coded);
+        // The flat body starts at byte 2 with 3 u32 lane-length prefixes.
+        for pfx in 0..3usize {
+            let pos = 2 + 4 * pfx;
+            let len = u32::from_le_bytes(coded[pos..pos + 4].try_into().unwrap());
+            for forged in [len + 1, len.wrapping_sub(1), u32::MAX, 0] {
+                if forged == len {
+                    continue;
+                }
+                let mut bad = coded.clone();
+                bad[pos..pos + 4].copy_from_slice(&forged.to_le_bytes());
+                // Overflowing prefixes fail split_group; shifted-but-valid
+                // splits desync the coder and fail init/terminator/
+                // consumption. Either way: error, never panic.
+                assert!(
+                    decode_envelope(&bad, e.dim, 0).is_err(),
+                    "prefix {pfx} forged to {forged}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn oversized_dim_rejected_before_decoding() {
         let e = Encoded { dim: 4, payload: Payload::Dense { values: vec![1.0; 4] } };
         let mut coded = Vec::new();
         encode_frame(&e, &mut coded);
         assert!(decode_frame(&coded, MAX_ENTROPY_DIM + 1, 0).is_err());
+        let mut env = Vec::new();
+        encode_envelope(&e, 2, 1, &mut env);
+        assert!(decode_envelope(&env, MAX_ENTROPY_DIM + 1, 0).is_err());
     }
 
     #[test]
@@ -539,10 +1223,16 @@ mod tests {
         let mut coded = Vec::new();
         encode_frame(&e, &mut coded);
         assert!(decode_frame(&coded, 1, 0).is_err());
+        let mut env = Vec::new();
+        encode_envelope(&e, 2, 1, &mut env);
+        assert!(decode_envelope(&env, 1, 0).is_err());
     }
 
     #[test]
     fn encode_into_reuses_buffers_and_matches_wrap() {
+        // The default codec streams quantized blocks straight into the
+        // lanes; `wrap` does a full inner encode then `encode_envelope`.
+        // Equal output here is the streamed-vs-batch byte-identity proof.
         let codec = EntropyCodec::new(TernaryCodec);
         let v = randv(9, 500);
         let mut out = Encoded::empty();
@@ -556,5 +1246,92 @@ mod tests {
         codec.encode_into(&v, &mut r3, &mut out);
         assert_eq!(out.dim, v.len());
         assert!(matches!(out.payload, Payload::Entropy { .. }));
+    }
+
+    #[test]
+    fn lane1_codec_is_byte_identical_to_the_serial_frame() {
+        let v = randv(13, 700);
+        for codec in [
+            &EntropyCodec::new(TernaryCodec).with_lanes(1) as &dyn Codec,
+            &EntropyCodec::new(QsgdCodec::new(8)).with_lanes(1),
+            &EntropyCodec::new(ShardedCodec::new(TernaryCodec, 4).with_threads(1)).with_lanes(1),
+        ] {
+            let mut r1 = Rng::new(21);
+            let mut out = Encoded::empty();
+            codec.encode_into(&v, &mut r1, &mut out);
+            let Payload::Entropy { inner, coded, lanes } = &out.payload else { unreachable!() };
+            assert_eq!(*lanes, 1);
+            let mut reference = Vec::new();
+            encode_frame(inner, &mut reference);
+            assert_eq!(coded, &reference, "{}", codec.name());
+        }
+    }
+
+    #[test]
+    fn streamed_reduced_path_matches_unfused_encode() {
+        // encode_reduced_into with the precomputed statistic must emit the
+        // same bytes as encode_into (which recomputes it).
+        let v = randv(17, 1000);
+        for lanes in [1usize, 4] {
+            let tern = EntropyCodec::new(TernaryCodec).with_lanes(lanes);
+            let mut a = Encoded::empty();
+            let mut b = Encoded::empty();
+            let mut r1 = Rng::new(3);
+            let mut r2 = Rng::new(3);
+            tern.encode_into(&v, &mut r1, &mut a);
+            let red = crate::simd::abs_max(&v) as f64;
+            tern.encode_reduced_into(&v, red, &mut r2, &mut b);
+            assert_eq!(a, b, "ternary lanes={lanes}");
+
+            let qs = EntropyCodec::new(QsgdCodec::new(16)).with_lanes(lanes);
+            let mut r1 = Rng::new(4);
+            let mut r2 = Rng::new(4);
+            qs.encode_into(&v, &mut r1, &mut a);
+            let red = crate::util::math::norm2(&v);
+            qs.encode_reduced_into(&v, red, &mut r2, &mut b);
+            assert_eq!(a, b, "qsgd lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn sharded_entropy_bytes_invariant_in_threads() {
+        let v = randv(19, (crate::codec::sharded::PARALLEL_MIN_DIM + 77).max(2048));
+        let mut reference: Option<Encoded> = None;
+        for threads in [1usize, 2, 8] {
+            let codec =
+                EntropyCodec::new(ShardedCodec::new(TernaryCodec, 8).with_threads(1))
+                    .with_threads(threads);
+            let mut rng = Rng::new(31);
+            let mut out = Encoded::empty();
+            codec.encode_into(&v, &mut rng, &mut out);
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert_eq!(&out, r, "threads={threads} changed bytes"),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs_roundtrip_through_the_codec() {
+        for lanes in [1usize, 2, 4] {
+            for v in [vec![], vec![0.0f32; 5]] {
+                let codec = EntropyCodec::new(TernaryCodec).with_lanes(lanes);
+                let mut rng = Rng::new(41);
+                let mut out = Encoded::empty();
+                codec.encode_into(&v, &mut rng, &mut out);
+                assert_eq!(out.dim, v.len());
+                let Payload::Entropy { inner, coded, lanes: got } = &out.payload else {
+                    unreachable!()
+                };
+                assert_eq!(*got as usize, lanes);
+                let back = if lanes == 1 {
+                    decode_frame(coded, out.dim, 0).unwrap()
+                } else {
+                    decode_envelope(coded, out.dim, 0).unwrap()
+                };
+                assert_eq!(&back, inner.as_ref());
+                assert_eq!(out.decode(), v);
+            }
+        }
     }
 }

@@ -124,12 +124,14 @@ pub enum Payload {
     /// own scales/norms, which is how per-shard scaling reaches the wire.
     /// Produced by [`sharded::ShardedCodec`]; parts tile `dim` in order.
     Sharded { parts: Vec<Encoded> },
-    /// An entropy-coded envelope: `coded` is the adaptive range-coder
-    /// stream for `inner` (produced by [`entropy::encode_frame`], carried
-    /// verbatim on the wire), and `inner` is the decoded message it
-    /// represents. Produced by [`entropy::EntropyCodec`]; the two fields
-    /// are a canonical pair by construction.
-    Entropy { inner: Box<Encoded>, coded: Vec<u8> },
+    /// An entropy-coded envelope: `coded` is the range-coder byte stream
+    /// for `inner` (carried verbatim on the wire), and `inner` is the
+    /// decoded message it represents. `lanes == 1` means the serial v1
+    /// stream of [`entropy::encode_frame`]; `lanes >= 2` means the
+    /// interleaved lane envelope of [`entropy::encode_envelope`], whose
+    /// first byte equals `lanes`. Produced by [`entropy::EntropyCodec`];
+    /// the fields are a canonical triple by construction.
+    Entropy { inner: Box<Encoded>, coded: Vec<u8>, lanes: u8 },
 }
 
 impl Payload {
@@ -204,12 +206,16 @@ impl Payload {
     /// Reuse `self` as an `Entropy` payload (see [`Payload::ternary_mut`]):
     /// in the steady state both the inner message's buffers and the coded
     /// byte stream keep their capacity.
-    pub fn entropy_mut(&mut self) -> (&mut Encoded, &mut Vec<u8>) {
+    pub fn entropy_mut(&mut self) -> (&mut Encoded, &mut Vec<u8>, &mut u8) {
         if !matches!(self, Payload::Entropy { .. }) {
-            *self = Payload::Entropy { inner: Box::new(Encoded::empty()), coded: Vec::new() };
+            *self = Payload::Entropy {
+                inner: Box::new(Encoded::empty()),
+                coded: Vec::new(),
+                lanes: 1,
+            };
         }
         match self {
-            Payload::Entropy { inner, coded } => (inner.as_mut(), coded),
+            Payload::Entropy { inner, coded, lanes } => (inner.as_mut(), coded, lanes),
             _ => unreachable!(),
         }
     }
@@ -495,6 +501,35 @@ pub trait Codec: Send + Sync {
         self.encode_into(v, rng, out);
     }
 
+    /// Streaming encode: quantize `v` into `out` block by block, invoking
+    /// `sink` after each block of symbols lands so a downstream consumer
+    /// (the entropy coder) can drain them while they are still L1-resident.
+    /// Returns `false` (the default) when the codec has no streaming path,
+    /// in which case `out`, `rng` and `sink` are untouched and the caller
+    /// must fall back to a full [`Codec::encode_into`].
+    ///
+    /// Contract, when it returns `true`:
+    /// * The result in `out` (and the `rng` draw sequence) is bit-identical
+    ///   to `encode_reduced_into(v, reduced.unwrap(), ..)` when `reduced`
+    ///   is `Some`, else to `encode_into(v, ..)`.
+    /// * `sink(out, r)` is called with ranges `r` that partition
+    ///   `0..v.len()` in ascending order; every header field of `out`
+    ///   (dim, scales, norm, levels) is final before the first call, and
+    ///   symbols in `r` are final when that call is made. Degenerate inputs
+    ///   (empty `v`, zero scale) make exactly one call covering the whole
+    ///   (possibly empty) range.
+    fn encode_streamed(
+        &self,
+        v: &[f32],
+        reduced: Option<f64>,
+        rng: &mut Rng,
+        out: &mut Encoded,
+        sink: &mut dyn FnMut(&Encoded, std::ops::Range<usize>),
+    ) -> bool {
+        let _ = (v, reduced, rng, out, sink);
+        false
+    }
+
     fn is_unbiased(&self) -> bool {
         true
     }
@@ -526,6 +561,17 @@ impl Codec for Box<dyn Codec> {
 
     fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
         (**self).encode_reduced_into(v, reduced, rng, out)
+    }
+
+    fn encode_streamed(
+        &self,
+        v: &[f32],
+        reduced: Option<f64>,
+        rng: &mut Rng,
+        out: &mut Encoded,
+        sink: &mut dyn FnMut(&Encoded, std::ops::Range<usize>),
+    ) -> bool {
+        (**self).encode_streamed(v, reduced, rng, out, sink)
     }
 
     fn is_unbiased(&self) -> bool {
@@ -562,6 +608,17 @@ impl Codec for &dyn Codec {
         (**self).encode_reduced_into(v, reduced, rng, out)
     }
 
+    fn encode_streamed(
+        &self,
+        v: &[f32],
+        reduced: Option<f64>,
+        rng: &mut Rng,
+        out: &mut Encoded,
+        sink: &mut dyn FnMut(&Encoded, std::ops::Range<usize>),
+    ) -> bool {
+        (**self).encode_streamed(v, reduced, rng, out, sink)
+    }
+
     fn is_unbiased(&self) -> bool {
         (**self).is_unbiased()
     }
@@ -594,6 +651,10 @@ impl CodecScratch {
     pub fn warm(&mut self, dim: usize) {
         self.normalized.reserve(dim);
         self.decoded.reserve(dim);
+        // The entropy path keeps its model banks on the stack and its lane
+        // byte buffers in a thread-local pool; warm the pool for this
+        // thread so the first entropy encode does not grow it either.
+        entropy::warm_lane_scratch(dim);
     }
 }
 
@@ -889,13 +950,14 @@ mod tests {
     fn entropy_mut_reuses_buffers() {
         let mut p = Payload::Ternary { scale: 1.0, codes: vec![1; 8] };
         {
-            let (inner, coded) = p.entropy_mut();
+            let (inner, coded, lanes) = p.entropy_mut();
             assert_eq!(inner.dim, 0, "fresh envelope starts empty");
             assert!(coded.is_empty());
+            assert_eq!(*lanes, 1, "fresh envelope defaults to the serial coder");
             coded.extend_from_slice(&[1, 2, 3]);
         }
         // Same variant again: buffers (and their contents) survive.
-        let (_, coded) = p.entropy_mut();
+        let (_, coded, _) = p.entropy_mut();
         assert_eq!(coded, &[1, 2, 3]);
     }
 

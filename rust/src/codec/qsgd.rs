@@ -69,6 +69,54 @@ impl Codec for QsgdCodec {
     fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
         self.encode_with_norm(v, reduced as f32, rng, out);
     }
+
+    /// Streamed variant of [`QsgdCodec::encode_with_norm`]: block-wise
+    /// quantization with serial-order RNG draws is bit-identical to the
+    /// whole-vector encode (see `simd::fill_uniform_f32`), so each 32 KiB
+    /// block can be handed to `sink` while still L1-resident.
+    fn encode_streamed(
+        &self,
+        v: &[f32],
+        reduced: Option<f64>,
+        rng: &mut Rng,
+        out: &mut Encoded,
+        sink: &mut dyn FnMut(&Encoded, std::ops::Range<usize>),
+    ) -> bool {
+        debug_assert!(
+            simd::first_non_finite(v).is_none(),
+            "non-finite gradient reached QsgdCodec (use try_encode_into)"
+        );
+        let norm = match reduced {
+            Some(x) => x as f32,
+            None => norm2(v) as f32,
+        };
+        let s = self.levels;
+        out.dim = v.len();
+        {
+            let (norm_out, levels_out, q) = out.payload.quantized_mut();
+            *norm_out = norm;
+            *levels_out = s;
+            q.clear();
+            q.resize(v.len(), 0);
+        }
+        if !(norm > 0.0) {
+            sink(out, 0..v.len());
+            return true;
+        }
+        let sf = s as f32 / norm;
+        const BLOCK: usize = 8192;
+        let mut start = 0usize;
+        while start < v.len() {
+            let end = (start + BLOCK).min(v.len());
+            {
+                let (_, _, q) = out.payload.quantized_mut();
+                simd::qsgd_quantize(&v[start..end], sf, s, rng, &mut q[start..end]);
+            }
+            sink(out, start..end);
+            start = end;
+        }
+        true
+    }
 }
 
 #[cfg(test)]

@@ -56,6 +56,56 @@ impl Codec for TernaryCodec {
     fn encode_reduced_into(&self, v: &[f32], reduced: f64, rng: &mut Rng, out: &mut Encoded) {
         self.encode_with_scale(v, reduced as f32, rng, out);
     }
+
+    /// Streamed variant of [`TernaryCodec::encode_with_scale`]: quantize in
+    /// L1-resident blocks, handing each block to `sink` while hot. The RNG
+    /// draw order is serial per coordinate regardless of block boundaries
+    /// (see `simd::fill_uniform_f32`), so the result is bit-identical to
+    /// the whole-vector encode.
+    fn encode_streamed(
+        &self,
+        v: &[f32],
+        reduced: Option<f64>,
+        rng: &mut Rng,
+        out: &mut Encoded,
+        sink: &mut dyn FnMut(&Encoded, std::ops::Range<usize>),
+    ) -> bool {
+        debug_assert!(
+            simd::first_non_finite(v).is_none(),
+            "non-finite gradient reached TernaryCodec (use try_encode_into)"
+        );
+        let r = match reduced {
+            Some(x) => x as f32,
+            None => simd::abs_max(v),
+        };
+        out.dim = v.len();
+        {
+            let (scale, codes) = out.payload.ternary_mut();
+            *scale = r;
+            codes.clear();
+            codes.resize(v.len(), 0);
+        }
+        if !(r > 0.0) {
+            // Zero scale (or empty input): codes stay zeroed, one call
+            // covers the whole range so the sink still sees the header.
+            sink(out, 0..v.len());
+            return true;
+        }
+        // 8192 f32 = 32 KiB: one block of input plus its codes stays
+        // L1-resident while the sink entropy-codes it.
+        const BLOCK: usize = 8192;
+        let mut start = 0usize;
+        while start < v.len() {
+            let end = (start + BLOCK).min(v.len());
+            {
+                let (_, codes) = out.payload.ternary_mut();
+                simd::ternary_quantize(&v[start..end], 1.0 / r, rng, &mut codes[start..end]);
+            }
+            sink(out, start..end);
+            start = end;
+        }
+        true
+    }
 }
 
 #[cfg(test)]

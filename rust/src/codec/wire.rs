@@ -5,8 +5,10 @@
 //! (2 bits each), quantized levels are i16 LE, sparse pairs are (u32, f32),
 //! sharded messages nest each part's frame behind a u32 length so the
 //! per-shard scales travel inside their parts, and entropy-coded messages
-//! carry their adaptive range-coder stream behind a u32 length (tag 6; the
-//! stream format lives in [`super::entropy`]). `bits()` accounting in
+//! carry their range-coder bytes behind a u32 length — tag 6 for the
+//! serial (lane=1) stream, tag 7 for the interleaved lane envelope whose
+//! first byte is the lane count (both formats live in [`super::entropy`]).
+//! `bits()` accounting in
 //! `codec::Encoded` is the *information* cost model; this module is the
 //! byte-exact transport encoding (whose size the network simulator also
 //! records — the two are cross-checked in tests).
@@ -28,6 +30,7 @@ pub(crate) const TAG_DENSE: u8 = 3;
 pub(crate) const TAG_TERNARY_CHUNKED: u8 = 4;
 pub(crate) const TAG_SHARDED: u8 = 5;
 pub(crate) const TAG_ENTROPY: u8 = 6;
+pub(crate) const TAG_ENTROPY_LANES: u8 = 7;
 
 /// Sharded and entropy frames may nest (a part can itself be sharded or
 /// entropy-coded); cap the depth so a malicious frame cannot blow the
@@ -121,11 +124,14 @@ pub fn write_into(e: &Encoded, out: &mut Vec<u8>) {
                 out[len_pos..len_pos + 4].copy_from_slice(&part_len.to_le_bytes());
             }
         }
-        Payload::Entropy { coded, .. } => {
-            // The coded stream is already the canonical encoding of the
-            // inner message (see `entropy::encode_frame`); ship it verbatim
-            // behind a length prefix.
-            out.write_u8(TAG_ENTROPY).unwrap();
+        Payload::Entropy { coded, lanes, .. } => {
+            // The coded bytes are already the canonical encoding of the
+            // inner message (`entropy::encode_frame` for one lane,
+            // `entropy::encode_envelope` otherwise); ship them verbatim
+            // behind a length prefix. One lane always uses the legacy tag,
+            // so lane-1 frames are byte-identical to the serial coder's.
+            let tag = if *lanes <= 1 { TAG_ENTROPY } else { TAG_ENTROPY_LANES };
+            out.write_u8(tag).unwrap();
             out.write_u32::<LE>(e.dim as u32).unwrap();
             out.write_u32::<LE>(coded.len() as u32).unwrap();
             out.extend_from_slice(coded);
@@ -273,7 +279,23 @@ fn from_bytes_at_depth(mut buf: &[u8], depth: usize) -> Result<Encoded> {
             let coded = &buf[..len];
             buf = &buf[len..];
             let inner = super::entropy::decode_frame(coded, dim, depth + 1)?;
-            Payload::Entropy { inner: Box::new(inner), coded: coded.to_vec() }
+            Payload::Entropy { inner: Box::new(inner), coded: coded.to_vec(), lanes: 1 }
+        }
+        TAG_ENTROPY_LANES => {
+            if depth >= MAX_SHARD_DEPTH {
+                bail!("entropy frame nested deeper than {MAX_SHARD_DEPTH}");
+            }
+            let len = buf.read_u32::<LE>()? as usize;
+            if buf.len() < len {
+                bail!("entropy payload truncated: {} < {len}", buf.len());
+            }
+            let coded = &buf[..len];
+            buf = &buf[len..];
+            // The envelope's first byte is its lane count; decode_envelope
+            // validates it (2..=MAX_LANES — one lane always ships as tag 6).
+            let lanes = *coded.first().unwrap_or(&0);
+            let inner = super::entropy::decode_envelope(coded, dim, depth + 1)?;
+            Payload::Entropy { inner: Box::new(inner), coded: coded.to_vec(), lanes }
         }
         other => bail!("unknown payload tag {other}"),
     };

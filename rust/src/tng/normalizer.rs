@@ -347,6 +347,33 @@ mod tests {
     }
 
     #[test]
+    fn fused_entropy_path_matches_manual_normalize_then_encode() {
+        // EntropyCodec forwards the inner quantizer's reduction, so
+        // Tng<EntropyCodec> takes the fully fused normalize→reduce→
+        // quantize→entropy pipeline. The wire bytes must be identical to
+        // normalizing manually and running the codec's batch encode —
+        // for both the serial (lane=1) and interleaved-lane formats.
+        use crate::codec::entropy::EntropyCodec;
+        let g = randv(60, 20_000);
+        let gref = randv(61, 20_000);
+        for lanes in [1usize, 4] {
+            let tng = Tng::new(EntropyCodec::new(TernaryCodec).with_lanes(lanes));
+            let mut r1 = Rng::new(70 + lanes as u64);
+            let mut r2 = Rng::new(70 + lanes as u64);
+            let fused = tng.encode(&g, &gref, &mut r1);
+            let manual = tng.codec.encode(&tng.normalize(&g, &gref), &mut r2);
+            assert_eq!(fused, manual, "lanes={lanes}");
+
+            let tng = Tng::new(EntropyCodec::new(crate::codec::qsgd::QsgdCodec::new(8)).with_lanes(lanes));
+            let mut r1 = Rng::new(80 + lanes as u64);
+            let mut r2 = Rng::new(80 + lanes as u64);
+            let fused = tng.encode(&g, &gref, &mut r1);
+            let manual = tng.codec.encode(&tng.normalize(&g, &gref), &mut r2);
+            assert_eq!(fused, manual, "qsgd8 lanes={lanes}");
+        }
+    }
+
+    #[test]
     fn try_encode_into_accepts_finite_and_matches_unchecked() {
         let g = randv(32, 64);
         let gref = randv(33, 64);

@@ -68,6 +68,22 @@ fn steady_state_rounds_allocate_nothing() {
         ),
         ("entropy-ternary", Box::new(EntropyCodec::new(TernaryCodec))),
         ("entropy-qsgd4", Box::new(EntropyCodec::new(QsgdCodec::new(4)))),
+        // The frozen serial (lane=1) format still streams through the
+        // fused quantize→entropy path; it must stay heap-free too.
+        (
+            "entropy-ternary-serial",
+            Box::new(EntropyCodec::new(TernaryCodec).with_lanes(1)),
+        ),
+        // Sharded sections with per-part model banks, encoded serially:
+        // banks live on the stack and lane streams in the warm thread-local
+        // scratch, so fresh-bank-per-section costs no allocation.
+        (
+            "entropy-shard4-ternary-serial",
+            Box::new(
+                EntropyCodec::new(ShardedCodec::new(TernaryCodec, 4).with_threads(1))
+                    .with_threads(1),
+            ),
+        ),
     ] {
         let allocs = steady_state_allocs(codec.as_ref(), &v, 25);
         assert_eq!(allocs, 0, "{name}: steady-state rounds must not allocate");
@@ -93,6 +109,37 @@ fn steady_state_rounds_allocate_nothing() {
         0,
         "TNG normalize+encode+decode must not allocate in the steady state"
     );
+
+    // The fully fused pipeline: normalize→reduce (one sweep), then the
+    // streamed quantize→entropy encode draining blocks into the interleaved
+    // lanes. Zero steady-state allocation is part of the fused-path
+    // contract (ISSUE PR-10), for both lane formats.
+    for (name, lanes) in [("fused-tng-entropy-lanes4", 4usize), ("fused-tng-entropy-serial", 1)] {
+        let tng = Tng::new(EntropyCodec::new(TernaryCodec).with_lanes(lanes));
+        let mut scratch = CodecScratch::new();
+        scratch.warm(d);
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            tng.encode_into(&v, &gref, &mut rng, &mut scratch);
+            scratch.bytes.clear();
+            scratch.bytes.reserve(2 * wire::frame_len(&scratch.enc) + 64);
+            wire::write_into(&scratch.enc, &mut scratch.bytes);
+            tng.decode_into(&scratch.enc, &gref, &mut out);
+        }
+        let before = alloc_count();
+        for _ in 0..25 {
+            tng.encode_into(&v, &gref, &mut rng, &mut scratch);
+            scratch.bytes.clear();
+            wire::write_into(&scratch.enc, &mut scratch.bytes);
+            tng.decode_into(&scratch.enc, &gref, &mut out);
+            std::hint::black_box(&out);
+        }
+        assert_eq!(
+            alloc_count() - before,
+            0,
+            "{name}: fused normalize→quantize→entropy rounds must not allocate"
+        );
+    }
 
     // The downlink compressor: normalize-against-reference + encode +
     // decode-back + EF advance, all through its internal arena. (Framing

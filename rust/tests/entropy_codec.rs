@@ -164,6 +164,122 @@ fn forged_headers_and_garbage_are_rejected() {
 }
 
 #[test]
+fn lane_envelopes_roundtrip_byte_exact_for_every_payload_family() {
+    // Satellite property: the interleaved-lane (wire tag 7) format must
+    // round-trip byte-exactly for every payload family at every legal lane
+    // count, including sharded and nested-entropy compositions.
+    let specs = [
+        "entropy:ternary",
+        "entropy:cternary:16",
+        "entropy:qsgd:4",
+        "entropy:sparse:0.25",
+        "entropy:fp32",
+        "entropy:sign",
+        "entropy:shard:4:ternary",
+        "entropy:shard:3:qsgd:4",
+        "entropy:entropy:ternary",
+    ];
+    let mut rng = Rng::new(0x1A9E5);
+    for lanes in [2usize, 3, 4, 8] {
+        for spec in specs {
+            let inner = make_codec(spec.strip_prefix("entropy:").unwrap()).unwrap();
+            let codec = EntropyCodec::new(inner).with_lanes(lanes);
+            for case in 0..6 {
+                let v = arb_vec(&mut rng);
+                let e = codec.encode(&v, &mut rng);
+                let Payload::Entropy { lanes: got, .. } = &e.payload else {
+                    panic!("entropy payload expected")
+                };
+                assert_eq!(*got as usize, lanes, "{spec}");
+                roundtrip_byte_exact(&e, &format!("{spec} lanes={lanes} case {case}"));
+            }
+        }
+        // Edge dims through the default ternary pipeline.
+        for d in [1usize, 2, 3, 7, 8, 9] {
+            let v: Vec<f32> = (0..d).map(|_| rng.gauss_f32()).collect();
+            let codec = EntropyCodec::new(TernaryCodec).with_lanes(lanes);
+            roundtrip_byte_exact(&codec.encode(&v, &mut rng), &format!("lanes={lanes} d={d}"));
+        }
+    }
+}
+
+#[test]
+fn lane_envelope_truncations_and_forged_lane_headers_are_rejected() {
+    let mut rng = Rng::new(0x7A6);
+    let v: Vec<f32> = (0..400).map(|_| rng.gauss_f32()).collect();
+    for (what, codec) in [
+        ("flat", EntropyCodec::new(make_codec("ternary").unwrap())),
+        ("sharded", EntropyCodec::new(make_codec("shard:3:qsgd:4").unwrap())),
+    ] {
+        let e = codec.encode(&v, &mut rng);
+        let bytes = wire::to_bytes(&e);
+        // Every truncated prefix of a tag-7 frame is rejected.
+        for cut in 0..bytes.len() {
+            assert!(
+                wire::from_bytes(&bytes[..cut]).is_err(),
+                "{what}: prefix of {cut}/{} bytes must be rejected",
+                bytes.len()
+            );
+        }
+        assert!(wire::from_bytes(&bytes).is_ok(), "{what}");
+        // Frame layout: tag (1) + dim (4) + len (4) + lanes (1) + kind (1)...
+        // Forged envelope lane byte: 0, 1, and out-of-range all error.
+        for forged in [0u8, 1, 9, 0xFF] {
+            let mut bad = bytes.clone();
+            bad[9] = forged;
+            assert!(wire::from_bytes(&bad).is_err(), "{what}: lane byte {forged}");
+        }
+        // Forged lane-length prefixes. For the flat kind the three u32
+        // prefixes sit right after the kind byte; overstating, understating,
+        // zeroing, and maxing each one must all surface as errors (overflow
+        // of the group, or a desynced coder failing init/terminator/
+        // consumption) — never a panic, never a false-original decode.
+        if what == "flat" {
+            for pfx in 0..3usize {
+                let pos = 11 + 4 * pfx;
+                let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+                for forged in [len + 1, len.wrapping_sub(1), 0, u32::MAX] {
+                    if forged == len {
+                        continue;
+                    }
+                    let mut bad = bytes.clone();
+                    bad[pos..pos + 4].copy_from_slice(&forged.to_le_bytes());
+                    assert!(
+                        wire::from_bytes(&bad).is_err(),
+                        "{what}: prefix {pfx} forged {len} -> {forged}"
+                    );
+                }
+            }
+        }
+        // Byte-flip fuzz across the whole frame: no panics.
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x20;
+            let _ = wire::from_bytes(&bad);
+        }
+    }
+}
+
+#[test]
+fn sharded_entropy_wire_bytes_invariant_in_threads() {
+    // Satellite property: per-shard model banks make sections independent,
+    // so the encode thread count must never change a wire byte.
+    let mut rng = Rng::new(0x7EAD);
+    let v: Vec<f32> = (0..40_000).map(|_| rng.gauss_f32()).collect();
+    let mut reference: Option<Vec<u8>> = None;
+    for threads in [1usize, 2, 8] {
+        let codec = EntropyCodec::new(make_codec("shard:8:ternary").unwrap())
+            .with_threads(threads);
+        let mut enc_rng = Rng::new(0x5EED);
+        let bytes = wire::to_bytes(&codec.encode(&v, &mut enc_rng));
+        match &reference {
+            None => reference = Some(bytes),
+            Some(r) => assert_eq!(&bytes, r, "threads={threads} changed wire bytes"),
+        }
+    }
+}
+
+#[test]
 fn unknown_inner_tag_is_rejected() {
     use tng::codec::entropy::models::Models;
     use tng::codec::entropy::rc::RangeEncoder;
@@ -234,7 +350,7 @@ fn measured_bytes_beat_the_estimate_within_slack_on_normalized_streams() {
     let tng_entropy = Tng::new(EntropyCodec::new(TernaryCodec));
     let mut enc_rng = Rng::new(0xCD);
     let e = tng_entropy.encode(&g, &gref, &mut enc_rng);
-    let Payload::Entropy { inner, coded } = &e.payload else {
+    let Payload::Entropy { inner, coded, .. } = &e.payload else {
         panic!("entropy codec must emit an entropy payload")
     };
 

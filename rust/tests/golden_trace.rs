@@ -86,6 +86,16 @@ fn codecs() -> Vec<(&'static str, Box<dyn Codec>)> {
             "entropy-shard2-ternary",
             Box::new(EntropyCodec::new(ShardedCodec::new(TernaryCodec, 2).with_threads(1))),
         ),
+        // Legacy serial format (lane=1) and sharded-around-entropy: the
+        // lane-era codec must stay trace-identical across runtimes in both.
+        (
+            "entropy-ternary-lane1",
+            Box::new(EntropyCodec::new(TernaryCodec).with_lanes(1)),
+        ),
+        (
+            "shard4-entropy-qsgd4",
+            Box::new(ShardedCodec::new(EntropyCodec::new(QsgdCodec::new(4)), 4).with_threads(2)),
+        ),
     ]
 }
 
@@ -156,6 +166,71 @@ fn golden_trace_downlink_compressed() {
         // size — but this matrix uses plain ternary uplink (fixed frames),
         // so the totals must match exactly.
         assert_eq!(seq.total_wire_up_bytes, raw.total_wire_up_bytes, "{down_spec}");
+    }
+}
+
+#[test]
+fn legacy_serial_entropy_format_pins_digest_and_wire_totals() {
+    // PR-10 guard: `with_lanes(1)` selects the frozen pre-lane serial
+    // entropy format. A test-local reference codec performs the historical
+    // two-pass encode (full inner encode, then one `encode_frame` pass
+    // over it); for the `entropy:ternary` and `shard:4:entropy:qsgd:4`
+    // configs the param digests and the measured wire totals (hence
+    // wire bits/element) must be unchanged from that serial coder.
+    use tng::codec::entropy::{self, EntropyCodec};
+    use tng::codec::{Encoded, Payload};
+
+    struct SerialRef<C>(C);
+    impl<C: Codec> Codec for SerialRef<C> {
+        fn name(&self) -> String {
+            // Same name, so the driver treats the configs identically.
+            format!("entropy-{}", self.0.name())
+        }
+        fn encode_into(&self, v: &[f32], rng: &mut Rng, out: &mut Encoded) {
+            let inner = self.0.encode(v, rng);
+            let mut coded = Vec::new();
+            entropy::encode_frame(&inner, &mut coded);
+            *out = Encoded {
+                dim: inner.dim,
+                payload: Payload::Entropy { inner: Box::new(inner), coded, lanes: 1 },
+            };
+        }
+        fn is_unbiased(&self) -> bool {
+            self.0.is_unbiased()
+        }
+    }
+
+    let ds = generate(&SkewConfig { n: 96, dim: 24, seed: 7, ..Default::default() });
+    let obj = LogReg::new(ds, 0.05);
+    let matrix: Vec<(&str, Box<dyn Codec>, Box<dyn Codec>)> = vec![
+        (
+            "entropy:ternary",
+            Box::new(EntropyCodec::new(TernaryCodec).with_lanes(1)),
+            Box::new(SerialRef(TernaryCodec)),
+        ),
+        (
+            "shard:4:entropy:qsgd:4",
+            Box::new(
+                ShardedCodec::new(EntropyCodec::new(QsgdCodec::new(4)).with_lanes(1), 4)
+                    .with_threads(1),
+            ),
+            Box::new(ShardedCodec::new(SerialRef(QsgdCodec::new(4)), 4).with_threads(1)),
+        ),
+    ];
+    for (what, lane1, reference) in matrix {
+        let cfg = base_cfg(3);
+        let a = driver::run(&obj, lane1.as_ref(), "lane1", &cfg);
+        let b = driver::run(&obj, reference.as_ref(), "ref", &cfg);
+        assert_eq!(a.param_digest(), b.param_digest(), "{what}: param digest");
+        assert_eq!(
+            a.total_wire_up_bytes, b.total_wire_up_bytes,
+            "{what}: uplink wire bytes (wire bpe) changed vs the serial coder"
+        );
+        assert_eq!(
+            a.total_wire_down_bytes, b.total_wire_down_bytes,
+            "{what}: downlink wire bytes changed vs the serial coder"
+        );
+        assert_traces_identical(&a, &b, what);
     }
 }
 
